@@ -1,0 +1,21 @@
+//! Crime-rate forecasting (paper §5.4): log-Gaussian Cox process with a
+//! negative-binomial likelihood and Matérn×spectral-mixture kernel over a
+//! space-time count grid; the Laplace approximation's `log|B|` comes from
+//! stochastic Lanczos quadrature — the setting where the scaled-eigenvalue
+//! baseline needs the (misspecified) Fiedler bound.
+//!
+//! Run: `cargo run --release --example crime_lgcp`
+
+use gpsld::coordinator::{experiments, Scale};
+
+fn main() {
+    println!("reproducing Table 3 (crime LGCP), small scale;");
+    println!("use `gpsld exp table3 --scale paper` for the full grid\n");
+    let res = experiments::table3_crime(Scale::Small);
+    res.print("Table 3 — Chicago-style crime LGCP (synthetic substitute)");
+    println!(
+        "\nshape check vs paper: the Fiedler/scaled-eig variant recovers\n\
+         different (typically more extreme) hypers than Lanczos while RMSEs\n\
+         stay close — the misspecification the paper reports."
+    );
+}

@@ -1,0 +1,20 @@
+//! Precipitation interpolation (paper §5.2): 3-D space-time SKI (Kronecker
+//! of Toeplitz factors) with SLQ kernel learning, vs the scaled-eigenvalue
+//! baseline and an exact-subset GP.
+//!
+//! Run: `cargo run --release --example precipitation`
+
+use gpsld::coordinator::{experiments, Scale};
+
+fn main() {
+    println!("reproducing Table 1 (daily precipitation), small scale;");
+    println!("use `gpsld exp table1 --scale paper` for larger n/m\n");
+    let res = experiments::table1_precipitation(Scale::Small);
+    res.print("Table 1 — precipitation (synthetic space-time substitute)");
+    println!(
+        "\nshape check vs paper: Lanczos and scaled-eig reach similar MSE on\n\
+         the full data (scaled-eig is viable here because K_UU has fast\n\
+         eigendecompositions), both beating the subset-exact GP; Lanczos is\n\
+         not slower than scaled-eig."
+    );
+}

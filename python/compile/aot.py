@@ -1,0 +1,145 @@
+"""AOT-lower the L2 graphs to HLO *text* artifacts for the rust runtime.
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which the xla crate's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):  python -m compile.aot --out ../artifacts
+
+Emits one ``<name>.hlo.txt`` per configuration plus ``manifest.json``
+describing shapes so the rust runtime can marshal buffers without guessing.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def artifact_configs():
+    """The artifact set baked for the rust runtime.
+
+    Sizes are chosen to cover the experiments that use the PJRT dense path:
+    the deep-kernel-learning experiment (n=2048 train rows, d=2 features out
+    of the MLP), 3-D dense blocks for precipitation-style data, and the
+    Lanczos graph used by the accelerated SLQ path and the perf bench.
+    """
+    cfgs = []
+    for kind, n, d, b in [
+        ("rbf", 2048, 2, 8),
+        ("rbf", 512, 2, 8),
+        ("rbf", 1024, 3, 8),
+        ("mat32", 1024, 2, 8),
+        ("mat52", 1024, 3, 8),
+    ]:
+        cfgs.append({
+            "name": f"mvm_{kind}_n{n}_d{d}_b{b}",
+            "graph": "mvm", "kind": kind, "n": n, "d": d, "b": b,
+        })
+    cfgs.append({
+        "name": "cross_rbf_q512_n2048_d2_b1",
+        "graph": "cross_mvm", "kind": "rbf", "q": 512, "n": 2048, "d": 2,
+        "b": 1,
+    })
+    for kind, n, d, p, m in [("rbf", 2048, 2, 8, 30)]:
+        cfgs.append({
+            "name": f"lanczos_{kind}_n{n}_d{d}_p{p}_m{m}",
+            "graph": "lanczos", "kind": kind, "n": n, "d": d, "p": p, "m": m,
+        })
+    return cfgs
+
+
+def lower_config(cfg):
+    kind = cfg["kind"]
+    if cfg["graph"] == "mvm":
+        fn = lambda x, v, h: (model.mvm(kind, x, v, h),)
+        args = (spec(cfg["n"], cfg["d"]), spec(cfg["n"], cfg["b"]), spec(3))
+        outs = [["f32", [cfg["n"], cfg["b"]]]]
+    elif cfg["graph"] == "cross_mvm":
+        fn = lambda xs, x, a, h: (model.cross_mvm(kind, xs, x, a, h),)
+        args = (spec(cfg["q"], cfg["d"]), spec(cfg["n"], cfg["d"]),
+                spec(cfg["n"], cfg["b"]), spec(3))
+        outs = [["f32", [cfg["q"], cfg["b"]]]]
+    elif cfg["graph"] == "lanczos":
+        m = cfg["m"]
+        fn = lambda x, z, h: model.lanczos(kind, x, m, z, h)
+        args = (spec(cfg["n"], cfg["d"]), spec(cfg["n"], cfg["p"]), spec(3))
+        outs = [["f32", [m, cfg["p"]]], ["f32", [m - 1, cfg["p"]]],
+                ["f32", [cfg["n"], cfg["p"]]], ["f32", [cfg["p"]]],
+                ["f32", [m, cfg["n"], cfg["p"]]]]
+    else:
+        raise ValueError(cfg["graph"])
+    lowered = jax.jit(fn).lower(*args)
+    ins = [["f32", list(a.shape)] for a in args]
+    return to_hlo_text(lowered), ins, outs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact names to (re)build")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {}
+    only = set(args.only.split(",")) if args.only else None
+    for cfg in artifact_configs():
+        name = cfg["name"]
+        if only is not None and name not in only:
+            continue
+        text, ins, outs = lower_config(cfg)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entry = dict(cfg)
+        entry["file"] = f"{name}.hlo.txt"
+        entry["inputs"] = ins
+        entry["outputs"] = outs
+        manifest[name] = entry
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    if only is not None and os.path.exists(mpath):
+        with open(mpath) as f:
+            old = json.load(f)
+        old.update(manifest)
+        manifest = old
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    # TSV twin for the rust runtime (no JSON dependency offline):
+    # name \t file \t graph \t kind \t in-shapes \t out-shapes
+    tpath = os.path.join(args.out, "manifest.tsv")
+    with open(tpath, "w") as f:
+        for name in sorted(manifest):
+            e = manifest[name]
+            ins = ";".join("x".join(map(str, s)) for _, s in e["inputs"])
+            outs = ";".join("x".join(map(str, s)) for _, s in e["outputs"])
+            f.write(f"{name}\t{e['file']}\t{e['graph']}\t{e['kind']}\t"
+                    f"{ins}\t{outs}\n")
+    print(f"wrote {mpath} + {tpath} ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+"""Layer-1 Pallas kernel: materialization-free kernel-matrix MVM.
+
+Computes ``(K(X, X) + sigma^2 I) @ V`` for ``X: (n, d)``, ``V: (n, b)``
+without ever forming the ``n x n`` kernel matrix in HBM.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid is
+``(n // BR, n // BC)``; each program holds in VMEM
+
+  * an ``(BR, d)`` tile of X rows            (re-used across the j loop)
+  * a  ``(BC, d)`` tile of X "columns"
+  * a  ``(BC, b)`` tile of V
+  * the ``(BR, b)`` output accumulator
+
+The pairwise squared-distance tile is assembled from an MXU matmul
+(``-2 X_i X_j^T``) plus rank-1 row/column norms on the VPU, the kernel
+function is applied elementwise on the VPU, and the ``(BR, BC) @ (BC, b)``
+product accumulates on the MXU.  This is the threadblock/shared-memory
+schedule of a CUDA streaming kernel re-expressed with BlockSpec.
+
+The CPU build uses ``interpret=True`` (real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute); correctness is asserted
+against :mod:`ref` by pytest, and TPU performance is estimated analytically
+in DESIGN.md §Perf-model.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default tile sizes. 8/128-aligned for the TPU VPU/MXU; the row tile is
+# clamped to n when n < BR so small problems still work.
+BR = 256
+BC = 256
+
+
+def _tile_kernel(kind, selfk, x_ref, xc_ref, v_ref, h_ref, o_ref):
+    """One (i, j) grid step: o[i] += k(X[i], X[j]) @ V[j] (+ sigma^2 V diag)."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]          # (BR, d) rows
+    z = xc_ref[...]         # (BC, d) cols
+    ell = h_ref[0]
+    sf = h_ref[1]
+
+    # Squared distances: ||x||^2 + ||z||^2 - 2 x z^T. The cross term is the
+    # MXU-friendly matmul; the norms are cheap VPU reductions.
+    xx = jnp.sum(x * x, axis=1)[:, None]
+    zz = jnp.sum(z * z, axis=1)[None, :]
+    sq = jnp.maximum(xx + zz - 2.0 * jnp.dot(x, z.T), 0.0)
+
+    if selfk:
+        # Self-kernel: pin the true diagonal to distance exactly 0. The
+        # f32 cancellation in xx + zz - 2 x.z leaves O(1e-6) residue, which
+        # kernels with a kink at 0 (Matern) or tiny lengthscales amplify.
+        br, bc = sq.shape
+        rows = i * br + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 0)
+        cols = j * bc + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 1)
+        sq = jnp.where(rows == cols, 0.0, sq)
+
+    k_tile = ref.kernel_value(kind, sq, ell, sf)
+    o_ref[...] += jnp.dot(k_tile, v_ref[...])
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def kernel_mvm(kind, x, v, hypers):
+    """(K + sigma^2 I) @ V via the tiled Pallas kernel.
+
+    Args:
+      kind: one of ``ref.KINDS`` (static).
+      x: ``(n, d)`` f32 inputs.
+      v: ``(n, b)`` f32 probe/solve block.
+      hypers: ``(3,)`` f32 ``[ell, sf, sigma]`` (raw, not log).
+
+    Returns:
+      ``(n, b)`` f32.
+    """
+    n, d = x.shape
+    b = v.shape[1]
+    br = min(BR, n)
+    bc = min(BC, n)
+    if n % br != 0 or n % bc != 0:
+        # Fallback: pad rows/cols up to tile multiples with far-away points
+        # whose kernel values underflow to ~0 and zero probe entries.
+        n_pad = ((n + bc - 1) // bc) * bc
+        n_pad = ((n_pad + br - 1) // br) * br
+        pad = n_pad - n
+        # 1e6 offset => exp(-huge) == 0 for all supported kernels.
+        x_pad = jnp.concatenate([x, jnp.full((pad, d), 1e6, x.dtype)], axis=0)
+        v_pad = jnp.concatenate([v, jnp.zeros((pad, b), v.dtype)], axis=0)
+        out = kernel_mvm(kind, x_pad, v_pad, hypers)
+        return out[:n]
+
+    grid = (n // br, n // bc)
+    out = pl.pallas_call(
+        functools.partial(_tile_kernel, kind, True),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i, j: (i, 0)),   # X row tile
+            pl.BlockSpec((bc, d), lambda i, j: (j, 0)),   # X col tile
+            pl.BlockSpec((bc, b), lambda i, j: (j, 0)),   # V tile
+            pl.BlockSpec((3,), lambda i, j: (0,)),        # hypers (replicated)
+        ],
+        out_specs=pl.BlockSpec((br, b), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, b), v.dtype),
+        interpret=True,
+    )(x, x, v, hypers)
+
+    sigma = hypers[2]
+    return out + (sigma * sigma) * v
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def kernel_cross_mvm(kind, x, z, v, hypers):
+    """Cross-covariance product K(x, z) @ V (no noise), for prediction.
+
+    ``x: (n, d)``, ``z: (m, d)``, ``v: (m, b)`` -> ``(n, b)``.
+    Implemented with the same tiling; row tiles come from x, column tiles
+    from z.
+    """
+    n, d = x.shape
+    m = z.shape[0]
+    b = v.shape[1]
+    br = min(BR, n)
+    bc = min(BC, m)
+    if n % br != 0 or m % bc != 0:
+        n_pad = ((n + br - 1) // br) * br
+        m_pad = ((m + bc - 1) // bc) * bc
+        x_pad = jnp.concatenate(
+            [x, jnp.full((n_pad - n, d), 1e6, x.dtype)], axis=0)
+        z_pad = jnp.concatenate(
+            [z, jnp.full((m_pad - m, d), -1e6, z.dtype)], axis=0)
+        v_pad = jnp.concatenate(
+            [v, jnp.zeros((m_pad - m, b), v.dtype)], axis=0)
+        return kernel_cross_mvm(kind, x_pad, z_pad, v_pad, hypers)[:n]
+
+    grid = (n // br, m // bc)
+    return pl.pallas_call(
+        functools.partial(_tile_kernel, kind, False),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bc, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bc, b), lambda i, j: (j, 0)),
+            pl.BlockSpec((3,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, b), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, b), v.dtype),
+        interpret=True,
+    )(x, z, v, hypers)

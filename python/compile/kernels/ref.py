@@ -1,0 +1,58 @@
+"""Pure-jnp reference oracle for the Pallas kernel-matrix MVM.
+
+This is the correctness ground truth for :mod:`kernel_mvm`.  Everything here
+is deliberately naive: materialize the full n x n kernel matrix, multiply.
+The Pallas kernel must match these numerics (up to f32 accumulation order).
+
+Kernels follow the paper's supplementary material (Appendix A):
+
+  RBF           k(r) = sf^2 exp(-r^2 / (2 l^2))
+  Matern-1/2    k(r) = sf^2 exp(-r / l)
+  Matern-3/2    k(r) = sf^2 (1 + sqrt(3) r / l) exp(-sqrt(3) r / l)
+  Matern-5/2    k(r) = sf^2 (1 + sqrt(5) r / l + 5 r^2 / (3 l^2)) exp(-sqrt(5) r / l)
+
+Hyperparameters are passed *raw* (not log-transformed) as an f32[3] array
+``[ell, sf, sigma]``; sigma enters as the diagonal noise ``sigma^2 I``.
+"""
+
+import jax.numpy as jnp
+
+KINDS = ("rbf", "mat12", "mat32", "mat52")
+
+
+def sqdist(x, z):
+    """Pairwise squared Euclidean distances between rows of x (n,d), z (m,d)."""
+    xx = jnp.sum(x * x, axis=1)[:, None]
+    zz = jnp.sum(z * z, axis=1)[None, :]
+    sq = xx + zz - 2.0 * (x @ z.T)
+    return jnp.maximum(sq, 0.0)
+
+
+def kernel_value(kind, sq, ell, sf):
+    """Elementwise kernel value from squared distances ``sq``."""
+    sf2 = sf * sf
+    if kind == "rbf":
+        return sf2 * jnp.exp(-0.5 * sq / (ell * ell))
+    r = jnp.sqrt(sq + 1e-30)  # eps guards the sqrt grad/denorm at r=0
+    if kind == "mat12":
+        return sf2 * jnp.exp(-r / ell)
+    if kind == "mat32":
+        a = jnp.sqrt(3.0) * r / ell
+        return sf2 * (1.0 + a) * jnp.exp(-a)
+    if kind == "mat52":
+        a = jnp.sqrt(5.0) * r / ell
+        return sf2 * (1.0 + a + a * a / 3.0) * jnp.exp(-a)
+    raise ValueError(f"unknown kernel kind {kind!r}")
+
+
+def kernel_matrix(kind, x, z, hypers):
+    """Dense cross-kernel matrix K(x, z); no noise term."""
+    ell, sf = hypers[0], hypers[1]
+    return kernel_value(kind, sqdist(x, z), ell, sf)
+
+
+def kernel_mvm_ref(kind, x, v, hypers):
+    """Reference (K(x,x) + sigma^2 I) @ v with v of shape (n, b)."""
+    sigma = hypers[2]
+    k = kernel_matrix(kind, x, x, hypers)
+    return k @ v + (sigma * sigma) * v

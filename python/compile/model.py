@@ -1,0 +1,171 @@
+"""Layer-2 JAX compute graphs, all built on the L1 Pallas MVM kernel.
+
+Three graph families are AOT-lowered by :mod:`aot`:
+
+  * ``mvm``          — ``(K + sigma^2 I) V`` batch MVM (the estimator
+                       building block; rust drives Chebyshev/Lanczos/CG
+                       iterations against it).
+  * ``cross_mvm``    — ``K(X*, X) alpha`` for predictive means.
+  * ``lanczos``      — a complete m-step batched Lanczos factorization with
+                       full reorthogonalization: probes in, tridiagonal
+                       coefficients (alpha, beta), the solve vector
+                       ``g = Q T^-1 e1 ||z||`` (the paper's free derivative
+                       estimator, §3.2), and probe norms out. The rust side
+                       finishes with an m x m tridiagonal eigensolve
+                       (Gauss quadrature) — O(m^2) scalar work.
+
+Everything is shape-static; aot.py bakes one artifact per configuration.
+Python never runs at serving time.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import kernel_mvm as km
+from .kernels import ref
+
+
+def mvm(kind, x, v, hypers):
+    """(K + sigma^2 I) V — thin wrapper so model-level code owns the API."""
+    return km.kernel_mvm(kind, x, v, hypers)
+
+
+def cross_mvm(kind, xstar, x, alpha, hypers):
+    """K(X*, X) @ alpha — predictive mean block."""
+    return km.kernel_cross_mvm(kind, xstar, x, alpha, hypers)
+
+
+def _tridiag_solve_e1(alphas, betas, znorm):
+    """Solve T g_T = e1 * ||z|| for the (m x m) tridiagonal T per probe.
+
+    alphas: (m, p), betas: (m-1, p), znorm: (p,). Returns (m, p).
+    Thomas algorithm, vectorized over probes; T from Lanczos on an SPD
+    operator is positive definite, so no pivoting is needed.
+    """
+    m = alphas.shape[0]
+    p = alphas.shape[1]
+
+    def fwd(carry, idx):
+        cprime, dprime = carry  # previous modified coefs, shape (p,)
+        a = alphas[idx]
+        b_lo = jnp.where(idx > 0, betas[jnp.maximum(idx - 1, 0)], 0.0)
+        b_up = jnp.where(idx < m - 1, betas[jnp.minimum(idx, m - 2)], 0.0)
+        denom = a - b_lo * cprime
+        c_new = b_up / denom
+        rhs = jnp.where(idx == 0, znorm, jnp.zeros_like(znorm))
+        d_new = (rhs - b_lo * dprime) / denom
+        return (c_new, d_new), (c_new, d_new)
+
+    init = (jnp.zeros((p,), alphas.dtype), jnp.zeros((p,), alphas.dtype))
+    _, (cs, ds) = jax.lax.scan(fwd, init, jnp.arange(m))
+
+    def bwd(x_next, idx):
+        x_i = ds[idx] - cs[idx] * x_next
+        return x_i, x_i
+
+    _, xs_rev = jax.lax.scan(bwd, jnp.zeros((p,), alphas.dtype),
+                             jnp.arange(m - 1, -1, -1))
+    return xs_rev[::-1]  # (m, p)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def lanczos(kind, x, m, z, hypers):
+    """Batched m-step Lanczos on A = K(x,x) + sigma^2 I with starts z.
+
+    Args:
+      kind: kernel kind (static).
+      x: (n, d) inputs.
+      m: number of Lanczos steps (static).
+      z: (n, p) probe block (columns are independent probes).
+      hypers: (3,) [ell, sf, sigma].
+
+    Returns:
+      alphas (m, p), betas (m-1, p), g (n, p) with g ~= A^-1 z, znorm (p,),
+      qbuf (m, n, p) — the Krylov basis, returned so the AOT consumer can
+      redo the T^-1 e1 solve in f64 (the in-graph Thomas scan is kept for
+      eager use/tests, but the rust runtime recombines Q itself).
+
+    Full reorthogonalization: each new Krylov vector is re-projected against
+    all stored Q columns (the paper notes Lanczos is numerically unstable
+    and cites practical fixes [33, 34]; full reorth is the simplest sound
+    one at m <= ~100).
+    """
+    n, p = z.shape
+    znorm = jnp.sqrt(jnp.sum(z * z, axis=0))  # (p,)
+    q0 = z / znorm[None, :]
+
+    qbuf0 = jnp.zeros((m, n, p), z.dtype)
+    qbuf0 = qbuf0.at[0].set(q0)
+
+    def step(carry, j):
+        qbuf, q, q_prev, beta_prev = carry
+        w = mvm(kind, x, q, hypers)                       # (n, p) — the MVM
+        alpha = jnp.sum(q * w, axis=0)                    # (p,)
+        w = w - alpha[None, :] * q - beta_prev[None, :] * q_prev
+        # Full reorthogonalization against stored columns (mask k <= j).
+        mask = (jnp.arange(m) <= j).astype(w.dtype)       # (m,)
+        proj = jnp.einsum("knp,np->kp", qbuf, w) * mask[:, None]
+        w = w - jnp.einsum("knp,kp->np", qbuf, proj)
+        beta = jnp.sqrt(jnp.sum(w * w, axis=0))
+        # Guard breakdown (beta ~ 0): keep the vector at zero.
+        safe = jnp.where(beta > 1e-12, beta, 1.0)
+        q_next = jnp.where(beta[None, :] > 1e-12, w / safe[None, :], 0.0)
+        write_at = jnp.minimum(j + 1, m - 1)
+        upd = jnp.where(j + 1 < m, 1.0, 0.0).astype(w.dtype)
+        cur = jax.lax.dynamic_index_in_dim(qbuf, write_at, 0, keepdims=False)
+        qbuf = jax.lax.dynamic_update_index_in_dim(
+            qbuf, cur * (1.0 - upd) + q_next * upd, write_at, 0)
+        return (qbuf, q_next, q, beta), (alpha, beta)
+
+    (qbuf, _, _, _), (alphas, betas_all) = jax.lax.scan(
+        step, (qbuf0, q0, jnp.zeros_like(q0), jnp.zeros((p,), z.dtype)),
+        jnp.arange(m))
+    betas = betas_all[:-1]                                # (m-1, p)
+
+    # g = Q (T^-1 e1 ||z||): the derivative/solve estimator, re-using the
+    # decomposition at zero extra MVMs (paper §3.2).
+    gt = _tridiag_solve_e1(alphas, betas, znorm)          # (m, p)
+    g = jnp.einsum("knp,kp->np", qbuf, gt)
+    return alphas, betas, g, znorm, qbuf
+
+
+def slq_logdet_ref(kind, x, m, z, hypers):
+    """SLQ estimate of log|K + sigma^2 I| finished in numpy (test oracle).
+
+    Mirrors exactly what the rust side does with the (alphas, betas)
+    artifact outputs: per-probe tridiagonal eigensolve, Gauss-quadrature
+    weights from squared first-row eigenvector entries.
+    """
+    import numpy as np
+
+    alphas, betas, _, znorm, _ = lanczos(kind, x, m, z, hypers)
+    alphas = np.asarray(alphas, dtype=np.float64)
+    betas = np.asarray(betas, dtype=np.float64)
+    znorm = np.asarray(znorm, dtype=np.float64)
+    p = z.shape[1]
+    est = 0.0
+    for i in range(p):
+        t = np.diag(alphas[:, i])
+        if m > 1:
+            t += np.diag(betas[:, i], 1) + np.diag(betas[:, i], -1)
+        lam, vecs = np.linalg.eigh(t)
+        lam = np.maximum(lam, 1e-300)
+        tau = vecs[0, :] ** 2
+        est += znorm[i] ** 2 * float(np.sum(tau * np.log(lam)))
+    # E[z^T log(A) z] = tr(log A) for unit-variance probes; the mean over
+    # probes is the trace estimate.
+    return est / p
+
+
+def dense_logdet_ref(kind, x, hypers):
+    """Exact log|K + sigma^2 I| via dense slogdet (test oracle)."""
+    import numpy as np
+
+    k = np.asarray(ref.kernel_matrix(kind, x, x, hypers), dtype=np.float64)
+    sigma = float(hypers[2])
+    k += sigma * sigma * np.eye(k.shape[0])
+    sign, val = np.linalg.slogdet(k)
+    assert sign > 0
+    return val

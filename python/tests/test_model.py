@@ -1,0 +1,89 @@
+"""L2 correctness: Lanczos graph vs dense oracles.
+
+Checks the three guarantees the rust runtime relies on:
+  1. (alphas, betas) define a tridiagonal T whose Gauss quadrature
+     reproduces log|K + sigma^2 I| (the paper's §3.2 estimator);
+  2. g = Q T^-1 e1 ||z|| approximates K^-1 z (the free derivative solve);
+  3. the Thomas tridiagonal solve inside the graph matches dense solve.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+HYPERS = jnp.asarray([0.5, 1.2, 0.3], jnp.float32)
+
+
+def _data(n, d, p, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    z = jnp.asarray(rng.choice([-1.0, 1.0], size=(n, p)), jnp.float32)
+    return x, z
+
+
+@pytest.mark.parametrize("kind", ["rbf", "mat32"])
+def test_slq_logdet_close_to_exact(kind):
+    x, z = _data(300, 2, 8, seed=42)
+    est = model.slq_logdet_ref(kind, x, 30, z, HYPERS)
+    exact = model.dense_logdet_ref(kind, x, HYPERS)
+    assert abs(est - exact) / abs(exact) < 0.05, (est, exact)
+
+
+def test_slq_logdet_improves_with_steps():
+    x, z = _data(256, 2, 8, seed=7)
+    exact = model.dense_logdet_ref("rbf", x, HYPERS)
+    err5 = abs(model.slq_logdet_ref("rbf", x, 5, z, HYPERS) - exact)
+    err30 = abs(model.slq_logdet_ref("rbf", x, 30, z, HYPERS) - exact)
+    assert err30 <= err5 + 1e-6
+
+
+def test_lanczos_g_solves_system():
+    # g should approximate (K + sigma^2 I)^-1 z.
+    x, z = _data(200, 2, 4, seed=3)
+    _, _, g, _, _ = model.lanczos("rbf", x, 40, z, HYPERS)
+    k = np.asarray(ref.kernel_matrix("rbf", x, x, HYPERS), np.float64)
+    k += float(HYPERS[2]) ** 2 * np.eye(200)
+    want = np.linalg.solve(k, np.asarray(z, np.float64))
+    got = np.asarray(g, np.float64)
+    rel = np.linalg.norm(got - want) / np.linalg.norm(want)
+    assert rel < 5e-2, rel
+
+
+def test_lanczos_tridiag_orthonormal_alpha_range():
+    # alphas are Rayleigh quotients of an SPD operator: all positive, and
+    # bounded by the operator norm estimate.
+    x, z = _data(180, 2, 4, seed=9)
+    alphas, betas, _, _, _ = model.lanczos("rbf", x, 20, z, HYPERS)
+    a = np.asarray(alphas)
+    b = np.asarray(betas)
+    assert np.all(a > 0)
+    assert np.all(b >= -1e-6)
+
+
+def test_tridiag_solve_matches_dense():
+    rng = np.random.default_rng(11)
+    m, p = 12, 3
+    # Build diagonally-dominant SPD tridiagonals.
+    alphas = jnp.asarray(rng.uniform(2.0, 4.0, size=(m, p)), jnp.float32)
+    betas = jnp.asarray(rng.uniform(0.1, 0.8, size=(m - 1, p)), jnp.float32)
+    znorm = jnp.asarray(rng.uniform(0.5, 2.0, size=(p,)), jnp.float32)
+    got = np.asarray(model._tridiag_solve_e1(alphas, betas, znorm))
+    for i in range(p):
+        t = np.diag(np.asarray(alphas)[:, i]) + \
+            np.diag(np.asarray(betas)[:, i], 1) + \
+            np.diag(np.asarray(betas)[:, i], -1)
+        e1 = np.zeros(m)
+        e1[0] = float(znorm[i])
+        want = np.linalg.solve(t, e1)
+        assert np.max(np.abs(got[:, i] - want)) < 1e-4
+
+
+def test_lanczos_exact_when_m_equals_n():
+    # With m = n (and full reorth) the quadrature is exact.
+    x, z = _data(48, 1, 6, seed=5)
+    est = model.slq_logdet_ref("rbf", x, 48, z, HYPERS)
+    exact = model.dense_logdet_ref("rbf", x, HYPERS)
+    assert abs(est - exact) / abs(exact) < 5e-2  # f32 Lanczos, 1-D inputs

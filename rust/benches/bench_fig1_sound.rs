@@ -1,0 +1,17 @@
+//! `cargo bench` target regenerating Fig. 1: sound modeling (train/infer time, SMAE).
+//! Runs the coordinator driver at Small scale; `gpsld exp fig1 --scale paper`
+//! reproduces the full-size version.
+use gpsld::coordinator::{cli, Scale};
+use gpsld::util::bench::Bench;
+
+fn main() {
+    Bench::header("Fig. 1: sound modeling (train/infer time, SMAE)");
+    let mut b = Bench::one_shot();
+    let mut out = None;
+    b.run("fig1 (small scale, end-to-end)", || {
+        out = cli::run_experiment("fig1", Scale::Small);
+    });
+    if let Some(res) = out {
+        res.print("Fig. 1: sound modeling (train/infer time, SMAE) — regenerated rows");
+    }
+}

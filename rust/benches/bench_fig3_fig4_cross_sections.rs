@@ -1,0 +1,17 @@
+//! `cargo bench` target regenerating Supp. Figs. 3-4: 1-D cross sections.
+//! Runs the coordinator driver at Small scale; `gpsld exp fig3_fig4 --scale paper`
+//! reproduces the full-size version.
+use gpsld::coordinator::{cli, Scale};
+use gpsld::util::bench::Bench;
+
+fn main() {
+    Bench::header("Supp. Figs. 3-4: 1-D cross sections");
+    let mut b = Bench::one_shot();
+    let mut out = None;
+    b.run("fig3_fig4 (small scale, end-to-end)", || {
+        out = cli::run_experiment("fig3_fig4", Scale::Small);
+    });
+    if let Some(res) = out {
+        res.print("Supp. Figs. 3-4: 1-D cross sections — regenerated rows");
+    }
+}

@@ -1,0 +1,17 @@
+//! `cargo bench` target regenerating Supp. Fig. 5: Lanczos vs Chebyshev spectrum.
+//! Runs the coordinator driver at Small scale; `gpsld exp fig5 --scale paper`
+//! reproduces the full-size version.
+use gpsld::coordinator::{cli, Scale};
+use gpsld::util::bench::Bench;
+
+fn main() {
+    Bench::header("Supp. Fig. 5: Lanczos vs Chebyshev spectrum");
+    let mut b = Bench::one_shot();
+    let mut out = None;
+    b.run("fig5 (small scale, end-to-end)", || {
+        out = cli::run_experiment("fig5", Scale::Small);
+    });
+    if let Some(res) = out {
+        res.print("Supp. Fig. 5: Lanczos vs Chebyshev spectrum — regenerated rows");
+    }
+}

@@ -1,0 +1,17 @@
+//! `cargo bench` target regenerating Supp. Fig. 6: diagonal correction.
+//! Runs the coordinator driver at Small scale; `gpsld exp fig6 --scale paper`
+//! reproduces the full-size version.
+use gpsld::coordinator::{cli, Scale};
+use gpsld::util::bench::Bench;
+
+fn main() {
+    Bench::header("Supp. Fig. 6: diagonal correction");
+    let mut b = Bench::one_shot();
+    let mut out = None;
+    b.run("fig6 (small scale, end-to-end)", || {
+        out = cli::run_experiment("fig6", Scale::Small);
+    });
+    if let Some(res) = out {
+        res.print("Supp. Fig. 6: diagonal correction — regenerated rows");
+    }
+}

@@ -1,0 +1,17 @@
+//! `cargo bench` target regenerating Supp. Fig. 7: surrogate level curves.
+//! Runs the coordinator driver at Small scale; `gpsld exp fig7 --scale paper`
+//! reproduces the full-size version.
+use gpsld::coordinator::{cli, Scale};
+use gpsld::util::bench::Bench;
+
+fn main() {
+    Bench::header("Supp. Fig. 7: surrogate level curves");
+    let mut b = Bench::one_shot();
+    let mut out = None;
+    b.run("fig7 (small scale, end-to-end)", || {
+        out = cli::run_experiment("fig7", Scale::Small);
+    });
+    if let Some(res) = out {
+        res.print("Supp. Fig. 7: surrogate level curves — regenerated rows");
+    }
+}

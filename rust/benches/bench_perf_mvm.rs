@@ -1,0 +1,101 @@
+//! §Perf micro/meso benchmarks: MVM throughput per operator structure
+//! (dense native, PJRT/Pallas artifact, Toeplitz-SKI scaling in m),
+//! Lanczos/Chebyshev estimator cost, and CG solves. These are the numbers
+//! recorded before/after each optimization step in EXPERIMENTS.md §Perf.
+
+use gpsld::coordinator::{cli, Scale};
+use gpsld::data;
+use gpsld::estimators::chebyshev::{chebyshev_logdet, ChebOptions};
+use gpsld::estimators::slq::{slq_logdet, SlqOptions};
+use gpsld::grid::{Grid, InterpOrder};
+use gpsld::kernels::{SeparableKernel, Shape};
+use gpsld::operators::{KernelOp, LinOp, SkiOp};
+use gpsld::solvers::cg::cg;
+use gpsld::util::bench::{black_box, Bench};
+use gpsld::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new(1.0);
+    let mut rng = Rng::new(3);
+
+    // --- SKI MVM scaling in m (paper: O(n + m log m)) ---
+    Bench::header("SKI (Toeplitz) MVM, n = 8000");
+    let d = data::sound(8000, 3, 40, 9);
+    let mut skis = Vec::new();
+    for m in [1000usize, 4000, 16000, 64000] {
+        let grid = Grid::covering(&d.x_train, &[m], 0.05);
+        let ski = SkiOp::new(
+            &d.x_train,
+            grid,
+            SeparableKernel::iso(Shape::Rbf, 1, 0.004, 0.5),
+            0.1,
+            InterpOrder::Cubic,
+            false,
+        );
+        let x: Vec<f64> = (0..d.n_train()).map(|_| rng.gaussian()).collect();
+        let mut y = vec![0.0; d.n_train()];
+        b.run(&format!("ski_mvm n=8000 m={m}"), || {
+            ski.apply(&x, &mut y);
+            black_box(y[0])
+        });
+        skis.push(ski);
+    }
+
+    // --- Estimators end-to-end on SKI m=4000 ---
+    Bench::header("logdet estimators on SKI n=8000 m=4000 (3 hypers, grads)");
+    let ski = &skis[1];
+    b.run("slq 25x5 with grads", || {
+        black_box(
+            slq_logdet(
+                ski,
+                &SlqOptions { steps: 25, probes: 5, seed: 1, ..Default::default() },
+            )
+            .unwrap()
+            .value,
+        )
+    });
+    b.run("slq 25x5 value only", || {
+        black_box(
+            slq_logdet(
+                ski,
+                &SlqOptions { steps: 25, probes: 5, grads: false, seed: 1, ..Default::default() },
+            )
+            .unwrap()
+            .value,
+        )
+    });
+    b.run("chebyshev 50x5 with grads", || {
+        black_box(
+            chebyshev_logdet(
+                ski,
+                &ChebOptions { degree: 50, probes: 5, seed: 1, ..Default::default() },
+            )
+            .unwrap()
+            .value,
+        )
+    });
+
+    // --- CG solve (the alpha term) ---
+    Bench::header("CG solve on SKI n=8000 m=4000");
+    let rhs: Vec<f64> = (0..d.n_train()).map(|_| rng.gaussian()).collect();
+    b.run("cg tol=1e-8", || {
+        let (x, info) = cg(ski, &rhs, 1e-8, 500);
+        black_box((x[0], info.iters))
+    });
+
+    // --- Dense + PJRT artifact paths (the L1/L2 hot path) ---
+    if let Some(res) = cli::run_experiment("perf", Scale::Small) {
+        res.print("perf experiment (dense native vs PJRT vs SKI)");
+    }
+
+    // --- SKI derivative MVMs (apply_grad hot path) ---
+    Bench::header("SKI derivative MVMs");
+    let x: Vec<f64> = (0..d.n_train()).map(|_| rng.gaussian()).collect();
+    let mut y = vec![0.0; d.n_train()];
+    for i in 0..ski.num_hypers() {
+        b.run(&format!("apply_grad hyper {i}"), || {
+            ski.apply_grad(i, &x, &mut y);
+            black_box(y[0])
+        });
+    }
+}

@@ -1,0 +1,17 @@
+//! `cargo bench` target regenerating Table 1: precipitation MSE + time.
+//! Runs the coordinator driver at Small scale; `gpsld exp table1 --scale paper`
+//! reproduces the full-size version.
+use gpsld::coordinator::{cli, Scale};
+use gpsld::util::bench::Bench;
+
+fn main() {
+    Bench::header("Table 1: precipitation MSE + time");
+    let mut b = Bench::one_shot();
+    let mut out = None;
+    b.run("table1 (small scale, end-to-end)", || {
+        out = cli::run_experiment("table1", Scale::Small);
+    });
+    if let Some(res) = out {
+        res.print("Table 1: precipitation MSE + time — regenerated rows");
+    }
+}

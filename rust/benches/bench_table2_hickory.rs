@@ -1,0 +1,17 @@
+//! `cargo bench` target regenerating Table 2: Hickory LGCP hyper recovery.
+//! Runs the coordinator driver at Small scale; `gpsld exp table2 --scale paper`
+//! reproduces the full-size version.
+use gpsld::coordinator::{cli, Scale};
+use gpsld::util::bench::Bench;
+
+fn main() {
+    Bench::header("Table 2: Hickory LGCP hyper recovery");
+    let mut b = Bench::one_shot();
+    let mut out = None;
+    b.run("table2 (small scale, end-to-end)", || {
+        out = cli::run_experiment("table2", Scale::Small);
+    });
+    if let Some(res) = out {
+        res.print("Table 2: Hickory LGCP hyper recovery — regenerated rows");
+    }
+}

@@ -1,0 +1,17 @@
+//! `cargo bench` target regenerating Table 3: crime LGCP (Matern x SM, neg-binomial).
+//! Runs the coordinator driver at Small scale; `gpsld exp table3 --scale paper`
+//! reproduces the full-size version.
+use gpsld::coordinator::{cli, Scale};
+use gpsld::util::bench::Bench;
+
+fn main() {
+    Bench::header("Table 3: crime LGCP (Matern x SM, neg-binomial)");
+    let mut b = Bench::one_shot();
+    let mut out = None;
+    b.run("table3 (small scale, end-to-end)", || {
+        out = cli::run_experiment("table3", Scale::Small);
+    });
+    if let Some(res) = out {
+        res.print("Table 3: crime LGCP (Matern x SM, neg-binomial) — regenerated rows");
+    }
+}

@@ -1,0 +1,17 @@
+//! `cargo bench` target regenerating Table 4: deep kernel learning RMSE + per-iter time.
+//! Runs the coordinator driver at Small scale; `gpsld exp table4 --scale paper`
+//! reproduces the full-size version.
+use gpsld::coordinator::{cli, Scale};
+use gpsld::util::bench::Bench;
+
+fn main() {
+    Bench::header("Table 4: deep kernel learning RMSE + per-iter time");
+    let mut b = Bench::one_shot();
+    let mut out = None;
+    b.run("table4 (small scale, end-to-end)", || {
+        out = cli::run_experiment("table4", Scale::Small);
+    });
+    if let Some(res) = out {
+        res.print("Table 4: deep kernel learning RMSE + per-iter time — regenerated rows");
+    }
+}

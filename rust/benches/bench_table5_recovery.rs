@@ -1,0 +1,17 @@
+//! `cargo bench` target regenerating Supp. Table 5: hyperparameter recovery.
+//! Runs the coordinator driver at Small scale; `gpsld exp table5 --scale paper`
+//! reproduces the full-size version.
+use gpsld::coordinator::{cli, Scale};
+use gpsld::util::bench::Bench;
+
+fn main() {
+    Bench::header("Supp. Table 5: hyperparameter recovery");
+    let mut b = Bench::one_shot();
+    let mut out = None;
+    b.run("table5 (small scale, end-to-end)", || {
+        out = cli::run_experiment("table5", Scale::Small);
+    });
+    if let Some(res) = out {
+        res.print("Supp. Table 5: hyperparameter recovery — regenerated rows");
+    }
+}

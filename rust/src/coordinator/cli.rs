@@ -1,0 +1,158 @@
+//! Hand-rolled CLI (clap is not in the offline registry).
+//!
+//! ```text
+//! gpsld exp <id> [--scale small|paper]     run a paper experiment
+//! gpsld exp all  [--scale small|paper]     run every experiment
+//! gpsld artifacts                          list/verify PJRT artifacts
+//! gpsld info                               version + feature summary
+//! ```
+
+use super::{experiments, figures, ExpResult, Scale};
+
+const EXP_IDS: &[&str] = &[
+    "fig1", "table1", "table2", "table3", "table4", "table5",
+    "fig3_fig4", "fig5", "fig6", "fig7", "perf",
+];
+
+pub fn usage() -> String {
+    format!(
+        "gpsld {} — Scalable Log Determinants for GP Kernel Learning (NIPS 2017 repro)\n\n\
+         USAGE:\n  gpsld exp <id|all> [--scale small|paper] [--md <file>]\n  gpsld artifacts\n  gpsld info\n\n\
+         EXPERIMENTS: {}\n",
+        crate::version(),
+        EXP_IDS.join(", ")
+    )
+}
+
+pub fn run_experiment(id: &str, scale: Scale) -> Option<ExpResult> {
+    let res = match id {
+        "fig1" => experiments::fig1_sound(scale),
+        "table1" => experiments::table1_precipitation(scale),
+        "table2" => experiments::table2_hickory(scale),
+        "table3" => experiments::table3_crime(scale),
+        "table4" => experiments::table4_dkl(scale),
+        "table5" => experiments::table5_recovery(scale),
+        "fig3_fig4" => figures::fig3_fig4_cross_sections(scale),
+        "fig5" => figures::fig5_spectrum(scale),
+        "fig6" => figures::fig6_diag_correction(scale),
+        "fig7" => figures::fig7_surrogate(scale),
+        "perf" => figures::perf_mvm(scale),
+        _ => return None,
+    };
+    Some(res)
+}
+
+/// Entry point used by `main.rs`. Returns the process exit code.
+pub fn main_with_args(args: &[String]) -> i32 {
+    match args.first().map(String::as_str) {
+        Some("exp") => {
+            let Some(id) = args.get(1) else {
+                eprintln!("{}", usage());
+                return 2;
+            };
+            let mut scale = Scale::Small;
+            let mut md_out: Option<String> = None;
+            let mut i = 2;
+            while i < args.len() {
+                match args[i].as_str() {
+                    "--scale" => {
+                        scale = args
+                            .get(i + 1)
+                            .and_then(|s| Scale::parse(s))
+                            .unwrap_or(Scale::Small);
+                        i += 2;
+                    }
+                    "--md" => {
+                        md_out = args.get(i + 1).cloned();
+                        i += 2;
+                    }
+                    other => {
+                        eprintln!("unknown flag {other}");
+                        return 2;
+                    }
+                }
+            }
+            let ids: Vec<&str> = if id == "all" {
+                EXP_IDS.to_vec()
+            } else {
+                vec![id.as_str()]
+            };
+            let mut md = String::new();
+            for id in ids {
+                let t0 = std::time::Instant::now();
+                match run_experiment(id, scale) {
+                    Some(res) => {
+                        res.print(&format!("{id} (scale={scale:?})"));
+                        println!("[{}s]", super::fmt_s(t0.elapsed().as_secs_f64()));
+                        md.push_str(&format!("\n### {id}\n\n{}", res.to_markdown()));
+                    }
+                    None => {
+                        eprintln!("unknown experiment {id}\n{}", usage());
+                        return 2;
+                    }
+                }
+            }
+            if let Some(path) = md_out {
+                if let Err(e) = std::fs::write(&path, md) {
+                    eprintln!("failed to write {path}: {e}");
+                    return 1;
+                }
+                println!("wrote {path}");
+            }
+            0
+        }
+        Some("artifacts") => match crate::runtime::PjrtRuntime::new("artifacts") {
+            Ok(rt) => {
+                println!("platform: {}", rt.platform());
+                for name in rt.names() {
+                    let s = &rt.specs[&name];
+                    println!(
+                        "  {name}  graph={} kind={} in={:?} out={:?}",
+                        s.graph, s.kind, s.in_shapes, s.out_shapes
+                    );
+                }
+                0
+            }
+            Err(e) => {
+                eprintln!("artifacts unavailable: {e}");
+                1
+            }
+        },
+        Some("info") => {
+            println!("gpsld {}", crate::version());
+            println!("estimators: lanczos(slq), chebyshev, surrogate, scaled_eig, exact");
+            println!("operators: dense, toeplitz, kronecker, ski(+diag), fitc/sor, sum");
+            println!("likelihoods: gaussian, poisson(lgcp), negative-binomial");
+            println!("runtime: PJRT CPU via xla crate; artifacts from python/compile (JAX+Pallas)");
+            0
+        }
+        _ => {
+            eprintln!("{}", usage());
+            2
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn usage_lists_all_experiments() {
+        let u = usage();
+        for id in EXP_IDS {
+            assert!(u.contains(id), "{id} missing from usage");
+        }
+    }
+
+    #[test]
+    fn unknown_command_is_error() {
+        assert_eq!(main_with_args(&["bogus".into()]), 2);
+        assert_eq!(main_with_args(&[]), 2);
+    }
+
+    #[test]
+    fn unknown_experiment_is_none() {
+        assert!(run_experiment("nope", Scale::Small).is_none());
+    }
+}

@@ -1,0 +1,412 @@
+//! Drivers for the supplementary figures: 1-D cross-sections (Figs. 3–4),
+//! spectrum comparison (Fig. 5), diagonal correction (Fig. 6), surrogate
+//! level curves (Fig. 7), and the §Perf MVM study.
+
+use std::time::Instant;
+
+use super::{ExpResult, Scale};
+use crate::data;
+use crate::estimators::chebyshev::{chebyshev_logdet, ChebOptions};
+use crate::estimators::exact;
+use crate::estimators::lanczos::lanczos;
+use crate::estimators::slq::{slq_logdet, SlqOptions};
+use crate::estimators::surrogate::LogdetSurrogate;
+use crate::gp::regression::GpRegression;
+use crate::grid::{Grid, GridDim, InterpOrder};
+use crate::kernels::{IsoKernel, Kernel, SeparableKernel, Shape};
+use crate::operators::{DenseKernelOp, FitcOp, KernelOp, LinOp, SkiOp};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Figs. 3–4 — 1-D cross sections of log|K̃| and d log|K̃|/d(log ell) as one
+/// hyper is perturbed around the truth (ell, sf, sigma) = (0.1, 1, 0.1),
+/// for exact vs Lanczos vs Chebyshev, on the exact kernel (fig3) and on the
+/// SKI kernel with/without diagonal replacement (fig4).
+pub fn fig3_fig4_cross_sections(scale: Scale) -> ExpResult {
+    let (n, steps, degree, sweep) = match scale {
+        Scale::Small => (400, 40, 60, vec![-0.6, -0.3, 0.0, 0.3, 0.6]),
+        Scale::Paper => (1000, 100, 150, vec![-0.9, -0.6, -0.3, 0.0, 0.3, 0.6, 0.9]),
+    };
+    let truth = [(0.1f64).ln(), (1.0f64).ln(), (0.1f64).ln()];
+    let mut rows = Vec::new();
+
+    for shape in [Shape::Rbf, Shape::Matern12] {
+        // fig3: exact kernel on equispaced points (Toeplitz structure).
+        let xs: Vec<Vec<f64>> = (0..n)
+            .map(|i| vec![4.0 * i as f64 / (n - 1) as f64])
+            .collect();
+        for &dlog in &sweep {
+            let h = [truth[0] + dlog, truth[1], truth[2]];
+            let op = DenseKernelOp::new(
+                xs.clone(),
+                Box::new(IsoKernel { shape, input_dim: 1, log_ell: h[0], log_sf: h[1] }),
+                h[2].exp(),
+            );
+            let (ev, eg) = exact::exact_logdet_grads_dense(&op).unwrap();
+            let slq = slq_logdet(
+                &op,
+                &SlqOptions { steps, probes: 5, seed: 61, ..Default::default() },
+            )
+            .unwrap();
+            let cheb = chebyshev_logdet(
+                &op,
+                &ChebOptions { degree, probes: 5, seed: 61, ..Default::default() },
+            )
+            .unwrap();
+            rows.push(vec![
+                format!("fig3/{}", shape.name()),
+                format!("{:+.1}", dlog),
+                format!("{:.1}", ev),
+                format!("{:.1}", slq.value),
+                format!("{:.1}", cheb.value),
+                format!("{:.1}", eg[0]),
+                format!("{:.1}", slq.grad[0]),
+                format!("{:.1}", cheb.grad[0]),
+            ]);
+        }
+
+        // fig4: SKI kernel, uniform-random points, diag replacement on/off.
+        let mut rng = Rng::new(67);
+        let xs: Vec<Vec<f64>> =
+            (0..n).map(|_| vec![rng.uniform_in(0.0, 4.0)]).collect();
+        for diag in [true, false] {
+            for &dlog in &[-0.3f64, 0.0, 0.3] {
+                let h = [truth[0] + dlog, truth[1], truth[2]];
+                let grid = Grid::new(vec![GridDim { lo: -0.1, hi: 4.1, m: n }]);
+                let mut kern = SeparableKernel::iso(shape, 1, 1.0, 1.0);
+                kern.set_hypers(&[h[0], h[1]]);
+                let ski = SkiOp::new(&xs, grid, kern, h[2].exp(), InterpOrder::Cubic, diag);
+                let ev = exact::exact_logdet(&ski).unwrap();
+                let slq = slq_logdet(
+                    &ski,
+                    &SlqOptions { steps, probes: 5, grads: false, seed: 63, ..Default::default() },
+                )
+                .unwrap();
+                rows.push(vec![
+                    format!("fig4/{}/diag={}", shape.name(), diag),
+                    format!("{:+.1}", dlog),
+                    format!("{:.1}", ev),
+                    format!("{:.1}", slq.value),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    ExpResult {
+        id: "fig3_fig4",
+        header: vec!["case", "dlog_ell", "exact", "lanczos", "chebyshev", "g_exact", "g_lanczos", "g_chebyshev"],
+        rows,
+    }
+}
+
+/// Fig. 5 — why Lanczos beats Chebyshev: Ritz values lock onto the true
+/// spectrum while the Chebyshev approximation spends its error budget near
+/// zero, where the eigenvalue mass (and the log singularity) is.
+pub fn fig5_spectrum(scale: Scale) -> ExpResult {
+    let n = match scale {
+        Scale::Small => 300,
+        Scale::Paper => 1000,
+    };
+    let xs: Vec<Vec<f64>> = (0..n)
+        .map(|i| vec![4.0 * i as f64 / (n - 1) as f64])
+        .collect();
+    let op = DenseKernelOp::new(
+        xs,
+        Box::new(IsoKernel::new(Shape::Rbf, 1, 0.3, 1.0)),
+        0.1,
+    );
+    // True spectrum.
+    let eig = crate::linalg::eigh::eigh(&op.to_dense()).unwrap();
+    // Ritz values from one probe (m = 50 like the figure).
+    let mut rng = Rng::new(71);
+    let mut z = vec![0.0; n];
+    rng.fill_gaussian(&mut z);
+    let res = lanczos(&op, &z, 50.min(n));
+    let ritz =
+        crate::linalg::tridiag::tridiag_eig_first_row(&res.alphas, &res.betas).unwrap();
+
+    // Bucket both spectra logarithmically and compare mass + report the
+    // Chebyshev pointwise error near the smallest eigenvalue.
+    let lam_min = eig.eigvals[0].max(1e-12);
+    let lam_max = eig.eigvals[n - 1];
+    let nb = 10;
+    let edges: Vec<f64> = (0..=nb)
+        .map(|i| (lam_min.ln() + (lam_max.ln() - lam_min.ln()) * i as f64 / nb as f64).exp())
+        .collect();
+    let coeffs = crate::estimators::chebyshev::cheb_coeffs(
+        |t| (0.5 * ((lam_max * 1.01 - lam_min * 0.99) * t + lam_max * 1.01 + lam_min * 0.99)).ln(),
+        100,
+    );
+    let cheb_at = |lam: f64| {
+        let t = (2.0 * lam - (lam_max * 1.01 + lam_min * 0.99)) / (lam_max * 1.01 - lam_min * 0.99);
+        let mut b1 = 0.0;
+        let mut b2 = 0.0;
+        for j in (1..coeffs.len()).rev() {
+            let b0 = 2.0 * t * b1 - b2 + coeffs[j];
+            b2 = b1;
+            b1 = b0;
+        }
+        t * b1 - b2 + coeffs[0]
+    };
+    let mut rows = Vec::new();
+    for b in 0..nb {
+        let (lo, hi) = (edges[b], edges[b + 1]);
+        let true_count = eig.eigvals.iter().filter(|&&l| l >= lo && l < hi).count();
+        let ritz_mass: f64 = ritz
+            .eigvals
+            .iter()
+            .zip(&ritz.first_components)
+            .filter(|(&l, _)| l >= lo && l < hi)
+            .map(|(_, w)| w * w)
+            .sum();
+        let mid = (lo * hi).sqrt();
+        let cheb_err = (cheb_at(mid) - mid.ln()).abs();
+        rows.push(vec![
+            format!("[{:.2e},{:.2e})", lo, hi),
+            true_count.to_string(),
+            format!("{:.3}", ritz_mass * n as f64),
+            format!("{:.2e}", cheb_err),
+        ]);
+    }
+    ExpResult {
+        id: "fig5",
+        header: vec!["eig_bucket", "true_count", "ritz_weighted_count", "cheb_log_err"],
+        rows,
+    }
+}
+
+/// Fig. 6 — the importance of diagonal correction: predictive uncertainty
+/// inside an inducing-point gap, for SKI+diag / SKI no-diag / FITC /
+/// scaled-eig-style (no correction possible).
+pub fn fig6_diag_correction(scale: Scale) -> ExpResult {
+    let (n, m_grid) = match scale {
+        Scale::Small => (400, 60),
+        Scale::Paper => (1000, 120),
+    };
+    let mut rng = Rng::new(73);
+    let xs: Vec<Vec<f64>> = (0..n)
+        .map(|_| {
+            // Leave a data-free + inducing-free hole in (2, 5).
+            loop {
+                let x = rng.uniform_in(-10.0, 10.0);
+                if !(2.0..5.0).contains(&x) {
+                    return vec![x];
+                }
+            }
+        })
+        .collect();
+    let y: Vec<f64> = xs
+        .iter()
+        .map(|x| 1.0 + x[0] / 2.0 + x[0].sin() + 0.05 * rng.gaussian())
+        .collect();
+    // "Optimal" hypers from the generating process.
+    let (ell, sf, sigma) = (1.2, 1.5, 0.06);
+    // Inducing grid with the same hole (forces SKI diagonal error there).
+    let grid = Grid::new(vec![GridDim { lo: -10.5, hi: 10.5, m: m_grid }]);
+    let gap_test: Vec<Vec<f64>> = (0..25).map(|i| vec![2.2 + 2.6 * i as f64 / 24.0]).collect();
+    let data_test: Vec<Vec<f64>> = (0..25).map(|i| vec![-9.0 + 10.0 * i as f64 / 24.0]).collect();
+
+    let mut rows = Vec::new();
+    for (name, diag) in [("ski_diag", true), ("ski_nodiag", false)] {
+        let kern = SeparableKernel::iso(Shape::Matern32, 1, ell, sf);
+        let ski = SkiOp::new(&xs, grid.clone(), kern, sigma, InterpOrder::Cubic, diag);
+        let mut gp = GpRegression::new(ski, y.clone());
+        let vg = gp.predict_var(&gap_test);
+        let vd = gp.predict_var(&data_test);
+        rows.push(vec![
+            name.into(),
+            format!("{:.4}", stats::mean(&vg).sqrt()),
+            format!("{:.4}", stats::mean(&vd).sqrt()),
+        ]);
+    }
+    // FITC reference: honest uncertainty growth away from inducing points.
+    let m_fitc = m_grid.min(48);
+    let inducing: Vec<Vec<f64>> = (0..m_fitc)
+        .map(|i| {
+            let t = -10.0 + 20.0 * i as f64 / (m_fitc - 1) as f64;
+            // Same hole in the inducing set.
+            vec![if (2.0..5.0).contains(&t) { 1.9 } else { t }]
+        })
+        .collect();
+    let fitc = FitcOp::new(
+        xs.clone(),
+        inducing,
+        Box::new(IsoKernel::new(Shape::Matern32, 1, ell, sf)),
+        sigma,
+        true,
+    )
+    .unwrap();
+    let vg = fitc.predict_var(&gap_test).unwrap();
+    let vd = fitc.predict_var(&data_test).unwrap();
+    rows.push(vec![
+        "fitc".into(),
+        format!("{:.4}", stats::mean(&vg).sqrt()),
+        format!("{:.4}", stats::mean(&vd).sqrt()),
+    ]);
+    ExpResult {
+        id: "fig6",
+        header: vec!["method", "sd_in_gap", "sd_near_data"],
+        rows,
+    }
+}
+
+/// Fig. 7 — surrogate level curves: exact vs surrogate log determinant over
+/// an (ell, sigma) grid at fixed sf = 1.
+pub fn fig7_surrogate(scale: Scale) -> ExpResult {
+    let (n, n_design, grid_pts) = match scale {
+        Scale::Small => (300, 30, 5),
+        Scale::Paper => (1000, 50, 7),
+    };
+    let mut rows = Vec::new();
+    for shape in [Shape::Rbf, Shape::Matern32] {
+        let xs: Vec<Vec<f64>> = (0..n)
+            .map(|i| vec![4.0 * i as f64 / (n - 1) as f64])
+            .collect();
+        let mut op = DenseKernelOp::new(
+            xs.clone(),
+            Box::new(IsoKernel::new(shape, 1, 0.3, 1.0)),
+            0.15,
+        );
+        // Surrogate over (log ell, log sf, log sigma); sweep slices sf = 1.
+        let bounds = vec![
+            ((0.05f64).ln(), (1.0f64).ln()),
+            ((0.999f64).ln(), (1.001f64).ln()),
+            ((0.03f64).ln(), (0.5f64).ln()),
+        ];
+        let sur = LogdetSurrogate::build(
+            &mut op,
+            &bounds,
+            n_design,
+            &SlqOptions { steps: 30, probes: 6, seed: 81, ..Default::default() },
+            83,
+        )
+        .unwrap();
+        let mut max_rel: f64 = 0.0;
+        let mut sum_rel = 0.0;
+        let mut count = 0.0;
+        for i in 0..grid_pts {
+            for j in 0..grid_pts {
+                let lell = bounds[0].0 + (bounds[0].1 - bounds[0].0) * (i as f64 + 0.5) / grid_pts as f64;
+                let lsig = bounds[2].0 + (bounds[2].1 - bounds[2].0) * (j as f64 + 0.5) / grid_pts as f64;
+                let h = [lell, 0.0, lsig];
+                op.set_hypers(&h);
+                let ev = exact::exact_logdet(&op).unwrap();
+                let sv = sur.eval(&h);
+                let rel = (sv - ev).abs() / ev.abs().max(1.0);
+                max_rel = max_rel.max(rel);
+                sum_rel += rel;
+                count += 1.0;
+            }
+        }
+        rows.push(vec![
+            shape.name().into(),
+            format!("{:.4}", sum_rel / count),
+            format!("{:.4}", max_rel),
+        ]);
+    }
+    ExpResult {
+        id: "fig7",
+        header: vec!["kernel", "mean_rel_err", "max_rel_err"],
+        rows,
+    }
+}
+
+/// §Perf — MVM and estimator throughput across operator structures
+/// (native dense vs PJRT artifact vs Toeplitz-SKI), plus SLQ end-to-end.
+pub fn perf_mvm(scale: Scale) -> ExpResult {
+    let reps = match scale {
+        Scale::Small => 5,
+        Scale::Paper => 20,
+    };
+    let mut rows = Vec::new();
+    let mut rng = Rng::new(91);
+
+    // Dense native at n=2048.
+    let pts: Vec<Vec<f64>> = (0..2048).map(|_| vec![rng.gaussian(), rng.gaussian()]).collect();
+    let dense = DenseKernelOp::new(
+        pts.clone(),
+        Box::new(IsoKernel::new(Shape::Rbf, 2, 0.5, 1.0)),
+        0.3,
+    );
+    let x: Vec<f64> = (0..2048).map(|_| rng.gaussian()).collect();
+    let mut y = vec![0.0; 2048];
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        crate::operators::LinOp::apply(&dense, &x, &mut y);
+    }
+    rows.push(vec![
+        "dense_native_n2048".into(),
+        format!("{:.3}", t0.elapsed().as_secs_f64() * 1e3 / reps as f64),
+    ]);
+
+    // PJRT artifact (8-wide block amortized per column).
+    if let Ok(rt) = crate::runtime::PjrtRuntime::new("artifacts") {
+        let rt = std::sync::Arc::new(rt);
+        if let Ok(op) =
+            crate::runtime::ops::PjrtMvmOp::new(rt, "mvm_rbf_n2048_d2_b8", &pts, 0.5, 1.0, 0.3)
+        {
+            let block = crate::linalg::dense::Mat::from_fn(2048, 8, |_, _| rng.gaussian());
+            let _ = op.apply_block(&block); // compile once
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                let _ = op.apply_block(&block).unwrap();
+            }
+            rows.push(vec![
+                "pjrt_mvm_n2048_b8_per_col".into(),
+                format!("{:.3}", t0.elapsed().as_secs_f64() * 1e3 / (reps * 8) as f64),
+            ]);
+        }
+    }
+
+    // Toeplitz-SKI at several m (the O(n + m log m) scaling).
+    let d = data::sound(8000, 3, 40, 95);
+    for m in [1000usize, 4000, 16000] {
+        let grid = Grid::covering(&d.x_train, &[m], 0.05);
+        let ski = SkiOp::new(
+            &d.x_train,
+            grid,
+            SeparableKernel::iso(Shape::Rbf, 1, 0.004, 0.5),
+            0.1,
+            InterpOrder::Cubic,
+            false,
+        );
+        let x: Vec<f64> = (0..d.n_train()).map(|_| rng.gaussian()).collect();
+        let mut y = vec![0.0; d.n_train()];
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            crate::operators::LinOp::apply(&ski, &x, &mut y);
+        }
+        rows.push(vec![
+            format!("ski_toeplitz_n8000_m{m}"),
+            format!("{:.3}", t0.elapsed().as_secs_f64() * 1e3 / reps as f64),
+        ]);
+    }
+
+    // End-to-end SLQ (25 steps, 5 probes, with grads) on SKI m=4000.
+    {
+        let grid = Grid::covering(&d.x_train, &[4000], 0.05);
+        let ski = SkiOp::new(
+            &d.x_train,
+            grid,
+            SeparableKernel::iso(Shape::Rbf, 1, 0.004, 0.5),
+            0.1,
+            InterpOrder::Cubic,
+            false,
+        );
+        let t0 = Instant::now();
+        let _ = slq_logdet(
+            &ski,
+            &SlqOptions { steps: 25, probes: 5, seed: 97, ..Default::default() },
+        )
+        .unwrap();
+        rows.push(vec![
+            "slq_e2e_ski_n8000_m4000".into(),
+            format!("{:.3}", t0.elapsed().as_secs_f64() * 1e3),
+        ]);
+    }
+
+    ExpResult { id: "perf", header: vec!["case", "ms"], rows }
+}

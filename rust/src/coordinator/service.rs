@@ -1,0 +1,107 @@
+//! Batch evaluation service: a worker pool that fans a queue of
+//! hyperparameter vectors out to per-thread evaluators (each worker builds
+//! its own operator once, then streams evaluations). Used for surrogate
+//! design-point evaluation and ablation sweeps, where evaluations are
+//! embarrassingly parallel but the evaluator itself is stateful (`&mut`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Evaluate `f_builder()(h)` for every hyper vector, in parallel, preserving
+/// order. Each worker thread builds exactly one evaluator.
+pub fn map_hyper_batch<B, E, T>(builder: B, hypers: &[Vec<f64>], threads: usize) -> Vec<T>
+where
+    B: Fn() -> E + Sync,
+    E: FnMut(&[f64]) -> T,
+    T: Send,
+{
+    let n = hypers.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        let mut eval = builder();
+        return hypers.iter().map(|h| eval(h)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let next = &next;
+            let out = &out;
+            let builder = &builder;
+            scope.spawn(move || {
+                let mut eval = builder();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = eval(&hypers[i]);
+                    *out[i].lock().unwrap() = Some(v);
+                }
+            });
+        }
+    });
+    out.into_iter()
+        .map(|m| m.into_inner().unwrap().expect("service slot"))
+        .collect()
+}
+
+/// Simple progress/throughput counters for long experiment runs.
+#[derive(Default)]
+pub struct Metrics {
+    pub evaluations: AtomicUsize,
+    pub mvms: AtomicUsize,
+}
+
+impl Metrics {
+    pub fn add_eval(&self) {
+        self.evaluations.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add_mvms(&self, k: usize) {
+        self.mvms.fetch_add(k, Ordering::Relaxed);
+    }
+    pub fn snapshot(&self) -> (usize, usize) {
+        (
+            self.evaluations.load(Ordering::Relaxed),
+            self.mvms.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_matches_serial_and_counts_builders() {
+        let built = AtomicUsize::new(0);
+        let hypers: Vec<Vec<f64>> = (0..37).map(|i| vec![i as f64]).collect();
+        let got = map_hyper_batch(
+            || {
+                built.fetch_add(1, Ordering::Relaxed);
+                |h: &[f64]| h[0] * 2.0
+            },
+            &hypers,
+            4,
+        );
+        let want: Vec<f64> = hypers.iter().map(|h| h[0] * 2.0).collect();
+        assert_eq!(got, want);
+        assert!(built.load(Ordering::Relaxed) <= 4);
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let hypers = vec![vec![1.0], vec![2.0]];
+        let got = map_hyper_batch(|| |h: &[f64]| h[0] + 1.0, &hypers, 1);
+        assert_eq!(got, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn metrics_counters() {
+        let m = Metrics::default();
+        m.add_eval();
+        m.add_mvms(10);
+        m.add_mvms(5);
+        assert_eq!(m.snapshot(), (1, 15));
+    }
+}

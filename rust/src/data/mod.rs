@@ -1,0 +1,341 @@
+//! Synthetic dataset generators standing in for the paper's proprietary /
+//! external datasets (substitution table in DESIGN.md §4). Every generator
+//! is seeded and exercises exactly the code paths the original data did:
+//! Toeplitz-SKI (sound), 3-D Kronecker SKI (precipitation), LGCP grids
+//! (hickory, crime), and high-dim features with low-dim structure (gas).
+
+use crate::grid::{Grid, GridDim};
+use crate::kernels::{Kernel, SeparableKernel};
+use crate::linalg::chol::Cholesky;
+use crate::linalg::dense::Mat;
+use crate::operators::kron::{KronFactor, KronOp};
+use crate::operators::LinOp;
+use crate::util::rng::Rng;
+
+/// A regression dataset split into train/test.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x_train: Vec<Vec<f64>>,
+    pub y_train: Vec<f64>,
+    pub x_test: Vec<Vec<f64>>,
+    pub y_test: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn n_train(&self) -> usize {
+        self.y_train.len()
+    }
+    pub fn n_test(&self) -> usize {
+        self.y_test.len()
+    }
+}
+
+/// Exact GP sample on a separable-kernel grid via per-factor Cholesky:
+/// `f = (L_1 ⊗ ... ⊗ L_d) z * sf` with `K_j = L_j L_j^T`.
+pub fn sample_grid_gp(grid: &Grid, kernel: &SeparableKernel, jitter: f64, rng: &mut Rng) -> Vec<f64> {
+    let mut factors = Vec::new();
+    for (j, dim) in grid.dims.iter().enumerate() {
+        let f = &kernel.factors[j];
+        let mut k = Mat::from_fn(dim.m, dim.m, |a, b| {
+            f.eval(&[dim.point(a)], &[dim.point(b)])
+        });
+        k.add_diag(jitter);
+        let chol = Cholesky::new_jittered(&k, 1e-10, 10).expect("grid factor chol");
+        factors.push(KronFactor::Dense(chol.l));
+    }
+    let lop = KronOp::new(factors, kernel.sf2().sqrt());
+    let mut z = vec![0.0; grid.size()];
+    rng.fill_gaussian(&mut z);
+    lop.apply_vec(&z)
+}
+
+/// §5.1 substitute: an audio-like 1-D signal (chirps under AM envelopes plus
+/// weak noise), sampled at `n` uniform times with `gaps` contiguous missing
+/// regions of length `gap_len` forming the test set.
+pub fn sound(n: usize, gaps: usize, gap_len: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let dt = 1.0 / n as f64;
+    let y_full: Vec<f64> = (0..n)
+        .map(|i| {
+            let t = i as f64 * dt;
+            let chirp1 = (2.0 * std::f64::consts::PI * (40.0 * t + 120.0 * t * t)).sin();
+            let chirp2 = (2.0 * std::f64::consts::PI * (90.0 * t + 20.0 * (3.0 * t).sin())).sin();
+            let env1 = 0.6 + 0.4 * (2.0 * std::f64::consts::PI * 2.0 * t).sin();
+            let env2 = 0.5 + 0.5 * (2.0 * std::f64::consts::PI * 3.3 * t + 0.7).cos();
+            env1 * chirp1 + 0.7 * env2 * chirp2 + 0.02 * rng.gaussian()
+        })
+        .collect();
+    let mut is_test = vec![false; n];
+    for g in 0..gaps {
+        // Deterministically spread gaps, jittered.
+        let start = ((g + 1) * n) / (gaps + 2) + rng.below(n / (gaps + 2) / 2 + 1);
+        for k in 0..gap_len.min(n.saturating_sub(start)) {
+            is_test[start + k] = true;
+        }
+    }
+    let mut d = Dataset { x_train: vec![], y_train: vec![], x_test: vec![], y_test: vec![] };
+    for i in 0..n {
+        let x = vec![i as f64 * dt];
+        if is_test[i] {
+            d.x_test.push(x);
+            d.y_test.push(y_full[i]);
+        } else {
+            d.x_train.push(x);
+            d.y_train.push(y_full[i]);
+        }
+    }
+    d
+}
+
+/// §5.2 substitute: daily precipitation over (lon, lat, day). A smooth
+/// latent GP field on a coarse grid, cubic-interpolated to station
+/// locations, plus seasonal structure and noise. `n` total points;
+/// `test_frac` held out at random.
+pub fn precipitation(n: usize, test_frac: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    // Latent field on a coarse 3-D grid.
+    let grid = Grid::new(vec![
+        GridDim { lo: 0.0, hi: 1.0, m: 24 },
+        GridDim { lo: 0.0, hi: 1.0, m: 24 },
+        GridDim { lo: 0.0, hi: 1.0, m: 32 },
+    ]);
+    let kern = SeparableKernel::iso(crate::kernels::Shape::Matern32, 3, 0.25, 1.0);
+    let field = sample_grid_gp(&grid, &kern, 1e-8, &mut rng);
+    // Stations: clustered in space, dense in time.
+    let n_stations = (n / 64).max(10);
+    let stations: Vec<(f64, f64)> = (0..n_stations)
+        .map(|_| (rng.uniform(), rng.uniform()))
+        .collect();
+    let pts: Vec<Vec<f64>> = (0..n)
+        .map(|_| {
+            let (sx, sy) = stations[rng.below(n_stations)];
+            vec![
+                (sx + 0.01 * rng.gaussian()).clamp(0.0, 1.0),
+                (sy + 0.01 * rng.gaussian()).clamp(0.0, 1.0),
+                rng.uniform(),
+            ]
+        })
+        .collect();
+    let (wmat, _) = grid.interp_matrix(&pts, crate::grid::InterpOrder::Cubic);
+    let mut latent = vec![0.0; n];
+    wmat.apply(&field, &mut latent);
+    let ys: Vec<f64> = (0..n)
+        .map(|i| {
+            let t = pts[i][2];
+            let seasonal = 0.8 * (2.0 * std::f64::consts::PI * (t - 0.2)).sin();
+            latent[i] + seasonal + 0.3 * rng.gaussian()
+        })
+        .collect();
+    let mut d = Dataset { x_train: vec![], y_train: vec![], x_test: vec![], y_test: vec![] };
+    for i in 0..n {
+        if rng.uniform() < test_frac {
+            d.x_test.push(pts[i].clone());
+            d.y_test.push(ys[i]);
+        } else {
+            d.x_train.push(pts[i].clone());
+            d.y_train.push(ys[i]);
+        }
+    }
+    d
+}
+
+/// LGCP dataset: counts per grid cell plus the generating latent field.
+#[derive(Clone, Debug)]
+pub struct CountGrid {
+    pub grid: Grid,
+    pub counts: Vec<f64>,
+    /// True latent log-intensity (for recovery checks).
+    pub latent: Vec<f64>,
+    /// Log offset used in generation.
+    pub offset: f64,
+}
+
+/// §5.3 substitute: hickory-like point pattern discretized on an
+/// `m x m` grid. Intensity from a known smooth log-field sampled from a GP
+/// with `(sf, ell1, ell2)` — so recovered hypers can be compared with truth.
+pub fn hickory(m: usize, sf: f64, ell: f64, total_points: f64, seed: u64) -> CountGrid {
+    let mut rng = Rng::new(seed);
+    let grid = Grid::new(vec![
+        GridDim { lo: 0.0, hi: 1.0, m },
+        GridDim { lo: 0.0, hi: 1.0, m },
+    ]);
+    let kern = SeparableKernel::iso(crate::kernels::Shape::Rbf, 2, ell, sf);
+    let latent = sample_grid_gp(&grid, &kern, 1e-8, &mut rng);
+    // Offset so that total expected count ≈ total_points.
+    let mean_exp: f64 =
+        latent.iter().map(|&f| f.exp()).sum::<f64>() / latent.len() as f64;
+    let offset = (total_points / (mean_exp * latent.len() as f64)).ln();
+    let counts: Vec<f64> = latent
+        .iter()
+        .map(|&f| rng.poisson((f + offset).exp()) as f64)
+        .collect();
+    CountGrid { grid, counts, latent, offset }
+}
+
+/// §5.4 substitute: assault-like counts on a (space x space x weeks) grid
+/// with weekly-seasonal + trending intensity and negative-binomial noise.
+pub fn crime(nx: usize, ny: usize, weeks: usize, dispersion: f64, seed: u64) -> CountGrid {
+    let mut rng = Rng::new(seed);
+    let grid = Grid::new(vec![
+        GridDim { lo: 0.0, hi: 1.0, m: nx },
+        GridDim { lo: 0.0, hi: 1.0, m: ny },
+        GridDim { lo: 0.0, hi: 1.0, m: weeks },
+    ]);
+    // Two spatial hot-spots + seasonality + slow decline.
+    let mut latent = vec![0.0; grid.size()];
+    for i in 0..grid.size() {
+        let p = grid.point(i);
+        let (x, y, t) = (p[0], p[1], p[2]);
+        let hot1 = 1.4 * (-((x - 0.3).powi(2) + (y - 0.6).powi(2)) / 0.03).exp();
+        let hot2 = 1.0 * (-((x - 0.7).powi(2) + (y - 0.25).powi(2)) / 0.05).exp();
+        let season = 0.35 * (2.0 * std::f64::consts::PI * t * (weeks as f64 / 52.0)).sin();
+        let trend = -0.3 * t;
+        latent[i] = hot1 + hot2 + season + trend - 0.5;
+    }
+    let offset = 0.6;
+    let counts: Vec<f64> = latent
+        .iter()
+        .map(|&f| rng.neg_binomial((f + offset).exp(), dispersion) as f64)
+        .collect();
+    CountGrid { grid, counts, latent, offset }
+}
+
+/// §5.5 substitute: gas-sensor-like data — `dim`-dimensional feature vectors
+/// generated from a 2-D latent manifold (the DKL premise), with a smooth
+/// response. Returned as (X_train, y_train, X_test, y_test) matrices.
+pub fn gas(n_train: usize, n_test: usize, dim: usize, seed: u64) -> (Mat, Vec<f64>, Mat, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let mut make = |count: usize| {
+        let mut x = Mat::zeros(count, dim);
+        let mut y = vec![0.0; count];
+        for i in 0..count {
+            let t = rng.uniform_in(-2.0, 2.0);
+            let u = rng.uniform_in(-1.0, 1.0);
+            for j in 0..dim {
+                let a = j as f64 * 0.37 + 0.2;
+                let b = j as f64 * 0.11;
+                x[(i, j)] = (a * t).sin() + 0.6 * (b * u + t * 0.2).cos()
+                    + 0.05 * rng.gaussian();
+            }
+            y[i] = (1.5 * t).sin() + 0.4 * u * u + 0.05 * rng.gaussian();
+        }
+        (x, y)
+    };
+    let (xtr, ytr) = make(n_train);
+    let (xte, yte) = make(n_test);
+    (xtr, ytr, xte, yte)
+}
+
+/// Supplementary C.1/C.5 data: n points either equispaced on [lo, hi] or
+/// uniform random, with y sampled from the exact GP prior at `hypers`.
+pub fn gp_1d(
+    n: usize,
+    lo: f64,
+    hi: f64,
+    equispaced: bool,
+    kernel: &dyn Kernel,
+    sigma: f64,
+    seed: u64,
+) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut xs: Vec<f64> = if equispaced {
+        (0..n).map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64).collect()
+    } else {
+        (0..n).map(|_| rng.uniform_in(lo, hi)).collect()
+    };
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pts: Vec<Vec<f64>> = xs.iter().map(|&x| vec![x]).collect();
+    // Exact prior sample (dense Cholesky; keep n <= ~4000 here).
+    let mut k = Mat::from_fn(n, n, |i, j| kernel.eval(&pts[i], &pts[j]));
+    k.add_diag(sigma * sigma + 1e-10);
+    let chol = Cholesky::new_jittered(&k, 1e-10, 10).expect("prior chol");
+    let mut z = vec![0.0; n];
+    rng.fill_gaussian(&mut z);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = 0.0;
+        for j in 0..=i {
+            s += chol.l[(i, j)] * z[j];
+        }
+        y[i] = s;
+    }
+    Dataset { x_train: pts, y_train: y, x_test: vec![], y_test: vec![] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Shape;
+
+    #[test]
+    fn sound_split_sizes() {
+        let d = sound(2000, 3, 50, 1);
+        assert_eq!(d.n_train() + d.n_test(), 2000);
+        assert!(d.n_test() >= 100 && d.n_test() <= 160, "{}", d.n_test());
+        // Test points form contiguous runs.
+        assert!(d.x_test.windows(2).any(|w| (w[1][0] - w[0][0]) < 1.0 / 1000.0));
+    }
+
+    #[test]
+    fn grid_gp_sample_has_right_marginal_scale() {
+        let grid = Grid::new(vec![
+            GridDim { lo: 0.0, hi: 1.0, m: 12 },
+            GridDim { lo: 0.0, hi: 1.0, m: 12 },
+        ]);
+        let kern = SeparableKernel::iso(Shape::Rbf, 2, 0.2, 1.5);
+        let mut rng = Rng::new(2);
+        // Average marginal variance over several samples ≈ sf^2.
+        let mut acc = 0.0;
+        let reps = 30;
+        for _ in 0..reps {
+            let f = sample_grid_gp(&grid, &kern, 1e-8, &mut rng);
+            acc += f.iter().map(|v| v * v).sum::<f64>() / f.len() as f64;
+        }
+        let var = acc / reps as f64;
+        assert!((var - 2.25).abs() < 0.8, "marginal var {var}");
+    }
+
+    #[test]
+    fn hickory_counts_total_matches_target() {
+        let cg = hickory(30, 1.0, 0.2, 700.0, 3);
+        let total: f64 = cg.counts.iter().sum();
+        assert!((total - 700.0).abs() < 250.0, "total {total}");
+        assert_eq!(cg.counts.len(), 900);
+    }
+
+    #[test]
+    fn crime_grid_dims() {
+        let cg = crime(17, 26, 52, 3.0, 4);
+        assert_eq!(cg.counts.len(), 17 * 26 * 52);
+        assert!(cg.counts.iter().all(|&c| c >= 0.0));
+        // Hot-spot cells should out-count the corner cells on average.
+        let hot = cg.grid.lin_index(&[5, 15, 10]); // near (0.3, 0.6)
+        let cold = cg.grid.lin_index(&[16, 0, 10]);
+        assert!(cg.latent[hot] > cg.latent[cold]);
+    }
+
+    #[test]
+    fn precipitation_split() {
+        let d = precipitation(3000, 0.2, 5);
+        assert_eq!(d.n_train() + d.n_test(), 3000);
+        assert!(d.n_test() > 400 && d.n_test() < 800);
+        assert_eq!(d.x_train[0].len(), 3);
+    }
+
+    #[test]
+    fn gas_shapes() {
+        let (xtr, ytr, xte, yte) = gas(100, 25, 16, 6);
+        assert_eq!((xtr.rows, xtr.cols), (100, 16));
+        assert_eq!(ytr.len(), 100);
+        assert_eq!((xte.rows, xte.cols), (25, 16));
+        assert_eq!(yte.len(), 25);
+    }
+
+    #[test]
+    fn gp_1d_reproducible() {
+        let k = crate::kernels::IsoKernel::new(Shape::Rbf, 1, 0.1, 1.0);
+        let a = gp_1d(100, 0.0, 4.0, true, &k, 0.1, 7);
+        let b = gp_1d(100, 0.0, 4.0, true, &k, 0.1, 7);
+        assert_eq!(a.y_train, b.y_train);
+    }
+}

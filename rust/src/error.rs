@@ -1,0 +1,47 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("matrix is not positive definite (pivot {pivot}, value {value})")]
+    NotPositiveDefinite { pivot: usize, value: f64 },
+
+    #[error("matrix is singular at pivot {pivot}")]
+    Singular { pivot: usize },
+
+    #[error("eigensolver failed to converge at index {index}")]
+    EigFailed { index: usize },
+
+    #[error("CG did not converge: residual {residual:.3e} after {iters} iterations")]
+    CgNoConvergence { residual: f64, iters: usize },
+
+    #[error("dimension mismatch: {context} (expected {expected}, got {got})")]
+    DimMismatch { context: &'static str, expected: usize, got: usize },
+
+    #[error("invalid configuration: {0}")]
+    Config(String),
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("optimization failed: {0}")]
+    Optim(String),
+
+    #[error("{0}")]
+    Msg(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(format!("{e:?}"))
+    }
+}

@@ -1,0 +1,303 @@
+//! Stochastic Chebyshev estimation of `log|K̃|` and its derivatives
+//! (paper §3.1).
+//!
+//! The spectrum is mapped to `[-1, 1]` via `B = (2 K̃ - (b+a) I) / (b - a)`
+//! with `[a, b]` bracketing the eigenvalues; the Chebyshev interpolant of
+//! `f(t) = log(((b-a) t + (b+a)) / 2)` then gives
+//! `log|K̃| ≈ sum_j c_j tr(T_j(B))`, estimated stochastically by coupled
+//! three-term recurrences `w_j = T_j(B) z` and `∂w_j/∂θ_i` — each
+//! derivative costs two extra MVMs per term (§3.1).
+
+use super::lanczos::extremal_eigs;
+use super::probes::{combine, ProbeKind, ProbeSet};
+use super::LogdetEstimate;
+use crate::error::Result;
+use crate::operators::KernelOp;
+use crate::util::parallel;
+use crate::util::stats::dot;
+
+/// Options for the Chebyshev estimator.
+#[derive(Clone, Copy, Debug)]
+pub struct ChebOptions {
+    /// Polynomial degree / number of moments (paper uses 100 for Fig. 1).
+    pub degree: usize,
+    pub probes: usize,
+    pub kind: ProbeKind,
+    pub seed: u64,
+    pub grads: bool,
+    /// Eigenvalue bracket; estimated via Lanczos Ritz values when `None`.
+    pub lambda_bounds: Option<(f64, f64)>,
+    pub threads: usize,
+}
+
+impl Default for ChebOptions {
+    fn default() -> Self {
+        ChebOptions {
+            degree: 100,
+            probes: 5,
+            kind: ProbeKind::Rademacher,
+            seed: 0,
+            grads: true,
+            lambda_bounds: None,
+            threads: parallel::default_threads(),
+        }
+    }
+}
+
+/// Chebyshev interpolation coefficients of `f` of degree `m` on [-1, 1].
+pub fn cheb_coeffs(f: impl Fn(f64) -> f64, m: usize) -> Vec<f64> {
+    let n = m + 1;
+    let fv: Vec<f64> = (0..n)
+        .map(|k| {
+            let x = (std::f64::consts::PI * (k as f64 + 0.5) / n as f64).cos();
+            f(x)
+        })
+        .collect();
+    (0..n)
+        .map(|j| {
+            let scale = if j == 0 { 1.0 } else { 2.0 } / n as f64;
+            let mut s = 0.0;
+            for (k, fk) in fv.iter().enumerate() {
+                s += fk * (std::f64::consts::PI * j as f64 * (k as f64 + 0.5) / n as f64).cos();
+            }
+            scale * s
+        })
+        .collect()
+}
+
+/// Estimate `log|K̃|` (and optionally all derivatives) via stochastic
+/// Chebyshev moments.
+pub fn chebyshev_logdet(op: &dyn KernelOp, opts: &ChebOptions) -> Result<LogdetEstimate> {
+    let n = op.n();
+    let nh = op.num_hypers();
+    let (a, b) = match opts.lambda_bounds {
+        Some(ab) => ab,
+        None => {
+            let (lo, hi) = extremal_eigs(op, 20.min(n), opts.seed ^ 0x5eed)?;
+            // The noise floor lower-bounds the spectrum.
+            (lo.max(op.noise_var() * 0.5), hi)
+        }
+    };
+    assert!(b > a && a > 0.0, "invalid spectrum bracket [{a}, {b}]");
+    let coeffs = cheb_coeffs(|t| (0.5 * ((b - a) * t + (b + a))).ln(), opts.degree);
+    let scale = 2.0 / (b - a);
+    let shift = (b + a) / (b - a);
+
+    // B x = scale * K̃ x - shift * x; dB/dθ x = scale * dK̃ x.
+    let apply_b = |x: &[f64], y: &mut [f64]| {
+        op.apply(x, y);
+        for i in 0..n {
+            y[i] = scale * y[i] - shift * x[i];
+        }
+    };
+
+    let probes = ProbeSet::new(n, opts.probes, opts.kind, opts.seed);
+
+    struct PerProbe {
+        quad: f64,
+        grad_terms: Vec<f64>,
+        mvms: usize,
+    }
+
+    let results: Vec<PerProbe> = parallel::par_map(probes.count(), opts.threads, |p| {
+        let z = &probes.z[p];
+        let mut mvms = 0;
+        // w recurrence.
+        let mut w_prev = z.clone(); // w_0 = z
+        let mut w = vec![0.0; n]; // w_1 = B z
+        apply_b(z, &mut w);
+        mvms += 1;
+        // dw recurrences per hyper.
+        let mut dw_prev: Vec<Vec<f64>> = vec![vec![0.0; n]; if opts.grads { nh } else { 0 }];
+        let mut dw: Vec<Vec<f64>> = Vec::new();
+        if opts.grads {
+            dw = vec![vec![0.0; n]; nh];
+            let mut tmp: Vec<Vec<f64>> = vec![vec![0.0; n]; nh];
+            op.apply_grad_all(z, &mut tmp);
+            mvms += nh;
+            for i in 0..nh {
+                for t in 0..n {
+                    dw[i][t] = scale * tmp[i][t];
+                }
+            }
+        }
+
+        let mut quad = coeffs[0] * dot(z, &w_prev) + coeffs[1] * dot(z, &w);
+        let mut grad_terms = vec![0.0; if opts.grads { nh } else { 0 }];
+        if opts.grads {
+            for i in 0..nh {
+                grad_terms[i] = coeffs[1] * dot(z, &dw[i]);
+            }
+        }
+
+        let mut bw = vec![0.0; n];
+        let mut dk_w: Vec<Vec<f64>> = if opts.grads {
+            vec![vec![0.0; n]; nh]
+        } else {
+            Vec::new()
+        };
+        for j in 2..=opts.degree {
+            // w_{j} = 2 B w_{j-1} - w_{j-2}
+            apply_b(&w, &mut bw);
+            mvms += 1;
+            let mut w_next = vec![0.0; n];
+            for t in 0..n {
+                w_next[t] = 2.0 * bw[t] - w_prev[t];
+            }
+            if opts.grads {
+                // dw_{j} = 2 (dB w_{j-1} + B dw_{j-1}) - dw_{j-2}
+                op.apply_grad_all(&w, &mut dk_w);
+                mvms += nh;
+                for i in 0..nh {
+                    let mut b_dw = vec![0.0; n];
+                    apply_b(&dw[i], &mut b_dw);
+                    mvms += 1;
+                    let mut next = vec![0.0; n];
+                    for t in 0..n {
+                        next[t] =
+                            2.0 * (scale * dk_w[i][t] + b_dw[t]) - dw_prev[i][t];
+                    }
+                    dw_prev[i] = std::mem::replace(&mut dw[i], next);
+                }
+            }
+            w_prev = std::mem::replace(&mut w, w_next);
+            quad += coeffs[j] * dot(z, &w);
+            if opts.grads {
+                for i in 0..nh {
+                    grad_terms[i] += coeffs[j] * dot(z, &dw[i]);
+                }
+            }
+        }
+        PerProbe { quad, grad_terms, mvms }
+    });
+
+    let mut per_probe = Vec::with_capacity(opts.probes);
+    let mut grad = vec![0.0; if opts.grads { nh } else { 0 }];
+    let mut mvms = 0;
+    for r in results {
+        per_probe.push(r.quad);
+        for (gi, t) in grad.iter_mut().zip(&r.grad_terms) {
+            *gi += t;
+        }
+        mvms += r.mvms;
+    }
+    for gi in grad.iter_mut() {
+        *gi /= opts.probes as f64;
+    }
+    let (value, std_err) = combine(&per_probe);
+    Ok(LogdetEstimate { value, grad, std_err, per_probe, mvms })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimators::exact;
+    use crate::kernels::{IsoKernel, Shape};
+    use crate::operators::DenseKernelOp;
+    use crate::util::rng::Rng;
+
+    fn op(n: usize, sigma: f64, seed: u64) -> DenseKernelOp {
+        let mut rng = Rng::new(seed);
+        let pts: Vec<Vec<f64>> =
+            (0..n).map(|_| vec![rng.uniform_in(0.0, 4.0)]).collect();
+        DenseKernelOp::new(
+            pts,
+            Box::new(IsoKernel::new(Shape::Rbf, 1, 0.4, 1.0)),
+            sigma,
+        )
+    }
+
+    #[test]
+    fn coeffs_reproduce_function() {
+        let c = cheb_coeffs(|x| (2.0 + x).ln(), 30);
+        // Evaluate the expansion at a few points via Clenshaw.
+        for &x in &[-0.9, -0.3, 0.2, 0.8] {
+            let mut b1 = 0.0;
+            let mut b2 = 0.0;
+            for j in (1..c.len()).rev() {
+                let b0 = 2.0 * x * b1 - b2 + c[j];
+                b2 = b1;
+                b1 = b0;
+            }
+            let val = x * b1 - b2 + c[0];
+            assert!((val - (2.0f64 + x).ln()).abs() < 1e-10, "x={x}");
+        }
+    }
+
+    #[test]
+    fn logdet_close_to_exact_well_conditioned() {
+        let o = op(120, 0.5, 1); // large noise: small condition number
+        let opts = ChebOptions { degree: 80, probes: 8, seed: 2, ..Default::default() };
+        let est = chebyshev_logdet(&o, &opts).unwrap();
+        let truth = exact::exact_logdet(&o).unwrap();
+        assert!(
+            (est.value - truth).abs() < 0.05 * truth.abs().max(1.0) + 4.0 * est.std_err,
+            "{} vs {}",
+            est.value,
+            truth
+        );
+    }
+
+    #[test]
+    fn grads_close_to_exact() {
+        let o = op(80, 0.5, 3);
+        let opts = ChebOptions { degree: 60, probes: 64, seed: 4, ..Default::default() };
+        let est = chebyshev_logdet(&o, &opts).unwrap();
+        let (_, tg) = exact::exact_logdet_grads_dense(&o).unwrap();
+        for i in 0..tg.len() {
+            assert!(
+                (est.grad[i] - tg[i]).abs() < 0.2 * tg[i].abs().max(1.0),
+                "hyper {i}: {} vs {}",
+                est.grad[i],
+                tg[i]
+            );
+        }
+    }
+
+    #[test]
+    fn struggles_at_small_noise_relative_to_lanczos() {
+        // The paper's supp. C.1/C.2: Chebyshev degrades as sigma -> 0 (log
+        // singularity near the spectrum's floor); Lanczos doesn't. This is a
+        // *shape* assertion, not a strict inequality on every seed.
+        let o = op(100, 0.05, 5);
+        let truth = exact::exact_logdet(&o).unwrap();
+        let cheb = chebyshev_logdet(
+            &o,
+            &ChebOptions { degree: 40, probes: 8, grads: false, seed: 6, ..Default::default() },
+        )
+        .unwrap();
+        let slq = crate::estimators::slq::slq_logdet(
+            &o,
+            &crate::estimators::slq::SlqOptions {
+                steps: 40,
+                probes: 8,
+                grads: false,
+                seed: 6,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let cheb_err = (cheb.value - truth).abs();
+        let slq_err = (slq.value - truth).abs();
+        assert!(
+            slq_err <= cheb_err + 3.0 * slq.std_err,
+            "slq {slq_err} vs cheb {cheb_err}"
+        );
+    }
+
+    #[test]
+    fn mvm_count_scales_with_degree() {
+        let o = op(40, 0.3, 7);
+        let lo = chebyshev_logdet(
+            &o,
+            &ChebOptions { degree: 10, probes: 2, grads: false, ..Default::default() },
+        )
+        .unwrap();
+        let hi = chebyshev_logdet(
+            &o,
+            &ChebOptions { degree: 40, probes: 2, grads: false, ..Default::default() },
+        )
+        .unwrap();
+        assert!(hi.mvms > 3 * lo.mvms);
+    }
+}

@@ -1,0 +1,234 @@
+//! Lanczos tridiagonalization with full reorthogonalization (paper §3.2).
+//!
+//! `K̃ Q_m = Q_m T + beta_m q_{m+1} e_m^T` with orthonormal `Q_m`,
+//! `q_1 = z / ||z||`. The paper notes plain Lanczos is numerically unstable
+//! and cites practical fixes [33, 34]; at the small step counts used here
+//! (m ≤ ~100) full reorthogonalization is the simplest sound remedy.
+
+use crate::operators::LinOp;
+use crate::util::rng::Rng;
+use crate::util::stats::{axpy, dot, norm2};
+
+/// Result of an m-step Lanczos run.
+pub struct LanczosResult {
+    /// Diagonal of T (length = steps actually taken).
+    pub alphas: Vec<f64>,
+    /// Off-diagonal of T (length = steps - 1).
+    pub betas: Vec<f64>,
+    /// Orthonormal Krylov basis, one vector per step.
+    pub q: Vec<Vec<f64>>,
+    /// ||z|| of the start vector.
+    pub znorm: f64,
+    /// MVMs consumed.
+    pub mvms: usize,
+}
+
+impl LanczosResult {
+    /// Solve `T t = e_1 ||z||` and map back: `g = Q t ≈ K̃^{-1} z` — the
+    /// derivative estimator's solve, free given the decomposition (§3.2).
+    pub fn solve_e1(&self) -> Vec<f64> {
+        let n = self.q[0].len();
+        let t = thomas_solve_e1(&self.alphas, &self.betas, self.znorm);
+        let mut g = vec![0.0; n];
+        for (k, qk) in self.q.iter().enumerate() {
+            axpy(t[k], qk, &mut g);
+        }
+        g
+    }
+}
+
+/// Thomas solve of the SPD tridiagonal system `T t = e_1 * rhs0`
+/// (also used by the PJRT Lanczos artifact path to finish in f64).
+pub fn thomas_solve_e1(alphas: &[f64], betas: &[f64], rhs0: f64) -> Vec<f64> {
+    let m = alphas.len();
+    let mut c = vec![0.0; m];
+    let mut d = vec![0.0; m];
+    for i in 0..m {
+        let blo = if i > 0 { betas[i - 1] } else { 0.0 };
+        let bup = if i + 1 < m { betas[i] } else { 0.0 };
+        let denom = alphas[i] - blo * if i > 0 { c[i - 1] } else { 0.0 };
+        c[i] = bup / denom;
+        let rhs = if i == 0 { rhs0 } else { 0.0 };
+        d[i] = (rhs - blo * if i > 0 { d[i - 1] } else { 0.0 }) / denom;
+    }
+    let mut t = vec![0.0; m];
+    for i in (0..m).rev() {
+        t[i] = d[i] - c[i] * if i + 1 < m { t[i + 1] } else { 0.0 };
+    }
+    t
+}
+
+/// Run `m` Lanczos steps on `op` starting from `z`.
+pub fn lanczos(op: &dyn LinOp, z: &[f64], m: usize) -> LanczosResult {
+    let n = op.n();
+    assert_eq!(z.len(), n);
+    let znorm = norm2(z);
+    assert!(znorm > 0.0, "zero start vector");
+    let mut q: Vec<Vec<f64>> = Vec::with_capacity(m);
+    q.push(z.iter().map(|v| v / znorm).collect());
+    let mut alphas = Vec::with_capacity(m);
+    let mut betas = Vec::with_capacity(m.saturating_sub(1));
+    let mut w = vec![0.0; n];
+    let mut mvms = 0;
+    for j in 0..m {
+        op.apply(&q[j], &mut w);
+        mvms += 1;
+        let alpha = dot(&q[j], &w);
+        alphas.push(alpha);
+        axpy(-alpha, &q[j], &mut w);
+        if j > 0 {
+            let b: f64 = betas[j - 1];
+            axpy(-b, &q[j - 1], &mut w);
+        }
+        // Full reorthogonalization. One modified-Gram-Schmidt pass, with a
+        // second pass only when the first one removed a large component
+        // ("twice is enough" — Parlett — but the second pass is usually a
+        // no-op and costs O(n m) per step; §Perf opt 2).
+        let before = norm2(&w);
+        let mut removed = 0.0f64;
+        for qk in q.iter() {
+            let p = dot(qk, &w);
+            if p != 0.0 {
+                axpy(-p, qk, &mut w);
+                removed = removed.max(p.abs());
+            }
+        }
+        if removed > 0.5 * before {
+            for qk in q.iter() {
+                let p = dot(qk, &w);
+                if p != 0.0 {
+                    axpy(-p, qk, &mut w);
+                }
+            }
+        }
+        if j + 1 == m {
+            break;
+        }
+        let beta = norm2(&w);
+        if beta < 1e-12 * znorm {
+            // Invariant subspace found: T is exact at this size.
+            break;
+        }
+        betas.push(beta);
+        q.push(w.iter().map(|v| v / beta).collect());
+    }
+    LanczosResult { alphas, betas, q, znorm, mvms }
+}
+
+/// Extremal eigenvalue estimates from a short Lanczos run on a random
+/// probe, with safety margins — used to scale the Chebyshev expansion
+/// (which, unlike Lanczos, needs to know the spectrum's interval; supp. C.2
+/// lists this as one of Lanczos' advantages).
+pub fn extremal_eigs(op: &dyn LinOp, steps: usize, seed: u64) -> crate::error::Result<(f64, f64)> {
+    let n = op.n();
+    let mut rng = Rng::new(seed);
+    let mut z = vec![0.0; n];
+    rng.fill_gaussian(&mut z);
+    let res = lanczos(op, &z, steps.min(n));
+    let eig = crate::linalg::tridiag::tridiag_eig_first_row(&res.alphas, &res.betas)?;
+    let lo = *eig.eigvals.first().unwrap();
+    let hi = *eig.eigvals.last().unwrap();
+    // Ritz values are interior: widen. The lower end matters most for the
+    // Chebyshev log singularity; the noise floor sigma^2 (when known by the
+    // caller) should be max'd in on top of this.
+    Ok((0.9 * lo.max(1e-12), 1.1 * hi))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::Mat;
+    use crate::operators::DenseMatOp;
+    use crate::util::rng::Rng;
+
+    fn spd_op(n: usize, seed: u64) -> DenseMatOp {
+        let mut rng = Rng::new(seed);
+        let mut b = Mat::from_fn(n, n, |_, _| rng.gaussian());
+        let mut a = b.matmul(&b.transpose());
+        a.scale(1.0 / n as f64);
+        a.add_diag(0.5);
+        b = a; // silence unused warnings path
+        DenseMatOp::new(b)
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let op = spd_op(30, 1);
+        let mut rng = Rng::new(2);
+        let mut z = vec![0.0; 30];
+        rng.fill_gaussian(&mut z);
+        let res = lanczos(&op, &z, 12);
+        for i in 0..res.q.len() {
+            for j in 0..=i {
+                let d = dot(&res.q[i], &res.q[j]);
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((d - want).abs() < 1e-10, "({i},{j}) -> {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn three_term_recurrence_holds() {
+        // K q_j = beta_{j-1} q_{j-1} + alpha_j q_j + beta_j q_{j+1}
+        let op = spd_op(25, 3);
+        let mut rng = Rng::new(4);
+        let mut z = vec![0.0; 25];
+        rng.fill_gaussian(&mut z);
+        let res = lanczos(&op, &z, 10);
+        for j in 1..res.q.len() - 1 {
+            let kq = op.apply_vec(&res.q[j]);
+            for i in 0..25 {
+                let want = res.betas[j - 1] * res.q[j - 1][i]
+                    + res.alphas[j] * res.q[j][i]
+                    + res.betas[j] * res.q[j + 1][i];
+                assert!((kq[i] - want).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn solve_e1_approximates_inverse() {
+        let op = spd_op(20, 5);
+        let mut rng = Rng::new(6);
+        let mut z = vec![0.0; 20];
+        rng.fill_gaussian(&mut z);
+        let res = lanczos(&op, &z, 20); // full dimension: exact
+        let g = res.solve_e1();
+        let dense = op.to_dense();
+        let chol = crate::linalg::chol::Cholesky::new(&dense).unwrap();
+        let want = chol.solve(&z);
+        for i in 0..20 {
+            assert!((g[i] - want[i]).abs() < 1e-7, "{} vs {}", g[i], want[i]);
+        }
+    }
+
+    #[test]
+    fn extremal_eigs_bracket_spectrum() {
+        let op = spd_op(40, 7);
+        let dense = op.to_dense();
+        let eig = crate::linalg::eigh::eigh(&dense).unwrap();
+        let (lo, hi) = extremal_eigs(&op, 30, 8).unwrap();
+        assert!(lo <= eig.eigvals[0] + 1e-8, "{lo} vs {}", eig.eigvals[0]);
+        assert!(hi >= eig.eigvals[39] - 1e-8, "{hi} vs {}", eig.eigvals[39]);
+    }
+
+    #[test]
+    fn breakdown_on_low_rank_plus_identity() {
+        // A = I + u u^T has 2 distinct eigenvalues: Lanczos should stop at 2.
+        let n = 15;
+        let u: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).sin()).collect();
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] = u[i] * u[j];
+            }
+            a[(i, i)] += 1.0;
+        }
+        let op = DenseMatOp::new(a);
+        let mut rng = Rng::new(9);
+        let mut z = vec![0.0; n];
+        rng.fill_gaussian(&mut z);
+        let res = lanczos(&op, &z, 10);
+        assert!(res.alphas.len() <= 3, "took {} steps", res.alphas.len());
+    }
+}

@@ -1,0 +1,43 @@
+//! Log-determinant (and derivative) estimators — the paper's contribution.
+//!
+//! All of these consume a [`crate::operators::KernelOp`] *only* through
+//! MVMs (`apply`, `apply_grad`):
+//!
+//! * [`slq`] — stochastic Lanczos quadrature (§3.2), the recommended method;
+//! * [`chebyshev`] — stochastic Chebyshev expansion (§3.1);
+//! * [`surrogate`] — RBF interpolation of the log determinant over
+//!   hyperparameter space (§3.5);
+//! * [`scaled_eig`] — the scaled-eigenvalue baseline (Appendix B.1), which
+//!   needs fast *eigendecompositions* and is what the paper improves on;
+//! * [`exact`] — O(n^3) Cholesky ground truth;
+//! * [`hessian`] — second-derivative estimators (§3.4).
+
+pub mod chebyshev;
+pub mod exact;
+pub mod hessian;
+pub mod lanczos;
+pub mod probes;
+pub mod scaled_eig;
+pub mod slq;
+pub mod surrogate;
+
+/// A stochastic estimate of `log|K̃|` and its hyper-derivatives.
+#[derive(Clone, Debug)]
+pub struct LogdetEstimate {
+    /// Estimated log determinant.
+    pub value: f64,
+    /// d log|K̃| / d θ_i for every hyper (empty if gradients not requested).
+    pub grad: Vec<f64>,
+    /// A-posteriori standard error of `value` across probes (paper §4).
+    pub std_err: f64,
+    /// Per-probe values of z^T log(K̃) z (for diagnostics/tests).
+    pub per_probe: Vec<f64>,
+    /// Total MVM count consumed (cost accounting for the figures).
+    pub mvms: usize,
+}
+
+impl LogdetEstimate {
+    pub fn exact(value: f64, grad: Vec<f64>) -> Self {
+        LogdetEstimate { value, grad, std_err: 0.0, per_probe: vec![value], mvms: 0 }
+    }
+}

@@ -1,0 +1,260 @@
+//! RBF-surrogate estimation of the log determinant over hyperparameter
+//! space (paper §3.5 and Appendix B.2).
+//!
+//! `log|K̃(θ)|` is evaluated (by SLQ) at a few systematically chosen design
+//! points in log-hyper space, then interpolated by a cubic RBF
+//! `s(θ) = sum_i λ_i ||θ - θ_i||^3 + p(θ)` with a linear polynomial tail,
+//! fit by the standard saddle system with the discrete orthogonality
+//! condition (Eq. 6). Both the value and the analytic gradient of the
+//! surrogate are cheap — this is the "(——) surrogate" line of Fig. 1.
+
+use super::slq::{slq_logdet, SlqOptions};
+use crate::error::{Error, Result};
+use crate::linalg::dense::Mat;
+use crate::linalg::lu::Lu;
+use crate::operators::KernelOp;
+use crate::util::rng::Rng;
+
+/// Fitted cubic RBF interpolant with a linear tail.
+pub struct RbfSurrogate {
+    /// Design points (in whatever space the caller interpolates over).
+    pub points: Vec<Vec<f64>>,
+    /// RBF coefficients λ_i.
+    pub lambda: Vec<f64>,
+    /// Polynomial tail: constant + linear coefficients (length d + 1).
+    pub poly: Vec<f64>,
+}
+
+fn phi(r: f64) -> f64 {
+    r * r * r
+}
+
+impl RbfSurrogate {
+    /// Fit to (points, values) by solving the (n + d + 1) saddle system
+    /// `[Φ P; P^T 0] [λ; c] = [f; 0]`.
+    pub fn fit(points: Vec<Vec<f64>>, values: &[f64]) -> Result<Self> {
+        let n = points.len();
+        assert_eq!(values.len(), n);
+        if n == 0 {
+            return Err(Error::Config("surrogate needs at least one design point".into()));
+        }
+        let d = points[0].len();
+        let size = n + d + 1;
+        let mut a = Mat::zeros(size, size);
+        for i in 0..n {
+            for j in 0..n {
+                let r = crate::kernels::dist(&points[i], &points[j]);
+                a[(i, j)] = phi(r);
+            }
+            a[(i, n)] = 1.0;
+            a[(n, i)] = 1.0;
+            for k in 0..d {
+                a[(i, n + 1 + k)] = points[i][k];
+                a[(n + 1 + k, i)] = points[i][k];
+            }
+        }
+        let mut rhs = vec![0.0; size];
+        rhs[..n].copy_from_slice(values);
+        let sol = Lu::new(&a)?.solve(&rhs);
+        Ok(RbfSurrogate {
+            points,
+            lambda: sol[..n].to_vec(),
+            poly: sol[n..].to_vec(),
+        })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.poly.len() - 1
+    }
+
+    /// Surrogate value at `x`.
+    pub fn eval(&self, x: &[f64]) -> f64 {
+        let mut s = self.poly[0];
+        for k in 0..self.dim() {
+            s += self.poly[1 + k] * x[k];
+        }
+        for (p, lam) in self.points.iter().zip(&self.lambda) {
+            s += lam * phi(crate::kernels::dist(x, p));
+        }
+        s
+    }
+
+    /// Analytic gradient: `∇ φ(||x - p||) = 3 r (x - p)` for the cubic.
+    pub fn grad(&self, x: &[f64]) -> Vec<f64> {
+        let d = self.dim();
+        let mut g = self.poly[1..].to_vec();
+        for (p, lam) in self.points.iter().zip(&self.lambda) {
+            let r = crate::kernels::dist(x, p);
+            for k in 0..d {
+                g[k] += lam * 3.0 * r * (x[k] - p[k]);
+            }
+        }
+        g
+    }
+}
+
+/// A surrogate for `log|K̃(θ)|` over a box in log-hyper space, built from
+/// SLQ evaluations at Latin-hypercube design points.
+pub struct LogdetSurrogate {
+    pub surrogate: RbfSurrogate,
+    /// Box: per-hyper (lo, hi) in log space.
+    pub bounds: Vec<(f64, f64)>,
+    /// Total MVMs spent building it.
+    pub build_mvms: usize,
+}
+
+impl LogdetSurrogate {
+    /// Build over `bounds` with `n_design` points (paper: 50 design points
+    /// for the supp. fig. 7 study; Fig. 1 builds one per dataset).
+    pub fn build(
+        op: &mut dyn KernelOp,
+        bounds: &[(f64, f64)],
+        n_design: usize,
+        slq: &SlqOptions,
+        seed: u64,
+    ) -> Result<Self> {
+        let d = bounds.len();
+        assert_eq!(d, op.num_hypers());
+        let mut rng = Rng::new(seed);
+        let unit = rng.latin_hypercube(n_design, d);
+        let pts: Vec<Vec<f64>> = unit
+            .iter()
+            .map(|u| {
+                (0..d)
+                    .map(|k| bounds[k].0 + (bounds[k].1 - bounds[k].0) * u[k])
+                    .collect()
+            })
+            .collect();
+        let h0 = op.hypers();
+        let mut vals = Vec::with_capacity(n_design);
+        let mut build_mvms = 0;
+        let mut opts = *slq;
+        opts.grads = false;
+        for p in &pts {
+            op.set_hypers(p);
+            let est = slq_logdet(op, &opts)?;
+            vals.push(est.value);
+            build_mvms += est.mvms;
+        }
+        op.set_hypers(&h0);
+        Ok(LogdetSurrogate {
+            surrogate: RbfSurrogate::fit(pts, &vals)?,
+            bounds: bounds.to_vec(),
+            build_mvms,
+        })
+    }
+
+    /// Clamp a query into the box (the surrogate extrapolates poorly).
+    pub fn clamp(&self, theta: &[f64]) -> Vec<f64> {
+        theta
+            .iter()
+            .zip(&self.bounds)
+            .map(|(&t, &(lo, hi))| t.clamp(lo, hi))
+            .collect()
+    }
+
+    pub fn eval(&self, theta: &[f64]) -> f64 {
+        self.surrogate.eval(&self.clamp(theta))
+    }
+
+    pub fn grad(&self, theta: &[f64]) -> Vec<f64> {
+        self.surrogate.grad(&self.clamp(theta))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{IsoKernel, Shape};
+    use crate::operators::DenseKernelOp;
+
+    #[test]
+    fn interpolates_exactly_at_design_points() {
+        let pts = vec![
+            vec![0.0, 0.0],
+            vec![1.0, 0.0],
+            vec![0.0, 1.0],
+            vec![1.0, 1.0],
+            vec![0.5, 0.5],
+        ];
+        let vals = vec![1.0, 2.0, 3.0, 4.0, 2.5];
+        let s = RbfSurrogate::fit(pts.clone(), &vals).unwrap();
+        for (p, v) in pts.iter().zip(&vals) {
+            assert!((s.eval(p) - v).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn reproduces_linear_functions_exactly() {
+        // Linear tail => linear functions are in the span.
+        let f = |x: &[f64]| 2.0 - 3.0 * x[0] + 0.5 * x[1];
+        let pts: Vec<Vec<f64>> = (0..7)
+            .map(|i| vec![(i as f64 * 0.37) % 1.0, (i as f64 * 0.71) % 1.0])
+            .collect();
+        let vals: Vec<f64> = pts.iter().map(|p| f(p)).collect();
+        let s = RbfSurrogate::fit(pts, &vals).unwrap();
+        for &(x, y) in &[(0.2, 0.9), (0.66, 0.13), (0.5, 0.5)] {
+            assert!((s.eval(&[x, y]) - f(&[x, y])).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn gradient_matches_fd() {
+        let pts: Vec<Vec<f64>> = (0..9)
+            .map(|i| vec![(i as f64 * 0.31) % 1.0, (i as f64 * 0.63) % 1.0])
+            .collect();
+        let vals: Vec<f64> =
+            pts.iter().map(|p| (p[0] * 3.0).sin() + p[1] * p[1]).collect();
+        let s = RbfSurrogate::fit(pts, &vals).unwrap();
+        let x = [0.4, 0.6];
+        let g = s.grad(&x);
+        let eps = 1e-6;
+        for k in 0..2 {
+            let mut xp = x;
+            xp[k] += eps;
+            let up = s.eval(&xp);
+            xp[k] -= 2.0 * eps;
+            let dn = s.eval(&xp);
+            let fd = (up - dn) / (2.0 * eps);
+            assert!((g[k] - fd).abs() < 1e-5 * (1.0 + fd.abs()));
+        }
+    }
+
+    #[test]
+    fn logdet_surrogate_tracks_slq() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(11);
+        let pts: Vec<Vec<f64>> =
+            (0..80).map(|_| vec![rng.uniform_in(0.0, 3.0)]).collect();
+        let mut op = DenseKernelOp::new(
+            pts,
+            Box::new(IsoKernel::new(Shape::Rbf, 1, 0.5, 1.0)),
+            0.3,
+        );
+        let h0 = op.hypers();
+        let bounds: Vec<(f64, f64)> =
+            h0.iter().map(|&h| (h - 0.7, h + 0.7)).collect();
+        let slq = SlqOptions { steps: 25, probes: 10, seed: 1, ..Default::default() };
+        let sur = LogdetSurrogate::build(&mut op, &bounds, 50, &slq, 7).unwrap();
+        // Compare surrogate to fresh SLQ at interior points.
+        for shift in [-0.3, 0.0, 0.25] {
+            let theta: Vec<f64> = h0.iter().map(|&h| h + shift).collect();
+            op.set_hypers(&theta);
+            let direct = slq_logdet(
+                &op,
+                &SlqOptions { steps: 25, probes: 6, grads: false, seed: 2, ..Default::default() },
+            )
+            .unwrap();
+            let sv = sur.eval(&theta);
+            // The surrogate is an interpolation over a wide box in 3-D log
+            // space: ~10% accuracy is the realistic bar (the paper uses it
+            // for optimizer guidance, not for final likelihood values).
+            assert!(
+                (sv - direct.value).abs() < 0.10 * direct.value.abs().max(1.0) + 5.0,
+                "shift {shift}: surrogate {sv} vs slq {}",
+                direct.value
+            );
+        }
+        op.set_hypers(&h0);
+    }
+}

@@ -1,0 +1,124 @@
+//! Observation likelihoods. The Gaussian case folds into the kernel (noise
+//! σ²); Poisson and negative-binomial drive the log-Gaussian Cox process
+//! experiments (§5.3 Hickory, §5.4 crime) through the Laplace
+//! approximation, which needs the log-density and its first two derivatives
+//! in the latent function f.
+
+/// Non-Gaussian likelihood over counts with latent log-intensity f.
+#[derive(Clone, Copy, Debug)]
+pub enum Likelihood {
+    /// y ~ Poisson(exp(f + offset)).
+    Poisson { offset: f64 },
+    /// y ~ NegBinomial(mean = exp(f + offset), dispersion r): variance
+    /// mean + mean^2 / r (r -> inf recovers Poisson).
+    NegBinomial { offset: f64, r: f64 },
+}
+
+impl Likelihood {
+    /// log p(y | f) for one observation (up to y-only constants).
+    pub fn logp(&self, y: f64, f: f64) -> f64 {
+        match *self {
+            Likelihood::Poisson { offset } => {
+                let eta = f + offset;
+                y * eta - eta.exp()
+            }
+            Likelihood::NegBinomial { offset, r } => {
+                // log p = y log(mu/(mu+r)) + r log(r/(mu+r)) + const(y, r)
+                let mu = (f + offset).exp();
+                y * (mu.ln() - (mu + r).ln()) + r * (r.ln() - (mu + r).ln())
+            }
+        }
+    }
+
+    /// d log p / d f.
+    pub fn dlogp(&self, y: f64, f: f64) -> f64 {
+        match *self {
+            Likelihood::Poisson { offset } => y - (f + offset).exp(),
+            Likelihood::NegBinomial { offset, r } => {
+                let mu = (f + offset).exp();
+                (y - mu) * r / (mu + r)
+            }
+        }
+    }
+
+    /// -d² log p / d f² (the Laplace W weights; nonnegative for these
+    /// log-concave likelihoods).
+    pub fn neg_d2logp(&self, y: f64, f: f64) -> f64 {
+        match *self {
+            Likelihood::Poisson { offset } => (f + offset).exp(),
+            Likelihood::NegBinomial { offset, r } => {
+                let mu = (f + offset).exp();
+                // d/df [ (y - mu) r / (mu + r) ] = -mu r (y + r) / (mu+r)^2
+                mu * r * (y + r) / ((mu + r) * (mu + r))
+            }
+        }
+    }
+
+    /// Total log likelihood over vectors.
+    pub fn logp_sum(&self, y: &[f64], f: &[f64]) -> f64 {
+        y.iter().zip(f).map(|(&yi, &fi)| self.logp(yi, fi)).sum()
+    }
+
+    /// Predicted mean count at latent f.
+    pub fn mean(&self, f: f64) -> f64 {
+        match *self {
+            Likelihood::Poisson { offset } | Likelihood::NegBinomial { offset, .. } => {
+                (f + offset).exp()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fd_check(lik: Likelihood, y: f64, f: f64) {
+        let eps = 1e-6;
+        let d = lik.dlogp(y, f);
+        let fd = (lik.logp(y, f + eps) - lik.logp(y, f - eps)) / (2.0 * eps);
+        assert!((d - fd).abs() < 1e-5 * (1.0 + fd.abs()), "dlogp {} vs {}", d, fd);
+        let d2 = -lik.neg_d2logp(y, f);
+        let fd2 = (lik.dlogp(y, f + eps) - lik.dlogp(y, f - eps)) / (2.0 * eps);
+        assert!((d2 - fd2).abs() < 1e-4 * (1.0 + fd2.abs()), "d2 {} vs {}", d2, fd2);
+    }
+
+    #[test]
+    fn poisson_derivatives() {
+        for &(y, f) in &[(0.0, -1.0), (3.0, 0.5), (10.0, 2.0)] {
+            fd_check(Likelihood::Poisson { offset: 0.3 }, y, f);
+        }
+    }
+
+    #[test]
+    fn negbinomial_derivatives() {
+        for &(y, f) in &[(0.0, -1.0), (3.0, 0.5), (12.0, 1.5)] {
+            fd_check(Likelihood::NegBinomial { offset: 0.1, r: 4.0 }, y, f);
+        }
+    }
+
+    #[test]
+    fn w_nonnegative() {
+        let liks = [
+            Likelihood::Poisson { offset: 0.0 },
+            Likelihood::NegBinomial { offset: 0.0, r: 2.0 },
+        ];
+        for lik in liks {
+            for f in [-3.0, 0.0, 2.0] {
+                for y in [0.0, 1.0, 7.0] {
+                    assert!(lik.neg_d2logp(y, f) >= 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn negbinomial_limits_to_poisson() {
+        // Large r: neg-binomial ~ Poisson.
+        let nb = Likelihood::NegBinomial { offset: 0.0, r: 1e7 };
+        let po = Likelihood::Poisson { offset: 0.0 };
+        let (y, f) = (4.0, 1.2);
+        assert!((nb.dlogp(y, f) - po.dlogp(y, f)).abs() < 1e-5);
+        assert!((nb.neg_d2logp(y, f) - po.neg_d2logp(y, f)).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,9 @@
+//! Gaussian-process models built on the estimators: Gaussian-likelihood
+//! regression, Laplace-approximated non-Gaussian models (LGCP), and deep
+//! kernel learning.
+pub mod dkl;
+pub mod laplace;
+pub mod likelihoods;
+pub mod regression;
+
+pub use regression::{Estimator, GpRegression, PredictiveOp};

@@ -1,0 +1,312 @@
+//! Regular inducing-point grids and local interpolation weights — the "I"
+//! in SKI (Wilson & Nickisch 2015). Cubic convolution interpolation (Keys
+//! 1981) gives 4 weights per dimension; tensor products across dimensions
+//! give each data point 4^d sparse weights in W.
+
+use crate::operators::sparse::Csr;
+
+/// One grid dimension: `m` equispaced points spanning `[lo, hi]`.
+#[derive(Clone, Copy, Debug)]
+pub struct GridDim {
+    pub lo: f64,
+    pub hi: f64,
+    pub m: usize,
+}
+
+impl GridDim {
+    pub fn spacing(&self) -> f64 {
+        if self.m <= 1 {
+            return 1.0;
+        }
+        (self.hi - self.lo) / (self.m - 1) as f64
+    }
+
+    pub fn point(&self, i: usize) -> f64 {
+        self.lo + self.spacing() * i as f64
+    }
+}
+
+/// Cartesian-product grid. Row-major linearization: the **last** dimension
+/// varies fastest (matches [`crate::operators::kron::KronOp`]).
+#[derive(Clone, Debug)]
+pub struct Grid {
+    pub dims: Vec<GridDim>,
+}
+
+/// Interpolation order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InterpOrder {
+    /// 2 points per dim.
+    Linear,
+    /// 4 points per dim (cubic convolution, Keys a=-1/2) — SKI's default.
+    Cubic,
+}
+
+/// Per-dimension interpolation stencil for one point: grid indices and
+/// weights (already boundary-clamped).
+#[derive(Clone, Debug)]
+pub struct Stencil {
+    pub idx: Vec<usize>,
+    pub w: Vec<f64>,
+}
+
+impl Grid {
+    pub fn new(dims: Vec<GridDim>) -> Self {
+        assert!(!dims.is_empty());
+        Grid { dims }
+    }
+
+    /// Convenience: grid covering the data's bounding box with margins.
+    pub fn covering(points: &[Vec<f64>], ms: &[usize], margin_frac: f64) -> Self {
+        let d = ms.len();
+        let mut dims = Vec::with_capacity(d);
+        for j in 0..d {
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for p in points {
+                lo = lo.min(p[j]);
+                hi = hi.max(p[j]);
+            }
+            let span = (hi - lo).max(1e-12);
+            dims.push(GridDim {
+                lo: lo - margin_frac * span,
+                hi: hi + margin_frac * span,
+                m: ms[j],
+            });
+        }
+        Grid::new(dims)
+    }
+
+    pub fn ndims(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Total number of grid points.
+    pub fn size(&self) -> usize {
+        self.dims.iter().map(|d| d.m).product()
+    }
+
+    /// Multi-index -> linear index (last dim fastest).
+    pub fn lin_index(&self, sub: &[usize]) -> usize {
+        let mut idx = 0;
+        for (j, d) in self.dims.iter().enumerate() {
+            idx = idx * d.m + sub[j];
+        }
+        idx
+    }
+
+    /// Grid point coordinates for a linear index.
+    pub fn point(&self, mut lin: usize) -> Vec<f64> {
+        let d = self.ndims();
+        let mut sub = vec![0usize; d];
+        for j in (0..d).rev() {
+            sub[j] = lin % self.dims[j].m;
+            lin /= self.dims[j].m;
+        }
+        sub.iter().zip(&self.dims).map(|(&s, dim)| dim.point(s)).collect()
+    }
+
+    /// 1-D stencil for coordinate `x` in dimension `j`.
+    pub fn stencil_1d(&self, j: usize, x: f64, order: InterpOrder) -> Stencil {
+        let dim = &self.dims[j];
+        let m = dim.m;
+        let h = dim.spacing();
+        // Position in grid units, clamped to the grid's span.
+        let t = ((x - dim.lo) / h).clamp(0.0, (m - 1) as f64);
+        match order {
+            InterpOrder::Linear => {
+                let i0 = (t.floor() as usize).min(m.saturating_sub(2));
+                if m == 1 {
+                    return Stencil { idx: vec![0], w: vec![1.0] };
+                }
+                let u = t - i0 as f64;
+                Stencil { idx: vec![i0, i0 + 1], w: vec![1.0 - u, u] }
+            }
+            InterpOrder::Cubic => {
+                if m < 4 {
+                    // Degenerate tiny grids fall back to linear.
+                    return self.stencil_1d(j, x, InterpOrder::Linear);
+                }
+                let i0 = t.floor() as isize;
+                let u = t - i0 as f64;
+                // Keys cubic convolution weights (a = -1/2), exact for
+                // cubics, C1 continuous.
+                let w = [
+                    ((-0.5 * u + 1.0) * u - 0.5) * u,
+                    (1.5 * u - 2.5) * u * u + 1.0,
+                    ((-1.5 * u + 2.0) * u + 0.5) * u,
+                    (0.5 * u - 0.5) * u * u,
+                ];
+                let mut idx = Vec::with_capacity(4);
+                let mut wout = Vec::with_capacity(4);
+                for (k, &wk) in w.iter().enumerate() {
+                    // Offsets -1, 0, 1, 2 relative to i0; clamp at edges
+                    // (accumulate weight onto the boundary point).
+                    let raw = i0 + k as isize - 1;
+                    let clamped = raw.clamp(0, (m - 1) as isize) as usize;
+                    if let Some(pos) = idx.iter().position(|&p| p == clamped) {
+                        wout[pos] += wk;
+                    } else {
+                        idx.push(clamped);
+                        wout.push(wk);
+                    }
+                }
+                Stencil { idx, w: wout }
+            }
+        }
+    }
+
+    /// Per-dimension stencils for a point.
+    pub fn stencils(&self, x: &[f64], order: InterpOrder) -> Vec<Stencil> {
+        (0..self.ndims()).map(|j| self.stencil_1d(j, x[j], order)).collect()
+    }
+
+    /// Sparse interpolation matrix W (n x grid size): tensor products of the
+    /// 1-D stencils. Also returns the per-point per-dim stencils, which the
+    /// SKI diagonal correction reuses (O(16 d) per point instead of 16^d).
+    pub fn interp_matrix(
+        &self,
+        points: &[Vec<f64>],
+        order: InterpOrder,
+    ) -> (Csr, Vec<Vec<Stencil>>) {
+        let mut rows: Vec<Vec<(usize, f64)>> = Vec::with_capacity(points.len());
+        let mut all_stencils = Vec::with_capacity(points.len());
+        for p in points {
+            let sts = self.stencils(p, order);
+            // Tensor-product expansion.
+            let mut entries: Vec<(usize, f64)> = vec![(0usize, 1.0)];
+            for (j, st) in sts.iter().enumerate() {
+                let mut next = Vec::with_capacity(entries.len() * st.idx.len());
+                for &(base, bw) in &entries {
+                    for (gi, gw) in st.idx.iter().zip(&st.w) {
+                        next.push((base * self.dims[j].m + gi, bw * gw));
+                    }
+                }
+                entries = next;
+            }
+            // Merge duplicate columns (possible after boundary clamping).
+            entries.sort_by_key(|e| e.0);
+            let mut merged: Vec<(usize, f64)> = Vec::with_capacity(entries.len());
+            for (c, v) in entries {
+                if let Some(last) = merged.last_mut() {
+                    if last.0 == c {
+                        last.1 += v;
+                        continue;
+                    }
+                }
+                merged.push((c, v));
+            }
+            rows.push(merged);
+            all_stencils.push(sts);
+        }
+        (Csr::from_rows(self.size(), rows.as_slice()), all_stencils)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid1d(m: usize) -> Grid {
+        Grid::new(vec![GridDim { lo: 0.0, hi: 1.0, m }])
+    }
+
+    #[test]
+    fn weights_sum_to_one() {
+        let g = grid1d(20);
+        for &x in &[0.0, 0.013, 0.5, 0.77, 0.999, 1.0] {
+            for order in [InterpOrder::Linear, InterpOrder::Cubic] {
+                let st = g.stencil_1d(0, x, order);
+                let s: f64 = st.w.iter().sum();
+                assert!((s - 1.0).abs() < 1e-12, "x={x} {order:?} sum={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn cubic_exact_on_quadratics() {
+        // Keys (a=-1/2) cubic convolution is 3rd-order accurate: exact for
+        // polynomials up to degree 2, away from boundaries.
+        let g = grid1d(30);
+        let f = |x: f64| 2.0 + 3.0 * x - x * x;
+        let vals: Vec<f64> = (0..30).map(|i| f(g.dims[0].point(i))).collect();
+        for &x in &[0.21, 0.43, 0.67, 0.85] {
+            let st = g.stencil_1d(0, x, InterpOrder::Cubic);
+            let approx: f64 = st.idx.iter().zip(&st.w).map(|(&i, &w)| w * vals[i]).sum();
+            assert!((approx - f(x)).abs() < 1e-10, "x={x}");
+        }
+    }
+
+    #[test]
+    fn linear_exact_on_lines() {
+        let g = grid1d(10);
+        let f = |x: f64| 1.0 - 4.0 * x;
+        let vals: Vec<f64> = (0..10).map(|i| f(g.dims[0].point(i))).collect();
+        for &x in &[0.05, 0.5, 0.94] {
+            let st = g.stencil_1d(0, x, InterpOrder::Linear);
+            let approx: f64 = st.idx.iter().zip(&st.w).map(|(&i, &w)| w * vals[i]).sum();
+            assert!((approx - f(x)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn lin_index_roundtrip() {
+        let g = Grid::new(vec![
+            GridDim { lo: 0.0, hi: 1.0, m: 3 },
+            GridDim { lo: -1.0, hi: 1.0, m: 4 },
+        ]);
+        assert_eq!(g.size(), 12);
+        for lin in 0..12 {
+            let p = g.point(lin);
+            // Reconstruct sub-indices from coordinates.
+            let s0 = ((p[0] - 0.0) / g.dims[0].spacing()).round() as usize;
+            let s1 = ((p[1] + 1.0) / g.dims[1].spacing()).round() as usize;
+            assert_eq!(g.lin_index(&[s0, s1]), lin);
+        }
+    }
+
+    #[test]
+    fn interp_matrix_rows_sum_to_one() {
+        let g = Grid::new(vec![
+            GridDim { lo: 0.0, hi: 1.0, m: 8 },
+            GridDim { lo: 0.0, hi: 2.0, m: 6 },
+        ]);
+        let pts = vec![vec![0.3, 0.5], vec![0.9, 1.9], vec![0.0, 0.0]];
+        let (w, st) = g.interp_matrix(&pts, InterpOrder::Cubic);
+        assert_eq!(w.nrows, 3);
+        assert_eq!(w.ncols, 48);
+        assert_eq!(st.len(), 3);
+        for i in 0..3 {
+            let (_, vals) = w.row(i);
+            let s: f64 = vals.iter().sum();
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn interpolates_2d_bilinear_function() {
+        // f(x,y) = x*y is bilinear; cubic interpolation over a fine grid
+        // should approximate it very well in the interior.
+        let g = Grid::new(vec![
+            GridDim { lo: 0.0, hi: 1.0, m: 16 },
+            GridDim { lo: 0.0, hi: 1.0, m: 16 },
+        ]);
+        let grid_vals: Vec<f64> =
+            (0..g.size()).map(|i| { let p = g.point(i); p[0] * p[1] }).collect();
+        let pts = vec![vec![0.37, 0.61], vec![0.52, 0.18]];
+        let (w, _) = g.interp_matrix(&pts, InterpOrder::Cubic);
+        let mut out = vec![0.0; 2];
+        w.apply(&grid_vals, &mut out);
+        for (p, o) in pts.iter().zip(&out) {
+            assert!((o - p[0] * p[1]).abs() < 1e-6, "{o} vs {}", p[0] * p[1]);
+        }
+    }
+
+    #[test]
+    fn covering_grid_bounds() {
+        let pts = vec![vec![1.0], vec![3.0], vec![2.0]];
+        let g = Grid::covering(&pts, &[5], 0.1);
+        assert!(g.dims[0].lo < 1.0);
+        assert!(g.dims[0].hi > 3.0);
+    }
+}

@@ -1,0 +1,268 @@
+//! Small MLP feature extractor for deep kernel learning (paper §5.5).
+//!
+//! DKL replaces the inputs of a base kernel with the outputs of a network:
+//! `k_deep(x, z) = k_base(g_w(x), g_w(z))`. We implement a tanh MLP with
+//! manual forward/backward; the GP layer supplies `dL/d(features)` (built
+//! from stochastic estimators, see [`crate::gp::dkl`]) and this module
+//! backpropagates it into the weights.
+
+use crate::linalg::dense::Mat;
+use crate::util::rng::Rng;
+
+/// Fully-connected tanh network, linear output layer.
+#[derive(Clone)]
+pub struct Mlp {
+    /// Per-layer weight matrices (out x in).
+    pub weights: Vec<Mat>,
+    /// Per-layer biases.
+    pub biases: Vec<Vec<f64>>,
+}
+
+/// Cached activations from a forward pass, needed for backprop.
+pub struct MlpTape {
+    /// Layer inputs: inputs[0] is the batch input, inputs[l+1] the
+    /// activation after layer l (post-nonlinearity except last layer).
+    pub inputs: Vec<Mat>,
+}
+
+impl Mlp {
+    /// Xavier-initialized MLP with layer sizes, e.g. `[128, 64, 16, 2]`.
+    pub fn new(sizes: &[usize], rng: &mut Rng) -> Self {
+        assert!(sizes.len() >= 2);
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        for w in sizes.windows(2) {
+            let (fan_in, fan_out) = (w[0], w[1]);
+            let scale = (2.0 / (fan_in + fan_out) as f64).sqrt();
+            let mut m = Mat::zeros(fan_out, fan_in);
+            for v in m.data.iter_mut() {
+                *v = rng.gaussian() * scale;
+            }
+            weights.push(m);
+            biases.push(vec![0.0; fan_out]);
+        }
+        Mlp { weights, biases }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.weights[0].cols
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.weights.last().unwrap().rows
+    }
+
+    /// Total number of scalar parameters.
+    pub fn num_params(&self) -> usize {
+        self.weights
+            .iter()
+            .map(|w| w.data.len())
+            .sum::<usize>()
+            + self.biases.iter().map(|b| b.len()).sum::<usize>()
+    }
+
+    /// Forward pass on a batch `x` (n x in_dim). Returns features and tape.
+    pub fn forward(&self, x: &Mat) -> (Mat, MlpTape) {
+        assert_eq!(x.cols, self.in_dim());
+        let mut inputs = vec![x.clone()];
+        let mut cur = x.clone();
+        let last = self.num_layers() - 1;
+        for (l, (w, b)) in self.weights.iter().zip(&self.biases).enumerate() {
+            // cur (n x in) * w^T (in x out) + b
+            let mut next = Mat::zeros(cur.rows, w.rows);
+            for i in 0..cur.rows {
+                let xi = cur.row(i);
+                for o in 0..w.rows {
+                    let wrow = w.row(o);
+                    let mut s = b[o];
+                    for j in 0..w.cols {
+                        s += wrow[j] * xi[j];
+                    }
+                    next[(i, o)] = if l == last { s } else { s.tanh() };
+                }
+            }
+            inputs.push(next.clone());
+            cur = next;
+        }
+        (cur, MlpTape { inputs })
+    }
+
+    /// Backward pass: given `dL/d(output)` (n x out_dim), returns gradients
+    /// with the same shapes as `(weights, biases)`.
+    pub fn backward(&self, tape: &MlpTape, dout: &Mat) -> (Vec<Mat>, Vec<Vec<f64>>) {
+        let last = self.num_layers() - 1;
+        let mut dw: Vec<Mat> = self.weights.iter().map(|w| Mat::zeros(w.rows, w.cols)).collect();
+        let mut db: Vec<Vec<f64>> = self.biases.iter().map(|b| vec![0.0; b.len()]).collect();
+        let mut delta = dout.clone(); // dL/d(pre-activation of current layer)
+        for l in (0..=last).rev() {
+            let act_in = &tape.inputs[l]; // input to layer l (n x in)
+            let act_out = &tape.inputs[l + 1]; // output of layer l (n x out)
+            if l != last {
+                // delta currently holds dL/d(activation); apply tanh'.
+                for i in 0..delta.rows {
+                    for o in 0..delta.cols {
+                        let a = act_out[(i, o)];
+                        delta[(i, o)] *= 1.0 - a * a;
+                    }
+                }
+            }
+            // dW = delta^T * act_in ; db = column sums of delta.
+            let w = &self.weights[l];
+            for i in 0..delta.rows {
+                let drow = delta.row(i);
+                let xrow = act_in.row(i);
+                for o in 0..w.rows {
+                    let d = drow[o];
+                    if d == 0.0 {
+                        continue;
+                    }
+                    db[l][o] += d;
+                    let wrow = dw[l].row_mut(o);
+                    for j in 0..w.cols {
+                        wrow[j] += d * xrow[j];
+                    }
+                }
+            }
+            if l > 0 {
+                // Propagate: d(act_in) = delta * W
+                let mut dprev = Mat::zeros(delta.rows, w.cols);
+                for i in 0..delta.rows {
+                    let drow = delta.row(i);
+                    for o in 0..w.rows {
+                        let d = drow[o];
+                        if d == 0.0 {
+                            continue;
+                        }
+                        let wrow = w.row(o);
+                        let prow = dprev.row_mut(i);
+                        for j in 0..w.cols {
+                            prow[j] += d * wrow[j];
+                        }
+                    }
+                }
+                delta = dprev;
+            }
+        }
+        (dw, db)
+    }
+
+    /// Flatten parameters into a vector (for generic optimizers).
+    pub fn params(&self) -> Vec<f64> {
+        let mut p = Vec::with_capacity(self.num_params());
+        for w in &self.weights {
+            p.extend_from_slice(&w.data);
+        }
+        for b in &self.biases {
+            p.extend_from_slice(b);
+        }
+        p
+    }
+
+    pub fn set_params(&mut self, p: &[f64]) {
+        let mut off = 0;
+        for w in self.weights.iter_mut() {
+            let len = w.data.len();
+            w.data.copy_from_slice(&p[off..off + len]);
+            off += len;
+        }
+        for b in self.biases.iter_mut() {
+            let len = b.len();
+            b.copy_from_slice(&p[off..off + len]);
+            off += len;
+        }
+        assert_eq!(off, p.len());
+    }
+
+    /// Flatten gradients in the same layout as [`params`].
+    pub fn flatten_grads(&self, dw: &[Mat], db: &[Vec<f64>]) -> Vec<f64> {
+        let mut g = Vec::with_capacity(self.num_params());
+        for w in dw {
+            g.extend_from_slice(&w.data);
+        }
+        for b in db {
+            g.extend_from_slice(b);
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loss(mlp: &Mlp, x: &Mat, t: &Mat) -> f64 {
+        // 0.5 * || f(x) - t ||^2
+        let (y, _) = mlp.forward(x);
+        let mut s = 0.0;
+        for i in 0..y.rows {
+            for j in 0..y.cols {
+                let d = y[(i, j)] - t[(i, j)];
+                s += 0.5 * d * d;
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn backprop_matches_finite_differences() {
+        let mut rng = Rng::new(3);
+        let mlp = Mlp::new(&[4, 5, 2], &mut rng);
+        let x = Mat::from_fn(6, 4, |i, j| ((i + j) as f64 * 0.37).sin());
+        let t = Mat::from_fn(6, 2, |i, j| ((i * 2 + j) as f64 * 0.21).cos());
+
+        let (y, tape) = mlp.forward(&x);
+        let mut dout = Mat::zeros(6, 2);
+        for i in 0..6 {
+            for j in 0..2 {
+                dout[(i, j)] = y[(i, j)] - t[(i, j)];
+            }
+        }
+        let (dw, db) = mlp.backward(&tape, &dout);
+        let g = mlp.flatten_grads(&dw, &db);
+
+        let p0 = mlp.params();
+        let eps = 1e-6;
+        for idx in [0usize, 3, 10, p0.len() - 1, p0.len() / 2] {
+            let mut m = mlp.clone();
+            let mut p = p0.clone();
+            p[idx] += eps;
+            m.set_params(&p);
+            let up = loss(&m, &x, &t);
+            p[idx] -= 2.0 * eps;
+            m.set_params(&p);
+            let dn = loss(&m, &x, &t);
+            let fd = (up - dn) / (2.0 * eps);
+            assert!(
+                (g[idx] - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+                "param {idx}: {} vs {}",
+                g[idx],
+                fd
+            );
+        }
+    }
+
+    #[test]
+    fn params_roundtrip() {
+        let mut rng = Rng::new(9);
+        let mut mlp = Mlp::new(&[3, 4, 2], &mut rng);
+        let p = mlp.params();
+        assert_eq!(p.len(), mlp.num_params());
+        let mut p2 = p.clone();
+        p2[0] = 42.0;
+        mlp.set_params(&p2);
+        assert_eq!(mlp.params()[0], 42.0);
+    }
+
+    #[test]
+    fn output_shape() {
+        let mut rng = Rng::new(1);
+        let mlp = Mlp::new(&[8, 6, 3], &mut rng);
+        let x = Mat::zeros(5, 8);
+        let (y, _) = mlp.forward(&x);
+        assert_eq!((y.rows, y.cols), (5, 3));
+    }
+}

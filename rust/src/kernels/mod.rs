@@ -1,0 +1,428 @@
+//! Covariance kernels with analytic derivatives w.r.t. **log**
+//! hyperparameters (the optimization is done in log space, which keeps
+//! positivity constraints implicit — standard GPML practice).
+//!
+//! The paper's experiments use RBF, the Matérn family, and spectral mixture
+//! kernels (plus deep kernels, built in [`crate::gp::dkl`] as an MLP feature
+//! map feeding an RBF). SKI's Kronecker algebra additionally needs
+//! *separable* (per-dimension product) kernels, provided by
+//! [`SeparableKernel`].
+
+pub mod deep;
+pub mod spectral;
+
+pub use spectral::SpectralMixtureKernel;
+
+/// Radial profile shared by the isotropic kernels (unit amplitude).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Shape {
+    Rbf,
+    Matern12,
+    Matern32,
+    Matern52,
+}
+
+impl Shape {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Shape::Rbf => "rbf",
+            Shape::Matern12 => "mat12",
+            Shape::Matern32 => "mat32",
+            Shape::Matern52 => "mat52",
+        }
+    }
+
+    /// Unit-amplitude kernel value at distance `r` with lengthscale `ell`.
+    #[inline]
+    pub fn k(&self, r: f64, ell: f64) -> f64 {
+        match self {
+            Shape::Rbf => (-0.5 * (r / ell) * (r / ell)).exp(),
+            Shape::Matern12 => (-r / ell).exp(),
+            Shape::Matern32 => {
+                let a = 3f64.sqrt() * r / ell;
+                (1.0 + a) * (-a).exp()
+            }
+            Shape::Matern52 => {
+                let a = 5f64.sqrt() * r / ell;
+                (1.0 + a + a * a / 3.0) * (-a).exp()
+            }
+        }
+    }
+
+    /// d k / d log(ell) at distance r.
+    #[inline]
+    pub fn dk_dlog_ell(&self, r: f64, ell: f64) -> f64 {
+        match self {
+            Shape::Rbf => {
+                let s = (r / ell) * (r / ell);
+                (-0.5 * s).exp() * s
+            }
+            Shape::Matern12 => {
+                let a = r / ell;
+                (-a).exp() * a
+            }
+            Shape::Matern32 => {
+                let a = 3f64.sqrt() * r / ell;
+                a * a * (-a).exp()
+            }
+            Shape::Matern52 => {
+                let a = 5f64.sqrt() * r / ell;
+                (a * a / 3.0) * (1.0 + a) * (-a).exp()
+            }
+        }
+    }
+}
+
+/// A covariance kernel with analytic log-hyperparameter gradients.
+pub trait Kernel: Send + Sync {
+    /// Input dimensionality.
+    fn dim(&self) -> usize;
+    /// Number of hyperparameters (all log-space).
+    fn num_hypers(&self) -> usize;
+    /// Current hyperparameters (log-space).
+    fn hypers(&self) -> Vec<f64>;
+    /// Set hyperparameters (log-space).
+    fn set_hypers(&mut self, h: &[f64]);
+    /// Human-readable hyper names, for experiment tables.
+    fn hyper_names(&self) -> Vec<String>;
+    /// k(x, z).
+    fn eval(&self, x: &[f64], z: &[f64]) -> f64;
+    /// out[i] = d k(x, z) / d hyper_i.
+    fn grad(&self, x: &[f64], z: &[f64], out: &mut [f64]);
+    fn clone_box(&self) -> Box<dyn Kernel>;
+}
+
+impl Clone for Box<dyn Kernel> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+#[inline]
+pub fn dist(x: &[f64], z: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), z.len());
+    let mut s = 0.0;
+    for i in 0..x.len() {
+        let d = x[i] - z[i];
+        s += d * d;
+    }
+    s.sqrt()
+}
+
+/// Isotropic kernel: `sf^2 * shape(||x - z|| / ell)`.
+/// Hypers: `[log_ell, log_sf]`.
+#[derive(Clone, Debug)]
+pub struct IsoKernel {
+    pub shape: Shape,
+    pub input_dim: usize,
+    pub log_ell: f64,
+    pub log_sf: f64,
+}
+
+impl IsoKernel {
+    pub fn new(shape: Shape, input_dim: usize, ell: f64, sf: f64) -> Self {
+        IsoKernel { shape, input_dim, log_ell: ell.ln(), log_sf: sf.ln() }
+    }
+}
+
+impl Kernel for IsoKernel {
+    fn dim(&self) -> usize {
+        self.input_dim
+    }
+    fn num_hypers(&self) -> usize {
+        2
+    }
+    fn hypers(&self) -> Vec<f64> {
+        vec![self.log_ell, self.log_sf]
+    }
+    fn set_hypers(&mut self, h: &[f64]) {
+        assert_eq!(h.len(), 2);
+        self.log_ell = h[0];
+        self.log_sf = h[1];
+    }
+    fn hyper_names(&self) -> Vec<String> {
+        vec!["log_ell".into(), "log_sf".into()]
+    }
+    fn eval(&self, x: &[f64], z: &[f64]) -> f64 {
+        let sf2 = (2.0 * self.log_sf).exp();
+        sf2 * self.shape.k(dist(x, z), self.log_ell.exp())
+    }
+    fn grad(&self, x: &[f64], z: &[f64], out: &mut [f64]) {
+        let sf2 = (2.0 * self.log_sf).exp();
+        let r = dist(x, z);
+        let ell = self.log_ell.exp();
+        out[0] = sf2 * self.shape.dk_dlog_ell(r, ell);
+        out[1] = 2.0 * sf2 * self.shape.k(r, ell);
+    }
+    fn clone_box(&self) -> Box<dyn Kernel> {
+        Box::new(self.clone())
+    }
+}
+
+/// One-dimensional unit-amplitude kernel factor (for separable products).
+/// Hypers: `[log_ell]`.
+#[derive(Clone, Debug)]
+pub struct Factor1d {
+    pub shape: Shape,
+    pub log_ell: f64,
+}
+
+impl Factor1d {
+    pub fn new(shape: Shape, ell: f64) -> Self {
+        Factor1d { shape, log_ell: ell.ln() }
+    }
+}
+
+impl Kernel for Factor1d {
+    fn dim(&self) -> usize {
+        1
+    }
+    fn num_hypers(&self) -> usize {
+        1
+    }
+    fn hypers(&self) -> Vec<f64> {
+        vec![self.log_ell]
+    }
+    fn set_hypers(&mut self, h: &[f64]) {
+        self.log_ell = h[0];
+    }
+    fn hyper_names(&self) -> Vec<String> {
+        vec!["log_ell".into()]
+    }
+    fn eval(&self, x: &[f64], z: &[f64]) -> f64 {
+        self.shape.k((x[0] - z[0]).abs(), self.log_ell.exp())
+    }
+    fn grad(&self, x: &[f64], z: &[f64], out: &mut [f64]) {
+        out[0] = self
+            .shape
+            .dk_dlog_ell((x[0] - z[0]).abs(), self.log_ell.exp());
+    }
+    fn clone_box(&self) -> Box<dyn Kernel> {
+        Box::new(self.clone())
+    }
+}
+
+/// Separable (per-dimension product) kernel with a global amplitude:
+/// `k(x,z) = sf^2 * prod_j f_j(x_j, z_j)`.
+///
+/// This is the form SKI's Kronecker algebra requires on multi-dimensional
+/// grids: `K_UU = sf^2 * T_1 (x) T_2 (x) ... (x) T_d` with each `T_j` a
+/// symmetric Toeplitz matrix from the 1-D factor. Hypers: concatenation of
+/// factor hypers, then `log_sf` last.
+#[derive(Clone)]
+pub struct SeparableKernel {
+    pub factors: Vec<Box<dyn Kernel>>,
+    pub log_sf: f64,
+}
+
+impl SeparableKernel {
+    pub fn new(factors: Vec<Box<dyn Kernel>>, sf: f64) -> Self {
+        for f in &factors {
+            assert_eq!(f.dim(), 1, "separable factors must be 1-D");
+        }
+        SeparableKernel { factors, log_sf: sf.ln() }
+    }
+
+    /// Convenience: isotropic-like separable kernel (same shape every dim,
+    /// one shared-initial-but-independent lengthscale per dim).
+    pub fn iso(shape: Shape, dims: usize, ell: f64, sf: f64) -> Self {
+        SeparableKernel::new(
+            (0..dims)
+                .map(|_| Box::new(Factor1d::new(shape, ell)) as Box<dyn Kernel>)
+                .collect(),
+            sf,
+        )
+    }
+
+    /// Evaluate factor `j` on scalar inputs.
+    pub fn factor_eval(&self, j: usize, a: f64, b: f64) -> f64 {
+        self.factors[j].eval(&[a], &[b])
+    }
+
+    /// Index range of factor `j`'s hypers within `self.hypers()`.
+    pub fn factor_hyper_range(&self, j: usize) -> std::ops::Range<usize> {
+        let mut start = 0;
+        for f in &self.factors[..j] {
+            start += f.num_hypers();
+        }
+        start..start + self.factors[j].num_hypers()
+    }
+
+    pub fn sf2(&self) -> f64 {
+        (2.0 * self.log_sf).exp()
+    }
+}
+
+impl Kernel for SeparableKernel {
+    fn dim(&self) -> usize {
+        self.factors.len()
+    }
+    fn num_hypers(&self) -> usize {
+        self.factors.iter().map(|f| f.num_hypers()).sum::<usize>() + 1
+    }
+    fn hypers(&self) -> Vec<f64> {
+        let mut h: Vec<f64> = self.factors.iter().flat_map(|f| f.hypers()).collect();
+        h.push(self.log_sf);
+        h
+    }
+    fn set_hypers(&mut self, h: &[f64]) {
+        assert_eq!(h.len(), self.num_hypers());
+        let mut off = 0;
+        for f in self.factors.iter_mut() {
+            let k = f.num_hypers();
+            f.set_hypers(&h[off..off + k]);
+            off += k;
+        }
+        self.log_sf = h[off];
+    }
+    fn hyper_names(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        for (j, f) in self.factors.iter().enumerate() {
+            for n in f.hyper_names() {
+                names.push(format!("dim{j}.{n}"));
+            }
+        }
+        names.push("log_sf".into());
+        names
+    }
+    fn eval(&self, x: &[f64], z: &[f64]) -> f64 {
+        let mut v = self.sf2();
+        for (j, f) in self.factors.iter().enumerate() {
+            v *= f.eval(&x[j..=j], &z[j..=j]);
+        }
+        v
+    }
+    fn grad(&self, x: &[f64], z: &[f64], out: &mut [f64]) {
+        let vals: Vec<f64> = self
+            .factors
+            .iter()
+            .enumerate()
+            .map(|(j, f)| f.eval(&x[j..=j], &z[j..=j]))
+            .collect();
+        let sf2 = self.sf2();
+        let total: f64 = sf2 * vals.iter().product::<f64>();
+        let mut off = 0;
+        for (j, f) in self.factors.iter().enumerate() {
+            let k = f.num_hypers();
+            let mut g = vec![0.0; k];
+            f.grad(&x[j..=j], &z[j..=j], &mut g);
+            // Product rule: replace factor value by its gradient.
+            let others: f64 = sf2
+                * vals
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| *i != j)
+                    .map(|(_, v)| v)
+                    .product::<f64>();
+            for (t, gv) in g.iter().enumerate() {
+                out[off + t] = others * gv;
+            }
+            off += k;
+        }
+        out[off] = 2.0 * total; // d/d log_sf of sf^2 * (...)
+    }
+    fn clone_box(&self) -> Box<dyn Kernel> {
+        Box::new(self.clone())
+    }
+}
+
+/// Central finite-difference gradient of any kernel (test utility and
+/// fallback for kernels without analytic gradients).
+pub fn fd_grad(k: &dyn Kernel, x: &[f64], z: &[f64], eps: f64) -> Vec<f64> {
+    let h0 = k.hypers();
+    let mut kc = k.clone_box();
+    let mut g = vec![0.0; h0.len()];
+    for i in 0..h0.len() {
+        let mut hp = h0.clone();
+        hp[i] += eps;
+        kc.set_hypers(&hp);
+        let up = kc.eval(x, z);
+        hp[i] -= 2.0 * eps;
+        kc.set_hypers(&hp);
+        let dn = kc.eval(x, z);
+        g[i] = (up - dn) / (2.0 * eps);
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_grad(k: &dyn Kernel, x: &[f64], z: &[f64]) {
+        let mut g = vec![0.0; k.num_hypers()];
+        k.grad(x, z, &mut g);
+        let fd = fd_grad(k, x, z, 1e-6);
+        for i in 0..g.len() {
+            assert!(
+                (g[i] - fd[i]).abs() < 1e-5 * (1.0 + fd[i].abs()),
+                "hyper {i}: analytic {} vs fd {}",
+                g[i],
+                fd[i]
+            );
+        }
+    }
+
+    #[test]
+    fn iso_kernel_values() {
+        let k = IsoKernel::new(Shape::Rbf, 2, 0.5, 2.0);
+        // k(x,x) = sf^2
+        assert!((k.eval(&[1.0, 2.0], &[1.0, 2.0]) - 4.0).abs() < 1e-12);
+        // decreasing in distance
+        let near = k.eval(&[0.0, 0.0], &[0.1, 0.0]);
+        let far = k.eval(&[0.0, 0.0], &[1.0, 0.0]);
+        assert!(near > far);
+    }
+
+    #[test]
+    fn gradients_match_fd_all_shapes() {
+        for shape in [Shape::Rbf, Shape::Matern12, Shape::Matern32, Shape::Matern52] {
+            let k = IsoKernel::new(shape, 3, 0.7, 1.3);
+            check_grad(&k, &[0.1, -0.4, 0.8], &[0.5, 0.2, -0.1]);
+        }
+    }
+
+    #[test]
+    fn separable_matches_iso_rbf() {
+        // Product of 1-D RBFs with equal ell == d-dim isotropic RBF.
+        let sep = SeparableKernel::iso(Shape::Rbf, 3, 0.6, 1.2);
+        let iso = IsoKernel::new(Shape::Rbf, 3, 0.6, 1.2);
+        let (x, z) = ([0.3, -0.2, 0.9], [-0.1, 0.4, 0.5]);
+        assert!((sep.eval(&x, &z) - iso.eval(&x, &z)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn separable_grad_matches_fd() {
+        let sep = SeparableKernel::new(
+            vec![
+                Box::new(Factor1d::new(Shape::Matern32, 0.4)),
+                Box::new(Factor1d::new(Shape::Rbf, 0.9)),
+            ],
+            1.5,
+        );
+        check_grad(&sep, &[0.2, -0.7], &[-0.3, 0.1]);
+    }
+
+    #[test]
+    fn matern_smoothness_ordering_at_midrange() {
+        // At moderate r/ell, smoother kernels decay slower near 0 but all
+        // must be in (0,1].
+        for shape in [Shape::Rbf, Shape::Matern12, Shape::Matern32, Shape::Matern52] {
+            let v = shape.k(0.5, 1.0);
+            assert!(v > 0.0 && v <= 1.0, "{shape:?} -> {v}");
+        }
+        assert!(Shape::Rbf.k(0.1, 1.0) > Shape::Matern12.k(0.1, 1.0));
+    }
+
+    #[test]
+    fn hyper_roundtrip() {
+        let mut k = SeparableKernel::iso(Shape::Matern52, 2, 0.3, 2.0);
+        let h = k.hypers();
+        assert_eq!(h.len(), 3);
+        let mut h2 = h.clone();
+        h2[0] = 0.123;
+        k.set_hypers(&h2);
+        assert_eq!(k.hypers()[0], 0.123);
+        assert_eq!(k.hyper_names().len(), 3);
+    }
+}

@@ -1,0 +1,184 @@
+//! Spectral mixture kernel (Wilson & Adams 2013), used in the crime
+//! experiment's temporal dimension (paper §5.4: 20 components plus a
+//! constant component).
+//!
+//! 1-D form: k(tau) = sum_q w_q exp(-2 pi^2 tau^2 v_q) cos(2 pi mu_q tau)
+//! (+ optional constant w_0). All hypers are learned in log space:
+//! `[log_w_1.., log_v_1.., log_mu_1.., (log_w0)]`.
+
+use super::Kernel;
+use std::f64::consts::PI;
+
+#[derive(Clone, Debug)]
+pub struct SpectralMixtureKernel {
+    pub q: usize,
+    pub log_w: Vec<f64>,
+    pub log_v: Vec<f64>,
+    pub log_mu: Vec<f64>,
+    /// Optional constant component weight (paper's "extra constant
+    /// component" in §5.4); `None` disables it.
+    pub log_w0: Option<f64>,
+}
+
+impl SpectralMixtureKernel {
+    /// Initialize `q` components spread over frequencies `[f_lo, f_hi]`
+    /// with equal weights summing to `total_power`.
+    pub fn new(q: usize, f_lo: f64, f_hi: f64, total_power: f64, constant: bool) -> Self {
+        let w = (total_power / q as f64).max(1e-12);
+        let log_w = vec![w.ln(); q];
+        let log_v = vec![(0.1 * (f_hi - f_lo)).powi(2).max(1e-12).ln(); q];
+        let log_mu = (0..q)
+            .map(|i| {
+                let f = f_lo + (f_hi - f_lo) * (i as f64 + 0.5) / q as f64;
+                f.max(1e-8).ln()
+            })
+            .collect();
+        SpectralMixtureKernel {
+            q,
+            log_w,
+            log_v,
+            log_mu,
+            log_w0: if constant { Some((0.1 * total_power).max(1e-12).ln()) } else { None },
+        }
+    }
+
+    #[inline]
+    fn comp(&self, i: usize, tau: f64) -> (f64, f64, f64) {
+        // Returns (value, d/dlog_v, d/dlog_mu) for component i at lag tau.
+        let w = self.log_w[i].exp();
+        let v = self.log_v[i].exp();
+        let mu = self.log_mu[i].exp();
+        let e = (-2.0 * PI * PI * tau * tau * v).exp();
+        let c = (2.0 * PI * mu * tau).cos();
+        let s = (2.0 * PI * mu * tau).sin();
+        let val = w * e * c;
+        let dv = -2.0 * PI * PI * tau * tau * v * val; // chain: * v for log
+        let dmu = -w * e * s * 2.0 * PI * tau * mu;
+        (val, dv, dmu)
+    }
+}
+
+impl Kernel for SpectralMixtureKernel {
+    fn dim(&self) -> usize {
+        1
+    }
+    fn num_hypers(&self) -> usize {
+        3 * self.q + usize::from(self.log_w0.is_some())
+    }
+    fn hypers(&self) -> Vec<f64> {
+        let mut h = Vec::with_capacity(self.num_hypers());
+        h.extend_from_slice(&self.log_w);
+        h.extend_from_slice(&self.log_v);
+        h.extend_from_slice(&self.log_mu);
+        if let Some(w0) = self.log_w0 {
+            h.push(w0);
+        }
+        h
+    }
+    fn set_hypers(&mut self, h: &[f64]) {
+        assert_eq!(h.len(), self.num_hypers());
+        let q = self.q;
+        self.log_w.copy_from_slice(&h[..q]);
+        self.log_v.copy_from_slice(&h[q..2 * q]);
+        self.log_mu.copy_from_slice(&h[2 * q..3 * q]);
+        if self.log_w0.is_some() {
+            self.log_w0 = Some(h[3 * q]);
+        }
+    }
+    fn hyper_names(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        for i in 0..self.q {
+            names.push(format!("log_w{i}"));
+        }
+        for i in 0..self.q {
+            names.push(format!("log_v{i}"));
+        }
+        for i in 0..self.q {
+            names.push(format!("log_mu{i}"));
+        }
+        if self.log_w0.is_some() {
+            names.push("log_w0".into());
+        }
+        names
+    }
+    fn eval(&self, x: &[f64], z: &[f64]) -> f64 {
+        let tau = x[0] - z[0];
+        let mut v: f64 = (0..self.q).map(|i| self.comp(i, tau).0).sum();
+        if let Some(w0) = self.log_w0 {
+            v += w0.exp();
+        }
+        v
+    }
+    fn grad(&self, x: &[f64], z: &[f64], out: &mut [f64]) {
+        let tau = x[0] - z[0];
+        let q = self.q;
+        for i in 0..q {
+            let (val, dv, dmu) = self.comp(i, tau);
+            out[i] = val; // d/dlog_w = w * e * c = val
+            out[q + i] = dv;
+            out[2 * q + i] = dmu;
+        }
+        if let Some(w0) = self.log_w0 {
+            out[3 * q] = w0.exp();
+        }
+    }
+    fn clone_box(&self) -> Box<dyn Kernel> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::fd_grad;
+
+    #[test]
+    fn value_at_zero_is_total_weight() {
+        let k = SpectralMixtureKernel::new(4, 0.01, 0.5, 2.0, true);
+        let v = k.eval(&[3.0], &[3.0]);
+        let want: f64 = k.log_w.iter().map(|w| w.exp()).sum::<f64>()
+            + k.log_w0.unwrap().exp();
+        assert!((v - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn symmetric_in_lag() {
+        let k = SpectralMixtureKernel::new(3, 0.05, 0.4, 1.0, false);
+        assert!((k.eval(&[1.0], &[2.3]) - k.eval(&[2.3], &[1.0])).abs() < 1e-14);
+    }
+
+    #[test]
+    fn grad_matches_fd() {
+        let k = SpectralMixtureKernel::new(3, 0.05, 0.4, 1.5, true);
+        let mut g = vec![0.0; k.num_hypers()];
+        k.grad(&[0.7], &[0.1], &mut g);
+        let fd = fd_grad(&k, &[0.7], &[0.1], 1e-6);
+        for i in 0..g.len() {
+            assert!(
+                (g[i] - fd[i]).abs() < 1e-5 * (1.0 + fd[i].abs()),
+                "hyper {i}: {} vs {}",
+                g[i],
+                fd[i]
+            );
+        }
+    }
+
+    #[test]
+    fn oscillates_with_frequency() {
+        // A single high-frequency component must go negative at half period.
+        let mut k = SpectralMixtureKernel::new(1, 1.0, 1.0, 1.0, false);
+        k.log_v = vec![(1e-6f64).ln()]; // nearly pure cosine
+        let half_period = 0.5; // mu = 1 -> cos(2 pi * 0.5) = -1
+        assert!(k.eval(&[0.0], &[half_period]) < 0.0);
+    }
+
+    #[test]
+    fn hyper_roundtrip() {
+        let mut k = SpectralMixtureKernel::new(2, 0.1, 0.3, 1.0, true);
+        let mut h = k.hypers();
+        assert_eq!(h.len(), 7);
+        h[3] = -2.0;
+        k.set_hypers(&h);
+        assert_eq!(k.hypers()[3], -2.0);
+    }
+}

@@ -1,0 +1,30 @@
+//! # gpsld — Scalable Log Determinants for GP Kernel Learning
+//!
+//! Reproduction of Dong, Eriksson, Nickisch, Bindel & Wilson (NIPS 2017):
+//! stochastic Chebyshev, stochastic Lanczos quadrature, and RBF-surrogate
+//! estimators of `log|K̃|` and its hyperparameter derivatives from fast
+//! matrix-vector multiplies only, applied to scalable Gaussian-process
+//! kernel learning over SKI/Toeplitz/Kronecker structure.
+//!
+//! See DESIGN.md for the three-layer (rust / JAX / Pallas) architecture and
+//! EXPERIMENTS.md for paper-vs-measured results.
+pub mod error;
+pub mod util;
+pub mod linalg;
+pub mod solvers;
+pub mod kernels;
+pub mod operators;
+pub mod grid;
+pub mod estimators;
+pub mod gp;
+pub mod runtime;
+pub mod data;
+pub mod coordinator;
+pub mod opt;
+
+pub use error::{Error, Result};
+
+/// Crate version.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,194 @@
+//! Dense Cholesky factorization — the O(n^3) exact baseline the paper is
+//! replacing, and the small-m workhorse inside FITC/SoR (Woodbury) and the
+//! surrogate.
+
+use super::dense::Mat;
+use crate::error::{Error, Result};
+
+/// Lower-triangular Cholesky factor of an SPD matrix.
+pub struct Cholesky {
+    /// n x n, lower triangle holds L, strict upper is garbage.
+    pub l: Mat,
+}
+
+impl Cholesky {
+    /// Factor `a` (symmetric positive definite). Fails with
+    /// [`Error::NotPositiveDefinite`] otherwise.
+    pub fn new(a: &Mat) -> Result<Self> {
+        assert_eq!(a.rows, a.cols);
+        let n = a.rows;
+        let mut l = a.clone();
+        for j in 0..n {
+            // Diagonal.
+            let mut d = l[(j, j)];
+            for k in 0..j {
+                let v = l[(j, k)];
+                d -= v * v;
+            }
+            if d <= 0.0 || !d.is_finite() {
+                return Err(Error::NotPositiveDefinite { pivot: j, value: d });
+            }
+            let dsqrt = d.sqrt();
+            l[(j, j)] = dsqrt;
+            // Column below.
+            for i in (j + 1)..n {
+                let mut s = l[(i, j)];
+                let (ri, rj) = (i * n, j * n);
+                for k in 0..j {
+                    s -= l.data[ri + k] * l.data[rj + k];
+                }
+                l[(i, j)] = s / dsqrt;
+            }
+        }
+        // Zero strict upper for cleanliness.
+        for i in 0..n {
+            for j in (i + 1)..n {
+                l[(i, j)] = 0.0;
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// Factor with additive jitter escalation: tries `a + jitter*I` with
+    /// jitter in {0, j0, 10 j0, ...} until SPD (standard GP practice).
+    pub fn new_jittered(a: &Mat, j0: f64, tries: usize) -> Result<Self> {
+        let mut jitter = 0.0;
+        for t in 0..=tries {
+            let mut aj = a.clone();
+            if jitter > 0.0 {
+                aj.add_diag(jitter);
+            }
+            match Cholesky::new(&aj) {
+                Ok(c) => return Ok(c),
+                Err(_) if t < tries => {
+                    jitter = if jitter == 0.0 { j0 } else { jitter * 10.0 };
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        unreachable!()
+    }
+
+    pub fn n(&self) -> usize {
+        self.l.rows
+    }
+
+    /// log|A| = 2 sum log diag(L).
+    pub fn logdet(&self) -> f64 {
+        (0..self.n()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = b.to_vec();
+        self.solve_in_place(&mut x);
+        x
+    }
+
+    pub fn solve_in_place(&self, x: &mut [f64]) {
+        let n = self.n();
+        assert_eq!(x.len(), n);
+        // Forward: L y = b
+        for i in 0..n {
+            let mut s = x[i];
+            let ri = i * n;
+            for k in 0..i {
+                s -= self.l.data[ri + k] * x[k];
+            }
+            x[i] = s / self.l.data[ri + i];
+        }
+        // Backward: L^T x = y
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for k in (i + 1)..n {
+                s -= self.l.data[k * n + i] * x[k];
+            }
+            x[i] = s / self.l.data[i * n + i];
+        }
+    }
+
+    /// Solve A X = B for a matrix right-hand side.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let mut out = b.clone();
+        for j in 0..b.cols {
+            let mut col = b.col(j);
+            self.solve_in_place(&mut col);
+            out.set_col(j, &col);
+        }
+        out
+    }
+
+    /// A^{-1} (dense) — used by the exact-gradient baseline.
+    pub fn inverse(&self) -> Mat {
+        self.solve_mat(&Mat::eye(self.n()))
+    }
+
+    /// Solve L y = b only (forward substitution).
+    pub fn solve_l(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        let mut x = b.to_vec();
+        for i in 0..n {
+            let mut s = x[i];
+            let ri = i * n;
+            for k in 0..i {
+                s -= self.l.data[ri + k] * x[k];
+            }
+            x[i] = s / self.l.data[ri + i];
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd(n: usize) -> Mat {
+        // A = B B^T + n I
+        let b = Mat::from_fn(n, n, |i, j| ((i * 31 + j * 17) % 13) as f64 / 13.0);
+        let mut a = b.matmul(&b.transpose());
+        a.add_diag(n as f64);
+        a
+    }
+
+    #[test]
+    fn factor_and_solve() {
+        let a = spd(8);
+        let c = Cholesky::new(&a).unwrap();
+        let x_true: Vec<f64> = (0..8).map(|i| i as f64 - 3.5).collect();
+        let b = a.matvec(&x_true);
+        let x = c.solve(&b);
+        for i in 0..8 {
+            assert!((x[i] - x_true[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn logdet_matches_2x2() {
+        let a = Mat::from_rows(&[vec![4.0, 1.0], vec![1.0, 3.0]]);
+        let c = Cholesky::new(&a).unwrap();
+        assert!((c.logdet() - (11.0f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]);
+        assert!(Cholesky::new(&a).is_err());
+    }
+
+    #[test]
+    fn jitter_rescues_semidefinite() {
+        let mut a = Mat::from_rows(&[vec![1.0, 1.0], vec![1.0, 1.0]]);
+        a.symmetrize();
+        let c = Cholesky::new_jittered(&a, 1e-8, 12).unwrap();
+        assert!(c.logdet().is_finite());
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let a = spd(6);
+        let inv = Cholesky::new(&a).unwrap().inverse();
+        let prod = a.matmul(&inv);
+        assert!(prod.max_abs_diff(&Mat::eye(6)) < 1e-9);
+    }
+}

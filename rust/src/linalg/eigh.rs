@@ -1,0 +1,226 @@
+//! Dense symmetric eigendecomposition: Householder tridiagonalization
+//! ("tred2") followed by implicit-shift QL with full eigenvector
+//! accumulation ("tqli"). Needed by the scaled-eigenvalue baseline (dense
+//! eigendecomposition of each Kronecker factor of K_UU) and by the spectrum
+//! figure (Fig. 5).
+
+use super::dense::Mat;
+use crate::error::{Error, Result};
+
+/// Full symmetric eigendecomposition A = V diag(w) V^T.
+pub struct Eigh {
+    /// Eigenvalues ascending.
+    pub eigvals: Vec<f64>,
+    /// Columns are eigenvectors (same order as eigvals).
+    pub eigvecs: Mat,
+}
+
+/// Eigendecomposition of a symmetric matrix (upper/lower are assumed equal).
+pub fn eigh(a: &Mat) -> Result<Eigh> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut v = a.clone();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+
+    // --- Householder reduction to tridiagonal (tred2, with vectors). ---
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let mut scale = 0.0;
+            for k in 0..=l {
+                scale += v[(i, k)].abs();
+            }
+            if scale == 0.0 {
+                e[i] = v[(i, l)];
+            } else {
+                for k in 0..=l {
+                    v[(i, k)] /= scale;
+                    h += v[(i, k)] * v[(i, k)];
+                }
+                let mut f = v[(i, l)];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                v[(i, l)] = f - g;
+                let mut sum = 0.0;
+                for j in 0..=l {
+                    v[(j, i)] = v[(i, j)] / h;
+                    let mut g2 = 0.0;
+                    for k in 0..=j {
+                        g2 += v[(j, k)] * v[(i, k)];
+                    }
+                    for k in (j + 1)..=l {
+                        g2 += v[(k, j)] * v[(i, k)];
+                    }
+                    e[j] = g2 / h;
+                    sum += e[j] * v[(i, j)];
+                }
+                let hh = sum / (2.0 * h);
+                for j in 0..=l {
+                    f = v[(i, j)];
+                    let g2 = e[j] - hh * f;
+                    e[j] = g2;
+                    for k in 0..=j {
+                        let upd = f * e[k] + g2 * v[(i, k)];
+                        v[(j, k)] -= upd;
+                    }
+                }
+            }
+        } else {
+            e[i] = v[(i, l)];
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0;
+                for k in 0..i {
+                    g += v[(i, k)] * v[(k, j)];
+                }
+                for k in 0..i {
+                    let upd = g * v[(k, i)];
+                    v[(k, j)] -= upd;
+                }
+            }
+        }
+        d[i] = v[(i, i)];
+        v[(i, i)] = 1.0;
+        for j in 0..i {
+            v[(j, i)] = 0.0;
+            v[(i, j)] = 0.0;
+        }
+    }
+
+    // --- Implicit-shift QL with eigenvector accumulation (tqli). ---
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            let mut m = l;
+            while m < n - 1 {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 50 {
+                return Err(Error::EigFailed { index: l });
+            }
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + r.copysign(g));
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                for k in 0..n {
+                    f = v[(k, i + 1)];
+                    v[(k, i + 1)] = s * v[(k, i)] + c * f;
+                    v[(k, i)] = c * v[(k, i)] - s * f;
+                }
+            }
+            if r == 0.0 && m > l + 1 {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+
+    // Sort ascending, permuting vector columns.
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap());
+    let eigvals: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
+    let mut eigvecs = Mat::zeros(n, n);
+    for (newj, &oldj) in idx.iter().enumerate() {
+        for i in 0..n {
+            eigvecs[(i, newj)] = v[(i, oldj)];
+        }
+    }
+    Ok(Eigh { eigvals, eigvecs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sym(n: usize, f: impl Fn(usize, usize) -> f64) -> Mat {
+        let mut a = Mat::from_fn(n, n, f);
+        a.symmetrize();
+        a
+    }
+
+    #[test]
+    fn two_by_two_known() {
+        let a = Mat::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let e = eigh(&a).unwrap();
+        assert!((e.eigvals[0] - 1.0).abs() < 1e-12);
+        assert!((e.eigvals[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction() {
+        let a = sym(10, |i, j| ((i * 7 + j * 3) % 11) as f64 / 11.0 + if i == j { 2.0 } else { 0.0 });
+        let e = eigh(&a).unwrap();
+        // A V = V diag(w)
+        for j in 0..10 {
+            let vj = e.eigvecs.col(j);
+            let av = a.matvec(&vj);
+            for i in 0..10 {
+                assert!(
+                    (av[i] - e.eigvals[j] * vj[i]).abs() < 1e-9,
+                    "col {j} row {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn orthonormal_vectors() {
+        let a = sym(8, |i, j| (i as f64 - j as f64).cos());
+        let e = eigh(&a).unwrap();
+        let vtv = e.eigvecs.transpose().matmul(&e.eigvecs);
+        assert!(vtv.max_abs_diff(&Mat::eye(8)) < 1e-9);
+    }
+
+    #[test]
+    fn trace_and_logdet_consistency() {
+        let a = sym(9, |i, j| if i == j { 3.0 + i as f64 } else { 0.3 / (1.0 + (i as f64 - j as f64).abs()) });
+        let e = eigh(&a).unwrap();
+        let tr: f64 = a.diag().iter().sum();
+        let tr_eig: f64 = e.eigvals.iter().sum();
+        assert!((tr - tr_eig).abs() < 1e-9);
+        let ld: f64 = e.eigvals.iter().map(|v| v.ln()).sum();
+        let chol = crate::linalg::chol::Cholesky::new(&a).unwrap();
+        assert!((ld - chol.logdet()).abs() < 1e-8);
+    }
+}

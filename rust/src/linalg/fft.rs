@@ -1,0 +1,174 @@
+//! Iterative radix-2 complex FFT — powers the O(m log m) symmetric-Toeplitz
+//! MVM (circulant embedding), which is what makes SKI fast on 1-D grids
+//! (sound experiment) and inside Kronecker factors (precipitation, crime).
+
+use std::f64::consts::PI;
+
+/// Complex number (no external deps).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Cpx {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Cpx {
+    #[inline]
+    pub fn new(re: f64, im: f64) -> Self {
+        Cpx { re, im }
+    }
+
+    #[inline]
+    pub fn mul(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
+    }
+
+    #[inline]
+    pub fn add(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re + o.re, self.im + o.im)
+    }
+
+    #[inline]
+    pub fn sub(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+/// Next power of two >= n.
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// In-place iterative Cooley–Tukey FFT. `data.len()` must be a power of two.
+/// `inverse` applies the conjugate transform *without* the 1/n scale.
+pub fn fft_in_place(data: &mut [Cpx], inverse: bool) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "fft length must be a power of two");
+    if n <= 1 {
+        return;
+    }
+    // Bit reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            data.swap(i, j);
+        }
+    }
+    // Butterflies.
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * PI / len as f64;
+        let wlen = Cpx::new(ang.cos(), ang.sin());
+        let half = len / 2;
+        for start in (0..n).step_by(len) {
+            let mut w = Cpx::new(1.0, 0.0);
+            for k in 0..half {
+                let u = data[start + k];
+                let v = data[start + k + half].mul(w);
+                data[start + k] = u.add(v);
+                data[start + k + half] = u.sub(v);
+                w = w.mul(wlen);
+            }
+        }
+        len <<= 1;
+    }
+}
+
+/// Forward FFT of a real sequence zero-padded to a power of two length `n`.
+pub fn rfft(x: &[f64], n: usize) -> Vec<Cpx> {
+    let mut buf = vec![Cpx::default(); n];
+    for (i, &v) in x.iter().enumerate() {
+        buf[i].re = v;
+    }
+    fft_in_place(&mut buf, false);
+    buf
+}
+
+/// Elementwise product then inverse FFT, returning the real parts scaled by
+/// 1/n — the core of circulant multiplication.
+pub fn mul_ifft_real(a: &[Cpx], b: &[Cpx]) -> Vec<f64> {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut buf: Vec<Cpx> = a.iter().zip(b).map(|(x, y)| x.mul(*y)).collect();
+    fft_in_place(&mut buf, true);
+    let scale = 1.0 / n as f64;
+    buf.iter().map(|c| c.re * scale).collect()
+}
+
+/// Circular convolution of two real sequences of length n (padded pow2).
+pub fn circular_convolve(x: &[f64], h: &[f64]) -> Vec<f64> {
+    assert_eq!(x.len(), h.len());
+    let n = x.len();
+    assert!(n.is_power_of_two());
+    let fx = rfft(x, n);
+    let fh = rfft(h, n);
+    mul_ifft_real(&fx, &fh)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_dft(x: &[Cpx]) -> Vec<Cpx> {
+        let n = x.len();
+        (0..n)
+            .map(|k| {
+                let mut s = Cpx::default();
+                for (j, v) in x.iter().enumerate() {
+                    let ang = -2.0 * PI * (k * j) as f64 / n as f64;
+                    s = s.add(v.mul(Cpx::new(ang.cos(), ang.sin())));
+                }
+                s
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fft_matches_naive_dft() {
+        let n = 16;
+        let x: Vec<Cpx> = (0..n)
+            .map(|i| Cpx::new((i as f64 * 0.7).sin(), (i as f64 * 0.3).cos()))
+            .collect();
+        let mut got = x.clone();
+        fft_in_place(&mut got, false);
+        let want = naive_dft(&x);
+        for i in 0..n {
+            assert!((got[i].re - want[i].re).abs() < 1e-9);
+            assert!((got[i].im - want[i].im).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let n = 64;
+        let x: Vec<Cpx> = (0..n).map(|i| Cpx::new(i as f64, -(i as f64) * 0.5)).collect();
+        let mut buf = x.clone();
+        fft_in_place(&mut buf, false);
+        fft_in_place(&mut buf, true);
+        for i in 0..n {
+            assert!((buf[i].re / n as f64 - x[i].re).abs() < 1e-9);
+            assert!((buf[i].im / n as f64 - x[i].im).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn circular_convolution_matches_naive() {
+        let n = 8;
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 1.1).sin()).collect();
+        let h: Vec<f64> = (0..n).map(|i| 1.0 / (1.0 + i as f64)).collect();
+        let got = circular_convolve(&x, &h);
+        for k in 0..n {
+            let mut want = 0.0;
+            for j in 0..n {
+                want += x[j] * h[(k + n - j) % n];
+            }
+            assert!((got[k] - want).abs() < 1e-9, "k={k}");
+        }
+    }
+}

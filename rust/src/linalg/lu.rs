@@ -1,0 +1,154 @@
+//! LU factorization with partial pivoting — the surrogate's interpolation
+//! saddle system (cubic RBF + polynomial tail, Appendix B.2) is symmetric
+//! indefinite, so Cholesky does not apply.
+
+use super::dense::Mat;
+use crate::error::{Error, Result};
+
+/// PA = LU factorization (partial pivoting).
+pub struct Lu {
+    /// Combined L (unit diag, strict lower) and U (upper) factors.
+    lu: Mat,
+    /// Row permutation.
+    piv: Vec<usize>,
+    /// Permutation sign.
+    sign: f64,
+}
+
+impl Lu {
+    pub fn new(a: &Mat) -> Result<Self> {
+        assert_eq!(a.rows, a.cols);
+        let n = a.rows;
+        let mut lu = a.clone();
+        let mut piv: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0;
+        for k in 0..n {
+            // Pivot search.
+            let mut p = k;
+            let mut pmax = lu[(k, k)].abs();
+            for i in (k + 1)..n {
+                let v = lu[(i, k)].abs();
+                if v > pmax {
+                    pmax = v;
+                    p = i;
+                }
+            }
+            if pmax == 0.0 || !pmax.is_finite() {
+                return Err(Error::Singular { pivot: k });
+            }
+            if p != k {
+                for j in 0..n {
+                    let tmp = lu[(k, j)];
+                    lu[(k, j)] = lu[(p, j)];
+                    lu[(p, j)] = tmp;
+                }
+                piv.swap(k, p);
+                sign = -sign;
+            }
+            let pivot = lu[(k, k)];
+            for i in (k + 1)..n {
+                let m = lu[(i, k)] / pivot;
+                lu[(i, k)] = m;
+                if m != 0.0 {
+                    for j in (k + 1)..n {
+                        let v = lu[(k, j)];
+                        lu[(i, j)] -= m * v;
+                    }
+                }
+            }
+        }
+        Ok(Lu { lu, piv, sign })
+    }
+
+    pub fn n(&self) -> usize {
+        self.lu.rows
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        // Apply permutation.
+        let mut x: Vec<f64> = self.piv.iter().map(|&p| b[p]).collect();
+        // Forward: L y = Pb (unit diagonal).
+        for i in 0..n {
+            let ri = i * n;
+            let mut s = x[i];
+            for k in 0..i {
+                s -= self.lu.data[ri + k] * x[k];
+            }
+            x[i] = s;
+        }
+        // Backward: U x = y.
+        for i in (0..n).rev() {
+            let ri = i * n;
+            let mut s = x[i];
+            for k in (i + 1)..n {
+                s -= self.lu.data[ri + k] * x[k];
+            }
+            x[i] = s / self.lu.data[ri + i];
+        }
+        x
+    }
+
+    /// Determinant (sign * product of U diagonal).
+    pub fn det(&self) -> f64 {
+        let mut d = self.sign;
+        for i in 0..self.n() {
+            d *= self.lu[(i, i)];
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solve_general() {
+        let a = Mat::from_rows(&[
+            vec![0.0, 2.0, 1.0],
+            vec![1.0, -1.0, 0.0],
+            vec![3.0, 0.0, -2.0],
+        ]);
+        let x_true = vec![1.0, -2.0, 3.0];
+        let b = a.matvec(&x_true);
+        let lu = Lu::new(&a).unwrap();
+        let x = lu.solve(&b);
+        for i in 0..3 {
+            assert!((x[i] - x_true[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn det_matches() {
+        let a = Mat::from_rows(&[vec![2.0, 1.0], vec![1.0, 3.0]]);
+        assert!((Lu::new(&a).unwrap().det() - 5.0).abs() < 1e-12);
+        // Permutation-needing matrix.
+        let b = Mat::from_rows(&[vec![0.0, 1.0], vec![1.0, 0.0]]);
+        assert!((Lu::new(&b).unwrap().det() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]);
+        assert!(Lu::new(&a).is_err());
+    }
+
+    #[test]
+    fn indefinite_saddle_system() {
+        // [A P; P^T 0] style system — what the surrogate solves.
+        let a = Mat::from_rows(&[
+            vec![2.0, 0.5, 1.0],
+            vec![0.5, 1.0, 1.0],
+            vec![1.0, 1.0, 0.0],
+        ]);
+        let x_true = vec![0.3, -0.7, 1.1];
+        let b = a.matvec(&x_true);
+        let x = Lu::new(&a).unwrap().solve(&b);
+        for i in 0..3 {
+            assert!((x[i] - x_true[i]).abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Dense/structured linear-algebra substrates (no external BLAS/LAPACK).
+pub mod chol;
+pub mod dense;
+pub mod eigh;
+pub mod fft;
+pub mod lu;
+pub mod tridiag;

@@ -1,0 +1,182 @@
+//! Symmetric tridiagonal eigensolver (implicit-shift QL, "tqli").
+//!
+//! This finishes stochastic Lanczos quadrature: the m x m tridiagonal T from
+//! a Lanczos run is eigendecomposed, the Gauss-quadrature nodes are its
+//! eigenvalues and the weights are the squared first components of its
+//! eigenvectors (paper §3.2 / Golub & Meurant).
+
+use crate::error::{Error, Result};
+
+/// Eigen-decomposition of a symmetric tridiagonal matrix.
+pub struct TridiagEig {
+    /// Eigenvalues, ascending.
+    pub eigvals: Vec<f64>,
+    /// First components of the corresponding (orthonormal) eigenvectors.
+    pub first_components: Vec<f64>,
+}
+
+#[inline]
+fn hypot2(a: f64, b: f64) -> f64 {
+    a.hypot(b)
+}
+
+/// Implicit-shift QL on (diag, offdiag), accumulating only the first row of
+/// the eigenvector matrix (all the quadrature needs). `offdiag.len()` must be
+/// `diag.len() - 1`.
+pub fn tridiag_eig_first_row(diag: &[f64], offdiag: &[f64]) -> Result<TridiagEig> {
+    let n = diag.len();
+    assert!(n > 0);
+    assert_eq!(offdiag.len(), n.saturating_sub(1));
+    let mut d = diag.to_vec();
+    // e is padded to n with a trailing 0 (classic tqli layout).
+    let mut e = Vec::with_capacity(n);
+    e.extend_from_slice(offdiag);
+    e.push(0.0);
+    // z holds the first row of the accumulated rotation product (starts e1^T).
+    let mut z = vec![0.0; n];
+    z[0] = 1.0;
+
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find small off-diagonal to split.
+            let mut m = l;
+            while m < n - 1 {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 50 {
+                return Err(Error::EigFailed { index: l });
+            }
+            // Form shift.
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = hypot2(g, 1.0);
+            g = d[m] - d[l] + e[l] / (g + r.copysign(g));
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = hypot2(f, g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // Accumulate first row of eigenvector product.
+                f = z[i + 1];
+                z[i + 1] = s * z[i] + c * f;
+                z[i] = c * z[i] - s * f;
+            }
+            if r == 0.0 && m > l + 1 {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+
+    // Sort ascending by eigenvalue, carrying first components.
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap());
+    let eigvals: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
+    let first_components: Vec<f64> = idx.iter().map(|&i| z[i]).collect();
+    Ok(TridiagEig { eigvals, first_components })
+}
+
+/// Gauss quadrature of `f` against the Lanczos tridiagonal: returns
+/// `||z||^2 * sum_k tau_k f(lambda_k)` where `tau_k` are the squared first
+/// eigenvector components — i.e. the estimate of `z^T f(A) z` (Eq. 3).
+pub fn lanczos_quadrature(
+    diag: &[f64],
+    offdiag: &[f64],
+    znorm2: f64,
+    f: impl Fn(f64) -> f64,
+) -> Result<f64> {
+    let eig = tridiag_eig_first_row(diag, offdiag)?;
+    let mut s = 0.0;
+    for (lam, w) in eig.eigvals.iter().zip(&eig.first_components) {
+        s += w * w * f(*lam);
+    }
+    Ok(znorm2 * s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::Mat;
+    use crate::linalg::eigh::eigh;
+
+    #[test]
+    fn diagonal_matrix_eigs() {
+        let eig = tridiag_eig_first_row(&[3.0, 1.0, 2.0], &[0.0, 0.0]).unwrap();
+        assert!((eig.eigvals[0] - 1.0).abs() < 1e-12);
+        assert!((eig.eigvals[1] - 2.0).abs() < 1e-12);
+        assert!((eig.eigvals[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_by_two() {
+        // [[2, 1], [1, 2]] -> eigvals 1, 3; eigvecs (1,-1)/sqrt2, (1,1)/sqrt2.
+        let eig = tridiag_eig_first_row(&[2.0, 2.0], &[1.0]).unwrap();
+        assert!((eig.eigvals[0] - 1.0).abs() < 1e-12);
+        assert!((eig.eigvals[1] - 3.0).abs() < 1e-12);
+        for w in &eig.first_components {
+            assert!((w.abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn weights_sum_to_one() {
+        let d = [4.0, 3.0, 5.0, 2.0, 6.0];
+        let e = [1.0, 0.5, 0.7, 0.3];
+        let eig = tridiag_eig_first_row(&d, &e).unwrap();
+        let s: f64 = eig.first_components.iter().map(|w| w * w).sum();
+        assert!((s - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn matches_dense_eigh() {
+        let d = [4.0, 3.0, 5.0, 2.0];
+        let e = [1.2, 0.4, 0.9];
+        let eig = tridiag_eig_first_row(&d, &e).unwrap();
+        let mut a = Mat::zeros(4, 4);
+        for i in 0..4 {
+            a[(i, i)] = d[i];
+        }
+        for i in 0..3 {
+            a[(i, i + 1)] = e[i];
+            a[(i + 1, i)] = e[i];
+        }
+        let dense = eigh(&a).unwrap();
+        for i in 0..4 {
+            assert!((eig.eigvals[i] - dense.eigvals[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn quadrature_exact_for_identity_function() {
+        // f(x) = x: z^T A z. Take a known tridiagonal and z = e1 * ||z||.
+        let d = [2.0, 3.0];
+        let e = [0.5];
+        // z = e1, so z^T A z = 2.
+        let q = lanczos_quadrature(&d, &e, 1.0, |x| x).unwrap();
+        assert!((q - 2.0).abs() < 1e-12);
+    }
+}

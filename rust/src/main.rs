@@ -1,0 +1,9 @@
+//! gpsld CLI — the Layer-3 coordinator entry point.
+//!
+//! `gpsld exp <id>` regenerates any of the paper's tables/figures;
+//! `gpsld artifacts` verifies the PJRT artifact set. See `gpsld --help`.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(gpsld::coordinator::cli::main_with_args(&args));
+}

@@ -1,0 +1,207 @@
+//! Additive (sum) kernel operators — one of the paper's headline cases
+//! where fast MVMs compose but fast *eigendecompositions* do not (§1:
+//! "additive covariance functions" break the scaled-eigenvalue approach;
+//! MVM-based estimators are unaffected).
+
+use super::{KernelOp, LinOp};
+
+/// `K̃ = sum_p K_p + σ² I`, where each part is a noise-free kernel operator
+/// (parts are built with their `log σ = -inf`, i.e. σ² = 0, and their noise
+/// hyper is hidden from the combined hyper vector).
+pub struct SumKernelOp {
+    pub parts: Vec<Box<dyn KernelOp>>,
+    pub log_sigma: f64,
+}
+
+impl SumKernelOp {
+    pub fn new(mut parts: Vec<Box<dyn KernelOp>>, sigma: f64) -> Self {
+        assert!(!parts.is_empty());
+        let n = parts[0].n();
+        for p in parts.iter_mut() {
+            assert_eq!(p.n(), n, "additive parts must share the data");
+            // Zero the part's own noise.
+            let mut h = p.hypers();
+            let last = h.len() - 1;
+            h[last] = f64::NEG_INFINITY;
+            p.set_hypers(&h);
+        }
+        SumKernelOp { parts, log_sigma: sigma.ln() }
+    }
+
+    /// Per-part hyper count (noise excluded).
+    fn part_nh(&self, p: usize) -> usize {
+        self.parts[p].num_hypers() - 1
+    }
+
+    /// Map a combined hyper index to (part, local index), or None for σ.
+    fn locate(&self, i: usize) -> Option<(usize, usize)> {
+        let mut off = 0;
+        for p in 0..self.parts.len() {
+            let k = self.part_nh(p);
+            if i < off + k {
+                return Some((p, i - off));
+            }
+            off += k;
+        }
+        None
+    }
+}
+
+impl LinOp for SumKernelOp {
+    fn n(&self) -> usize {
+        self.parts[0].n()
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        let n = self.n();
+        y.fill(0.0);
+        let mut tmp = vec![0.0; n];
+        for p in &self.parts {
+            p.apply(x, &mut tmp);
+            for i in 0..n {
+                y[i] += tmp[i];
+            }
+        }
+        let s2 = self.noise_var();
+        for i in 0..n {
+            y[i] += s2 * x[i];
+        }
+    }
+}
+
+impl KernelOp for SumKernelOp {
+    fn num_hypers(&self) -> usize {
+        (0..self.parts.len()).map(|p| self.part_nh(p)).sum::<usize>() + 1
+    }
+    fn hypers(&self) -> Vec<f64> {
+        let mut h = Vec::new();
+        for p in &self.parts {
+            let ph = p.hypers();
+            h.extend_from_slice(&ph[..ph.len() - 1]);
+        }
+        h.push(self.log_sigma);
+        h
+    }
+    fn set_hypers(&mut self, h: &[f64]) {
+        assert_eq!(h.len(), self.num_hypers());
+        let mut off = 0;
+        for p in self.parts.iter_mut() {
+            let k = p.num_hypers() - 1;
+            let mut ph = h[off..off + k].to_vec();
+            ph.push(f64::NEG_INFINITY);
+            p.set_hypers(&ph);
+            off += k;
+        }
+        self.log_sigma = h[off];
+    }
+    fn hyper_names(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        for (i, p) in self.parts.iter().enumerate() {
+            let pn = p.hyper_names();
+            for n in &pn[..pn.len() - 1] {
+                names.push(format!("part{i}.{n}"));
+            }
+        }
+        names.push("log_sigma".into());
+        names
+    }
+    fn apply_grad(&self, i: usize, x: &[f64], y: &mut [f64]) {
+        match self.locate(i) {
+            Some((p, local)) => self.parts[p].apply_grad(local, x, y),
+            None => {
+                let s = 2.0 * self.noise_var();
+                for (yi, xi) in y.iter_mut().zip(x) {
+                    *yi = s * xi;
+                }
+            }
+        }
+    }
+    fn noise_var(&self) -> f64 {
+        (2.0 * self.log_sigma).exp()
+    }
+    fn diag(&self) -> Option<Vec<f64>> {
+        let n = self.n();
+        let mut d = vec![self.noise_var(); n];
+        for p in &self.parts {
+            let pd = p.diag()?;
+            for i in 0..n {
+                d[i] += pd[i]; // parts have zero noise
+            }
+        }
+        Some(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{IsoKernel, Shape};
+    use crate::operators::DenseKernelOp;
+    use crate::util::rng::Rng;
+
+    fn parts(n: usize) -> (Vec<Vec<f64>>, SumKernelOp) {
+        let mut rng = Rng::new(21);
+        let pts: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.gaussian()]).collect();
+        let a = DenseKernelOp::new(
+            pts.clone(),
+            Box::new(IsoKernel::new(Shape::Rbf, 1, 0.5, 1.0)),
+            1.0,
+        );
+        let b = DenseKernelOp::new(
+            pts.clone(),
+            Box::new(IsoKernel::new(Shape::Matern32, 1, 1.5, 0.7)),
+            1.0,
+        );
+        (pts.clone(), SumKernelOp::new(vec![Box::new(a), Box::new(b)], 0.25))
+    }
+
+    #[test]
+    fn sum_matches_manual() {
+        let (pts, op) = parts(12);
+        let k1 = IsoKernel::new(Shape::Rbf, 1, 0.5, 1.0);
+        let k2 = IsoKernel::new(Shape::Matern32, 1, 1.5, 0.7);
+        use crate::kernels::Kernel;
+        let mut rng = Rng::new(3);
+        let x: Vec<f64> = (0..12).map(|_| rng.gaussian()).collect();
+        let got = op.apply_vec(&x);
+        for i in 0..12 {
+            let mut want = 0.0625 * x[i];
+            for j in 0..12 {
+                want += (k1.eval(&pts[i], &pts[j]) + k2.eval(&pts[i], &pts[j])) * x[j];
+            }
+            assert!((got[i] - want).abs() < 1e-10, "{} vs {}", got[i], want);
+        }
+    }
+
+    #[test]
+    fn hyper_layout() {
+        let (_, op) = parts(6);
+        // 2 + 2 kernel hypers + 1 shared noise.
+        assert_eq!(op.num_hypers(), 5);
+        assert_eq!(op.hyper_names().last().unwrap(), "log_sigma");
+    }
+
+    #[test]
+    fn grad_matches_fd() {
+        let (_, mut op) = parts(8);
+        let mut rng = Rng::new(5);
+        let x: Vec<f64> = (0..8).map(|_| rng.gaussian()).collect();
+        let h0 = op.hypers();
+        let eps = 1e-6;
+        for i in 0..op.num_hypers() {
+            let mut y = vec![0.0; 8];
+            op.apply_grad(i, &x, &mut y);
+            let mut hp = h0.clone();
+            hp[i] += eps;
+            op.set_hypers(&hp);
+            let up = op.apply_vec(&x);
+            hp[i] -= 2.0 * eps;
+            op.set_hypers(&hp);
+            let dn = op.apply_vec(&x);
+            op.set_hypers(&h0);
+            for p in 0..8 {
+                let fd = (up[p] - dn[p]) / (2.0 * eps);
+                assert!((y[p] - fd).abs() < 1e-5 * (1.0 + fd.abs()), "hyper {i}");
+            }
+        }
+    }
+}

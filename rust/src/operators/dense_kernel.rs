@@ -1,0 +1,249 @@
+//! Dense kernel operator — the exact-kernel path (baselines, small-n
+//! problems, and the deep-kernel-learning experiment where n is a few
+//! thousand). Materializes K once per hyper setting; derivative MVMs share
+//! a single pass over all pairs via `apply_grad_all`.
+
+use super::{KernelOp, LinOp};
+use crate::kernels::Kernel;
+use crate::linalg::dense::Mat;
+use crate::util::parallel;
+
+/// `K̃ = K(X, X) + σ² I` with `K` materialized.
+pub struct DenseKernelOp {
+    pub points: Vec<Vec<f64>>,
+    pub kernel: Box<dyn Kernel>,
+    pub log_sigma: f64,
+    k: Mat,
+}
+
+impl DenseKernelOp {
+    pub fn new(points: Vec<Vec<f64>>, kernel: Box<dyn Kernel>, sigma: f64) -> Self {
+        let mut op = DenseKernelOp {
+            points,
+            kernel,
+            log_sigma: sigma.ln(),
+            k: Mat::zeros(0, 0),
+        };
+        op.refresh();
+        op
+    }
+
+    /// The materialized noise-free kernel matrix.
+    pub fn kernel_matrix(&self) -> &Mat {
+        &self.k
+    }
+
+    /// Materialized K̃ (with noise) — for the exact Cholesky baseline.
+    pub fn full_matrix(&self) -> Mat {
+        let mut a = self.k.clone();
+        a.add_diag(self.noise_var());
+        a
+    }
+
+    /// Materialized ∂K̃/∂θ_i — exact-gradient baseline only (O(n^2) memory).
+    pub fn grad_matrix(&self, i: usize) -> Mat {
+        let n = self.points.len();
+        let nh = self.kernel.num_hypers();
+        if i == nh {
+            let mut m = Mat::zeros(n, n);
+            m.add_diag(2.0 * self.noise_var());
+            return m;
+        }
+        let mut m = Mat::zeros(n, n);
+        let mut g = vec![0.0; nh];
+        for r in 0..n {
+            for c in 0..n {
+                self.kernel.grad(&self.points[r], &self.points[c], &mut g);
+                m[(r, c)] = g[i];
+            }
+        }
+        m
+    }
+
+    fn refresh(&mut self) {
+        let n = self.points.len();
+        let threads = parallel::default_threads();
+        let rows: Vec<Vec<f64>> = parallel::par_map(n, threads, |i| {
+            let mut row = vec![0.0; n];
+            for j in 0..n {
+                row[j] = self.kernel.eval(&self.points[i], &self.points[j]);
+            }
+            row
+        });
+        self.k = Mat::from_rows(&rows);
+    }
+}
+
+impl LinOp for DenseKernelOp {
+    fn n(&self) -> usize {
+        self.points.len()
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.k.matvec_into(x, y);
+        let s2 = self.noise_var();
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += s2 * xi;
+        }
+    }
+    fn to_dense(&self) -> Mat {
+        self.full_matrix()
+    }
+}
+
+impl KernelOp for DenseKernelOp {
+    fn num_hypers(&self) -> usize {
+        self.kernel.num_hypers() + 1
+    }
+    fn hypers(&self) -> Vec<f64> {
+        let mut h = self.kernel.hypers();
+        h.push(self.log_sigma);
+        h
+    }
+    fn set_hypers(&mut self, h: &[f64]) {
+        assert_eq!(h.len(), self.num_hypers());
+        self.kernel.set_hypers(&h[..h.len() - 1]);
+        self.log_sigma = h[h.len() - 1];
+        self.refresh();
+    }
+    fn hyper_names(&self) -> Vec<String> {
+        let mut names = self.kernel.hyper_names();
+        names.push("log_sigma".into());
+        names
+    }
+    fn apply_grad(&self, i: usize, x: &[f64], y: &mut [f64]) {
+        let n = self.n();
+        let nh = self.kernel.num_hypers();
+        if i == nh {
+            let s = 2.0 * self.noise_var();
+            for (yi, xi) in y.iter_mut().zip(x) {
+                *yi = s * xi;
+            }
+            return;
+        }
+        let mut g = vec![0.0; nh];
+        for r in 0..n {
+            let mut s = 0.0;
+            for c in 0..n {
+                self.kernel.grad(&self.points[r], &self.points[c], &mut g);
+                s += g[i] * x[c];
+            }
+            y[r] = s;
+        }
+    }
+    fn apply_grad_all(&self, x: &[f64], ys: &mut [Vec<f64>]) {
+        // One pass over all pairs computes every hyper's derivative MVM.
+        let n = self.n();
+        let nh = self.kernel.num_hypers();
+        assert_eq!(ys.len(), nh + 1);
+        let threads = parallel::default_threads();
+        let rows: Vec<Vec<f64>> = parallel::par_map(n, threads, |r| {
+            let mut acc = vec![0.0; nh];
+            let mut g = vec![0.0; nh];
+            for c in 0..n {
+                self.kernel.grad(&self.points[r], &self.points[c], &mut g);
+                for t in 0..nh {
+                    acc[t] += g[t] * x[c];
+                }
+            }
+            acc
+        });
+        for t in 0..nh {
+            for r in 0..n {
+                ys[t][r] = rows[r][t];
+            }
+        }
+        let s = 2.0 * self.noise_var();
+        for (yi, xi) in ys[nh].iter_mut().zip(x) {
+            *yi = s * xi;
+        }
+    }
+    fn noise_var(&self) -> f64 {
+        (2.0 * self.log_sigma).exp()
+    }
+    fn diag(&self) -> Option<Vec<f64>> {
+        let s2 = self.noise_var();
+        Some((0..self.n()).map(|i| self.k[(i, i)] + s2).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{IsoKernel, Shape};
+    use crate::util::rng::Rng;
+
+    fn make(n: usize, seed: u64) -> DenseKernelOp {
+        let mut rng = Rng::new(seed);
+        let pts: Vec<Vec<f64>> =
+            (0..n).map(|_| vec![rng.gaussian(), rng.gaussian()]).collect();
+        DenseKernelOp::new(
+            pts,
+            Box::new(IsoKernel::new(Shape::Rbf, 2, 0.7, 1.2)),
+            0.3,
+        )
+    }
+
+    #[test]
+    fn apply_matches_matrix() {
+        let op = make(30, 1);
+        let mut rng = Rng::new(2);
+        let x: Vec<f64> = (0..30).map(|_| rng.gaussian()).collect();
+        let via_mat = op.full_matrix().matvec(&x);
+        let via_op = op.apply_vec(&x);
+        for i in 0..30 {
+            assert!((via_mat[i] - via_op[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn grad_all_matches_single() {
+        let op = make(15, 3);
+        let mut rng = Rng::new(4);
+        let x: Vec<f64> = (0..15).map(|_| rng.gaussian()).collect();
+        let nh = op.num_hypers();
+        let mut all: Vec<Vec<f64>> = vec![vec![0.0; 15]; nh];
+        op.apply_grad_all(&x, &mut all);
+        for i in 0..nh {
+            let mut single = vec![0.0; 15];
+            op.apply_grad(i, &x, &mut single);
+            for p in 0..15 {
+                assert!((all[i][p] - single[p]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn grad_matches_fd() {
+        let mut op = make(12, 5);
+        let mut rng = Rng::new(6);
+        let x: Vec<f64> = (0..12).map(|_| rng.gaussian()).collect();
+        let h0 = op.hypers();
+        let eps = 1e-6;
+        for i in 0..op.num_hypers() {
+            let mut y = vec![0.0; 12];
+            op.apply_grad(i, &x, &mut y);
+            let mut hp = h0.clone();
+            hp[i] += eps;
+            op.set_hypers(&hp);
+            let up = op.apply_vec(&x);
+            hp[i] -= 2.0 * eps;
+            op.set_hypers(&hp);
+            let dn = op.apply_vec(&x);
+            op.set_hypers(&h0);
+            for p in 0..12 {
+                let fd = (up[p] - dn[p]) / (2.0 * eps);
+                assert!((y[p] - fd).abs() < 1e-5 * (1.0 + fd.abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn diag_exposed() {
+        let op = make(10, 7);
+        let d = op.diag().unwrap();
+        let full = op.full_matrix();
+        for i in 0..10 {
+            assert!((d[i] - full[(i, i)]).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Linear operators: the paper's entire method consumes matrices *only*
+//! through fast MVMs, so everything — dense baselines, Toeplitz/Kronecker
+//! structure, SKI, low-rank FITC, sums — implements [`LinOp`], and kernel
+//! matrices with learnable hyperparameters implement [`KernelOp`] which adds
+//! derivative MVMs `(∂K̃/∂θ_i) x`.
+
+pub mod combine;
+pub mod dense_kernel;
+pub mod kron;
+pub mod lowrank;
+pub mod sparse;
+pub mod ski;
+pub mod toeplitz;
+
+pub use combine::SumKernelOp;
+pub use dense_kernel::DenseKernelOp;
+pub use kron::{KronFactor, KronOp};
+pub use lowrank::FitcOp;
+pub use sparse::Csr;
+pub use ski::SkiOp;
+pub use toeplitz::ToeplitzOp;
+
+use crate::linalg::dense::Mat;
+
+/// A symmetric linear operator exposed through matrix–vector products.
+pub trait LinOp: Send + Sync {
+    /// Dimension (operators here are square).
+    fn n(&self) -> usize;
+
+    /// y = A x (no aliasing; `y` is fully overwritten).
+    fn apply(&self, x: &[f64], y: &mut [f64]);
+
+    /// Allocating convenience wrapper.
+    fn apply_vec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.n()];
+        self.apply(x, &mut y);
+        y
+    }
+
+    /// Apply to each column of `x` (n x b). Default loops; structured
+    /// operators may batch internally.
+    fn apply_mat(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows, self.n());
+        let mut out = Mat::zeros(x.rows, x.cols);
+        let mut xin = vec![0.0; x.rows];
+        let mut yout = vec![0.0; x.rows];
+        for j in 0..x.cols {
+            for i in 0..x.rows {
+                xin[i] = x[(i, j)];
+            }
+            self.apply(&xin, &mut yout);
+            for i in 0..x.rows {
+                out[(i, j)] = yout[i];
+            }
+        }
+        out
+    }
+
+    /// Materialize as a dense matrix (test/baseline utility: O(n^2) applies).
+    fn to_dense(&self) -> Mat {
+        let n = self.n();
+        let mut a = Mat::zeros(n, n);
+        let mut e = vec![0.0; n];
+        let mut col = vec![0.0; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            self.apply(&e, &mut col);
+            e[j] = 0.0;
+            for i in 0..n {
+                a[(i, j)] = col[i];
+            }
+        }
+        a
+    }
+}
+
+/// A noisy kernel operator `K̃(θ) = K(θ) + σ² I` with derivative MVMs.
+///
+/// Convention: hypers are log-space, the **last** hyper is `log σ`.
+pub trait KernelOp: LinOp {
+    /// Number of hyperparameters including the noise (last).
+    fn num_hypers(&self) -> usize;
+    fn hypers(&self) -> Vec<f64>;
+    fn set_hypers(&mut self, h: &[f64]);
+    fn hyper_names(&self) -> Vec<String>;
+
+    /// y = (∂K̃/∂θ_i) x.
+    fn apply_grad(&self, i: usize, x: &[f64], y: &mut [f64]);
+
+    /// All derivative MVMs at once; overriding lets dense ops share a
+    /// single pass over entries.
+    fn apply_grad_all(&self, x: &[f64], ys: &mut [Vec<f64>]) {
+        assert_eq!(ys.len(), self.num_hypers());
+        for (i, y) in ys.iter_mut().enumerate() {
+            self.apply_grad(i, x, y);
+        }
+    }
+
+    /// σ² (from the last hyper).
+    fn noise_var(&self) -> f64 {
+        let h = self.hypers();
+        (2.0 * h[h.len() - 1]).exp()
+    }
+
+    /// Diagonal of K̃, when cheaply available (used by predictive variance
+    /// and FITC-style corrections).
+    fn diag(&self) -> Option<Vec<f64>> {
+        None
+    }
+}
+
+/// Plain dense symmetric matrix as an operator (tests and small baselines).
+pub struct DenseMatOp {
+    pub a: Mat,
+}
+
+impl DenseMatOp {
+    pub fn new(a: Mat) -> Self {
+        assert_eq!(a.rows, a.cols);
+        DenseMatOp { a }
+    }
+}
+
+impl LinOp for DenseMatOp {
+    fn n(&self) -> usize {
+        self.a.rows
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.a.matvec_into(x, y);
+    }
+    fn to_dense(&self) -> Mat {
+        self.a.clone()
+    }
+}
+
+/// Diagonal operator.
+pub struct DiagOp {
+    pub d: Vec<f64>,
+}
+
+impl LinOp for DiagOp {
+    fn n(&self) -> usize {
+        self.d.len()
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        for i in 0..x.len() {
+            y[i] = self.d[i] * x[i];
+        }
+    }
+}
+
+/// `A + c I` view over a borrowed operator (e.g. Laplace's B matrices).
+pub struct ShiftedOp<'a> {
+    pub inner: &'a dyn LinOp,
+    pub shift: f64,
+}
+
+impl LinOp for ShiftedOp<'_> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.inner.apply(x, y);
+        for i in 0..x.len() {
+            y[i] += self.shift * x[i];
+        }
+    }
+}
+
+/// `D^{1/2} A D^{1/2} + I` — the Laplace approximation's B operator, where
+/// `D = diag(w)` holds the likelihood curvature (w >= 0).
+pub struct LaplaceBOp<'a> {
+    pub inner: &'a dyn LinOp,
+    pub sqrt_w: Vec<f64>,
+}
+
+impl<'a> LaplaceBOp<'a> {
+    pub fn new(inner: &'a dyn LinOp, w: &[f64]) -> Self {
+        assert_eq!(inner.n(), w.len());
+        LaplaceBOp { inner, sqrt_w: w.iter().map(|v| v.max(0.0).sqrt()).collect() }
+    }
+}
+
+impl LinOp for LaplaceBOp<'_> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        let n = x.len();
+        let mut t = vec![0.0; n];
+        for i in 0..n {
+            t[i] = self.sqrt_w[i] * x[i];
+        }
+        self.inner.apply(&t, y);
+        for i in 0..n {
+            y[i] = self.sqrt_w[i] * y[i] + x[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_op_roundtrip() {
+        let a = Mat::from_rows(&[vec![2.0, 1.0], vec![1.0, 3.0]]);
+        let op = DenseMatOp::new(a.clone());
+        assert_eq!(op.apply_vec(&[1.0, 1.0]), vec![3.0, 4.0]);
+        assert_eq!(op.to_dense().data, a.data);
+    }
+
+    #[test]
+    fn apply_mat_matches_columns() {
+        let a = Mat::from_fn(4, 4, |i, j| (i + j) as f64);
+        let op = DenseMatOp::new(a);
+        let x = Mat::from_fn(4, 3, |i, j| (i * 3 + j) as f64 * 0.1);
+        let y = op.apply_mat(&x);
+        for j in 0..3 {
+            let col = op.apply_vec(&x.col(j));
+            for i in 0..4 {
+                assert!((y[(i, j)] - col[i]).abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn shifted_and_diag_ops() {
+        let a = Mat::eye(3);
+        let op = DenseMatOp::new(a);
+        let sh = ShiftedOp { inner: &op, shift: 2.0 };
+        assert_eq!(sh.apply_vec(&[1.0, 2.0, 3.0]), vec![3.0, 6.0, 9.0]);
+        let d = DiagOp { d: vec![1.0, 2.0, 3.0] };
+        assert_eq!(d.apply_vec(&[1.0, 1.0, 1.0]), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn laplace_b_op_identity_weights() {
+        // W = I: B x = A x + x.
+        let a = Mat::from_rows(&[vec![1.0, 0.5], vec![0.5, 2.0]]);
+        let op = DenseMatOp::new(a.clone());
+        let b = LaplaceBOp::new(&op, &[1.0, 1.0]);
+        let x = [1.0, -1.0];
+        let want = [a[(0, 0)] - a[(0, 1)] + 1.0, a[(1, 0)] - a[(1, 1)] - 1.0];
+        let got = b.apply_vec(&x);
+        assert!((got[0] - want[0]).abs() < 1e-14);
+        assert!((got[1] - want[1]).abs() < 1e-14);
+    }
+}

@@ -1,0 +1,672 @@
+//! SKI / KISS-GP operator: `K̃ = W K_UU W^T + σ² I (+ D)` (paper Eq. 2 and
+//! the diagonal correction of §3.3).
+//!
+//! * `W` — sparse local-interpolation weights (cubic: 4^d nnz/row),
+//! * `K_UU` — Kronecker product of per-dimension symmetric Toeplitz
+//!   matrices (separable kernel on an equispaced grid),
+//! * `D` — optional diagonal correction making diag(K̃) exact, which the
+//!   scaled-eigenvalue baseline *cannot* absorb but MVM-based estimators
+//!   handle for free.
+//!
+//! Hyperparameters: the separable kernel's (factor hypers + `log_sf`),
+//! then `log σ` last.
+
+use super::kron::{KronFactor, KronOp};
+use super::sparse::Csr;
+use super::toeplitz::ToeplitzOp;
+use super::{KernelOp, LinOp};
+use crate::grid::{Grid, InterpOrder, Stencil};
+use crate::kernels::{Kernel, SeparableKernel};
+
+impl Clone for ToeplitzOp {
+    fn clone(&self) -> Self {
+        ToeplitzOp::new(self.col.clone())
+    }
+}
+
+/// Quadratic form of a 1-D stencil against a Toeplitz column:
+/// `w^T T w = sum_{a,b} w_a w_b col[|i_a - i_b|]`.
+fn stencil_quadform(st: &Stencil, col: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for (a, &ia) in st.idx.iter().enumerate() {
+        for (b, &ib) in st.idx.iter().enumerate() {
+            s += st.w[a] * st.w[b] * col[ia.abs_diff(ib)];
+        }
+    }
+    s
+}
+
+/// The SKI kernel operator.
+pub struct SkiOp {
+    pub grid: Grid,
+    pub kernel: SeparableKernel,
+    pub log_sigma: f64,
+    pub order: InterpOrder,
+    /// Whether the §3.3 diagonal correction is active.
+    pub diag_correction: bool,
+
+    w: Csr,
+    wt: Csr,
+    stencils: Vec<Vec<Stencil>>,
+    n: usize,
+
+    // Rebuilt by `refresh()` whenever hypers change:
+    /// Unit-amplitude Toeplitz first columns per dimension.
+    cols: Vec<Vec<f64>>,
+    /// Derivative columns: per factor, per local hyper.
+    dcols: Vec<Vec<Vec<f64>>>,
+    /// K_UU as a (sf^2-scaled) Kronecker operator.
+    kuu: KronOp,
+    /// Cached derivative Kronecker operators, one per factor hyper (in
+    /// kernel-hyper order) — rebuilding these per apply_grad call costs a
+    /// fresh circulant FFT each time (§Perf opt 1).
+    dkrons: Vec<KronOp>,
+    /// Per-point per-dim quadratic forms w^T T_j w (n x d, row-major).
+    q_forms: Vec<f64>,
+    /// k(x, x) (constant for stationary separable kernels).
+    tdiag: f64,
+    /// d k(x,x) / d hyper (constant across points), kernel hypers only.
+    tdiag_grad: Vec<f64>,
+    /// Diagonal correction vector D (empty when disabled).
+    dvec: Vec<f64>,
+}
+
+impl SkiOp {
+    /// Build a SKI operator for data `points` on `grid`.
+    pub fn new(
+        points: &[Vec<f64>],
+        grid: Grid,
+        kernel: SeparableKernel,
+        sigma: f64,
+        order: InterpOrder,
+        diag_correction: bool,
+    ) -> Self {
+        assert_eq!(grid.ndims(), kernel.dim());
+        let (w, stencils) = grid.interp_matrix(points, order);
+        let wt = w.transpose();
+        let n = points.len();
+        let d = grid.ndims();
+        let mut op = SkiOp {
+            grid,
+            kernel,
+            log_sigma: sigma.ln(),
+            order,
+            diag_correction,
+            w,
+            wt,
+            stencils,
+            n,
+            cols: vec![Vec::new(); d],
+            dcols: Vec::new(),
+            kuu: KronOp::new(vec![KronFactor::Dense(crate::linalg::dense::Mat::eye(1))], 1.0),
+            dkrons: Vec::new(),
+            q_forms: Vec::new(),
+            tdiag: 0.0,
+            tdiag_grad: Vec::new(),
+            dvec: Vec::new(),
+        };
+        op.refresh();
+        op
+    }
+
+    /// Number of kernel hypers (excluding noise).
+    pub fn num_kernel_hypers(&self) -> usize {
+        self.kernel.num_hypers()
+    }
+
+    /// The interpolation matrix (for prediction and tests).
+    pub fn w_matrix(&self) -> &Csr {
+        &self.w
+    }
+
+    /// The (scaled) K_UU Kronecker operator.
+    pub fn kuu(&self) -> &KronOp {
+        &self.kuu
+    }
+
+    /// Grid size m (total inducing points).
+    pub fn m(&self) -> usize {
+        self.grid.size()
+    }
+
+    /// Diagonal correction vector (empty when disabled).
+    pub fn dvec(&self) -> &[f64] {
+        &self.dvec
+    }
+
+    /// Rebuild all hyper-dependent caches.
+    fn refresh(&mut self) {
+        let d = self.grid.ndims();
+        // Toeplitz first columns and their derivatives from the 1-D factors.
+        self.cols.clear();
+        self.dcols.clear();
+        for j in 0..d {
+            let dim = &self.grid.dims[j];
+            let f = &self.kernel.factors[j];
+            let nh = f.num_hypers();
+            let mut col = Vec::with_capacity(dim.m);
+            let mut dcol = vec![Vec::with_capacity(dim.m); nh];
+            let mut g = vec![0.0; nh];
+            for k in 0..dim.m {
+                let tau = k as f64 * dim.spacing();
+                col.push(f.eval(&[tau], &[0.0]));
+                f.grad(&[tau], &[0.0], &mut g);
+                for (t, gv) in g.iter().enumerate() {
+                    dcol[t].push(*gv);
+                }
+            }
+            self.cols.push(col);
+            self.dcols.push(dcol);
+        }
+        // K_UU = sf^2 * kron(T_j).
+        let factors: Vec<KronFactor> = self
+            .cols
+            .iter()
+            .map(|c| KronFactor::Toeplitz(ToeplitzOp::new(c.clone())))
+            .collect();
+        self.kuu = KronOp::new(factors, self.kernel.sf2());
+        // Cached derivative operators (factor hypers only; log_sf and
+        // log_sigma are handled analytically in apply_grad).
+        self.dkrons.clear();
+        for (jf, f) in self.kernel.factors.iter().enumerate() {
+            for local in 0..f.num_hypers() {
+                let factors: Vec<KronFactor> = (0..d)
+                    .map(|j| {
+                        let col = if j == jf {
+                            self.dcols[j][local].clone()
+                        } else {
+                            self.cols[j].clone()
+                        };
+                        KronFactor::Toeplitz(ToeplitzOp::new(col))
+                    })
+                    .collect();
+                self.dkrons.push(KronOp::new(factors, self.kernel.sf2()));
+            }
+        }
+
+        // Per-point quadratic forms and diagonal correction.
+        self.q_forms = vec![0.0; self.n * d];
+        for (i, sts) in self.stencils.iter().enumerate() {
+            for j in 0..d {
+                self.q_forms[i * d + j] = stencil_quadform(&sts[j], &self.cols[j]);
+            }
+        }
+        let x0 = vec![0.0; d];
+        self.tdiag = self.kernel.eval(&x0, &x0);
+        self.tdiag_grad = vec![0.0; self.kernel.num_hypers()];
+        self.kernel.grad(&x0, &x0, &mut self.tdiag_grad);
+
+        if self.diag_correction {
+            let sf2 = self.kernel.sf2();
+            self.dvec = (0..self.n)
+                .map(|i| {
+                    let mut prod = sf2;
+                    for j in 0..d {
+                        prod *= self.q_forms[i * d + j];
+                    }
+                    self.tdiag - prod
+                })
+                .collect();
+        } else {
+            self.dvec.clear();
+        }
+    }
+
+    /// y = (W K_UU W^T) x using a replacement Kronecker operator (shared by
+    /// apply and the derivative MVMs).
+    fn apply_wkw(&self, kron: &KronOp, x: &[f64], y: &mut [f64]) {
+        let m = self.m();
+        let mut xg = vec![0.0; m];
+        self.wt.apply(x, &mut xg);
+        let mut yg = vec![0.0; m];
+        kron.apply(&xg, &mut yg);
+        self.w.apply(&yg, y);
+    }
+
+    /// Map a kernel-hyper index to its (factor, local) pair, or None for
+    /// `log_sf`.
+    fn hyper_location(&self, i: usize) -> Option<(usize, usize)> {
+        let mut off = 0;
+        for (j, f) in self.kernel.factors.iter().enumerate() {
+            let k = f.num_hypers();
+            if i < off + k {
+                return Some((j, i - off));
+            }
+            off += k;
+        }
+        None // log_sf
+    }
+
+    /// d D / d hyper_i (kernel hypers only), evaluated on the fly.
+    fn dvec_grad(&self, i: usize, out: &mut [f64]) {
+        let d = self.grid.ndims();
+        let sf2 = self.kernel.sf2();
+        match self.hyper_location(i) {
+            Some((jf, local)) => {
+                for (p, o) in out.iter_mut().enumerate() {
+                    let mut others = sf2;
+                    for j in 0..d {
+                        if j != jf {
+                            others *= self.q_forms[p * d + j];
+                        }
+                    }
+                    let qd = stencil_quadform(&self.stencils[p][jf], &self.dcols[jf][local]);
+                    *o = self.tdiag_grad[i] - others * qd;
+                }
+            }
+            None => {
+                // log_sf: both terms scale with sf^2, so dD = 2 D.
+                for (p, o) in out.iter_mut().enumerate() {
+                    *o = 2.0 * self.dvec.get(p).copied().unwrap_or(0.0);
+                }
+            }
+        }
+    }
+
+    /// Predictive cross-covariance product `K(X*, X) alpha ≈ W* K_UU W^T alpha`.
+    pub fn cross_mvm(&self, test_points: &[Vec<f64>], alpha: &[f64]) -> Vec<f64> {
+        let (wstar, _) = self.grid.interp_matrix(test_points, self.order);
+        let m = self.m();
+        let mut ag = vec![0.0; m];
+        self.wt.apply(alpha, &mut ag);
+        let mut kg = vec![0.0; m];
+        self.kuu.apply(&ag, &mut kg);
+        let mut out = vec![0.0; test_points.len()];
+        wstar.apply(&kg, &mut out);
+        out
+    }
+}
+
+impl LinOp for SkiOp {
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.apply_wkw(&self.kuu, x, y);
+        let s2 = self.noise_var();
+        if self.diag_correction {
+            for i in 0..self.n {
+                y[i] += (s2 + self.dvec[i]) * x[i];
+            }
+        } else {
+            for i in 0..self.n {
+                y[i] += s2 * x[i];
+            }
+        }
+    }
+}
+
+impl KernelOp for SkiOp {
+    fn num_hypers(&self) -> usize {
+        self.kernel.num_hypers() + 1
+    }
+    fn hypers(&self) -> Vec<f64> {
+        let mut h = self.kernel.hypers();
+        h.push(self.log_sigma);
+        h
+    }
+    fn set_hypers(&mut self, h: &[f64]) {
+        assert_eq!(h.len(), self.num_hypers());
+        self.kernel.set_hypers(&h[..h.len() - 1]);
+        self.log_sigma = h[h.len() - 1];
+        self.refresh();
+    }
+    fn hyper_names(&self) -> Vec<String> {
+        let mut names = self.kernel.hyper_names();
+        names.push("log_sigma".into());
+        names
+    }
+    fn apply_grad(&self, i: usize, x: &[f64], y: &mut [f64]) {
+        let nk = self.kernel.num_hypers();
+        if i == nk {
+            // Noise: d(sigma^2)/d log sigma = 2 sigma^2.
+            let s = 2.0 * self.noise_var();
+            for (yi, xi) in y.iter_mut().zip(x) {
+                *yi = s * xi;
+            }
+            return;
+        }
+        match self.hyper_location(i) {
+            Some((_jf, _local)) => {
+                self.apply_wkw(&self.dkrons[i], x, y);
+            }
+            None => {
+                // log_sf: d(sf^2 K)/d log sf = 2 sf^2 K = 2 (W K_UU W^T).
+                self.apply_wkw(&self.kuu, x, y);
+                for yi in y.iter_mut() {
+                    *yi *= 2.0;
+                }
+            }
+        }
+        if self.diag_correction {
+            let mut dd = vec![0.0; self.n];
+            self.dvec_grad(i, &mut dd);
+            for p in 0..self.n {
+                y[p] += dd[p] * x[p];
+            }
+        }
+    }
+    fn noise_var(&self) -> f64 {
+        (2.0 * self.log_sigma).exp()
+    }
+    fn diag(&self) -> Option<Vec<f64>> {
+        let d = self.grid.ndims();
+        let sf2 = self.kernel.sf2();
+        let s2 = self.noise_var();
+        Some(
+            (0..self.n)
+                .map(|i| {
+                    if self.diag_correction {
+                        // Corrected: exact kernel diagonal + noise.
+                        self.tdiag + s2
+                    } else {
+                        let mut prod = sf2;
+                        for j in 0..d {
+                            prod *= self.q_forms[i * d + j];
+                        }
+                        prod + s2
+                    }
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Kernel operator directly on the grid (`W = I`): the latent covariance of
+/// log-Gaussian Cox process models whose observations live on grid cells
+/// (Hickory §5.3, crime §5.4). `K̃ = sf^2 kron(T_j) + σ² I`.
+pub struct KronKernelOp {
+    pub grid: Grid,
+    pub kernel: SeparableKernel,
+    pub log_sigma: f64,
+    cols: Vec<Vec<f64>>,
+    dcols: Vec<Vec<Vec<f64>>>,
+    kuu: KronOp,
+}
+
+impl KronKernelOp {
+    pub fn new(grid: Grid, kernel: SeparableKernel, sigma: f64) -> Self {
+        let mut op = KronKernelOp {
+            grid,
+            kernel,
+            log_sigma: sigma.ln(),
+            cols: Vec::new(),
+            dcols: Vec::new(),
+            kuu: KronOp::new(vec![KronFactor::Dense(crate::linalg::dense::Mat::eye(1))], 1.0),
+        };
+        op.refresh();
+        op
+    }
+
+    fn refresh(&mut self) {
+        self.cols.clear();
+        self.dcols.clear();
+        for j in 0..self.grid.ndims() {
+            let dim = &self.grid.dims[j];
+            let f = &self.kernel.factors[j];
+            let nh = f.num_hypers();
+            let mut col = Vec::with_capacity(dim.m);
+            let mut dcol = vec![Vec::with_capacity(dim.m); nh];
+            let mut g = vec![0.0; nh];
+            for k in 0..dim.m {
+                let tau = k as f64 * dim.spacing();
+                col.push(f.eval(&[tau], &[0.0]));
+                f.grad(&[tau], &[0.0], &mut g);
+                for (t, gv) in g.iter().enumerate() {
+                    dcol[t].push(*gv);
+                }
+            }
+            self.cols.push(col);
+            self.dcols.push(dcol);
+        }
+        let factors: Vec<KronFactor> = self
+            .cols
+            .iter()
+            .map(|c| KronFactor::Toeplitz(ToeplitzOp::new(c.clone())))
+            .collect();
+        self.kuu = KronOp::new(factors, self.kernel.sf2());
+    }
+
+    pub fn kuu(&self) -> &KronOp {
+        &self.kuu
+    }
+
+    fn hyper_location(&self, i: usize) -> Option<(usize, usize)> {
+        let mut off = 0;
+        for (j, f) in self.kernel.factors.iter().enumerate() {
+            let k = f.num_hypers();
+            if i < off + k {
+                return Some((j, i - off));
+            }
+            off += k;
+        }
+        None
+    }
+}
+
+impl LinOp for KronKernelOp {
+    fn n(&self) -> usize {
+        self.grid.size()
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.kuu.apply(x, y);
+        let s2 = self.noise_var();
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += s2 * xi;
+        }
+    }
+}
+
+impl KernelOp for KronKernelOp {
+    fn num_hypers(&self) -> usize {
+        self.kernel.num_hypers() + 1
+    }
+    fn hypers(&self) -> Vec<f64> {
+        let mut h = self.kernel.hypers();
+        h.push(self.log_sigma);
+        h
+    }
+    fn set_hypers(&mut self, h: &[f64]) {
+        self.kernel.set_hypers(&h[..h.len() - 1]);
+        self.log_sigma = h[h.len() - 1];
+        self.refresh();
+    }
+    fn hyper_names(&self) -> Vec<String> {
+        let mut names = self.kernel.hyper_names();
+        names.push("log_sigma".into());
+        names
+    }
+    fn apply_grad(&self, i: usize, x: &[f64], y: &mut [f64]) {
+        let nk = self.kernel.num_hypers();
+        if i == nk {
+            let s = 2.0 * self.noise_var();
+            for (yi, xi) in y.iter_mut().zip(x) {
+                *yi = s * xi;
+            }
+            return;
+        }
+        match self.hyper_location(i) {
+            Some((jf, local)) => {
+                let factors: Vec<KronFactor> = (0..self.grid.ndims())
+                    .map(|j| {
+                        let col = if j == jf {
+                            self.dcols[j][local].clone()
+                        } else {
+                            self.cols[j].clone()
+                        };
+                        KronFactor::Toeplitz(ToeplitzOp::new(col))
+                    })
+                    .collect();
+                KronOp::new(factors, self.kernel.sf2()).apply(x, y);
+            }
+            None => {
+                self.kuu.apply(x, y);
+                for yi in y.iter_mut() {
+                    *yi *= 2.0;
+                }
+            }
+        }
+    }
+    fn noise_var(&self) -> f64 {
+        (2.0 * self.log_sigma).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::GridDim;
+    use crate::kernels::Shape;
+    use crate::util::rng::Rng;
+
+    fn points_1d(n: usize, lo: f64, hi: f64, rng: &mut Rng) -> Vec<Vec<f64>> {
+        (0..n).map(|_| vec![rng.uniform_in(lo, hi)]).collect()
+    }
+
+    #[test]
+    fn ski_approximates_exact_kernel_mvm() {
+        let mut rng = Rng::new(4);
+        let pts = points_1d(60, 0.0, 4.0, &mut rng);
+        let kern = SeparableKernel::iso(Shape::Rbf, 1, 0.5, 1.0);
+        let grid = Grid::new(vec![GridDim { lo: -0.2, hi: 4.2, m: 200 }]);
+        let ski = SkiOp::new(&pts, grid, kern.clone(), 0.1, InterpOrder::Cubic, false);
+        // Exact dense K + sigma^2 I.
+        let x: Vec<f64> = (0..60).map(|_| rng.gaussian()).collect();
+        let mut exact = vec![0.0; 60];
+        for i in 0..60 {
+            let mut s = 0.01 * x[i];
+            for j in 0..60 {
+                s += kern.eval(&pts[i], &pts[j]) * x[j];
+            }
+            exact[i] = s;
+        }
+        let got = ski.apply_vec(&x);
+        let scale: f64 = exact.iter().map(|v| v.abs()).fold(0.0, f64::max);
+        for i in 0..60 {
+            assert!(
+                (got[i] - exact[i]).abs() / scale < 2e-3,
+                "i={i}: {} vs {}",
+                got[i],
+                exact[i]
+            );
+        }
+    }
+
+    #[test]
+    fn diag_correction_makes_diag_exact() {
+        let mut rng = Rng::new(6);
+        let pts = points_1d(40, 0.0, 2.0, &mut rng);
+        // A sparse grid so SKI's diagonal is visibly off without correction.
+        let kern = SeparableKernel::iso(Shape::Matern12, 1, 0.3, 1.2);
+        let grid = Grid::new(vec![GridDim { lo: -0.1, hi: 2.1, m: 24 }]);
+        let ski_d = SkiOp::new(&pts, grid, kern.clone(), 0.1, InterpOrder::Cubic, true);
+        let dense = ski_d.to_dense();
+        let want = kern.eval(&pts[0], &pts[0]) + 0.01;
+        for i in 0..40 {
+            assert!(
+                (dense[(i, i)] - want).abs() < 1e-10,
+                "corrected diag {} vs {}",
+                dense[(i, i)],
+                want
+            );
+        }
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let mut rng = Rng::new(11);
+        let pts: Vec<Vec<f64>> = (0..25)
+            .map(|_| vec![rng.uniform_in(0.0, 1.0), rng.uniform_in(0.0, 1.0)])
+            .collect();
+        let kern = SeparableKernel::iso(Shape::Rbf, 2, 0.4, 1.1);
+        let grid = Grid::new(vec![
+            GridDim { lo: -0.1, hi: 1.1, m: 12 },
+            GridDim { lo: -0.1, hi: 1.1, m: 10 },
+        ]);
+        for diag_corr in [false, true] {
+            let mut ski =
+                SkiOp::new(&pts, grid.clone(), kern.clone(), 0.2, InterpOrder::Cubic, diag_corr);
+            let x: Vec<f64> = (0..25).map(|_| rng.gaussian()).collect();
+            let h0 = ski.hypers();
+            let eps = 1e-6;
+            for i in 0..ski.num_hypers() {
+                let mut y = vec![0.0; 25];
+                ski.apply_grad(i, &x, &mut y);
+                let mut hp = h0.clone();
+                hp[i] += eps;
+                ski.set_hypers(&hp);
+                let up = ski.apply_vec(&x);
+                hp[i] -= 2.0 * eps;
+                ski.set_hypers(&hp);
+                let dn = ski.apply_vec(&x);
+                ski.set_hypers(&h0);
+                for p in 0..25 {
+                    let fd = (up[p] - dn[p]) / (2.0 * eps);
+                    assert!(
+                        (y[p] - fd).abs() < 1e-4 * (1.0 + fd.abs()),
+                        "diag_corr={diag_corr} hyper {i} entry {p}: {} vs {}",
+                        y[p],
+                        fd
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kron_kernel_op_matches_direct_eval() {
+        let kern = SeparableKernel::iso(Shape::Matern32, 2, 0.5, 0.9);
+        let grid = Grid::new(vec![
+            GridDim { lo: 0.0, hi: 1.0, m: 4 },
+            GridDim { lo: 0.0, hi: 1.0, m: 3 },
+        ]);
+        let op = KronKernelOp::new(grid.clone(), kern.clone(), 0.05);
+        let dense = op.to_dense();
+        for a in 0..12 {
+            for b in 0..12 {
+                let pa = grid.point(a);
+                let pb = grid.point(b);
+                let mut want = kern.eval(&pa, &pb);
+                if a == b {
+                    want += 0.05f64.powi(2);
+                }
+                assert!(
+                    (dense[(a, b)] - want).abs() < 1e-10,
+                    "({a},{b}): {} vs {}",
+                    dense[(a, b)],
+                    want
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kron_kernel_grad_fd() {
+        let kern = SeparableKernel::iso(Shape::Rbf, 2, 0.4, 1.0);
+        let grid = Grid::new(vec![
+            GridDim { lo: 0.0, hi: 1.0, m: 4 },
+            GridDim { lo: 0.0, hi: 1.0, m: 4 },
+        ]);
+        let mut op = KronKernelOp::new(grid, kern, 0.1);
+        let mut rng = Rng::new(2);
+        let x: Vec<f64> = (0..16).map(|_| rng.gaussian()).collect();
+        let h0 = op.hypers();
+        let eps = 1e-6;
+        for i in 0..op.num_hypers() {
+            let mut y = vec![0.0; 16];
+            op.apply_grad(i, &x, &mut y);
+            let mut hp = h0.clone();
+            hp[i] += eps;
+            op.set_hypers(&hp);
+            let up = op.apply_vec(&x);
+            hp[i] -= 2.0 * eps;
+            op.set_hypers(&hp);
+            let dn = op.apply_vec(&x);
+            op.set_hypers(&h0);
+            for p in 0..16 {
+                let fd = (up[p] - dn[p]) / (2.0 * eps);
+                assert!((y[p] - fd).abs() < 1e-5 * (1.0 + fd.abs()));
+            }
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Compressed sparse row matrices — SKI's interpolation matrix W has 4^d
+//! nonzeros per row (local cubic interpolation), which is what keeps the
+//! n-dependent part of every MVM at O(n).
+
+/// CSR matrix.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<usize>,
+    pub data: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from row-wise (col, value) lists.
+    pub fn from_rows(ncols: usize, rows: &[Vec<(usize, f64)>]) -> Self {
+        let nrows = rows.len();
+        let mut indptr = Vec::with_capacity(nrows + 1);
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        indptr.push(0);
+        for r in rows {
+            for &(c, v) in r {
+                assert!(c < ncols);
+                indices.push(c);
+                data.push(v);
+            }
+            indptr.push(indices.len());
+        }
+        Csr { nrows, ncols, indptr, indices, data }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    /// y = A x.
+    pub fn apply(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        for i in 0..self.nrows {
+            let mut s = 0.0;
+            for k in self.indptr[i]..self.indptr[i + 1] {
+                s += self.data[k] * x[self.indices[k]];
+            }
+            y[i] = s;
+        }
+    }
+
+    /// y = A^T x (accumulating; y is zeroed first).
+    pub fn apply_t(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.nrows);
+        assert_eq!(y.len(), self.ncols);
+        y.fill(0.0);
+        for i in 0..self.nrows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            for k in self.indptr[i]..self.indptr[i + 1] {
+                y[self.indices[k]] += self.data[k] * xi;
+            }
+        }
+    }
+
+    /// Explicit transpose (when A^T is applied often, a materialized CSR
+    /// transpose is faster than scattered accumulation).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.ncols];
+        for &c in &self.indices {
+            counts[c] += 1;
+        }
+        let mut indptr = vec![0usize; self.ncols + 1];
+        for j in 0..self.ncols {
+            indptr[j + 1] = indptr[j] + counts[j];
+        }
+        let mut indices = vec![0usize; self.nnz()];
+        let mut data = vec![0.0; self.nnz()];
+        let mut next = indptr.clone();
+        for i in 0..self.nrows {
+            for k in self.indptr[i]..self.indptr[i + 1] {
+                let c = self.indices[k];
+                let pos = next[c];
+                indices[pos] = i;
+                data[pos] = self.data[k];
+                next[c] += 1;
+            }
+        }
+        Csr { nrows: self.ncols, ncols: self.nrows, indptr, indices, data }
+    }
+
+    /// Row i as a slice pair (indices, values).
+    pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
+        let r = self.indptr[i]..self.indptr[i + 1];
+        (&self.indices[r.clone()], &self.data[r])
+    }
+
+    /// Dense materialization (tests).
+    pub fn to_dense(&self) -> crate::linalg::dense::Mat {
+        let mut m = crate::linalg::dense::Mat::zeros(self.nrows, self.ncols);
+        for i in 0..self.nrows {
+            let (idx, val) = self.row(i);
+            for (c, v) in idx.iter().zip(val) {
+                m[(i, *c)] = *v;
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        Csr::from_rows(
+            4,
+            &[
+                vec![(0, 1.0), (2, 2.0)],
+                vec![(1, 3.0)],
+                vec![(0, -1.0), (3, 4.0)],
+            ],
+        )
+    }
+
+    #[test]
+    fn apply_matches_dense() {
+        let a = sample();
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let mut y = vec![0.0; 3];
+        a.apply(&x, &mut y);
+        assert_eq!(y, vec![7.0, 6.0, 15.0]);
+        let d = a.to_dense();
+        let yd = d.matvec(&x);
+        assert_eq!(y, yd);
+    }
+
+    #[test]
+    fn transpose_apply_consistency() {
+        let a = sample();
+        let x = [1.0, -1.0, 0.5];
+        let mut y1 = vec![0.0; 4];
+        a.apply_t(&x, &mut y1);
+        let at = a.transpose();
+        let mut y2 = vec![0.0; 4];
+        at.apply(&x, &mut y2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn transpose_twice_identity() {
+        let a = sample();
+        let att = a.transpose().transpose();
+        assert_eq!(a.to_dense().data, att.to_dense().data);
+    }
+
+    #[test]
+    fn nnz_and_rows() {
+        let a = sample();
+        assert_eq!(a.nnz(), 5);
+        let (idx, val) = a.row(2);
+        assert_eq!(idx, &[0, 3]);
+        assert_eq!(val, &[-1.0, 4.0]);
+    }
+}

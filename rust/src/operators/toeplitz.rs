@@ -1,0 +1,150 @@
+//! Symmetric Toeplitz operator with O(m log m) MVMs via circulant
+//! embedding — the structure SKI exploits on 1-D grids (paper §2: "if K_UU
+//! is Toeplitz, each MVM with the approximate K_XX costs only
+//! O(n + m log m)").
+
+use super::LinOp;
+use crate::linalg::fft::{fft_in_place, next_pow2, rfft, Cpx};
+
+/// Symmetric Toeplitz matrix given by its first column, with a cached FFT
+/// of the circulant embedding.
+pub struct ToeplitzOp {
+    /// First column, length m.
+    pub col: Vec<f64>,
+    /// FFT length (power of two >= 2m - 1).
+    len: usize,
+    /// FFT of the circulant's first column.
+    circ_fft: Vec<Cpx>,
+}
+
+impl ToeplitzOp {
+    pub fn new(col: Vec<f64>) -> Self {
+        let m = col.len();
+        assert!(m > 0);
+        let len = next_pow2((2 * m).saturating_sub(1).max(1));
+        // Circulant first column: [c0 .. c_{m-1}, 0 .., c_{m-1} .. c_1].
+        let mut circ = vec![0.0; len];
+        circ[..m].copy_from_slice(&col);
+        for k in 1..m {
+            circ[len - k] = col[k];
+        }
+        let circ_fft = rfft(&circ, len);
+        ToeplitzOp { col, len, circ_fft }
+    }
+
+    pub fn m(&self) -> usize {
+        self.col.len()
+    }
+
+    /// Apply into a caller-provided FFT scratch buffer (used by the Kron
+    /// fiber loop to avoid per-fiber allocation).
+    pub fn apply_with_scratch(&self, x: &[f64], y: &mut [f64], scratch: &mut Vec<Cpx>) {
+        let m = self.m();
+        assert_eq!(x.len(), m);
+        assert_eq!(y.len(), m);
+        scratch.clear();
+        scratch.resize(self.len, Cpx::default());
+        for (i, &v) in x.iter().enumerate() {
+            scratch[i] = Cpx::new(v, 0.0);
+        }
+        fft_in_place(scratch, false);
+        for (s, c) in scratch.iter_mut().zip(&self.circ_fft) {
+            *s = s.mul(*c);
+        }
+        fft_in_place(scratch, true);
+        let scale = 1.0 / self.len as f64;
+        for i in 0..m {
+            y[i] = scratch[i].re * scale;
+        }
+    }
+
+    /// Dense materialization (for the scaled-eigenvalue baseline's factor
+    /// eigendecompositions and for tests).
+    pub fn to_dense_mat(&self) -> crate::linalg::dense::Mat {
+        let m = self.m();
+        crate::linalg::dense::Mat::from_fn(m, m, |i, j| {
+            self.col[i.abs_diff(j)]
+        })
+    }
+}
+
+impl LinOp for ToeplitzOp {
+    fn n(&self) -> usize {
+        self.m()
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        let mut scratch = Vec::new();
+        self.apply_with_scratch(x, y, &mut scratch);
+    }
+    fn to_dense(&self) -> crate::linalg::dense::Mat {
+        self.to_dense_mat()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_apply(col: &[f64], x: &[f64]) -> Vec<f64> {
+        let m = col.len();
+        (0..m)
+            .map(|i| (0..m).map(|j| col[i.abs_diff(j)] * x[j]).sum())
+            .collect()
+    }
+
+    #[test]
+    fn matches_naive_small() {
+        let col = vec![4.0, 2.0, 1.0, 0.5];
+        let op = ToeplitzOp::new(col.clone());
+        let x = vec![1.0, -1.0, 2.0, 0.5];
+        let got = op.apply_vec(&x);
+        let want = naive_apply(&col, &x);
+        for i in 0..4 {
+            assert!((got[i] - want[i]).abs() < 1e-10, "{got:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn matches_naive_random_sizes() {
+        let mut rng = Rng::new(77);
+        for m in [1usize, 2, 3, 7, 16, 33, 100] {
+            let col: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+            let x: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+            let op = ToeplitzOp::new(col.clone());
+            let got = op.apply_vec(&x);
+            let want = naive_apply(&col, &x);
+            for i in 0..m {
+                assert!((got[i] - want[i]).abs() < 1e-9, "m={m} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_agrees() {
+        let col = vec![3.0, 1.0, 0.2];
+        let op = ToeplitzOp::new(col);
+        let d = op.to_dense_mat();
+        assert_eq!(d[(0, 2)], 0.2);
+        assert_eq!(d[(2, 0)], 0.2);
+        assert_eq!(d[(1, 1)], 3.0);
+        let x = vec![0.5, -1.5, 2.0];
+        let via_dense = d.matvec(&x);
+        let via_fft = op.apply_vec(&x);
+        for i in 0..3 {
+            assert!((via_dense[i] - via_fft[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn identity_column() {
+        let mut col = vec![0.0; 8];
+        col[0] = 1.0;
+        let op = ToeplitzOp::new(col);
+        let x: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        let y = op.apply_vec(&x);
+        for i in 0..8 {
+            assert!((y[i] - x[i]).abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! Adam optimizer — used for deep kernel learning (paper §5.5), where the
+//! parameter vector includes hundreds of thousands of network weights and
+//! the marginal-likelihood gradient is stochastic.
+
+use super::OptResult;
+
+#[derive(Clone, Copy, Debug)]
+pub struct AdamOptions {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub max_iters: usize,
+    /// Stop when the objective improves less than this over a window.
+    pub f_tol: f64,
+}
+
+impl Default for AdamOptions {
+    fn default() -> Self {
+        AdamOptions { lr: 1e-2, beta1: 0.9, beta2: 0.999, eps: 1e-8, max_iters: 200, f_tol: 1e-8 }
+    }
+}
+
+/// Minimize `f` (value and gradient) from `x0` with Adam.
+pub fn adam<F>(mut f: F, x0: &[f64], opts: &AdamOptions) -> OptResult
+where
+    F: FnMut(&[f64]) -> (f64, Vec<f64>),
+{
+    let n = x0.len();
+    let mut x = x0.to_vec();
+    let mut m = vec![0.0; n];
+    let mut v = vec![0.0; n];
+    let mut best_x = x.clone();
+    let mut best_f = f64::INFINITY;
+    let mut evals = 0;
+    let mut last_f = f64::INFINITY;
+    let mut iters = 0;
+    let mut converged = false;
+    for t in 1..=opts.max_iters {
+        iters = t;
+        let (fx, g) = f(&x);
+        evals += 1;
+        if fx < best_f {
+            best_f = fx;
+            best_x = x.clone();
+        }
+        if (last_f - fx).abs() < opts.f_tol * (1.0 + fx.abs()) && t > 5 {
+            converged = true;
+            break;
+        }
+        last_f = fx;
+        let b1t = 1.0 - opts.beta1.powi(t as i32);
+        let b2t = 1.0 - opts.beta2.powi(t as i32);
+        for i in 0..n {
+            m[i] = opts.beta1 * m[i] + (1.0 - opts.beta1) * g[i];
+            v[i] = opts.beta2 * v[i] + (1.0 - opts.beta2) * g[i] * g[i];
+            let mhat = m[i] / b1t;
+            let vhat = v[i] / b2t;
+            x[i] -= opts.lr * mhat / (vhat.sqrt() + opts.eps);
+        }
+    }
+    OptResult { x: best_x, fx: best_f, evals, iters, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_on_quadratic() {
+        let f = |x: &[f64]| {
+            let v: f64 = x.iter().map(|v| v * v).sum();
+            (v, x.iter().map(|v| 2.0 * v).collect())
+        };
+        let res = adam(
+            f,
+            &[3.0, -2.0, 1.0],
+            &AdamOptions { lr: 0.1, max_iters: 500, ..Default::default() },
+        );
+        assert!(res.fx < 1e-3, "fx {}", res.fx);
+    }
+
+    #[test]
+    fn tracks_best_iterate() {
+        // Objective that worsens after some steps should keep the best.
+        let mut count = 0;
+        let f = move |x: &[f64]| {
+            count += 1;
+            let v = if count > 50 { 100.0 } else { x[0] * x[0] };
+            (v, vec![2.0 * x[0]])
+        };
+        let res = adam(f, &[1.0], &AdamOptions { lr: 0.05, max_iters: 100, f_tol: 0.0, ..Default::default() });
+        assert!(res.fx < 1.0);
+    }
+}

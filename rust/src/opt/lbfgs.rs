@@ -1,0 +1,177 @@
+//! L-BFGS (two-loop recursion) with Armijo backtracking line search.
+//!
+//! The marginal-likelihood objectives here are *stochastic* (trace
+//! estimators with fixed probe seeds per optimization, so the surface is
+//! deterministic but noisy) — the line search therefore accepts on simple
+//! sufficient decrease rather than strong Wolfe.
+
+use super::OptResult;
+
+/// L-BFGS options.
+#[derive(Clone, Copy, Debug)]
+pub struct LbfgsOptions {
+    pub max_iters: usize,
+    /// History size.
+    pub m: usize,
+    /// Gradient-norm convergence tolerance.
+    pub g_tol: f64,
+    /// Armijo sufficient-decrease constant.
+    pub c1: f64,
+    /// Max backtracking steps per iteration.
+    pub max_ls: usize,
+    /// Initial step scale on the first iteration.
+    pub init_step: f64,
+}
+
+impl Default for LbfgsOptions {
+    fn default() -> Self {
+        LbfgsOptions { max_iters: 100, m: 8, g_tol: 1e-5, c1: 1e-4, max_ls: 20, init_step: 1.0 }
+    }
+}
+
+/// Minimize `f` (returning value and gradient) from `x0`.
+pub fn lbfgs<F>(mut f: F, x0: &[f64], opts: &LbfgsOptions) -> OptResult
+where
+    F: FnMut(&[f64]) -> (f64, Vec<f64>),
+{
+    let n = x0.len();
+    let mut x = x0.to_vec();
+    let (mut fx, mut g) = f(&x);
+    let mut evals = 1;
+    let mut s_hist: Vec<Vec<f64>> = Vec::new();
+    let mut y_hist: Vec<Vec<f64>> = Vec::new();
+    let mut rho_hist: Vec<f64> = Vec::new();
+
+    let gnorm = |g: &[f64]| g.iter().map(|v| v * v).sum::<f64>().sqrt();
+    let mut converged = gnorm(&g) <= opts.g_tol;
+    let mut iters = 0;
+
+    while !converged && iters < opts.max_iters {
+        iters += 1;
+        // Two-loop recursion for the search direction d = -H g.
+        let mut q = g.clone();
+        let k = s_hist.len();
+        let mut alpha = vec![0.0; k];
+        for i in (0..k).rev() {
+            let a = rho_hist[i]
+                * s_hist[i].iter().zip(&q).map(|(s, q)| s * q).sum::<f64>();
+            alpha[i] = a;
+            for t in 0..n {
+                q[t] -= a * y_hist[i][t];
+            }
+        }
+        // Initial Hessian scaling gamma = s.y / y.y.
+        if k > 0 {
+            let sy: f64 = s_hist[k - 1].iter().zip(&y_hist[k - 1]).map(|(s, y)| s * y).sum();
+            let yy: f64 = y_hist[k - 1].iter().map(|y| y * y).sum();
+            if yy > 0.0 {
+                let gamma = sy / yy;
+                for t in 0..n {
+                    q[t] *= gamma;
+                }
+            }
+        }
+        for i in 0..k {
+            let b = rho_hist[i]
+                * y_hist[i].iter().zip(&q).map(|(y, q)| y * q).sum::<f64>();
+            for t in 0..n {
+                q[t] += (alpha[i] - b) * s_hist[i][t];
+            }
+        }
+        let d: Vec<f64> = q.iter().map(|v| -v).collect();
+        let dg: f64 = d.iter().zip(&g).map(|(d, g)| d * g).sum();
+        let (d, dg) = if dg >= 0.0 {
+            // Not a descent direction (stochastic objective): steepest descent.
+            let d: Vec<f64> = g.iter().map(|v| -v).collect();
+            let dg = -g.iter().map(|v| v * v).sum::<f64>();
+            (d, dg)
+        } else {
+            (d, dg)
+        };
+
+        // Backtracking Armijo.
+        let mut step = if iters == 1 {
+            opts.init_step / gnorm(&g).max(1.0)
+        } else {
+            1.0
+        };
+        let mut accepted = false;
+        for _ in 0..opts.max_ls {
+            let x_new: Vec<f64> = x.iter().zip(&d).map(|(x, d)| x + step * d).collect();
+            let (f_new, g_new) = f(&x_new);
+            evals += 1;
+            if f_new <= fx + opts.c1 * step * dg {
+                // Update history.
+                let s: Vec<f64> = x_new.iter().zip(&x).map(|(a, b)| a - b).collect();
+                let y: Vec<f64> = g_new.iter().zip(&g).map(|(a, b)| a - b).collect();
+                let sy: f64 = s.iter().zip(&y).map(|(s, y)| s * y).sum();
+                if sy > 1e-12 {
+                    if s_hist.len() == opts.m {
+                        s_hist.remove(0);
+                        y_hist.remove(0);
+                        rho_hist.remove(0);
+                    }
+                    rho_hist.push(1.0 / sy);
+                    s_hist.push(s);
+                    y_hist.push(y);
+                }
+                x = x_new;
+                fx = f_new;
+                g = g_new;
+                accepted = true;
+                break;
+            }
+            step *= 0.5;
+        }
+        if !accepted {
+            break; // line search failed: stop at current point
+        }
+        converged = gnorm(&g) <= opts.g_tol;
+    }
+    OptResult { x, fx, evals, iters, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        let f = |x: &[f64]| {
+            let v = (x[0] - 1.0).powi(2) + 10.0 * (x[1] + 2.0).powi(2);
+            let g = vec![2.0 * (x[0] - 1.0), 20.0 * (x[1] + 2.0)];
+            (v, g)
+        };
+        let res = lbfgs(f, &[0.0, 0.0], &LbfgsOptions::default());
+        assert!(res.converged);
+        assert!((res.x[0] - 1.0).abs() < 1e-4);
+        assert!((res.x[1] + 2.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn minimizes_rosenbrock() {
+        let f = |x: &[f64]| {
+            let (a, b) = (x[0], x[1]);
+            let v = (1.0 - a).powi(2) + 100.0 * (b - a * a).powi(2);
+            let g = vec![
+                -2.0 * (1.0 - a) - 400.0 * a * (b - a * a),
+                200.0 * (b - a * a),
+            ];
+            (v, g)
+        };
+        let res = lbfgs(
+            f,
+            &[-1.2, 1.0],
+            &LbfgsOptions { max_iters: 500, g_tol: 1e-8, ..Default::default() },
+        );
+        assert!((res.x[0] - 1.0).abs() < 1e-3, "{:?}", res.x);
+        assert!((res.x[1] - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let f = |x: &[f64]| (x[0] * x[0], vec![2.0 * x[0]]);
+        let res = lbfgs(f, &[100.0], &LbfgsOptions { max_iters: 2, ..Default::default() });
+        assert!(res.iters <= 2);
+    }
+}

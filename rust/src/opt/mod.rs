@@ -1,0 +1,23 @@
+//! Optimizers for hyperparameter learning: L-BFGS with Armijo backtracking
+//! (gradient-based marginal-likelihood optimization, as in the paper's
+//! experiments), Adam (deep kernel learning), and Nelder–Mead (gradient-free
+//! fallback for Laplace objectives with few hypers).
+
+pub mod adam;
+pub mod lbfgs;
+pub mod neldermead;
+
+/// Result of an optimization run.
+#[derive(Clone, Debug)]
+pub struct OptResult {
+    /// Best parameters found.
+    pub x: Vec<f64>,
+    /// Objective value at `x`.
+    pub fx: f64,
+    /// Objective/gradient evaluations used.
+    pub evals: usize,
+    /// Iterations taken.
+    pub iters: usize,
+    /// Whether the convergence tolerance was met.
+    pub converged: bool,
+}

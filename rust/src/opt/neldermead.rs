@@ -1,0 +1,161 @@
+//! Nelder–Mead simplex search — gradient-free optimizer for the Laplace
+//! marginal-likelihood objectives (few hypers, stochastic values), used in
+//! the Hickory experiment (§5.3).
+
+use super::OptResult;
+
+#[derive(Clone, Copy, Debug)]
+pub struct NelderMeadOptions {
+    pub max_iters: usize,
+    /// Initial simplex scale (per coordinate).
+    pub init_step: f64,
+    /// Convergence: simplex function-value spread.
+    pub f_tol: f64,
+}
+
+impl Default for NelderMeadOptions {
+    fn default() -> Self {
+        NelderMeadOptions { max_iters: 200, init_step: 0.5, f_tol: 1e-6 }
+    }
+}
+
+/// Minimize `f` from `x0`.
+pub fn nelder_mead<F>(mut f: F, x0: &[f64], opts: &NelderMeadOptions) -> OptResult
+where
+    F: FnMut(&[f64]) -> f64,
+{
+    let n = x0.len();
+    let (alpha, gamma, rho, sigma) = (1.0, 2.0, 0.5, 0.5);
+    // Initial simplex.
+    let mut simplex: Vec<Vec<f64>> = vec![x0.to_vec()];
+    for i in 0..n {
+        let mut p = x0.to_vec();
+        p[i] += opts.init_step;
+        simplex.push(p);
+    }
+    let mut fvals: Vec<f64> = simplex.iter().map(|p| f(p)).collect();
+    let mut evals = n + 1;
+    let mut iters = 0;
+    let mut converged = false;
+
+    while iters < opts.max_iters {
+        iters += 1;
+        // Order.
+        let mut idx: Vec<usize> = (0..=n).collect();
+        idx.sort_by(|&a, &b| fvals[a].partial_cmp(&fvals[b]).unwrap());
+        simplex = idx.iter().map(|&i| simplex[i].clone()).collect();
+        fvals = idx.iter().map(|&i| fvals[i]).collect();
+
+        // Converged only when BOTH the value spread and the simplex
+        // diameter are small (value spread alone false-triggers when
+        // vertices straddle the minimum symmetrically).
+        let diam = simplex
+            .iter()
+            .skip(1)
+            .map(|p| {
+                p.iter()
+                    .zip(&simplex[0])
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0, f64::max)
+            })
+            .fold(0.0, f64::max);
+        if (fvals[n] - fvals[0]).abs() <= opts.f_tol * (1.0 + fvals[0].abs())
+            && diam <= (opts.f_tol.sqrt() * 0.1).max(1e-8) * (1.0 + simplex[0][0].abs())
+        {
+            converged = true;
+            break;
+        }
+
+        // Centroid of all but worst.
+        let mut centroid = vec![0.0; n];
+        for p in &simplex[..n] {
+            for i in 0..n {
+                centroid[i] += p[i] / n as f64;
+            }
+        }
+        // Reflect.
+        let xr: Vec<f64> = (0..n)
+            .map(|i| centroid[i] + alpha * (centroid[i] - simplex[n][i]))
+            .collect();
+        let fr = f(&xr);
+        evals += 1;
+        if fr < fvals[0] {
+            // Expand.
+            let xe: Vec<f64> = (0..n)
+                .map(|i| centroid[i] + gamma * (xr[i] - centroid[i]))
+                .collect();
+            let fe = f(&xe);
+            evals += 1;
+            if fe < fr {
+                simplex[n] = xe;
+                fvals[n] = fe;
+            } else {
+                simplex[n] = xr;
+                fvals[n] = fr;
+            }
+        } else if fr < fvals[n - 1] {
+            simplex[n] = xr;
+            fvals[n] = fr;
+        } else {
+            // Contract.
+            let xc: Vec<f64> = (0..n)
+                .map(|i| centroid[i] + rho * (simplex[n][i] - centroid[i]))
+                .collect();
+            let fc = f(&xc);
+            evals += 1;
+            if fc < fvals[n] {
+                simplex[n] = xc;
+                fvals[n] = fc;
+            } else {
+                // Shrink toward best.
+                for k in 1..=n {
+                    for i in 0..n {
+                        simplex[k][i] =
+                            simplex[0][i] + sigma * (simplex[k][i] - simplex[0][i]);
+                    }
+                    fvals[k] = f(&simplex[k]);
+                    evals += 1;
+                }
+            }
+        }
+    }
+    let mut best = 0;
+    for i in 1..=n {
+        if fvals[i] < fvals[best] {
+            best = i;
+        }
+    }
+    OptResult { x: simplex[best].clone(), fx: fvals[best], evals, iters, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic_bowl() {
+        let f = |x: &[f64]| (x[0] - 2.0).powi(2) + (x[1] + 1.0).powi(2) + 3.0;
+        let res = nelder_mead(f, &[0.0, 0.0], &NelderMeadOptions { max_iters: 500, ..Default::default() });
+        assert!((res.x[0] - 2.0).abs() < 1e-3, "{:?}", res.x);
+        assert!((res.x[1] + 1.0).abs() < 1e-3);
+        assert!((res.fx - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn handles_1d() {
+        let f = |x: &[f64]| (x[0] - 0.5).powi(2);
+        let res = nelder_mead(f, &[5.0], &NelderMeadOptions::default());
+        assert!((res.x[0] - 0.5).abs() < 1e-3);
+    }
+
+    #[test]
+    fn robust_to_mild_noise() {
+        // Deterministic pseudo-noise on top of a quadratic.
+        let f = |x: &[f64]| {
+            let noise = ((x[0] * 1000.0).sin() * 1e-4).abs();
+            (x[0] - 1.0).powi(2) + noise
+        };
+        let res = nelder_mead(f, &[-3.0], &NelderMeadOptions { max_iters: 300, ..Default::default() });
+        assert!((res.x[0] - 1.0).abs() < 0.05);
+    }
+}

@@ -1,0 +1,191 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` (L2 JAX graphs wrapping the L1 Pallas kernel)
+//! and executes them on the XLA CPU client — Python never runs at serving
+//! time.
+//!
+//! Artifacts are described by `artifacts/manifest.tsv`
+//! (`name \t file \t graph \t kind \t in-shapes \t out-shapes`); compiled
+//! executables are cached per name.
+
+pub mod ops;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+
+/// One artifact's manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub graph: String,
+    pub kind: String,
+    pub in_shapes: Vec<Vec<usize>>,
+    pub out_shapes: Vec<Vec<usize>>,
+}
+
+fn parse_shapes(field: &str) -> Result<Vec<Vec<usize>>> {
+    field
+        .split(';')
+        .map(|s| {
+            s.split('x')
+                .map(|d| {
+                    d.parse::<usize>()
+                        .map_err(|e| Error::Artifact(format!("bad shape {s}: {e}")))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Parse `manifest.tsv`.
+pub fn load_manifest(dir: &Path) -> Result<HashMap<String, ArtifactSpec>> {
+    let path = dir.join("manifest.tsv");
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| Error::Artifact(format!("{}: {e} (run `make artifacts`)", path.display())))?;
+    let mut out = HashMap::new();
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let cols: Vec<&str> = line.split('\t').collect();
+        if cols.len() != 6 {
+            return Err(Error::Artifact(format!("bad manifest line: {line}")));
+        }
+        out.insert(
+            cols[0].to_string(),
+            ArtifactSpec {
+                name: cols[0].to_string(),
+                file: cols[1].to_string(),
+                graph: cols[2].to_string(),
+                kind: cols[3].to_string(),
+                in_shapes: parse_shapes(cols[4])?,
+                out_shapes: parse_shapes(cols[5])?,
+            },
+        );
+    }
+    Ok(out)
+}
+
+/// Compiled-executable cache over the PJRT CPU client.
+///
+/// The PJRT CPU client is internally synchronized; we nevertheless serialize
+/// executions per runtime through a mutex so the wrapper is trivially Sync.
+pub struct PjrtRuntime {
+    dir: PathBuf,
+    pub specs: HashMap<String, ArtifactSpec>,
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: all access to the client/executables goes through the mutex.
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
+
+impl PjrtRuntime {
+    /// Open the artifact directory and create a CPU PJRT client.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let specs = load_manifest(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtRuntime { dir, specs, inner: Mutex::new(Inner { client, cache: HashMap::new() }) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.lock().unwrap().client.platform_name()
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.specs
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("unknown artifact {name}")))
+    }
+
+    /// Execute artifact `name` on f32 inputs (flattened, row-major). Shapes
+    /// are validated against the manifest. Returns flattened f32 outputs.
+    pub fn run_f32(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let spec = self.spec(name)?.clone();
+        if inputs.len() != spec.in_shapes.len() {
+            return Err(Error::Artifact(format!(
+                "{name}: expected {} inputs, got {}",
+                spec.in_shapes.len(),
+                inputs.len()
+            )));
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (buf, shape) in inputs.iter().zip(&spec.in_shapes) {
+            let want: usize = shape.iter().product();
+            if buf.len() != want {
+                return Err(Error::Artifact(format!(
+                    "{name}: input length {} != shape {:?}",
+                    buf.len(),
+                    shape
+                )));
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = if dims.len() == 1 {
+                xla::Literal::vec1(buf)
+            } else {
+                xla::Literal::vec1(buf).reshape(&dims)?
+            };
+            lits.push(lit);
+        }
+
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.cache.contains_key(name) {
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::Artifact("non-utf8 path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner.client.compile(&comp)?;
+            inner.cache.insert(name.to_string(), exe);
+        }
+        let exe = inner.cache.get(name).unwrap();
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let parts = result.to_tuple()?;
+        if parts.len() != spec.out_shapes.len() {
+            return Err(Error::Artifact(format!(
+                "{name}: expected {} outputs, got {}",
+                spec.out_shapes.len(),
+                parts.len()
+            )));
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for p in parts {
+            outs.push(p.to_vec::<f32>()?);
+        }
+        Ok(outs)
+    }
+
+    /// Names of loaded artifacts, sorted (for the CLI `artifacts` command).
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.specs.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_shapes_roundtrip() {
+        let s = parse_shapes("2048x2;2048x8;3").unwrap();
+        assert_eq!(s, vec![vec![2048, 2], vec![2048, 8], vec![3]]);
+        assert!(parse_shapes("2048xx2").is_err());
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors() {
+        assert!(load_manifest(Path::new("/nonexistent/dir")).is_err());
+    }
+}

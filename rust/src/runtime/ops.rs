@@ -1,0 +1,323 @@
+//! Operator adapters over the PJRT runtime: the L1 Pallas kernel-MVM
+//! artifacts exposed as [`LinOp`]/[`KernelOp`] so every estimator can run
+//! its iterations against the AOT-compiled hot path.
+
+use std::sync::Arc;
+
+use super::PjrtRuntime;
+use crate::error::Result;
+use crate::kernels::{IsoKernel, Shape};
+use crate::linalg::dense::Mat;
+use crate::operators::{DenseKernelOp, KernelOp, LinOp};
+
+/// Dense kernel MVM backed by an AOT `mvm_<kind>_n<n>_d<d>_b<b>` artifact.
+///
+/// The artifact computes `(K(X,X) + σ² I) V` for a fixed-shape probe block;
+/// single-vector applies are padded to the block width. Data are f32 on the
+/// PJRT side (the estimator accumulations stay f64 in rust).
+pub struct PjrtMvmOp {
+    rt: Arc<PjrtRuntime>,
+    artifact: String,
+    /// Flattened f32 row-major X (n x d).
+    x_flat: Vec<f32>,
+    n: usize,
+    d: usize,
+    b: usize,
+    /// Raw-space [ell, sf, sigma].
+    hypers_raw: [f32; 3],
+}
+
+impl PjrtMvmOp {
+    pub fn new(
+        rt: Arc<PjrtRuntime>,
+        artifact: &str,
+        points: &[Vec<f64>],
+        ell: f64,
+        sf: f64,
+        sigma: f64,
+    ) -> Result<Self> {
+        let spec = rt.spec(artifact)?.clone();
+        if spec.graph != "mvm" {
+            return Err(crate::error::Error::Artifact(format!(
+                "{artifact} is a {} artifact, need mvm",
+                spec.graph
+            )));
+        }
+        let (n, d) = (spec.in_shapes[0][0], spec.in_shapes[0][1]);
+        let b = spec.in_shapes[1][1];
+        if points.len() != n || points[0].len() != d {
+            return Err(crate::error::Error::Artifact(format!(
+                "{artifact} expects X {n}x{d}, got {}x{}",
+                points.len(),
+                points[0].len()
+            )));
+        }
+        let mut x_flat = Vec::with_capacity(n * d);
+        for p in points {
+            for &v in p {
+                x_flat.push(v as f32);
+            }
+        }
+        Ok(PjrtMvmOp {
+            rt,
+            artifact: artifact.to_string(),
+            x_flat,
+            n,
+            d,
+            b,
+            hypers_raw: [ell as f32, sf as f32, sigma as f32],
+        })
+    }
+
+    pub fn batch_width(&self) -> usize {
+        self.b
+    }
+
+    pub fn set_raw_hypers(&mut self, ell: f64, sf: f64, sigma: f64) {
+        self.hypers_raw = [ell as f32, sf as f32, sigma as f32];
+    }
+
+    /// Apply to a full (n x b) block in one artifact execution.
+    pub fn apply_block(&self, block: &Mat) -> Result<Mat> {
+        assert_eq!(block.rows, self.n);
+        assert_eq!(block.cols, self.b);
+        let v: Vec<f32> = block.data.iter().map(|&x| x as f32).collect();
+        let outs = self.rt.run_f32(
+            &self.artifact,
+            &[self.x_flat.clone(), v, self.hypers_raw.to_vec()],
+        )?;
+        let mut out = Mat::zeros(self.n, self.b);
+        for (o, v) in out.data.iter_mut().zip(&outs[0]) {
+            *o = *v as f64;
+        }
+        Ok(out)
+    }
+}
+
+impl LinOp for PjrtMvmOp {
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        // Pad the single vector into the artifact's fixed probe block.
+        let mut block = Mat::zeros(self.n, self.b);
+        for i in 0..self.n {
+            block[(i, 0)] = x[i];
+        }
+        let out = self.apply_block(&block).expect("pjrt mvm failed");
+        for i in 0..self.n {
+            y[i] = out[(i, 0)];
+        }
+    }
+    fn apply_mat(&self, x: &Mat) -> Mat {
+        // Chunk columns into artifact-width blocks.
+        let mut out = Mat::zeros(x.rows, x.cols);
+        let mut j0 = 0;
+        while j0 < x.cols {
+            let w = (x.cols - j0).min(self.b);
+            let mut block = Mat::zeros(self.n, self.b);
+            for j in 0..w {
+                for i in 0..self.n {
+                    block[(i, j)] = x[(i, j0 + j)];
+                }
+            }
+            let res = self.apply_block(&block).expect("pjrt mvm failed");
+            for j in 0..w {
+                for i in 0..self.n {
+                    out[(i, j0 + j)] = res[(i, j)];
+                }
+            }
+            j0 += w;
+        }
+        out
+    }
+}
+
+/// Hybrid kernel operator: **PJRT artifact for the hot MVM**, native dense
+/// kernel for the (hyper-dependent) derivative MVMs. This is the
+/// configuration used when benchmarking the AOT path inside the estimators:
+/// iterations hit the Pallas-lowered graph, gradients stay exact.
+pub struct HybridKernelOp {
+    pub pjrt: PjrtMvmOp,
+    pub native: DenseKernelOp,
+}
+
+impl HybridKernelOp {
+    pub fn new(
+        rt: Arc<PjrtRuntime>,
+        artifact: &str,
+        points: Vec<Vec<f64>>,
+        ell: f64,
+        sf: f64,
+        sigma: f64,
+    ) -> Result<Self> {
+        let d = points[0].len();
+        let pjrt = PjrtMvmOp::new(rt, artifact, &points, ell, sf, sigma)?;
+        let native = DenseKernelOp::new(
+            points,
+            Box::new(IsoKernel::new(Shape::Rbf, d, ell, sf)),
+            sigma,
+        );
+        Ok(HybridKernelOp { pjrt, native })
+    }
+}
+
+impl LinOp for HybridKernelOp {
+    fn n(&self) -> usize {
+        self.pjrt.n()
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.pjrt.apply(x, y);
+    }
+    fn apply_mat(&self, x: &Mat) -> Mat {
+        self.pjrt.apply_mat(x)
+    }
+}
+
+impl KernelOp for HybridKernelOp {
+    fn num_hypers(&self) -> usize {
+        self.native.num_hypers()
+    }
+    fn hypers(&self) -> Vec<f64> {
+        self.native.hypers()
+    }
+    fn set_hypers(&mut self, h: &[f64]) {
+        self.native.set_hypers(h);
+        self.pjrt
+            .set_raw_hypers(h[0].exp(), h[1].exp(), h[2].exp());
+    }
+    fn hyper_names(&self) -> Vec<String> {
+        self.native.hyper_names()
+    }
+    fn apply_grad(&self, i: usize, x: &[f64], y: &mut [f64]) {
+        self.native.apply_grad(i, x, y);
+    }
+    fn apply_grad_all(&self, x: &[f64], ys: &mut [Vec<f64>]) {
+        self.native.apply_grad_all(x, ys);
+    }
+    fn noise_var(&self) -> f64 {
+        self.native.noise_var()
+    }
+}
+
+/// Batched Lanczos via the `lanczos_*` artifact: probes in, tridiagonal
+/// coefficients + solves out. Used by the accelerated SLQ path.
+pub struct PjrtLanczos {
+    rt: Arc<PjrtRuntime>,
+    artifact: String,
+    pub n: usize,
+    pub p: usize,
+    pub m: usize,
+    x_flat: Vec<f32>,
+}
+
+/// Output of the Lanczos artifact (per probe column).
+pub struct PjrtLanczosOut {
+    /// (m, p) alpha coefficients.
+    pub alphas: Mat,
+    /// (m-1, p) beta coefficients.
+    pub betas: Mat,
+    /// (n, p) solve vectors g ≈ K̃^{-1} z.
+    pub g: Mat,
+    /// (p,) probe norms.
+    pub znorm: Vec<f64>,
+}
+
+impl PjrtLanczos {
+    pub fn new(rt: Arc<PjrtRuntime>, artifact: &str, points: &[Vec<f64>]) -> Result<Self> {
+        let spec = rt.spec(artifact)?.clone();
+        if spec.graph != "lanczos" {
+            return Err(crate::error::Error::Artifact(format!(
+                "{artifact} is a {} artifact, need lanczos",
+                spec.graph
+            )));
+        }
+        let (n, d) = (spec.in_shapes[0][0], spec.in_shapes[0][1]);
+        let p = spec.in_shapes[1][1];
+        let m = spec.out_shapes[0][0];
+        if points.len() != n || points[0].len() != d {
+            return Err(crate::error::Error::Artifact(format!(
+                "{artifact} expects X {n}x{d}"
+            )));
+        }
+        let mut x_flat = Vec::with_capacity(n * d);
+        for pnt in points {
+            for &v in pnt {
+                x_flat.push(v as f32);
+            }
+        }
+        Ok(PjrtLanczos { rt, artifact: artifact.to_string(), n, p, m, x_flat })
+    }
+
+    /// Run the whole m-step batched Lanczos in one execution.
+    ///
+    /// The solve vectors `g` are recombined HERE from the returned Krylov
+    /// basis Q with an f64 Thomas solve of `T t = e1 ||z||` — the in-graph
+    /// f32 backward-scan version loses too much accuracy after the HLO-text
+    /// round trip, and the f64 finish costs only O(m n) flops.
+    pub fn run(&self, z: &Mat, ell: f64, sf: f64, sigma: f64) -> Result<PjrtLanczosOut> {
+        assert_eq!((z.rows, z.cols), (self.n, self.p));
+        let zf: Vec<f32> = z.data.iter().map(|&v| v as f32).collect();
+        let h = vec![ell as f32, sf as f32, sigma as f32];
+        let outs = self.rt.run_f32(&self.artifact, &[self.x_flat.clone(), zf, h])?;
+        let to_mat = |v: &[f32], r: usize, c: usize| {
+            let mut m = Mat::zeros(r, c);
+            for (o, x) in m.data.iter_mut().zip(v) {
+                *o = *x as f64;
+            }
+            m
+        };
+        let alphas = to_mat(&outs[0], self.m, self.p);
+        let betas = to_mat(&outs[1], self.m - 1, self.p);
+        let znorm: Vec<f64> = outs[3].iter().map(|&v| v as f64).collect();
+        // outs[4] is Q with shape (m, n, p), row-major.
+        let qbuf = &outs[4];
+        let mut g = Mat::zeros(self.n, self.p);
+        for pcol in 0..self.p {
+            let a: Vec<f64> = (0..self.m).map(|i| alphas[(i, pcol)]).collect();
+            let b: Vec<f64> = (0..self.m - 1).map(|i| betas[(i, pcol)]).collect();
+            let t = crate::estimators::lanczos::thomas_solve_e1(&a, &b, znorm[pcol]);
+            for k in 0..self.m {
+                let tk = t[k];
+                if tk == 0.0 {
+                    continue;
+                }
+                let base = k * self.n * self.p;
+                for i in 0..self.n {
+                    g[(i, pcol)] += tk * qbuf[base + i * self.p + pcol] as f64;
+                }
+            }
+        }
+        Ok(PjrtLanczosOut { alphas, betas, g, znorm })
+    }
+
+    /// SLQ log-determinant estimate from one artifact execution: finishes
+    /// the Gauss quadrature on the returned tridiagonals in rust.
+    pub fn slq_logdet(&self, z: &Mat, ell: f64, sf: f64, sigma: f64) -> Result<(f64, f64)> {
+        let out = self.run(z, ell, sf, sigma)?;
+        let mut per_probe = Vec::with_capacity(self.p);
+        for pcol in 0..self.p {
+            let alphas: Vec<f64> = (0..self.m).map(|i| out.alphas[(i, pcol)]).collect();
+            // f32 Lanczos can produce tiny trailing betas; truncate at the
+            // first (near-)breakdown to keep the quadrature stable.
+            let mut betas: Vec<f64> = Vec::new();
+            let mut steps = self.m;
+            for i in 0..self.m - 1 {
+                let b = out.betas[(i, pcol)];
+                if b <= 1e-7 {
+                    steps = i + 1;
+                    break;
+                }
+                betas.push(b);
+            }
+            let quad = crate::linalg::tridiag::lanczos_quadrature(
+                &alphas[..steps],
+                &betas[..steps - 1],
+                out.znorm[pcol] * out.znorm[pcol],
+                |lam| lam.max(1e-12).ln(),
+            )?;
+            per_probe.push(quad);
+        }
+        Ok(crate::estimators::probes::combine(&per_probe))
+    }
+}

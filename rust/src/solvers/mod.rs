@@ -1,0 +1,2 @@
+//! Iterative solvers over [`crate::operators::LinOp`].
+pub mod cg;

@@ -1,0 +1,167 @@
+//! Criterion-style micro/meso benchmark harness (criterion itself is not in
+//! the offline registry). Warmup, timed iterations, mean/std/min/median, and
+//! aligned table reporting used by every `cargo bench` target.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub median_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.std_s),
+            fmt_time(self.min_s),
+        )
+    }
+}
+
+/// Human time formatting (s / ms / µs / ns).
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{:.3} s", s)
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark runner with a time budget per case.
+pub struct Bench {
+    /// Target wall time to spend measuring each case (seconds).
+    pub budget_s: f64,
+    /// Warmup iterations before measurement.
+    pub warmup: usize,
+    /// Hard cap on measured iterations.
+    pub max_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { budget_s: 1.0, warmup: 1, max_iters: 50, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new(budget_s: f64) -> Self {
+        Bench { budget_s, ..Default::default() }
+    }
+
+    /// Single-iteration runner (for end-to-end experiment timing where one
+    /// run is already seconds-to-minutes).
+    pub fn one_shot() -> Self {
+        Bench { budget_s: 0.0, warmup: 0, max_iters: 1, ..Default::default() }
+    }
+
+    /// Time `f`, which must return something observable so the optimizer
+    /// cannot elide the work; the value is black-boxed.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while times.len() < self.max_iters
+            && (times.len() < 3 || start.elapsed().as_secs_f64() < self.budget_s)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: times.len(),
+            mean_s: stats::mean(&times),
+            std_s: stats::std_dev(&times),
+            min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+            median_s: stats::median(&times),
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Print the column header used by `run` rows.
+    pub fn header(title: &str) {
+        println!("\n== {} ==", title);
+        println!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12}",
+            "case", "iters", "mean", "std", "min"
+        );
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Optimizer black box (std::hint::black_box is stable since 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Render a markdown-ish table with aligned columns from header + rows.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n### {}", title);
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::from("|");
+        for (i, c) in cells.iter().enumerate().take(ncol) {
+            s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+        }
+        s
+    };
+    println!("{}", line(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    println!("{}", line(&sep));
+    for row in rows {
+        println!("{}", line(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bench { budget_s: 0.01, warmup: 1, max_iters: 5, results: vec![] };
+        b.run("noop", || 1 + 1);
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].iters >= 3);
+        assert!(b.results()[0].mean_s >= 0.0);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).contains("µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,5 @@
+//! Shared utilities: RNG, parallel helpers, statistics, bench harness.
+pub mod bench;
+pub mod parallel;
+pub mod rng;
+pub mod stats;

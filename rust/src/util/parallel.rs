@@ -1,0 +1,92 @@
+//! Minimal scoped-thread parallelism (the offline registry has no rayon or
+//! tokio). Probe-level and experiment-level fan-out only needs a parallel
+//! indexed map with static partitioning, which `std::thread::scope` gives us
+//! safely.
+
+/// Number of worker threads to use (capped so tests stay polite).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Parallel indexed map: computes `f(i)` for `i in 0..n`, preserving order.
+///
+/// Falls back to a sequential loop when `n` is small or one thread is
+/// requested — the closure must be `Sync` (called from many threads) and the
+/// result `Send`.
+pub fn par_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, slot_chunk) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                let base = t * chunk;
+                for (k, slot) in slot_chunk.iter_mut().enumerate() {
+                    *slot = Some(f(base + k));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("par_map slot filled")).collect()
+}
+
+/// Parallel for over mutable chunks of a slice: `f(chunk_index, chunk)`.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let threads = threads.max(1);
+    if threads == 1 || data.len() <= chunk {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || f(i, c));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_serial() {
+        let serial: Vec<u64> = (0..257).map(|i| (i * i) as u64).collect();
+        let par = par_map(257, 8, |i| (i * i) as u64);
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn par_map_single_item() {
+        assert_eq!(par_map(1, 8, |i| i + 1), vec![1]);
+        assert_eq!(par_map(0, 8, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn par_chunks_mut_writes_all() {
+        let mut v = vec![0usize; 100];
+        par_chunks_mut(&mut v, 7, 8, |i, c| {
+            for x in c.iter_mut() {
+                *x = i + 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x > 0));
+    }
+}

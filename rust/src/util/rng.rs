@@ -1,0 +1,301 @@
+//! Deterministic, dependency-free random number generation.
+//!
+//! The offline crate registry carries no `rand`, so the stochastic trace
+//! estimators get their probes from this xoshiro256** generator (public
+//! domain construction by Blackman & Vigna), seeded through SplitMix64.
+//! Everything downstream of an experiment seed is fully reproducible.
+
+/// xoshiro256** PRNG with convenience samplers.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second output of the Box–Muller pair.
+    gauss_spare: Option<f64>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, gauss_spare: None }
+    }
+
+    /// Derive an independent stream (for per-thread / per-probe use).
+    pub fn split(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (with pair caching).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(v) = self.gauss_spare.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.uniform();
+            let u2 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.gauss_spare = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Rademacher variate (+1 or -1 with equal probability).
+    #[inline]
+    pub fn rademacher(&mut self) -> f64 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Poisson variate (Knuth for small mean, normal approx for large).
+    pub fn poisson(&mut self, mean: f64) -> u64 {
+        if mean <= 0.0 {
+            return 0;
+        }
+        if mean < 30.0 {
+            let l = (-mean).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.uniform();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let v = mean + mean.sqrt() * self.gaussian();
+            if v < 0.0 {
+                0
+            } else {
+                v.round() as u64
+            }
+        }
+    }
+
+    /// Gamma variate, shape `k` > 0, scale 1 (Marsaglia–Tsang).
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            let u = self.uniform().max(f64::MIN_POSITIVE);
+            return self.gamma(shape + 1.0) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.gaussian();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.uniform();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v;
+            }
+        }
+    }
+
+    /// Negative-binomial variate with `r` failures and success prob derived
+    /// from the mean (gamma–Poisson mixture).
+    pub fn neg_binomial(&mut self, mean: f64, r: f64) -> u64 {
+        let lambda = self.gamma(r) * mean / r;
+        self.poisson(lambda)
+    }
+
+    /// Fill a slice with standard normals.
+    pub fn fill_gaussian(&mut self, out: &mut [f64]) {
+        for v in out.iter_mut() {
+            *v = self.gaussian();
+        }
+    }
+
+    /// Fill a slice with Rademacher variates.
+    pub fn fill_rademacher(&mut self, out: &mut [f64]) {
+        for v in out.iter_mut() {
+            *v = self.rademacher();
+        }
+    }
+
+    /// Random permutation of 0..n (Fisher–Yates).
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = self.below(i + 1);
+            p.swap(i, j);
+        }
+        p
+    }
+
+    /// Latin-hypercube sample of `n` points in the unit box of dim `d`.
+    /// Used for surrogate design points (paper §3.5).
+    pub fn latin_hypercube(&mut self, n: usize, d: usize) -> Vec<Vec<f64>> {
+        let mut pts = vec![vec![0.0; d]; n];
+        for j in 0..d {
+            let perm = self.permutation(n);
+            for (i, &cell) in perm.iter().enumerate() {
+                pts[i][j] = (cell as f64 + self.uniform()) / n as f64;
+            }
+        }
+        pts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Rng::new(7);
+        let mut sum = 0.0;
+        for _ in 0..20_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / 20_000.0 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let g = r.gaussian();
+            m1 += g;
+            m2 += g * g;
+        }
+        m1 /= n as f64;
+        m2 /= n as f64;
+        assert!(m1.abs() < 0.02, "mean {m1}");
+        assert!((m2 - 1.0).abs() < 0.03, "var {m2}");
+    }
+
+    #[test]
+    fn rademacher_is_pm_one() {
+        let mut r = Rng::new(3);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let v = r.rademacher();
+            assert!(v == 1.0 || v == -1.0);
+            sum += v;
+        }
+        assert!(sum.abs() / 10_000.0 < 0.05);
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut r = Rng::new(5);
+        for &lam in &[0.5, 4.0, 60.0] {
+            let n = 20_000;
+            let mut sum = 0.0;
+            for _ in 0..n {
+                sum += r.poisson(lam) as f64;
+            }
+            let m = sum / n as f64;
+            assert!((m - lam).abs() < 0.15 * lam.max(1.0), "lam={lam} m={m}");
+        }
+    }
+
+    #[test]
+    fn neg_binomial_mean() {
+        let mut r = Rng::new(9);
+        let (mean, disp) = (6.0, 3.0);
+        let n = 30_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            sum += r.neg_binomial(mean, disp) as f64;
+        }
+        assert!((sum / n as f64 - mean).abs() < 0.3);
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Rng::new(1);
+        let p = r.permutation(100);
+        let mut seen = vec![false; 100];
+        for &i in &p {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+    }
+
+    #[test]
+    fn lhs_stratified() {
+        let mut r = Rng::new(2);
+        let pts = r.latin_hypercube(10, 3);
+        for j in 0..3 {
+            let mut cells: Vec<usize> =
+                pts.iter().map(|p| (p[j] * 10.0) as usize).collect();
+            cells.sort_unstable();
+            assert_eq!(cells, (0..10).collect::<Vec<_>>());
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Cross-module integration tests: estimators over structured operators,
+//! full training loops, Laplace models, and the experiment drivers
+//! themselves (Small scale smoke + shape assertions).
+
+use gpsld::coordinator::{cli, Scale};
+use gpsld::data;
+use gpsld::estimators::exact;
+use gpsld::estimators::slq::{slq_logdet, SlqOptions};
+use gpsld::gp::laplace::{LaplaceGp, LaplaceOptions};
+use gpsld::gp::likelihoods::Likelihood;
+use gpsld::gp::regression::{Estimator, GpRegression};
+use gpsld::grid::{Grid, GridDim, InterpOrder};
+use gpsld::kernels::{IsoKernel, SeparableKernel, Shape};
+use gpsld::operators::ski::KronKernelOp;
+use gpsld::operators::{DenseKernelOp, KernelOp, SkiOp, SumKernelOp};
+use gpsld::opt::lbfgs::LbfgsOptions;
+use gpsld::util::rng::Rng;
+
+#[test]
+fn slq_on_ski_matches_exact_logdet() {
+    let mut rng = Rng::new(1);
+    let pts: Vec<Vec<f64>> = (0..300).map(|_| vec![rng.uniform_in(0.0, 4.0)]).collect();
+    let grid = Grid::new(vec![GridDim { lo: -0.2, hi: 4.2, m: 500 }]);
+    let ski = SkiOp::new(
+        &pts,
+        grid,
+        SeparableKernel::iso(Shape::Rbf, 1, 0.3, 1.0),
+        0.2,
+        InterpOrder::Cubic,
+        false,
+    );
+    let est = slq_logdet(
+        &ski,
+        &SlqOptions { steps: 30, probes: 10, seed: 2, ..Default::default() },
+    )
+    .unwrap();
+    let truth = exact::exact_logdet(&ski).unwrap();
+    assert!(
+        (est.value - truth).abs() < 0.05 * truth.abs().max(1.0) + 4.0 * est.std_err,
+        "{} vs {truth}",
+        est.value
+    );
+}
+
+#[test]
+fn additive_kernel_slq_where_scaled_eig_cannot_go() {
+    // The paper's motivating case: a sum of kernels has fast MVMs but no
+    // joint eigendecomposition. SLQ handles it; scaled-eig refuses.
+    let mut rng = Rng::new(3);
+    let pts: Vec<Vec<f64>> = (0..150).map(|_| vec![rng.gaussian()]).collect();
+    let a = DenseKernelOp::new(
+        pts.clone(),
+        Box::new(IsoKernel::new(Shape::Rbf, 1, 0.5, 1.0)),
+        1.0,
+    );
+    let b = DenseKernelOp::new(
+        pts,
+        Box::new(IsoKernel::new(Shape::Matern32, 1, 2.0, 0.6)),
+        1.0,
+    );
+    let sum = SumKernelOp::new(vec![Box::new(a), Box::new(b)], 0.3);
+    let est = slq_logdet(
+        &sum,
+        &SlqOptions { steps: 30, probes: 10, seed: 4, ..Default::default() },
+    )
+    .unwrap();
+    let truth = exact::exact_logdet(&sum).unwrap();
+    assert!((est.value - truth).abs() < 0.05 * truth.abs().max(1.0) + 4.0 * est.std_err);
+    assert_eq!(est.grad.len(), sum.num_hypers());
+}
+
+#[test]
+fn diag_corrected_ski_trains_end_to_end() {
+    // Diagonal correction + SLQ + L-BFGS: the combination the
+    // scaled-eigenvalue approach cannot do at all (paper §3.3).
+    let truth_kern = IsoKernel::new(Shape::Matern32, 1, 0.2, 1.0);
+    let d = data::gp_1d(400, 0.0, 4.0, false, &truth_kern, 0.1, 5);
+    let grid = Grid::covering(&d.x_train, &[300], 0.05);
+    let ski = SkiOp::new(
+        &d.x_train,
+        grid,
+        SeparableKernel::iso(Shape::Matern32, 1, 0.5, 0.7),
+        0.3,
+        InterpOrder::Cubic,
+        true,
+    );
+    let mut gp = GpRegression::new(ski, d.y_train.clone());
+    gp.mean = 0.0;
+    let (before, _) = gp
+        .mll(
+            &Estimator::Slq(SlqOptions { steps: 25, probes: 5, seed: 6, ..Default::default() }),
+            false,
+        )
+        .unwrap();
+    let stats = gp
+        .train(
+            &Estimator::Slq(SlqOptions { steps: 25, probes: 5, seed: 6, ..Default::default() }),
+            &LbfgsOptions { max_iters: 10, g_tol: 1e-4, ..Default::default() },
+        )
+        .unwrap();
+    assert!(stats.final_mll > before, "{before} -> {}", stats.final_mll);
+    // Recovered lengthscale within a broad factor of truth.
+    let ell = stats.final_hypers[0].exp();
+    assert!(ell > 0.05 && ell < 0.6, "ell {ell}");
+}
+
+#[test]
+fn lgcp_laplace_recovers_intensity_shape() {
+    let cg = data::hickory(20, 0.8, 0.2, 500.0, 7);
+    let kern = SeparableKernel::iso(Shape::Rbf, 2, 0.2, 0.8);
+    let op = KronKernelOp::new(cg.grid.clone(), kern, 1e-2);
+    let mut gp = LaplaceGp::new(op, cg.counts.clone(), Likelihood::Poisson { offset: cg.offset });
+    let fit = gp.fit(&LaplaceOptions::default()).unwrap();
+    // Latent recovery: correlation with the generating field.
+    let f = &fit.f_hat;
+    let t = &cg.latent;
+    let (mf, mt) = (gpsld::util::stats::mean(f), gpsld::util::stats::mean(t));
+    let mut num = 0.0;
+    let mut df = 0.0;
+    let mut dt = 0.0;
+    for i in 0..f.len() {
+        num += (f[i] - mf) * (t[i] - mt);
+        df += (f[i] - mf).powi(2);
+        dt += (t[i] - mt).powi(2);
+    }
+    let corr = num / (df.sqrt() * dt.sqrt()).max(1e-12);
+    assert!(corr > 0.6, "latent corr {corr}");
+    assert!(fit.log_marginal.is_finite());
+}
+
+#[test]
+fn fig6_shape_diag_correction_restores_uncertainty() {
+    // fig6: diagonal correction must not shrink uncertainty in the gap
+    // below the uncorrected version, and should land nearer FITC.
+    let res = cli::run_experiment("fig6", Scale::Small).unwrap();
+    let get = |name: &str, col: usize| -> f64 {
+        res.rows.iter().find(|r| r[0] == name).unwrap()[col].parse().unwrap()
+    };
+    let diag_gap = get("ski_diag", 1);
+    let nodiag_gap = get("ski_nodiag", 1);
+    let fitc_gap = get("fitc", 1);
+    assert!(diag_gap >= nodiag_gap, "diag {diag_gap} vs nodiag {nodiag_gap}");
+    assert!(
+        (diag_gap - fitc_gap).abs() <= (nodiag_gap - fitc_gap).abs() + 1e-9,
+        "diag should track FITC at least as closely"
+    );
+}
+
+#[test]
+fn fig5_shape_lanczos_tracks_spectrum_mass() {
+    let res = cli::run_experiment("fig5", Scale::Small).unwrap();
+    // The lowest bucket holds most of the spectrum — the Ritz-weighted
+    // count must agree within ~5%; the Chebyshev log error must be largest
+    // in that same bucket (the paper's C.2 argument).
+    let first = &res.rows[0];
+    let true_count: f64 = first[1].parse().unwrap();
+    let ritz_count: f64 = first[2].parse().unwrap();
+    assert!((ritz_count - true_count).abs() / true_count < 0.05);
+    let errs: Vec<f64> = res.rows.iter().map(|r| r[3].parse().unwrap()).collect();
+    let max_err = errs.iter().cloned().fold(0.0, f64::max);
+    assert_eq!(errs[0], max_err, "cheb error should peak near lambda_min");
+}
+
+#[test]
+fn cli_info_and_usage_paths() {
+    assert_eq!(cli::main_with_args(&["info".into()]), 0);
+    assert_eq!(cli::main_with_args(&["exp".into()]), 2);
+}
+
+#[test]
+fn hessian_estimator_is_finite_and_symmetric() {
+    let mut rng = Rng::new(9);
+    let pts: Vec<Vec<f64>> = (0..60).map(|_| vec![rng.uniform_in(0.0, 2.0)]).collect();
+    let mut op = DenseKernelOp::new(
+        pts,
+        Box::new(IsoKernel::new(Shape::Rbf, 1, 0.4, 1.0)),
+        0.3,
+    );
+    let est = gpsld::estimators::hessian::logdet_hessian(
+        &mut op,
+        &gpsld::estimators::hessian::HessianOptions {
+            steps: 30,
+            probes: 20,
+            seed: 10,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    for i in 0..3 {
+        for j in 0..3 {
+            assert!(est.mean[i][j].is_finite());
+            assert_eq!(est.mean[i][j], est.mean[j][i]);
+        }
+    }
+}

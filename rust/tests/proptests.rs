@@ -1,0 +1,234 @@
+//! Property-based tests (the offline registry carries no proptest; this is
+//! a small seeded-generator harness with many random cases per property).
+//! Invariants checked:
+//!   * operators are symmetric and PSD-consistent,
+//!   * SKI MVMs converge to the exact kernel as the grid refines,
+//!   * estimators are unbiased-consistent across seeds,
+//!   * the surrogate interpolates exactly,
+//!   * Toeplitz/Kron structure matches dense materialization.
+
+use gpsld::grid::{Grid, GridDim, InterpOrder};
+use gpsld::kernels::{IsoKernel, Kernel, SeparableKernel, Shape};
+use gpsld::operators::toeplitz::ToeplitzOp;
+use gpsld::operators::{DenseKernelOp, KernelOp, LinOp, SkiOp};
+use gpsld::util::rng::Rng;
+
+const SHAPES: [Shape; 4] = [Shape::Rbf, Shape::Matern12, Shape::Matern32, Shape::Matern52];
+
+fn rand_shape(rng: &mut Rng) -> Shape {
+    SHAPES[rng.below(4)]
+}
+
+/// Property: every kernel operator is symmetric — u^T (K v) == v^T (K u).
+#[test]
+fn prop_operators_symmetric() {
+    let mut rng = Rng::new(100);
+    for case in 0..25 {
+        let n = 20 + rng.below(60);
+        let d = 1 + rng.below(3);
+        let pts: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| rng.gaussian()).collect()).collect();
+        let shape = rand_shape(&mut rng);
+        let op = DenseKernelOp::new(
+            pts,
+            Box::new(IsoKernel::new(shape, d, 0.2 + rng.uniform(), 0.5 + rng.uniform())),
+            0.1 + 0.5 * rng.uniform(),
+        );
+        let u: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let v: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let ku = op.apply_vec(&u);
+        let kv = op.apply_vec(&v);
+        let a: f64 = u.iter().zip(&kv).map(|(x, y)| x * y).sum();
+        let b: f64 = v.iter().zip(&ku).map(|(x, y)| x * y).sum();
+        assert!((a - b).abs() < 1e-8 * (1.0 + a.abs()), "case {case}: {a} vs {b}");
+    }
+}
+
+/// Property: quadratic forms are positive (operators are PD with noise).
+#[test]
+fn prop_operators_positive_definite() {
+    let mut rng = Rng::new(200);
+    for _ in 0..25 {
+        let n = 15 + rng.below(50);
+        let pts: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.gaussian()]).collect();
+        let shape = rand_shape(&mut rng);
+        let op = DenseKernelOp::new(
+            pts,
+            Box::new(IsoKernel::new(shape, 1, 0.3 + rng.uniform(), 1.0)),
+            0.05 + 0.3 * rng.uniform(),
+        );
+        let z: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let kz = op.apply_vec(&z);
+        let q: f64 = z.iter().zip(&kz).map(|(a, b)| a * b).sum();
+        assert!(q > 0.0, "quadratic form {q}");
+    }
+}
+
+/// Property: Toeplitz FFT MVM == dense Toeplitz MVM for random columns.
+#[test]
+fn prop_toeplitz_matches_dense() {
+    let mut rng = Rng::new(300);
+    for _ in 0..30 {
+        let m = 2 + rng.below(120);
+        // SPD-ish decaying column so values stay tame.
+        let col: Vec<f64> =
+            (0..m).map(|k| (1.0 + rng.uniform()) * (-0.1 * k as f64).exp()).collect();
+        let op = ToeplitzOp::new(col.clone());
+        let x: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+        let got = op.apply_vec(&x);
+        for i in 0..m {
+            let want: f64 = (0..m).map(|j| col[i.abs_diff(j)] * x[j]).sum();
+            assert!((got[i] - want).abs() < 1e-8 * (1.0 + want.abs()));
+        }
+    }
+}
+
+/// Property: SKI error decreases as the grid refines (for a fixed smooth
+/// kernel and fixed probe vector).
+#[test]
+fn prop_ski_converges_with_grid_refinement() {
+    let mut rng = Rng::new(400);
+    for _ in 0..8 {
+        let n = 60;
+        let pts: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform_in(0.0, 2.0)]).collect();
+        let ell = 0.3 + 0.4 * rng.uniform();
+        let kern = SeparableKernel::iso(Shape::Rbf, 1, ell, 1.0);
+        let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        // Exact MVM.
+        let mut exact = vec![0.0; n];
+        for i in 0..n {
+            let mut s = 0.04 * x[i];
+            for j in 0..n {
+                s += kern.eval(&pts[i], &pts[j]) * x[j];
+            }
+            exact[i] = s;
+        }
+        let err_at = |m: usize| -> f64 {
+            let grid = Grid::new(vec![GridDim { lo: -0.1, hi: 2.1, m }]);
+            let ski = SkiOp::new(&pts, grid, kern.clone(), 0.2, InterpOrder::Cubic, false);
+            let got = ski.apply_vec(&x);
+            got.iter()
+                .zip(&exact)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max)
+        };
+        let coarse = err_at(24);
+        let fine = err_at(192);
+        assert!(fine <= coarse + 1e-12, "coarse {coarse} fine {fine}");
+    }
+}
+
+/// Property: SLQ logdet estimates from disjoint seeds agree within their
+/// combined error bars (consistency of the a-posteriori error estimate).
+#[test]
+fn prop_slq_seed_consistency() {
+    use gpsld::estimators::slq::{slq_logdet, SlqOptions};
+    let mut rng = Rng::new(500);
+    for case in 0..6 {
+        let n = 100 + rng.below(100);
+        let pts: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform_in(0.0, 3.0)]).collect();
+        let op = DenseKernelOp::new(
+            pts,
+            Box::new(IsoKernel::new(rand_shape(&mut rng), 1, 0.4, 1.0)),
+            0.3,
+        );
+        let a = slq_logdet(
+            &op,
+            &SlqOptions { steps: 30, probes: 10, grads: false, seed: 1000 + case, ..Default::default() },
+        )
+        .unwrap();
+        let b = slq_logdet(
+            &op,
+            &SlqOptions { steps: 30, probes: 10, grads: false, seed: 2000 + case, ..Default::default() },
+        )
+        .unwrap();
+        let tol = 5.0 * (a.std_err + b.std_err) + 0.01 * a.value.abs();
+        assert!(
+            (a.value - b.value).abs() < tol,
+            "case {case}: {} vs {} (tol {tol})",
+            a.value,
+            b.value
+        );
+    }
+}
+
+/// Property: the RBF surrogate interpolates its design values exactly for
+/// random point sets (nonsingularity of the saddle system).
+#[test]
+fn prop_surrogate_interpolates() {
+    use gpsld::estimators::surrogate::RbfSurrogate;
+    let mut rng = Rng::new(600);
+    for _ in 0..20 {
+        let d = 1 + rng.below(4);
+        let n = d + 2 + rng.below(20);
+        let pts: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| rng.gaussian()).collect()).collect();
+        let vals: Vec<f64> = (0..n).map(|_| rng.gaussian() * 10.0).collect();
+        // Skip degenerate point sets (duplicates).
+        let mut ok = true;
+        for i in 0..n {
+            for j in 0..i {
+                if gpsld::kernels::dist(&pts[i], &pts[j]) < 1e-9 {
+                    ok = false;
+                }
+            }
+        }
+        if !ok {
+            continue;
+        }
+        if let Ok(s) = RbfSurrogate::fit(pts.clone(), &vals) {
+            for (p, v) in pts.iter().zip(&vals) {
+                assert!((s.eval(p) - v).abs() < 1e-6 * (1.0 + v.abs()));
+            }
+        }
+    }
+}
+
+/// Property: derivative MVMs match finite differences for random SKI
+/// configurations (routing/batching/state invariance of the operator).
+#[test]
+fn prop_ski_grad_fd_random_configs() {
+    let mut rng = Rng::new(700);
+    for case in 0..6 {
+        let n = 20 + rng.below(20);
+        let d = 1 + rng.below(2);
+        let pts: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect();
+        let ms: Vec<usize> = (0..d).map(|_| 8 + rng.below(8)).collect();
+        let grid = Grid::covering(&pts, &ms, 0.1);
+        let shape = rand_shape(&mut rng);
+        let diag = rng.below(2) == 0;
+        let mut ski = SkiOp::new(
+            &pts,
+            grid,
+            SeparableKernel::iso(shape, d, 0.3 + 0.3 * rng.uniform(), 1.0),
+            0.2,
+            InterpOrder::Cubic,
+            diag,
+        );
+        let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let h0 = ski.hypers();
+        let eps = 1e-6;
+        for i in 0..ski.num_hypers() {
+            let mut y = vec![0.0; n];
+            ski.apply_grad(i, &x, &mut y);
+            let mut hp = h0.clone();
+            hp[i] += eps;
+            ski.set_hypers(&hp);
+            let up = ski.apply_vec(&x);
+            hp[i] -= 2.0 * eps;
+            ski.set_hypers(&hp);
+            let dn = ski.apply_vec(&x);
+            ski.set_hypers(&h0);
+            for p in 0..n {
+                let fd = (up[p] - dn[p]) / (2.0 * eps);
+                assert!(
+                    (y[p] - fd).abs() < 2e-4 * (1.0 + fd.abs()),
+                    "case {case} hyper {i} entry {p}: {} vs {}",
+                    y[p],
+                    fd
+                );
+            }
+        }
+    }
+}

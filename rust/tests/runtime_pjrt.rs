@@ -1,0 +1,165 @@
+//! Integration tests for the PJRT runtime: load the AOT artifacts produced
+//! by `make artifacts` and check their numerics against the native rust
+//! operators. Skipped (with a message) when artifacts/ is absent.
+
+use gpsld::kernels::{IsoKernel, Shape};
+use gpsld::linalg::dense::Mat;
+use gpsld::operators::{DenseKernelOp, KernelOp, LinOp};
+use gpsld::runtime::ops::{HybridKernelOp, PjrtLanczos, PjrtMvmOp};
+use gpsld::runtime::PjrtRuntime;
+use gpsld::util::rng::Rng;
+use std::sync::Arc;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn runtime() -> Option<Arc<PjrtRuntime>> {
+    artifacts_dir().map(|d| Arc::new(PjrtRuntime::new(d).expect("pjrt runtime")))
+}
+
+fn rand_points(n: usize, d: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (0..d).map(|_| rng.gaussian()).collect()).collect()
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(rt) = runtime() else { return };
+    let names = rt.names();
+    assert!(names.iter().any(|n| n.starts_with("mvm_rbf_n512")), "{names:?}");
+    assert!(names.iter().any(|n| n.starts_with("lanczos_rbf")), "{names:?}");
+}
+
+#[test]
+fn pjrt_mvm_matches_native_dense() {
+    let Some(rt) = runtime() else { return };
+    let pts = rand_points(512, 2, 1);
+    let (ell, sf, sigma) = (0.7, 1.2, 0.3);
+    let op = PjrtMvmOp::new(rt, "mvm_rbf_n512_d2_b8", &pts, ell, sf, sigma).unwrap();
+    let native = DenseKernelOp::new(
+        pts.clone(),
+        Box::new(IsoKernel::new(Shape::Rbf, 2, ell, sf)),
+        sigma,
+    );
+    let mut rng = Rng::new(2);
+    let x: Vec<f64> = (0..512).map(|_| rng.gaussian()).collect();
+    let got = op.apply_vec(&x);
+    let want = native.apply_vec(&x);
+    let scale = want.iter().map(|v| v.abs()).fold(1.0, f64::max);
+    for i in 0..512 {
+        assert!(
+            (got[i] - want[i]).abs() / scale < 5e-4,
+            "i={i}: {} vs {} (f32 artifact)",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+#[test]
+fn pjrt_mvm_batch_matches_columns() {
+    let Some(rt) = runtime() else { return };
+    let pts = rand_points(512, 2, 3);
+    let op = PjrtMvmOp::new(rt, "mvm_rbf_n512_d2_b8", &pts, 0.5, 1.0, 0.2).unwrap();
+    let mut rng = Rng::new(4);
+    let x = Mat::from_fn(512, 11, |_, _| rng.gaussian());
+    let batched = op.apply_mat(&x);
+    for j in 0..11 {
+        let col = op.apply_vec(&x.col(j));
+        for i in 0..512 {
+            assert!((batched[(i, j)] - col[i]).abs() < 1e-9);
+        }
+    }
+}
+
+#[test]
+fn hybrid_op_runs_slq_against_artifact() {
+    let Some(rt) = runtime() else { return };
+    let pts = rand_points(512, 2, 5);
+    let hybrid =
+        HybridKernelOp::new(rt, "mvm_rbf_n512_d2_b8", pts.clone(), 0.6, 1.0, 0.3).unwrap();
+    let est = gpsld::estimators::slq::slq_logdet(
+        &hybrid,
+        &gpsld::estimators::slq::SlqOptions {
+            steps: 25,
+            probes: 6,
+            seed: 7,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let exact = gpsld::estimators::exact::exact_logdet(&hybrid.native).unwrap();
+    assert!(
+        (est.value - exact).abs() < 0.05 * exact.abs().max(1.0) + 4.0 * est.std_err,
+        "{} vs {exact}",
+        est.value
+    );
+    // Gradients flow through the native side.
+    assert_eq!(est.grad.len(), hybrid.num_hypers());
+    assert!(est.grad.iter().all(|g| g.is_finite()));
+}
+
+#[test]
+fn pjrt_lanczos_graph_estimates_logdet() {
+    let Some(rt) = runtime() else { return };
+    let pts = rand_points(2048, 2, 6);
+    let lz = PjrtLanczos::new(rt, "lanczos_rbf_n2048_d2_p8_m30", &pts).unwrap();
+    assert_eq!((lz.n, lz.p, lz.m), (2048, 8, 30));
+    let mut rng = Rng::new(8);
+    let z = Mat::from_fn(2048, 8, |_, _| rng.rademacher());
+    let (ell, sf, sigma) = (0.5, 1.0, 0.4);
+    let (est, se) = lz.slq_logdet(&z, ell, sf, sigma).unwrap();
+    // Native SLQ reference on the same problem.
+    let native = DenseKernelOp::new(
+        pts,
+        Box::new(IsoKernel::new(Shape::Rbf, 2, ell, sf)),
+        sigma,
+    );
+    let nat = gpsld::estimators::slq::slq_logdet(
+        &native,
+        &gpsld::estimators::slq::SlqOptions {
+            steps: 30,
+            probes: 8,
+            grads: false,
+            seed: 9,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(
+        (est - nat.value).abs() < 0.03 * nat.value.abs().max(1.0) + 4.0 * (se + nat.std_err),
+        "pjrt {est} (se {se}) vs native {} (se {})",
+        nat.value,
+        nat.std_err
+    );
+}
+
+#[test]
+fn pjrt_lanczos_g_solves_system() {
+    let Some(rt) = runtime() else { return };
+    let pts = rand_points(2048, 2, 10);
+    let lz = PjrtLanczos::new(rt, "lanczos_rbf_n2048_d2_p8_m30", &pts).unwrap();
+    let mut rng = Rng::new(11);
+    let z = Mat::from_fn(2048, 8, |_, _| rng.rademacher());
+    let (ell, sf, sigma) = (0.4, 1.0, 0.5);
+    let out = lz.run(&z, ell, sf, sigma).unwrap();
+    // Check K g ≈ z on the first probe column via the native operator.
+    let native = DenseKernelOp::new(
+        pts,
+        Box::new(IsoKernel::new(Shape::Rbf, 2, ell, sf)),
+        sigma,
+    );
+    let g0 = out.g.col(0);
+    let kg = native.apply_vec(&g0);
+    let z0 = z.col(0);
+    let num: f64 = kg.iter().zip(&z0).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+    let den: f64 = z0.iter().map(|v| v * v).sum::<f64>().sqrt();
+    assert!(num / den < 0.05, "relative residual {}", num / den);
+}
