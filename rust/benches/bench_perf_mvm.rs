@@ -1,22 +1,214 @@
 //! §Perf micro/meso benchmarks: MVM throughput per operator structure
 //! (dense native, PJRT/Pallas artifact, Toeplitz-SKI scaling in m),
-//! Lanczos/Chebyshev estimator cost, and CG solves. These are the numbers
-//! recorded before/after each optimization step in EXPERIMENTS.md §Perf.
+//! blocked `apply_mat` block-size sweeps, Lanczos/Chebyshev estimator cost,
+//! and CG solves. These are the numbers recorded before/after each
+//! optimization step in EXPERIMENTS.md §Perf.
+//!
+//! Machine-readable mode (used by `scripts/bench_smoke.sh`):
+//!
+//! ```text
+//! cargo bench --bench bench_perf_mvm -- --smoke --json BENCH_mvm.json
+//! ```
+//!
+//! runs the dense/Toeplitz/SKI block sweep at n in {1k, 4k}, b in
+//! {1, 8, 32} and writes one JSON row per case:
+//! `{op, n, b, ns_per_apply, gbps}` where `ns_per_apply` is ns per
+//! probe-column and `gbps` is *modeled* memory traffic (documented per
+//! operator below) — a trajectory metric, not a hardware counter.
+
+use std::time::Instant;
 
 use gpsld::coordinator::{cli, Scale};
 use gpsld::data;
 use gpsld::estimators::chebyshev::{chebyshev_logdet, ChebOptions};
 use gpsld::estimators::slq::{slq_logdet, SlqOptions};
 use gpsld::grid::{Grid, InterpOrder};
-use gpsld::kernels::{SeparableKernel, Shape};
-use gpsld::operators::{KernelOp, LinOp, SkiOp};
+use gpsld::kernels::{IsoKernel, SeparableKernel, Shape};
+use gpsld::linalg::dense::Mat;
+use gpsld::operators::{DenseKernelOp, KernelOp, LinOp, SkiOp, ToeplitzOp};
 use gpsld::solvers::cg::cg;
 use gpsld::util::bench::{black_box, Bench};
 use gpsld::util::rng::Rng;
 
+/// One measured sweep case for the JSON report.
+struct SweepRow {
+    op: &'static str,
+    n: usize,
+    b: usize,
+    ns_per_apply: f64,
+    gbps: f64,
+}
+
+/// Time `f` (which applies one full block) and return seconds per call.
+fn time_block(mut f: impl FnMut() -> f64) -> f64 {
+    black_box(f()); // warmup
+    let mut iters = 0usize;
+    let start = Instant::now();
+    let mut elapsed;
+    loop {
+        black_box(f());
+        iters += 1;
+        elapsed = start.elapsed().as_secs_f64();
+        if iters >= 20 || (iters >= 3 && elapsed > 0.3) {
+            break;
+        }
+    }
+    elapsed / iters as f64
+}
+
+fn log2_usize(x: usize) -> usize {
+    (usize::BITS - x.leading_zeros()) as usize - 1
+}
+
+/// Dense/Toeplitz/SKI block sweep at the given sizes. Modeled bytes per
+/// block apply:
+/// * dense: one pass over K plus the block in/out — `8 (n² + 2 n b)`;
+/// * toeplitz: per column, 2 FFTs of length L touching `16 L` bytes per
+///   stage plus one spectrum read — `16 b L (2 log2 L + 1)`;
+/// * ski: two CSR sweeps (16 bytes/nnz) plus the grid-factor circulant —
+///   `b (32 nnz + 16 L (2 log2 L + 1))`.
+fn block_sweep(ns: &[usize], bs: &[usize]) -> Vec<SweepRow> {
+    let mut rows = Vec::new();
+    let mut rng = Rng::new(7);
+    for &n in ns {
+        // Dense kernel operator on 2-D points.
+        let pts2: Vec<Vec<f64>> =
+            (0..n).map(|_| vec![rng.gaussian(), rng.gaussian()]).collect();
+        let dense = DenseKernelOp::new(
+            pts2,
+            Box::new(IsoKernel::new(Shape::Rbf, 2, 0.5, 1.0)),
+            0.3,
+        );
+        for &b in bs {
+            let x = Mat::from_fn(n, b, |_, _| rng.gaussian());
+            let secs = time_block(|| dense.apply_mat(&x).data[0]);
+            let bytes = 8.0 * (n as f64 * n as f64 + 2.0 * (n * b) as f64);
+            rows.push(SweepRow {
+                op: "dense",
+                n,
+                b,
+                ns_per_apply: secs * 1e9 / b as f64,
+                gbps: bytes / secs / 1e9,
+            });
+        }
+
+        // Symmetric Toeplitz operator of the same order.
+        let col: Vec<f64> = (0..n).map(|k| (-0.003 * k as f64).exp()).collect();
+        let top = ToeplitzOp::new(col);
+        let fft_len = (2 * n).next_power_of_two();
+        for &b in bs {
+            let x = Mat::from_fn(n, b, |_, _| rng.gaussian());
+            let secs = time_block(|| top.apply_mat(&x).data[0]);
+            let bytes =
+                16.0 * (b * fft_len) as f64 * (2.0 * log2_usize(fft_len) as f64 + 1.0);
+            rows.push(SweepRow {
+                op: "toeplitz",
+                n,
+                b,
+                ns_per_apply: secs * 1e9 / b as f64,
+                gbps: bytes / secs / 1e9,
+            });
+        }
+
+        // 1-D SKI with a grid of the same order as n.
+        let pts1: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform_in(0.0, 4.0)]).collect();
+        let grid = Grid::covering(&pts1, &[n], 0.05);
+        let ski = SkiOp::new(
+            &pts1,
+            grid,
+            SeparableKernel::iso(Shape::Rbf, 1, 0.05, 1.0),
+            0.1,
+            InterpOrder::Cubic,
+            false,
+        );
+        let nnz = ski.w_matrix().nnz();
+        let grid_fft_len = (2 * ski.m()).next_power_of_two();
+        for &b in bs {
+            let x = Mat::from_fn(n, b, |_, _| rng.gaussian());
+            let secs = time_block(|| ski.apply_mat(&x).data[0]);
+            let bytes = (b as f64)
+                * (32.0 * nnz as f64
+                    + 16.0 * grid_fft_len as f64 * (2.0 * log2_usize(grid_fft_len) as f64 + 1.0));
+            rows.push(SweepRow {
+                op: "ski",
+                n,
+                b,
+                ns_per_apply: secs * 1e9 / b as f64,
+                gbps: bytes / secs / 1e9,
+            });
+        }
+    }
+    rows
+}
+
+fn write_json(rows: &[SweepRow], path: &str) {
+    let mut out = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"op\": \"{}\", \"n\": {}, \"b\": {}, \"ns_per_apply\": {:.1}, \"gbps\": {:.3}}}{}\n",
+            r.op,
+            r.n,
+            r.b,
+            r.ns_per_apply,
+            r.gbps,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("]\n");
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => {
+            eprintln!("failed to write {path}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run_smoke(json_path: Option<&str>) {
+    let rows = block_sweep(&[1000, 4000], &[1, 8, 32]);
+    println!("{:<10} {:>6} {:>4} {:>14} {:>10}", "op", "n", "b", "ns/apply-col", "eff GB/s");
+    for r in &rows {
+        println!(
+            "{:<10} {:>6} {:>4} {:>14.1} {:>10.3}",
+            r.op, r.n, r.b, r.ns_per_apply, r.gbps
+        );
+    }
+    if let Some(path) = json_path {
+        write_json(&rows, path);
+    }
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--smoke") {
+        let json_path = match args.iter().position(|a| a == "--json") {
+            Some(i) => match args.get(i + 1) {
+                Some(p) => Some(p.clone()),
+                None => {
+                    eprintln!("--json needs an output path");
+                    std::process::exit(2);
+                }
+            },
+            None => None,
+        };
+        run_smoke(json_path.as_deref());
+        return;
+    }
+
     let mut b = Bench::new(1.0);
     let mut rng = Rng::new(3);
+
+    // --- Blocked apply_mat sweep (the block-probe engine's headline) ---
+    Bench::header("blocked apply_mat sweep (ns per probe-column)");
+    let sweep = block_sweep(&[2048], &[1, 8, 32]);
+    for r in &sweep {
+        println!(
+            "{:<28} {:>12.1} ns/col {:>10.3} eff GB/s",
+            format!("{}_n{}_b{}", r.op, r.n, r.b),
+            r.ns_per_apply,
+            r.gbps
+        );
+    }
 
     // --- SKI MVM scaling in m (paper: O(n + m log m)) ---
     Bench::header("SKI (Toeplitz) MVM, n = 8000");
@@ -41,19 +233,27 @@ fn main() {
         skis.push(ski);
     }
 
-    // --- Estimators end-to-end on SKI m=4000 ---
-    Bench::header("logdet estimators on SKI n=8000 m=4000 (3 hypers, grads)");
+    // --- Estimators end-to-end on SKI m=4000, block-size sweep ---
+    Bench::header("logdet estimators on SKI n=8000 m=4000 (3 hypers)");
     let ski = &skis[1];
-    b.run("slq 25x5 with grads", || {
-        black_box(
-            slq_logdet(
-                ski,
-                &SlqOptions { steps: 25, probes: 5, seed: 1, ..Default::default() },
+    for bsz in [1usize, 8, 32] {
+        b.run(&format!("slq 25x32 grads block={bsz}"), || {
+            black_box(
+                slq_logdet(
+                    ski,
+                    &SlqOptions {
+                        steps: 25,
+                        probes: 32,
+                        seed: 1,
+                        block_size: bsz,
+                        ..Default::default()
+                    },
+                )
+                .unwrap()
+                .value,
             )
-            .unwrap()
-            .value,
-        )
-    });
+        });
+    }
     b.run("slq 25x5 value only", || {
         black_box(
             slq_logdet(

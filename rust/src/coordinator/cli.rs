@@ -1,11 +1,14 @@
 //! Hand-rolled CLI (clap is not in the offline registry).
 //!
 //! ```text
-//! gpsld exp <id> [--scale small|paper]     run a paper experiment
-//! gpsld exp all  [--scale small|paper]     run every experiment
-//! gpsld artifacts                          list/verify PJRT artifacts
-//! gpsld info                               version + feature summary
+//! gpsld exp <id> [--scale small|paper] [--block <b>]   run a paper experiment
+//! gpsld exp all  [--scale small|paper] [--block <b>]   run every experiment
+//! gpsld artifacts                                      list/verify PJRT artifacts
+//! gpsld info                                           version + feature summary
 //! ```
+//!
+//! `--block <b>` sets the probe-block width used by every estimator in the
+//! run (the default for `SlqOptions`/`ChebOptions` and the service layer).
 
 use super::{experiments, figures, ExpResult, Scale};
 
@@ -17,7 +20,8 @@ const EXP_IDS: &[&str] = &[
 pub fn usage() -> String {
     format!(
         "gpsld {} — Scalable Log Determinants for GP Kernel Learning (NIPS 2017 repro)\n\n\
-         USAGE:\n  gpsld exp <id|all> [--scale small|paper] [--md <file>]\n  gpsld artifacts\n  gpsld info\n\n\
+         USAGE:\n  gpsld exp <id|all> [--scale small|paper] [--block <b>] [--md <file>]\n  gpsld artifacts\n  gpsld info\n\n\
+         `--block <b>` sets the default probe-block width for blocked MVMs.\n\n\
          EXPERIMENTS: {}\n",
         crate::version(),
         EXP_IDS.join(", ")
@@ -64,6 +68,16 @@ pub fn main_with_args(args: &[String]) -> i32 {
                     }
                     "--md" => {
                         md_out = args.get(i + 1).cloned();
+                        i += 2;
+                    }
+                    "--block" => {
+                        match args.get(i + 1).and_then(|s| s.parse::<usize>().ok()) {
+                            Some(b) if b >= 1 => crate::estimators::set_default_block_size(b),
+                            _ => {
+                                eprintln!("--block needs a positive integer");
+                                return 2;
+                            }
+                        }
                         i += 2;
                     }
                     other => {

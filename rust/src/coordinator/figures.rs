@@ -342,6 +342,38 @@ pub fn perf_mvm(scale: Scale) -> ExpResult {
         format!("{:.3}", t0.elapsed().as_secs_f64() * 1e3 / reps as f64),
     ]);
 
+    // Block-size sweep over the native blocked path (ms per probe-column):
+    // the b=1 vs b=32 ratio is the headline block-amortization win.
+    for &bsz in &[1usize, 8, 32] {
+        let xb = crate::linalg::dense::Mat::from_fn(2048, bsz, |_, _| rng.gaussian());
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            crate::util::bench::black_box(dense.apply_mat(&xb).data[0]);
+        }
+        rows.push(vec![
+            format!("dense_apply_mat_n2048_b{bsz}_per_col"),
+            format!("{:.4}", t0.elapsed().as_secs_f64() * 1e3 / (reps * bsz) as f64),
+        ]);
+    }
+
+    // Toeplitz block sweep (shared circulant spectrum + FFT plan).
+    {
+        let m = 16384;
+        let tcol: Vec<f64> = (0..m).map(|k| (-0.002 * k as f64).exp()).collect();
+        let top = crate::operators::ToeplitzOp::new(tcol);
+        for &bsz in &[1usize, 8, 32] {
+            let xb = crate::linalg::dense::Mat::from_fn(m, bsz, |_, _| rng.gaussian());
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                crate::util::bench::black_box(top.apply_mat(&xb).data[0]);
+            }
+            rows.push(vec![
+                format!("toeplitz_apply_mat_m16384_b{bsz}_per_col"),
+                format!("{:.4}", t0.elapsed().as_secs_f64() * 1e3 / (reps * bsz) as f64),
+            ]);
+        }
+    }
+
     // PJRT artifact (8-wide block amortized per column).
     if let Ok(rt) = crate::runtime::PjrtRuntime::new("artifacts") {
         let rt = std::sync::Arc::new(rt);
@@ -385,7 +417,8 @@ pub fn perf_mvm(scale: Scale) -> ExpResult {
         ]);
     }
 
-    // End-to-end SLQ (25 steps, 5 probes, with grads) on SKI m=4000.
+    // End-to-end SLQ (25 steps, 5 probes, with grads) on SKI m=4000, plus
+    // the SKI block sweep.
     {
         let grid = Grid::covering(&d.x_train, &[4000], 0.05);
         let ski = SkiOp::new(
@@ -396,6 +429,18 @@ pub fn perf_mvm(scale: Scale) -> ExpResult {
             InterpOrder::Cubic,
             false,
         );
+        for &bsz in &[1usize, 8, 32] {
+            let xb =
+                crate::linalg::dense::Mat::from_fn(d.n_train(), bsz, |_, _| rng.gaussian());
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                crate::util::bench::black_box(ski.apply_mat(&xb).data[0]);
+            }
+            rows.push(vec![
+                format!("ski_apply_mat_n8000_m4000_b{bsz}_per_col"),
+                format!("{:.4}", t0.elapsed().as_secs_f64() * 1e3 / (reps * bsz) as f64),
+            ]);
+        }
         let t0 = Instant::now();
         let _ = slq_logdet(
             &ski,

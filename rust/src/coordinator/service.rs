@@ -29,6 +29,7 @@ where
             let out = &out;
             let builder = &builder;
             scope.spawn(move || {
+                crate::util::parallel::mark_pool_worker();
                 let mut eval = builder();
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);

@@ -1,45 +1,67 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — `thiserror`
+//! is not in the offline registry).
 
-use thiserror::Error;
+use std::fmt;
 
 pub type Result<T> = std::result::Result<T, Error>;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("matrix is not positive definite (pivot {pivot}, value {value})")]
     NotPositiveDefinite { pivot: usize, value: f64 },
-
-    #[error("matrix is singular at pivot {pivot}")]
     Singular { pivot: usize },
-
-    #[error("eigensolver failed to converge at index {index}")]
     EigFailed { index: usize },
-
-    #[error("CG did not converge: residual {residual:.3e} after {iters} iterations")]
     CgNoConvergence { residual: f64, iters: usize },
-
-    #[error("dimension mismatch: {context} (expected {expected}, got {got})")]
     DimMismatch { context: &'static str, expected: usize, got: usize },
-
-    #[error("invalid configuration: {0}")]
     Config(String),
-
-    #[error("artifact error: {0}")]
     Artifact(String),
-
-    #[error("xla error: {0}")]
     Xla(String),
-
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("optimization failed: {0}")]
+    Io(std::io::Error),
     Optim(String),
-
-    #[error("{0}")]
     Msg(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::NotPositiveDefinite { pivot, value } => {
+                write!(f, "matrix is not positive definite (pivot {pivot}, value {value})")
+            }
+            Error::Singular { pivot } => write!(f, "matrix is singular at pivot {pivot}"),
+            Error::EigFailed { index } => {
+                write!(f, "eigensolver failed to converge at index {index}")
+            }
+            Error::CgNoConvergence { residual, iters } => {
+                write!(f, "CG did not converge: residual {residual:.3e} after {iters} iterations")
+            }
+            Error::DimMismatch { context, expected, got } => {
+                write!(f, "dimension mismatch: {context} (expected {expected}, got {got})")
+            }
+            Error::Config(s) => write!(f, "invalid configuration: {s}"),
+            Error::Artifact(s) => write!(f, "artifact error: {s}"),
+            Error::Xla(s) => write!(f, "xla error: {s}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Optim(s) => write!(f, "optimization failed: {s}"),
+            Error::Msg(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(format!("{e:?}"))

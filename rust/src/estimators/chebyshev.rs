@@ -7,14 +7,21 @@
 //! `log|K̃| ≈ sum_j c_j tr(T_j(B))`, estimated stochastically by coupled
 //! three-term recurrences `w_j = T_j(B) z` and `∂w_j/∂θ_i` — each
 //! derivative costs two extra MVMs per term (§3.1).
+//!
+//! The driver is **blocked**: the recurrences run over `n x b` probe
+//! blocks, so every Chebyshev term costs one block MVM (plus `2 nh` block
+//! MVMs for the coupled derivative recurrences) regardless of how many
+//! probes ride in the block. Per-column arithmetic is identical to the
+//! single-probe recurrence, so estimates are bit-identical across block
+//! sizes.
 
 use super::lanczos::extremal_eigs;
 use super::probes::{combine, ProbeKind, ProbeSet};
-use super::LogdetEstimate;
+use super::{BlockPartition, LogdetEstimate};
 use crate::error::Result;
-use crate::operators::KernelOp;
+use crate::linalg::dense::Mat;
+use crate::operators::{KernelOp, LinOp};
 use crate::util::parallel;
-use crate::util::stats::dot;
 
 /// Options for the Chebyshev estimator.
 #[derive(Clone, Copy, Debug)]
@@ -28,6 +35,9 @@ pub struct ChebOptions {
     /// Eigenvalue bracket; estimated via Lanczos Ritz values when `None`.
     pub lambda_bounds: Option<(f64, f64)>,
     pub threads: usize,
+    /// Probe-block width b for blocked MVMs (1 reproduces the per-probe
+    /// path apply-for-apply; estimates are identical either way).
+    pub block_size: usize,
 }
 
 impl Default for ChebOptions {
@@ -40,6 +50,7 @@ impl Default for ChebOptions {
             grads: true,
             lambda_bounds: None,
             threads: parallel::default_threads(),
+            block_size: super::default_block_size(),
         }
     }
 }
@@ -65,6 +76,15 @@ pub fn cheb_coeffs(f: impl Fn(f64) -> f64, m: usize) -> Vec<f64> {
         .collect()
 }
 
+/// Per-block partial results, kept per-column for block-width-independent
+/// reduction.
+struct PerBlock {
+    quads: Vec<f64>,
+    grad_terms: Vec<Vec<f64>>,
+    mvms: usize,
+    block_applies: usize,
+}
+
 /// Estimate `log|K̃|` (and optionally all derivatives) via stochastic
 /// Chebyshev moments.
 pub fn chebyshev_logdet(op: &dyn KernelOp, opts: &ChebOptions) -> Result<LogdetEstimate> {
@@ -83,109 +103,119 @@ pub fn chebyshev_logdet(op: &dyn KernelOp, opts: &ChebOptions) -> Result<LogdetE
     let scale = 2.0 / (b - a);
     let shift = (b + a) / (b - a);
 
-    // B x = scale * K̃ x - shift * x; dB/dθ x = scale * dK̃ x.
-    let apply_b = |x: &[f64], y: &mut [f64]| {
-        op.apply(x, y);
-        for i in 0..n {
-            y[i] = scale * y[i] - shift * x[i];
+    // B X = scale * K̃ X - shift * X; dB/dθ X = scale * dK̃ X.
+    let apply_b_mat = |x: &Mat| -> Mat {
+        let mut y = op.apply_mat(x);
+        for (yi, xi) in y.data.iter_mut().zip(&x.data) {
+            *yi = scale * *yi - shift * *xi;
         }
+        y
     };
 
     let probes = ProbeSet::new(n, opts.probes, opts.kind, opts.seed);
+    let z = probes.as_mat();
+    let part = BlockPartition::new(opts.probes, opts.block_size);
 
-    struct PerProbe {
-        quad: f64,
-        grad_terms: Vec<f64>,
-        mvms: usize,
-    }
-
-    let results: Vec<PerProbe> = parallel::par_map(probes.count(), opts.threads, |p| {
-        let z = &probes.z[p];
+    let results: Vec<PerBlock> = parallel::par_map(part.nblocks, opts.threads, |bi| {
+        let (j0, wcols) = part.range(bi);
+        let zblk = z.sub_cols(j0, wcols);
         let mut mvms = 0;
-        // w recurrence.
-        let mut w_prev = z.clone(); // w_0 = z
-        let mut w = vec![0.0; n]; // w_1 = B z
-        apply_b(z, &mut w);
-        mvms += 1;
+        let mut block_applies = 0;
+        // w recurrence over the whole block.
+        let mut w_prev = zblk.clone(); // w_0 = z
+        let mut w = apply_b_mat(&zblk); // w_1 = B z
+        mvms += wcols;
+        block_applies += 1;
         // dw recurrences per hyper.
-        let mut dw_prev: Vec<Vec<f64>> = vec![vec![0.0; n]; if opts.grads { nh } else { 0 }];
-        let mut dw: Vec<Vec<f64>> = Vec::new();
+        let mut dw_prev: Vec<Mat> = Vec::new();
+        let mut dw: Vec<Mat> = Vec::new();
         if opts.grads {
-            dw = vec![vec![0.0; n]; nh];
-            let mut tmp: Vec<Vec<f64>> = vec![vec![0.0; n]; nh];
-            op.apply_grad_all(z, &mut tmp);
-            mvms += nh;
-            for i in 0..nh {
-                for t in 0..n {
-                    dw[i][t] = scale * tmp[i][t];
+            dw_prev = vec![Mat::zeros(n, wcols); nh];
+            dw = op.apply_grad_all_mat(&zblk);
+            mvms += nh * wcols;
+            block_applies += nh;
+            for m in dw.iter_mut() {
+                for v in m.data.iter_mut() {
+                    *v *= scale;
                 }
             }
         }
 
-        let mut quad = coeffs[0] * dot(z, &w_prev) + coeffs[1] * dot(z, &w);
-        let mut grad_terms = vec![0.0; if opts.grads { nh } else { 0 }];
-        if opts.grads {
-            for i in 0..nh {
-                grad_terms[i] = coeffs[1] * dot(z, &dw[i]);
+        let mut quads = Vec::with_capacity(wcols);
+        let mut grad_terms: Vec<Vec<f64>> = Vec::with_capacity(wcols);
+        for c in 0..wcols {
+            quads.push(
+                coeffs[0] * zblk.col_dot_pair(&w_prev, c) + coeffs[1] * zblk.col_dot_pair(&w, c),
+            );
+            if opts.grads {
+                grad_terms
+                    .push((0..nh).map(|i| coeffs[1] * zblk.col_dot_pair(&dw[i], c)).collect());
             }
         }
 
-        let mut bw = vec![0.0; n];
-        let mut dk_w: Vec<Vec<f64>> = if opts.grads {
-            vec![vec![0.0; n]; nh]
-        } else {
-            Vec::new()
-        };
         for j in 2..=opts.degree {
             // w_{j} = 2 B w_{j-1} - w_{j-2}
-            apply_b(&w, &mut bw);
-            mvms += 1;
-            let mut w_next = vec![0.0; n];
-            for t in 0..n {
-                w_next[t] = 2.0 * bw[t] - w_prev[t];
+            let bw = apply_b_mat(&w);
+            mvms += wcols;
+            block_applies += 1;
+            let mut w_next = Mat::zeros(n, wcols);
+            for ((o, bwt), wp) in w_next.data.iter_mut().zip(&bw.data).zip(&w_prev.data) {
+                *o = 2.0 * bwt - wp;
             }
             if opts.grads {
                 // dw_{j} = 2 (dB w_{j-1} + B dw_{j-1}) - dw_{j-2}
-                op.apply_grad_all(&w, &mut dk_w);
-                mvms += nh;
+                let dk_w = op.apply_grad_all_mat(&w);
+                mvms += nh * wcols;
+                block_applies += nh;
                 for i in 0..nh {
-                    let mut b_dw = vec![0.0; n];
-                    apply_b(&dw[i], &mut b_dw);
-                    mvms += 1;
-                    let mut next = vec![0.0; n];
-                    for t in 0..n {
-                        next[t] =
-                            2.0 * (scale * dk_w[i][t] + b_dw[t]) - dw_prev[i][t];
+                    let b_dw = apply_b_mat(&dw[i]);
+                    mvms += wcols;
+                    block_applies += 1;
+                    let mut next = Mat::zeros(n, wcols);
+                    for (((o, dk), bd), dp) in next
+                        .data
+                        .iter_mut()
+                        .zip(&dk_w[i].data)
+                        .zip(&b_dw.data)
+                        .zip(&dw_prev[i].data)
+                    {
+                        *o = 2.0 * (scale * dk + bd) - dp;
                     }
                     dw_prev[i] = std::mem::replace(&mut dw[i], next);
                 }
             }
             w_prev = std::mem::replace(&mut w, w_next);
-            quad += coeffs[j] * dot(z, &w);
-            if opts.grads {
-                for i in 0..nh {
-                    grad_terms[i] += coeffs[j] * dot(z, &dw[i]);
+            for c in 0..wcols {
+                quads[c] += coeffs[j] * zblk.col_dot_pair(&w, c);
+                if opts.grads {
+                    for i in 0..nh {
+                        grad_terms[c][i] += coeffs[j] * zblk.col_dot_pair(&dw[i], c);
+                    }
                 }
             }
         }
-        PerProbe { quad, grad_terms, mvms }
+        PerBlock { quads, grad_terms, mvms, block_applies }
     });
 
     let mut per_probe = Vec::with_capacity(opts.probes);
     let mut grad = vec![0.0; if opts.grads { nh } else { 0 }];
     let mut mvms = 0;
+    let mut block_applies = 0;
     for r in results {
-        per_probe.push(r.quad);
-        for (gi, t) in grad.iter_mut().zip(&r.grad_terms) {
-            *gi += t;
+        per_probe.extend(r.quads);
+        for gt in &r.grad_terms {
+            for (gi, t) in grad.iter_mut().zip(gt) {
+                *gi += t;
+            }
         }
         mvms += r.mvms;
+        block_applies += r.block_applies;
     }
     for gi in grad.iter_mut() {
         *gi /= opts.probes as f64;
     }
     let (value, std_err) = combine(&per_probe);
-    Ok(LogdetEstimate { value, grad, std_err, per_probe, mvms })
+    Ok(LogdetEstimate { value, grad, std_err, per_probe, mvms, block_applies })
 }
 
 #[cfg(test)]
@@ -299,5 +329,43 @@ mod tests {
         )
         .unwrap();
         assert!(hi.mvms > 3 * lo.mvms);
+    }
+
+    #[test]
+    fn block_size_does_not_change_estimates() {
+        let o = op(70, 0.4, 9);
+        let bounds = Some((0.05, 40.0));
+        let base = chebyshev_logdet(
+            &o,
+            &ChebOptions {
+                degree: 30,
+                probes: 6,
+                seed: 11,
+                lambda_bounds: bounds,
+                block_size: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for bs in [2, 4, 6, 32] {
+            let blocked = chebyshev_logdet(
+                &o,
+                &ChebOptions {
+                    degree: 30,
+                    probes: 6,
+                    seed: 11,
+                    lambda_bounds: bounds,
+                    block_size: bs,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            assert_eq!(base.value.to_bits(), blocked.value.to_bits(), "bs={bs}");
+            assert_eq!(base.std_err.to_bits(), blocked.std_err.to_bits(), "bs={bs}");
+            for (a, b) in base.grad.iter().zip(&blocked.grad) {
+                assert_eq!(a.to_bits(), b.to_bits(), "bs={bs} grad");
+            }
+            assert_eq!(base.mvms, blocked.mvms, "bs={bs} probe-column mvms");
+        }
     }
 }

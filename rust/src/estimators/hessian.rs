@@ -73,6 +73,13 @@ pub struct HessianEstimate {
 }
 
 /// Stochastic estimate of the Hessian of `log|K̃|` w.r.t. all hypers.
+///
+/// All first-derivative work runs blocked: the probe pairs are drawn as two
+/// `n x p` matrices, the Lanczos solves go through the block driver inside
+/// [`slq_solves`], and `∂iK̃ Z` / `∂iK̃ W` are computed as whole-probe-set
+/// blocks by `apply_grad_all_mat` (one pass over kernel entries per set
+/// instead of one per probe). Only the FD second-derivative MVMs stay
+/// per-probe — they mutate the operator's hypers.
 pub fn logdet_hessian(op: &mut dyn KernelOp, opts: &HessianOptions) -> Result<HessianEstimate> {
     let n = op.n();
     let nh = op.num_hypers();
@@ -83,14 +90,12 @@ pub fn logdet_hessian(op: &mut dyn KernelOp, opts: &HessianOptions) -> Result<He
     let qs = slq_solves(&*op, &zs, opts.steps, opts.threads); // q = K^-1 z
     let hs = slq_solves(&*op, &ws, opts.steps, opts.threads); // h = K^-1 w
 
-    // Precompute first-derivative MVMs per probe.
-    // dkz[p][i] = ∂iK z_p ; dkw[p][i] = ∂iK w_p.
-    let mut dkz = vec![vec![vec![0.0; n]; nh]; opts.probes];
-    let mut dkw = vec![vec![vec![0.0; n]; nh]; opts.probes];
-    for p in 0..opts.probes {
-        op.apply_grad_all(&zs.z[p], &mut dkz[p]);
-        op.apply_grad_all(&ws.z[p], &mut dkw[p]);
-    }
+    // Blocked first-derivative MVMs over the whole probe sets:
+    // dkz[i] column p = ∂iK z_p ; dkw[i] column p = ∂iK w_p.
+    let zmat = zs.as_mat();
+    let wmat = ws.as_mat();
+    let dkz = op.apply_grad_all_mat(&zmat);
+    let dkw = op.apply_grad_all_mat(&wmat);
 
     let mut mean = vec![vec![0.0; nh]; nh];
     let mut std_err = vec![vec![0.0; nh]; nh];
@@ -102,7 +107,7 @@ pub fn logdet_hessian(op: &mut dyn KernelOp, opts: &HessianOptions) -> Result<He
                 let d2kz = apply_grad2_fd(op, i, j, &zs.z[p], opts.fd_eps);
                 let t1 = dot(&qs[p], &d2kz);
                 // Second term: (q^T ∂iK w)(h^T ∂jK z).
-                let t2 = dot(&qs[p], &dkw[p][i]) * dot(&hs[p], &dkz[p][j]);
+                let t2 = dkw[i].col_dot(p, &qs[p]) * dkz[j].col_dot(p, &hs[p]);
                 samples.push(t1 - t2);
             }
             let v = crate::util::stats::mean(&samples);

@@ -5,6 +5,7 @@
 //! and cites practical fixes [33, 34]; at the small step counts used here
 //! (m ≤ ~100) full reorthogonalization is the simplest sound remedy.
 
+use crate::linalg::dense::Mat;
 use crate::operators::LinOp;
 use crate::util::rng::Rng;
 use crate::util::stats::{axpy, dot, norm2};
@@ -58,68 +59,131 @@ pub fn thomas_solve_e1(alphas: &[f64], betas: &[f64], rhs0: f64) -> Vec<f64> {
     t
 }
 
-/// Run `m` Lanczos steps on `op` starting from `z`.
-pub fn lanczos(op: &dyn LinOp, z: &[f64], m: usize) -> LanczosResult {
+/// Run `m` Lanczos steps on `op` starting from `z` — thin wrapper over the
+/// single-column case of [`lanczos_block`], so the two paths cannot drift.
+pub fn lanczos<O: LinOp + ?Sized>(op: &O, z: &[f64], m: usize) -> LanczosResult {
+    assert_eq!(z.len(), op.n());
+    lanczos_block(op, &Mat::from_col(z), m).pop().expect("one column in, one result out")
+}
+
+/// Per-column Lanczos state inside the block driver.
+struct ColState {
+    q: Vec<Vec<f64>>,
+    alphas: Vec<f64>,
+    betas: Vec<f64>,
+    znorm: f64,
+    mvms: usize,
+    active: bool,
+}
+
+/// Run `m` Lanczos steps on **each column** of `z` (an `n x b` probe
+/// block), batching every iteration's MVMs into one [`LinOp::apply_mat`]
+/// call over the still-active columns.
+///
+/// This is the batched-probe driver of the paper's SLQ estimator: the
+/// per-column three-term recurrence, full reorthogonalization, and
+/// breakdown handling are *identical* to [`lanczos`] (columns never mix),
+/// so results are bitwise equal to running `lanczos` per probe — only the
+/// number of passes over the operator's structure changes. A column that
+/// finds an invariant subspace (`beta ~ 0`) drops out of subsequent block
+/// applies; the block shrinks rather than padding with dead columns.
+pub fn lanczos_block<O: LinOp + ?Sized>(op: &O, z: &Mat, m: usize) -> Vec<LanczosResult> {
     let n = op.n();
-    assert_eq!(z.len(), n);
-    let znorm = norm2(z);
-    assert!(znorm > 0.0, "zero start vector");
-    let mut q: Vec<Vec<f64>> = Vec::with_capacity(m);
-    q.push(z.iter().map(|v| v / znorm).collect());
-    let mut alphas = Vec::with_capacity(m);
-    let mut betas = Vec::with_capacity(m.saturating_sub(1));
+    assert_eq!(z.rows, n);
+    let b = z.cols;
+    let mut cols: Vec<ColState> = (0..b)
+        .map(|c| {
+            let zc = z.col(c);
+            let znorm = norm2(&zc);
+            assert!(znorm > 0.0, "zero start vector");
+            ColState {
+                q: vec![zc.iter().map(|v| v / znorm).collect()],
+                alphas: Vec::with_capacity(m),
+                betas: Vec::with_capacity(m.saturating_sub(1)),
+                znorm,
+                mvms: 0,
+                active: m > 0,
+            }
+        })
+        .collect();
+
     let mut w = vec![0.0; n];
-    let mut mvms = 0;
     for j in 0..m {
-        op.apply(&q[j], &mut w);
-        mvms += 1;
-        let alpha = dot(&q[j], &w);
-        alphas.push(alpha);
-        axpy(-alpha, &q[j], &mut w);
-        if j > 0 {
-            let b: f64 = betas[j - 1];
-            axpy(-b, &q[j - 1], &mut w);
+        let act: Vec<usize> = (0..b).filter(|&c| cols[c].active).collect();
+        if act.is_empty() {
+            break;
         }
-        // Full reorthogonalization. One modified-Gram-Schmidt pass, with a
-        // second pass only when the first one removed a large component
-        // ("twice is enough" — Parlett — but the second pass is usually a
-        // no-op and costs O(n m) per step; §Perf opt 2).
-        let before = norm2(&w);
-        let mut removed = 0.0f64;
-        for qk in q.iter() {
-            let p = dot(qk, &w);
-            if p != 0.0 {
-                axpy(-p, qk, &mut w);
-                removed = removed.max(p.abs());
+        // One block MVM for every active column's current basis vector.
+        let mut xb = Mat::zeros(n, act.len());
+        for (k, &c) in act.iter().enumerate() {
+            for i in 0..n {
+                xb[(i, k)] = cols[c].q[j][i];
             }
         }
-        if removed > 0.5 * before {
-            for qk in q.iter() {
+        let wb = op.apply_mat(&xb);
+        for (k, &c) in act.iter().enumerate() {
+            let st = &mut cols[c];
+            st.mvms += 1;
+            wb.col_into(k, &mut w);
+            let alpha = dot(&st.q[j], &w);
+            st.alphas.push(alpha);
+            axpy(-alpha, &st.q[j], &mut w);
+            if j > 0 {
+                let bprev: f64 = st.betas[j - 1];
+                axpy(-bprev, &st.q[j - 1], &mut w);
+            }
+            // Full reorthogonalization. One modified-Gram-Schmidt pass,
+            // with a second pass only when the first removed a large
+            // component ("twice is enough" — Parlett — but the second pass
+            // is usually a no-op and costs O(n m) per step; §Perf opt 2).
+            let before = norm2(&w);
+            let mut removed = 0.0f64;
+            for qk in st.q.iter() {
                 let p = dot(qk, &w);
                 if p != 0.0 {
                     axpy(-p, qk, &mut w);
+                    removed = removed.max(p.abs());
                 }
             }
+            if removed > 0.5 * before {
+                for qk in st.q.iter() {
+                    let p = dot(qk, &w);
+                    if p != 0.0 {
+                        axpy(-p, qk, &mut w);
+                    }
+                }
+            }
+            if j + 1 == m {
+                st.active = false;
+                continue;
+            }
+            let beta = norm2(&w);
+            if beta < 1e-12 * st.znorm {
+                // Invariant subspace found: T is exact at this size.
+                st.active = false;
+                continue;
+            }
+            st.betas.push(beta);
+            st.q.push(w.iter().map(|v| v / beta).collect());
         }
-        if j + 1 == m {
-            break;
-        }
-        let beta = norm2(&w);
-        if beta < 1e-12 * znorm {
-            // Invariant subspace found: T is exact at this size.
-            break;
-        }
-        betas.push(beta);
-        q.push(w.iter().map(|v| v / beta).collect());
     }
-    LanczosResult { alphas, betas, q, znorm, mvms }
+
+    cols.into_iter()
+        .map(|st| LanczosResult {
+            alphas: st.alphas,
+            betas: st.betas,
+            q: st.q,
+            znorm: st.znorm,
+            mvms: st.mvms,
+        })
+        .collect()
 }
 
 /// Extremal eigenvalue estimates from a short Lanczos run on a random
 /// probe, with safety margins — used to scale the Chebyshev expansion
 /// (which, unlike Lanczos, needs to know the spectrum's interval; supp. C.2
 /// lists this as one of Lanczos' advantages).
-pub fn extremal_eigs(op: &dyn LinOp, steps: usize, seed: u64) -> crate::error::Result<(f64, f64)> {
+pub fn extremal_eigs<O: LinOp + ?Sized>(op: &O, steps: usize, seed: u64) -> crate::error::Result<(f64, f64)> {
     let n = op.n();
     let mut rng = Rng::new(seed);
     let mut z = vec![0.0; n];
@@ -210,6 +274,30 @@ mod tests {
         let (lo, hi) = extremal_eigs(&op, 30, 8).unwrap();
         assert!(lo <= eig.eigvals[0] + 1e-8, "{lo} vs {}", eig.eigvals[0]);
         assert!(hi >= eig.eigvals[39] - 1e-8, "{hi} vs {}", eig.eigvals[39]);
+    }
+
+    #[test]
+    fn block_matches_single_column_bitwise() {
+        let op = spd_op(28, 11);
+        let mut rng = Rng::new(12);
+        let z = Mat::from_fn(28, 5, |_, _| rng.gaussian());
+        let rs = lanczos_block(&op, &z, 9);
+        assert_eq!(rs.len(), 5);
+        for (j, r) in rs.iter().enumerate() {
+            let single = lanczos(&op, &z.col(j), 9);
+            assert_eq!(r.alphas.len(), single.alphas.len(), "col {j}");
+            for (a, b) in r.alphas.iter().zip(&single.alphas) {
+                assert_eq!(a.to_bits(), b.to_bits(), "col {j} alpha");
+            }
+            for (a, b) in r.betas.iter().zip(&single.betas) {
+                assert_eq!(a.to_bits(), b.to_bits(), "col {j} beta");
+            }
+            let g = r.solve_e1();
+            let gs = single.solve_e1();
+            for (a, b) in g.iter().zip(&gs) {
+                assert_eq!(a.to_bits(), b.to_bits(), "col {j} solve");
+            }
+        }
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Log-determinant (and derivative) estimators — the paper's contribution.
 //!
 //! All of these consume a [`crate::operators::KernelOp`] *only* through
-//! MVMs (`apply`, `apply_grad`):
+//! MVMs:
 //!
 //! * [`slq`] — stochastic Lanczos quadrature (§3.2), the recommended method;
 //! * [`chebyshev`] — stochastic Chebyshev expansion (§3.1);
@@ -11,6 +11,32 @@
 //!   needs fast *eigendecompositions* and is what the paper improves on;
 //! * [`exact`] — O(n^3) Cholesky ground truth;
 //! * [`hessian`] — second-derivative estimators (§3.4).
+//!
+//! # Block-probe drivers
+//!
+//! The stochastic estimators average over independent probe vectors
+//! (Hutchinson, §3). They draw the whole probe set as one `n x p`
+//! [`crate::linalg::dense::Mat`] ([`probes::ProbeSet::as_mat`]), slice it
+//! into `n x b` blocks (`block_size` in [`slq::SlqOptions`] /
+//! [`chebyshev::ChebOptions`], default [`default_block_size`]), and drive
+//! the operator through the blocked MVM entry points
+//! (`apply_mat` / `apply_grad_all_mat` — see `operators` module docs for
+//! the contract). The per-probe tridiagonal/Chebyshev recurrences are kept
+//! mathematically identical to the single-vector path, so estimates are
+//! **bit-identical for every block size** — blocking changes only how many
+//! columns each pass over the operator's structure amortizes.
+//!
+//! ## MVM accounting
+//!
+//! [`LogdetEstimate`] reports cost in two units:
+//! * `mvms` — probe-column MVMs (what the b=1 path would count): the
+//!   resolution-independent number used in the paper's cost figures;
+//! * `block_applies` — block-amortized MVM count: one per `apply_mat`
+//!   call plus one **per hyper** per derivative pass. It divides the
+//!   per-column count by the block width; it does *not* model further
+//!   fusion inside an operator (`DenseKernelOp::apply_grad_all_mat`
+//!   computes all hypers in a single sweep but still counts `nh`).
+//!   At `block_size = 1` the two units coincide.
 
 pub mod chebyshev;
 pub mod exact;
@@ -20,6 +46,47 @@ pub mod probes;
 pub mod scaled_eig;
 pub mod slq;
 pub mod surrogate;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide default probe-block width used by `SlqOptions::default` /
+/// `ChebOptions::default` and the helpers without an options struct
+/// (`slq_trace_fn`, `slq_solves`). The coordinator CLI's `--block` flag
+/// threads through here.
+static DEFAULT_BLOCK_SIZE: AtomicUsize = AtomicUsize::new(8);
+
+/// Set the process-wide default probe-block width (clamped to >= 1).
+pub fn set_default_block_size(b: usize) {
+    DEFAULT_BLOCK_SIZE.store(b.max(1), Ordering::Relaxed);
+}
+
+/// Current process-wide default probe-block width.
+pub fn default_block_size() -> usize {
+    DEFAULT_BLOCK_SIZE.load(Ordering::Relaxed)
+}
+
+/// Partition of `count` probe columns into `block_size`-wide blocks —
+/// the one place the clamp/rounding lives so every estimator slices the
+/// probe matrix identically.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct BlockPartition {
+    pub bs: usize,
+    pub nblocks: usize,
+    count: usize,
+}
+
+impl BlockPartition {
+    pub fn new(count: usize, block_size: usize) -> Self {
+        let bs = block_size.max(1).min(count.max(1));
+        BlockPartition { bs, nblocks: count.div_ceil(bs), count }
+    }
+
+    /// (first column, width) of block `bi`.
+    pub fn range(&self, bi: usize) -> (usize, usize) {
+        let j0 = bi * self.bs;
+        (j0, self.bs.min(self.count - j0))
+    }
+}
 
 /// A stochastic estimate of `log|K̃|` and its hyper-derivatives.
 #[derive(Clone, Debug)]
@@ -32,12 +99,24 @@ pub struct LogdetEstimate {
     pub std_err: f64,
     /// Per-probe values of z^T log(K̃) z (for diagnostics/tests).
     pub per_probe: Vec<f64>,
-    /// Total MVM count consumed (cost accounting for the figures).
+    /// Total probe-column MVM count consumed (cost accounting for the
+    /// figures; independent of `block_size`).
     pub mvms: usize,
+    /// Block-amortized MVM count: one per block apply, one per hyper per
+    /// derivative pass (in-operator fusion across hypers not modeled).
+    /// Equals `mvms` at `block_size = 1`.
+    pub block_applies: usize,
 }
 
 impl LogdetEstimate {
     pub fn exact(value: f64, grad: Vec<f64>) -> Self {
-        LogdetEstimate { value, grad, std_err: 0.0, per_probe: vec![value], mvms: 0 }
+        LogdetEstimate {
+            value,
+            grad,
+            std_err: 0.0,
+            per_probe: vec![value],
+            mvms: 0,
+            block_applies: 0,
+        }
     }
 }

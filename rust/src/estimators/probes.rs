@@ -42,6 +42,19 @@ impl ProbeSet {
     pub fn n(&self) -> usize {
         self.z.first().map_or(0, |v| v.len())
     }
+
+    /// Pack the whole set as one `n x count` probe matrix — the estimators'
+    /// block drivers slice column ranges out of this and feed them to
+    /// blocked MVMs. Column `p` is `z[p]`; draws are per-probe, so the
+    /// matrix (and therefore every estimate) is identical for any block
+    /// size.
+    pub fn as_mat(&self) -> crate::linalg::dense::Mat {
+        let mut m = crate::linalg::dense::Mat::zeros(self.n(), self.count());
+        for (p, z) in self.z.iter().enumerate() {
+            m.set_col(p, z);
+        }
+        m
+    }
 }
 
 /// Combine per-probe quadratic-form samples into (trace estimate,

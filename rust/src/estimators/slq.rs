@@ -7,15 +7,22 @@
 //!   3. `g = Q T^{-1} e_1 ||z|| ≈ K̃^{-1} z` — *no additional MVMs*;
 //!   4. `∂_i log|K̃| ≈ mean_z [ g^T (∂K̃/∂θ_i) z ]` — one derivative MVM per
 //!      hyper per probe.
+//!
+//! The driver is **blocked**: probes are drawn as one `n x p` matrix,
+//! sliced into `block_size`-wide blocks, and each Lanczos iteration /
+//! derivative pass is a single block MVM over the whole block
+//! ([`super::lanczos::lanczos_block`], `apply_grad_all_mat`). Per-probe
+//! arithmetic is unchanged, so estimates are bit-identical across block
+//! sizes; see the module docs of [`crate::estimators`] for the accounting
+//! convention (`mvms` vs `block_applies`).
 
-use super::lanczos::lanczos;
+use super::lanczos::lanczos_block;
 use super::probes::{combine, ProbeKind, ProbeSet};
-use super::LogdetEstimate;
+use super::{BlockPartition, LogdetEstimate};
 use crate::error::Result;
 use crate::linalg::tridiag::lanczos_quadrature;
 use crate::operators::{KernelOp, LinOp};
 use crate::util::parallel;
-use crate::util::stats::dot;
 
 /// Options for the SLQ estimator.
 #[derive(Clone, Copy, Debug)]
@@ -28,8 +35,11 @@ pub struct SlqOptions {
     pub seed: u64,
     /// Also estimate all hyper-derivatives.
     pub grads: bool,
-    /// Worker threads across probes.
+    /// Worker threads across probe blocks.
     pub threads: usize,
+    /// Probe-block width b for blocked MVMs (1 reproduces the per-probe
+    /// path apply-for-apply; estimates are identical either way).
+    pub block_size: usize,
 }
 
 impl Default for SlqOptions {
@@ -41,66 +51,89 @@ impl Default for SlqOptions {
             seed: 0,
             grads: true,
             threads: parallel::default_threads(),
+            block_size: super::default_block_size(),
         }
     }
+}
+
+/// Per-block partial results (kept per-column so the cross-block reduction
+/// accumulates in probe order, independent of the block width).
+struct PerBlock {
+    quads: Vec<f64>,
+    /// Per column: one term per hyper.
+    grad_terms: Vec<Vec<f64>>,
+    mvms: usize,
+    block_applies: usize,
 }
 
 /// Estimate `log|K̃|` (and optionally all derivatives) via SLQ.
 pub fn slq_logdet(op: &dyn KernelOp, opts: &SlqOptions) -> Result<LogdetEstimate> {
     let n = op.n();
     let probes = ProbeSet::new(n, opts.probes, opts.kind, opts.seed);
+    let z = probes.as_mat();
     let nh = op.num_hypers();
+    let part = BlockPartition::new(opts.probes, opts.block_size);
 
-    struct PerProbe {
-        quad: f64,
-        grad_terms: Vec<f64>,
-        mvms: usize,
-    }
-
-    let results: Vec<Result<PerProbe>> =
-        parallel::par_map(probes.count(), opts.threads, |p| {
-            let z = &probes.z[p];
-            let res = lanczos(op, z, opts.steps.min(n));
-            let quad = lanczos_quadrature(
-                &res.alphas,
-                &res.betas,
-                res.znorm * res.znorm,
-                |lam| lam.max(1e-300).ln(),
-            )?;
-            let mut mvms = res.mvms;
+    let results: Vec<Result<PerBlock>> =
+        parallel::par_map(part.nblocks, opts.threads, |bi| {
+            let (j0, w) = part.range(bi);
+            let zblk = z.sub_cols(j0, w);
+            let res = lanczos_block(op, &zblk, opts.steps.min(n));
+            let mut quads = Vec::with_capacity(w);
+            let mut mvms = 0;
+            let mut block_applies = 0;
+            for r in &res {
+                quads.push(lanczos_quadrature(
+                    &r.alphas,
+                    &r.betas,
+                    r.znorm * r.znorm,
+                    |lam| lam.max(1e-300).ln(),
+                )?);
+                mvms += r.mvms;
+                // The block loop runs as long as its longest column.
+                block_applies = block_applies.max(r.mvms);
+            }
             let mut grad_terms = Vec::new();
             if opts.grads {
-                let g = res.solve_e1();
-                let mut ys: Vec<Vec<f64>> = vec![vec![0.0; n]; nh];
-                op.apply_grad_all(z, &mut ys);
-                mvms += nh; // derivative MVMs
-                grad_terms = ys.iter().map(|dkz| dot(&g, dkz)).collect();
+                // One blocked derivative pass per hyper covers all probes.
+                let dks = op.apply_grad_all_mat(&zblk);
+                mvms += nh * w;
+                block_applies += nh;
+                for (c, r) in res.iter().enumerate() {
+                    let g = r.solve_e1();
+                    grad_terms.push(dks.iter().map(|dk| dk.col_dot(c, &g)).collect());
+                }
             }
-            Ok(PerProbe { quad, grad_terms, mvms })
+            Ok(PerBlock { quads, grad_terms, mvms, block_applies })
         });
 
     let mut per_probe = Vec::with_capacity(opts.probes);
     let mut grad = vec![0.0; if opts.grads { nh } else { 0 }];
     let mut mvms = 0;
+    let mut block_applies = 0;
     for r in results {
         let r = r?;
-        per_probe.push(r.quad);
-        for (gi, t) in grad.iter_mut().zip(&r.grad_terms) {
-            *gi += t;
+        per_probe.extend(r.quads);
+        for gt in &r.grad_terms {
+            for (gi, t) in grad.iter_mut().zip(gt) {
+                *gi += t;
+            }
         }
         mvms += r.mvms;
+        block_applies += r.block_applies;
     }
     for gi in grad.iter_mut() {
         *gi /= opts.probes as f64;
     }
     let (value, std_err) = combine(&per_probe);
-    Ok(LogdetEstimate { value, grad, std_err, per_probe, mvms })
+    Ok(LogdetEstimate { value, grad, std_err, per_probe, mvms, block_applies })
 }
 
 /// Generic SLQ trace estimate of `tr(f(A))` for any SPD [`LinOp`] — used by
 /// the Laplace approximation for `log|B|` where B has no hyper structure.
-pub fn slq_trace_fn(
-    op: &dyn LinOp,
+/// Probes are processed in [`super::default_block_size`]-wide blocks.
+pub fn slq_trace_fn<O: LinOp + ?Sized>(
+    op: &O,
     f: impl Fn(f64) -> f64 + Sync,
     steps: usize,
     probes: usize,
@@ -109,23 +142,44 @@ pub fn slq_trace_fn(
 ) -> Result<(f64, f64)> {
     let n = op.n();
     let ps = ProbeSet::new(n, probes, ProbeKind::Rademacher, seed);
-    let samples: Vec<Result<f64>> = parallel::par_map(probes, threads, |p| {
-        let res = lanczos(op, &ps.z[p], steps.min(n));
-        lanczos_quadrature(&res.alphas, &res.betas, res.znorm * res.znorm, &f)
+    let z = ps.as_mat();
+    let part = BlockPartition::new(probes, super::default_block_size());
+    let blocks: Vec<Result<Vec<f64>>> = parallel::par_map(part.nblocks, threads, |bi| {
+        let (j0, w) = part.range(bi);
+        let zblk = z.sub_cols(j0, w);
+        lanczos_block(op, &zblk, steps.min(n))
+            .iter()
+            .map(|r| lanczos_quadrature(&r.alphas, &r.betas, r.znorm * r.znorm, &f))
+            .collect()
     });
     let mut vals = Vec::with_capacity(probes);
-    for s in samples {
-        vals.push(s?);
+    for blk in blocks {
+        vals.extend(blk?);
     }
     Ok(combine(&vals))
 }
 
 /// Solve estimates `g_p ≈ K̃^{-1} z_p` for a probe set, re-using one Lanczos
 /// run per probe (used by the Hessian estimator and error analysis §4).
-pub fn slq_solves(op: &dyn KernelOp, probes: &ProbeSet, steps: usize, threads: usize) -> Vec<Vec<f64>> {
-    parallel::par_map(probes.count(), threads, |p| {
-        lanczos(op, &probes.z[p], steps.min(op.n())).solve_e1()
-    })
+/// Runs in [`super::default_block_size`]-wide blocks of probes.
+pub fn slq_solves(
+    op: &dyn KernelOp,
+    probes: &ProbeSet,
+    steps: usize,
+    threads: usize,
+) -> Vec<Vec<f64>> {
+    let count = probes.count();
+    let z = probes.as_mat();
+    let part = BlockPartition::new(count, super::default_block_size());
+    let groups: Vec<Vec<Vec<f64>>> = parallel::par_map(part.nblocks, threads, |bi| {
+        let (j0, w) = part.range(bi);
+        let zblk = z.sub_cols(j0, w);
+        lanczos_block(op, &zblk, steps.min(op.n()))
+            .iter()
+            .map(|r| r.solve_e1())
+            .collect()
+    });
+    groups.into_iter().flatten().collect()
 }
 
 #[cfg(test)]
@@ -206,9 +260,50 @@ mod tests {
     #[test]
     fn mvm_accounting() {
         let o = op(50, 5);
-        let opts = SlqOptions { steps: 10, probes: 2, grads: true, ..Default::default() };
+        let opts =
+            SlqOptions { steps: 10, probes: 2, grads: true, block_size: 2, ..Default::default() };
         let est = slq_logdet(&o, &opts).unwrap();
-        // 10 MVMs + nh derivative MVMs per probe.
+        // Probe-column MVMs are block-size independent: 10 Lanczos + nh
+        // derivative MVMs per probe.
         assert_eq!(est.mvms, 2 * (10 + o.num_hypers()));
+        // Block-amortized: one 2-wide block -> 10 Lanczos block applies +
+        // nh derivative block applies.
+        assert_eq!(est.block_applies, 10 + o.num_hypers());
+        // At block_size 1 the two units coincide.
+        let est1 = slq_logdet(
+            &o,
+            &SlqOptions { steps: 10, probes: 2, grads: true, block_size: 1, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(est1.block_applies, est1.mvms);
+    }
+
+    #[test]
+    fn block_size_does_not_change_estimates() {
+        let o = op(90, 7);
+        let base = slq_logdet(
+            &o,
+            &SlqOptions { steps: 20, probes: 10, seed: 3, block_size: 1, ..Default::default() },
+        )
+        .unwrap();
+        for bs in [3, 8, 10, 64] {
+            let blocked = slq_logdet(
+                &o,
+                &SlqOptions { steps: 20, probes: 10, seed: 3, block_size: bs, ..Default::default() },
+            )
+            .unwrap();
+            assert_eq!(
+                base.value.to_bits(),
+                blocked.value.to_bits(),
+                "bs={bs}: {} vs {}",
+                base.value,
+                blocked.value
+            );
+            assert_eq!(base.std_err.to_bits(), blocked.std_err.to_bits(), "bs={bs}");
+            for (a, b) in base.grad.iter().zip(&blocked.grad) {
+                assert_eq!(a.to_bits(), b.to_bits(), "bs={bs} grad");
+            }
+            assert_eq!(base.mvms, blocked.mvms, "bs={bs} probe-column mvms");
+        }
     }
 }

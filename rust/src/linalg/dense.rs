@@ -41,6 +41,12 @@ impl Mat {
         Mat { rows, cols, data }
     }
 
+    /// Single-column matrix from a vector — the b=1 bridge into blocked
+    /// code paths.
+    pub fn from_col(v: &[f64]) -> Self {
+        Mat { rows: v.len(), cols: 1, data: v.to_vec() }
+    }
+
     pub fn from_rows(rows: &[Vec<f64>]) -> Self {
         let r = rows.len();
         let c = if r == 0 { 0 } else { rows[0].len() };
@@ -65,6 +71,48 @@ impl Mat {
     /// Column copy (rows are contiguous; columns are strided).
     pub fn col(&self, j: usize) -> Vec<f64> {
         (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Copy column `j` into a caller-provided buffer (no allocation).
+    pub fn col_into(&self, j: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), self.rows);
+        for i in 0..self.rows {
+            out[i] = self[(i, j)];
+        }
+    }
+
+    /// Dot product of column `j` with a dense vector (ascending row order,
+    /// so it matches a column-copy-then-`dot` bit for bit).
+    pub fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        assert_eq!(v.len(), self.rows);
+        let mut s = 0.0;
+        for i in 0..self.rows {
+            s += self[(i, j)] * v[i];
+        }
+        s
+    }
+
+    /// Dot product of column `j` of `self` with column `j` of `other`
+    /// (both strided; ascending row order, matching per-vector `dot`).
+    pub fn col_dot_pair(&self, other: &Mat, j: usize) -> f64 {
+        assert_eq!(self.rows, other.rows);
+        let mut s = 0.0;
+        for i in 0..self.rows {
+            s += self[(i, j)] * other[(i, j)];
+        }
+        s
+    }
+
+    /// Copy of the column block `[j0, j0 + w)` — how the estimators slice a
+    /// probe matrix into MVM blocks.
+    pub fn sub_cols(&self, j0: usize, w: usize) -> Mat {
+        assert!(j0 + w <= self.cols);
+        let mut out = Mat::zeros(self.rows, w);
+        for i in 0..self.rows {
+            let src = &self.row(i)[j0..j0 + w];
+            out.row_mut(i).copy_from_slice(src);
+        }
+        out
     }
 
     pub fn set_col(&mut self, j: usize, v: &[f64]) {
@@ -122,29 +170,59 @@ impl Mat {
 
     /// Blocked i-k-j matmul: cache-friendly without a BLAS dependency.
     pub fn matmul(&self, other: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.rows, other.cols);
+        self.matmul_into(other, &mut out);
+        out
+    }
+
+    /// out = self * other, no allocation (serial).
+    pub fn matmul_into(&self, other: &Mat, out: &mut Mat) {
+        self.matmul_into_threads(other, out, 1);
+    }
+
+    /// out = self * other with the output rows partitioned across up to
+    /// `threads` workers (1 = serial). Cache-blocked over k so each panel
+    /// of `other` stays resident while a stripe of `self` streams through —
+    /// the kernel behind every dense blocked `apply_mat`.
+    ///
+    /// Accumulation into each output element is in ascending-k order for
+    /// any thread count — the same order as `matvec_into`, with no
+    /// zero-skipping (a skipped `0.0 * x` term can flip a signed-zero or
+    /// drop a NaN) — so a b-column product is bitwise equal to b
+    /// single-column `matvec_into` products.
+    pub fn matmul_into_threads(&self, other: &Mat, out: &mut Mat, threads: usize) {
         assert_eq!(self.cols, other.rows);
+        assert_eq!((out.rows, out.cols), (self.rows, other.cols));
         let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(m, n);
-        const BK: usize = 64;
-        for kb in (0..k).step_by(BK) {
-            let kend = (kb + BK).min(k);
-            for i in 0..m {
-                let arow = self.row(i);
-                let orow_ptr = i * n;
-                for kk in kb..kend {
-                    let a = arow[kk];
-                    if a == 0.0 {
-                        continue;
-                    }
-                    let brow = other.row(kk);
-                    let orow = &mut out.data[orow_ptr..orow_ptr + n];
-                    for j in 0..n {
-                        orow[j] += a * brow[j];
+        out.data.fill(0.0);
+        if m == 0 || n == 0 {
+            return;
+        }
+        let rows_per = m.div_ceil(threads.max(1)).max(1);
+        crate::util::parallel::par_chunks_mut(
+            &mut out.data,
+            rows_per * n,
+            threads,
+            |ci, chunk| {
+                let row0 = ci * rows_per;
+                let nrows = chunk.len() / n;
+                const BK: usize = 64;
+                for kb in (0..k).step_by(BK) {
+                    let kend = (kb + BK).min(k);
+                    for r in 0..nrows {
+                        let arow = self.row(row0 + r);
+                        let orow = &mut chunk[r * n..(r + 1) * n];
+                        for kk in kb..kend {
+                            let a = arow[kk];
+                            let brow = other.row(kk);
+                            for j in 0..n {
+                                orow[j] += a * brow[j];
+                            }
+                        }
                     }
                 }
-            }
-        }
-        out
+            },
+        );
     }
 
     /// Frobenius norm.
@@ -260,6 +338,39 @@ mod tests {
         for i in 0..7 {
             assert!((c[(i, 0)] - v[i]).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn matmul_into_matches_per_column_matvec_bitwise() {
+        // Includes exact-zero entries: no zero-skip shortcuts allowed.
+        let a = Mat::from_fn(9, 9, |i, j| {
+            if (i + j) % 4 == 0 { 0.0 } else { ((i * 7 + j * 3) % 11) as f64 * 0.37 + 0.1 }
+        });
+        let b = Mat::from_fn(9, 4, |i, j| (i as f64 - j as f64) * 0.21);
+        let mut c = Mat::zeros(9, 4);
+        a.matmul_into(&b, &mut c);
+        for j in 0..4 {
+            let v = a.matvec(&b.col(j));
+            for i in 0..9 {
+                assert_eq!(c[(i, j)].to_bits(), v[i].to_bits(), "({i},{j})");
+            }
+        }
+        assert_eq!(Mat::from_col(&b.col(1)).col(0), b.col(1));
+    }
+
+    #[test]
+    fn col_helpers() {
+        let a = Mat::from_fn(5, 3, |i, j| (i * 3 + j) as f64);
+        let mut buf = vec![0.0; 5];
+        a.col_into(1, &mut buf);
+        assert_eq!(buf, a.col(1));
+        let v = [1.0, -1.0, 2.0, 0.5, 3.0];
+        let want: f64 = a.col(2).iter().zip(&v).map(|(x, y)| x * y).sum();
+        assert!((a.col_dot(2, &v) - want).abs() < 1e-14);
+        let sub = a.sub_cols(1, 2);
+        assert_eq!((sub.rows, sub.cols), (5, 2));
+        assert_eq!(sub.col(0), a.col(1));
+        assert_eq!(sub.col(1), a.col(2));
     }
 
     #[test]

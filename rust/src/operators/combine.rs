@@ -66,6 +66,20 @@ impl LinOp for SumKernelOp {
             y[i] += s2 * x[i];
         }
     }
+    /// Blocked sum: each part contributes its own blocked apply (fast MVMs
+    /// compose under addition — paper §1).
+    fn apply_mat(&self, x: &crate::linalg::dense::Mat) -> crate::linalg::dense::Mat {
+        assert_eq!(x.rows, self.n());
+        let mut out = crate::linalg::dense::Mat::zeros(x.rows, x.cols);
+        for p in &self.parts {
+            out.add_assign(&p.apply_mat(x));
+        }
+        let s2 = self.noise_var();
+        for (o, xi) in out.data.iter_mut().zip(&x.data) {
+            *o += s2 * xi;
+        }
+        out
+    }
 }
 
 impl KernelOp for SumKernelOp {
@@ -114,6 +128,36 @@ impl KernelOp for SumKernelOp {
                 }
             }
         }
+    }
+    fn apply_grad_mat(&self, i: usize, x: &crate::linalg::dense::Mat) -> crate::linalg::dense::Mat {
+        match self.locate(i) {
+            Some((p, local)) => self.parts[p].apply_grad_mat(local, x),
+            None => {
+                let s = 2.0 * self.noise_var();
+                let mut out = x.clone();
+                for v in out.data.iter_mut() {
+                    *v *= s;
+                }
+                out
+            }
+        }
+    }
+    /// Concatenate each part's blocked derivative set (their hidden noise
+    /// hypers dropped), then the shared-noise block.
+    fn apply_grad_all_mat(&self, x: &crate::linalg::dense::Mat) -> Vec<crate::linalg::dense::Mat> {
+        let mut outs = Vec::with_capacity(self.num_hypers());
+        for p in &self.parts {
+            let mut sub = p.apply_grad_all_mat(x);
+            sub.pop(); // the part's own (zeroed) noise hyper is hidden
+            outs.extend(sub);
+        }
+        let s = 2.0 * self.noise_var();
+        let mut noise = x.clone();
+        for v in noise.data.iter_mut() {
+            *v *= s;
+        }
+        outs.push(noise);
+        outs
     }
     fn noise_var(&self) -> f64 {
         (2.0 * self.log_sigma).exp()

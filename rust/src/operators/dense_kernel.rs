@@ -85,6 +85,27 @@ impl LinOp for DenseKernelOp {
             *yi += s2 * xi;
         }
     }
+    /// Blocked apply: one k-blocked pass over the materialized K drives all
+    /// b columns (each K entry is loaded once per block instead of once per
+    /// probe), row-partitioned across threads for large problems. Per-column
+    /// accumulation order matches `apply` exactly.
+    fn apply_mat(&self, x: &Mat) -> Mat {
+        let n = self.n();
+        assert_eq!(x.rows, n);
+        let b = x.cols;
+        let mut out = Mat::zeros(n, b);
+        if b == 0 || n == 0 {
+            return out;
+        }
+        // ~2 n^2 b flops; only fan out when the block is worth a spawn.
+        let threads = if n * n * b >= 4_000_000 { parallel::default_threads() } else { 1 };
+        self.k.matmul_into_threads(x, &mut out, threads);
+        let s2 = self.noise_var();
+        for (o, xi) in out.data.iter_mut().zip(&x.data) {
+            *o += s2 * xi;
+        }
+        out
+    }
     fn to_dense(&self) -> Mat {
         self.full_matrix()
     }
@@ -156,6 +177,83 @@ impl KernelOp for DenseKernelOp {
         for (yi, xi) in ys[nh].iter_mut().zip(x) {
             *yi = s * xi;
         }
+    }
+    /// Blocked single-hyper derivative: one pass over all pairs drives every
+    /// column of the probe block.
+    fn apply_grad_mat(&self, i: usize, x: &Mat) -> Mat {
+        let n = self.n();
+        assert_eq!(x.rows, n);
+        let b = x.cols;
+        let nh = self.kernel.num_hypers();
+        if i == nh {
+            let s = 2.0 * self.noise_var();
+            let mut out = x.clone();
+            for v in out.data.iter_mut() {
+                *v *= s;
+            }
+            return out;
+        }
+        let threads = parallel::default_threads();
+        let rows: Vec<Vec<f64>> = parallel::par_map(n, threads, |r| {
+            let mut acc = vec![0.0; b];
+            let mut g = vec![0.0; nh];
+            for c in 0..n {
+                self.kernel.grad(&self.points[r], &self.points[c], &mut g);
+                let gi = g[i];
+                let xrow = x.row(c);
+                for j in 0..b {
+                    acc[j] += gi * xrow[j];
+                }
+            }
+            acc
+        });
+        let mut out = Mat::zeros(n, b);
+        for (r, row) in rows.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(row);
+        }
+        out
+    }
+    /// Blocked all-hypers derivative: a single pass over all pairs computes
+    /// every hyper's derivative block for every probe column — the per-pair
+    /// `kernel.grad` evaluation (the expensive part) is amortized over
+    /// `num_hypers x b` accumulations.
+    fn apply_grad_all_mat(&self, x: &Mat) -> Vec<Mat> {
+        let n = self.n();
+        assert_eq!(x.rows, n);
+        let b = x.cols;
+        let nh = self.kernel.num_hypers();
+        let threads = parallel::default_threads();
+        // Per row: nh x b accumulators, flattened hyper-major.
+        let rows: Vec<Vec<f64>> = parallel::par_map(n, threads, |r| {
+            let mut acc = vec![0.0; nh * b];
+            let mut g = vec![0.0; nh];
+            for c in 0..n {
+                self.kernel.grad(&self.points[r], &self.points[c], &mut g);
+                let xrow = x.row(c);
+                for t in 0..nh {
+                    let gt = g[t];
+                    let a = &mut acc[t * b..(t + 1) * b];
+                    for j in 0..b {
+                        a[j] += gt * xrow[j];
+                    }
+                }
+            }
+            acc
+        });
+        let mut outs = vec![Mat::zeros(n, b); nh + 1];
+        for (r, row) in rows.iter().enumerate() {
+            for t in 0..nh {
+                outs[t].row_mut(r).copy_from_slice(&row[t * b..(t + 1) * b]);
+            }
+        }
+        let s = 2.0 * self.noise_var();
+        for i in 0..n {
+            let xrow = x.row(i);
+            for (o, xi) in outs[nh].row_mut(i).iter_mut().zip(xrow) {
+                *o = s * xi;
+            }
+        }
+        outs
     }
     fn noise_var(&self) -> f64 {
         (2.0 * self.log_sigma).exp()

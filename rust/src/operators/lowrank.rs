@@ -229,6 +229,47 @@ impl LinOp for FitcOp {
             y[i] += self.dvec[i] * x[i];
         }
     }
+    /// Blocked low-rank apply: both factor contractions become `n x m x b`
+    /// matmuls and the m x m solve is amortized over the whole block.
+    fn apply_mat(&self, x: &Mat) -> Mat {
+        let (n, m) = (self.points.len(), self.m());
+        assert_eq!(x.rows, n);
+        let b = x.cols;
+        // T = K_ux X (m x b), accumulated in the same ascending-i order as
+        // `matvec_t` so columns match single-vector applies bitwise.
+        let mut t = Mat::zeros(m, b);
+        for i in 0..n {
+            let row = self.kxu.row(i);
+            let xrow = x.row(i);
+            for a in 0..m {
+                let ra = row[a];
+                let trow = &mut t.data[a * b..(a + 1) * b];
+                for j in 0..b {
+                    trow[j] += ra * xrow[j];
+                }
+            }
+        }
+        let tsol = self.kuu_chol.solve_mat(&t);
+        let mut out = Mat::zeros(n, b);
+        for i in 0..n {
+            let row = self.kxu.row(i);
+            let orow = out.row_mut(i);
+            for a in 0..m {
+                let ra = row[a];
+                let trow = tsol.row(a);
+                for j in 0..b {
+                    orow[j] += ra * trow[j];
+                }
+            }
+        }
+        for i in 0..n {
+            let di = self.dvec[i];
+            for (o, xi) in out.row_mut(i).iter_mut().zip(x.row(i)) {
+                *o += di * xi;
+            }
+        }
+        out
+    }
 }
 
 impl KernelOp for FitcOp {
@@ -253,11 +294,23 @@ impl KernelOp for FitcOp {
     /// Derivative MVMs by central finite differences on the whole operator
     /// (FITC's analytic gradients involve derivative terms through
     /// K_uu^{-1} and the FITC diagonal; FD keeps the baseline honest at the
-    /// same asymptotic cost that makes it slow in Fig. 1).
+    /// same asymptotic cost that makes it slow in Fig. 1). Thin wrapper
+    /// over the single-column case of `apply_grad_mat` so the two FD paths
+    /// cannot drift.
     fn apply_grad(&self, i: usize, x: &[f64], y: &mut [f64]) {
+        let n = self.n();
+        assert_eq!(x.len(), n);
+        assert_eq!(y.len(), n);
+        let out = self.apply_grad_mat(i, &Mat::from_col(x));
+        y.copy_from_slice(&out.data);
+    }
+    /// Blocked FD derivative: the shifted operators are built **once per
+    /// block** (the per-column default would re-factor K_uu per probe) and
+    /// applied with the blocked path.
+    fn apply_grad_mat(&self, i: usize, x: &Mat) -> Mat {
         let h0 = self.hypers();
         let eps = 1e-5;
-        let mut up_op = FitcOp::new(
+        let mut fd_op = FitcOp::new(
             self.points.clone(),
             self.inducing.clone(),
             self.kernel.clone_box(),
@@ -267,14 +320,16 @@ impl KernelOp for FitcOp {
         .expect("fd op");
         let mut hp = h0.clone();
         hp[i] += eps;
-        up_op.set_hypers(&hp);
-        let up = up_op.apply_vec(x);
+        fd_op.set_hypers(&hp);
+        let up = fd_op.apply_mat(x);
         hp[i] -= 2.0 * eps;
-        up_op.set_hypers(&hp);
-        let dn = up_op.apply_vec(x);
-        for p in 0..x.len() {
-            y[p] = (up[p] - dn[p]) / (2.0 * eps);
+        fd_op.set_hypers(&hp);
+        let dn = fd_op.apply_mat(x);
+        let mut out = Mat::zeros(x.rows, x.cols);
+        for ((o, u), d) in out.data.iter_mut().zip(&up.data).zip(&dn.data) {
+            *o = (u - d) / (2.0 * eps);
         }
+        out
     }
     fn noise_var(&self) -> f64 {
         (2.0 * self.log_sigma).exp()

@@ -3,6 +3,38 @@
 //! structure, SKI, low-rank FITC, sums — implements [`LinOp`], and kernel
 //! matrices with learnable hyperparameters implement [`KernelOp`] which adds
 //! derivative MVMs `(∂K̃/∂θ_i) x`.
+//!
+//! # The block-probe contract
+//!
+//! The estimators batch all their probe vectors into one `n x b` [`Mat`] and
+//! drive operators through [`LinOp::apply_mat`] /
+//! [`KernelOp::apply_grad_mat`] / [`KernelOp::apply_grad_all_mat`] — the
+//! blocked entry points are the **hot path**; single-vector `apply` is the
+//! convenience wrapper. The contract every implementation obeys:
+//!
+//! * **Who owns blocking.** Operators never re-chunk a block: they process
+//!   all `b` columns in one pass over their structure (one sweep of dense
+//!   kernel entries, one shared circulant spectrum + FFT plan, one fused
+//!   Kronecker mode sweep). Callers (estimators, the batch service) choose
+//!   `b` via their `block_size` options and slice the probe matrix.
+//! * **Column independence.** Column `j` of `apply_mat(X)` must be bitwise
+//!   identical to `apply(X[:, j])` — same floating-point accumulation order,
+//!   no cross-column arithmetic (e.g. no two-reals-in-one-complex FFT
+//!   packing). This is what makes blocked estimates seed-identical to the
+//!   `b = 1` path and is enforced by `tests/proptests.rs`.
+//! * **Scratch buffers.** Per-apply workspaces (FFT scratch, fiber buffers,
+//!   grid-sized temporaries) are either cached on the operator at
+//!   construction (FFT plans, circulant spectra) or allocated once per
+//!   *block*, never once per column. Single-vector `apply` may reuse an
+//!   internal mutex-guarded scratch where profiling showed per-call
+//!   allocation (e.g. [`LaplaceBOp`]).
+//! * **MVM accounting.** Estimators count work in probe-column MVMs
+//!   (`mvms`, comparable across block sizes) and separately in block applies
+//!   (`block_applies`, what the hardware actually executes). Operators don't
+//!   count anything themselves.
+//!
+//! The PJRT runtime ops (`runtime::ops`) already exposed exactly this
+//! batched interface; the native operators now match it.
 
 pub mod combine;
 pub mod dense_kernel;
@@ -37,21 +69,19 @@ pub trait LinOp: Send + Sync {
         y
     }
 
-    /// Apply to each column of `x` (n x b). Default loops; structured
-    /// operators may batch internally.
+    /// Y = A X for an `n x b` block of columns — the primary (hot) entry
+    /// point; see the module docs for the block-probe contract. The default
+    /// loops over `apply`; structured operators override it with a real
+    /// blocked implementation.
     fn apply_mat(&self, x: &Mat) -> Mat {
         assert_eq!(x.rows, self.n());
         let mut out = Mat::zeros(x.rows, x.cols);
         let mut xin = vec![0.0; x.rows];
         let mut yout = vec![0.0; x.rows];
         for j in 0..x.cols {
-            for i in 0..x.rows {
-                xin[i] = x[(i, j)];
-            }
+            x.col_into(j, &mut xin);
             self.apply(&xin, &mut yout);
-            for i in 0..x.rows {
-                out[(i, j)] = yout[i];
-            }
+            out.set_col(j, &yout);
         }
         out
     }
@@ -96,6 +126,32 @@ pub trait KernelOp: LinOp {
         }
     }
 
+    /// Y = (∂K̃/∂θ_i) X for an `n x b` probe block (blocked derivative MVM).
+    /// Same column-independence contract as [`LinOp::apply_mat`].
+    fn apply_grad_mat(&self, i: usize, x: &Mat) -> Mat {
+        assert_eq!(x.rows, self.n());
+        let mut out = Mat::zeros(x.rows, x.cols);
+        let mut xin = vec![0.0; x.rows];
+        let mut yout = vec![0.0; x.rows];
+        for j in 0..x.cols {
+            x.col_into(j, &mut xin);
+            self.apply_grad(i, &xin, &mut yout);
+            out.set_col(j, &yout);
+        }
+        out
+    }
+
+    /// All hyper-derivative blocks at once: `out[i] = (∂K̃/∂θ_i) X`. The
+    /// default takes one *blocked* derivative pass per hyper (so operators
+    /// that only override [`KernelOp::apply_grad_mat`] — SKI, Kron, FITC —
+    /// still amortize each pass over all b columns); dense ops override
+    /// this again to fold every hyper *and* every column into a single
+    /// pass over kernel entries.
+    fn apply_grad_all_mat(&self, x: &Mat) -> Vec<Mat> {
+        assert_eq!(x.rows, self.n());
+        (0..self.num_hypers()).map(|i| self.apply_grad_mat(i, x)).collect()
+    }
+
     /// σ² (from the last hyper).
     fn noise_var(&self) -> f64 {
         let h = self.hypers();
@@ -128,6 +184,10 @@ impl LinOp for DenseMatOp {
     fn apply(&self, x: &[f64], y: &mut [f64]) {
         self.a.matvec_into(x, y);
     }
+    fn apply_mat(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows, self.n());
+        self.a.matmul(x)
+    }
     fn to_dense(&self) -> Mat {
         self.a.clone()
     }
@@ -143,9 +203,22 @@ impl LinOp for DiagOp {
         self.d.len()
     }
     fn apply(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n());
+        assert_eq!(y.len(), self.n());
         for i in 0..x.len() {
             y[i] = self.d[i] * x[i];
         }
+    }
+    fn apply_mat(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows, self.n());
+        let mut out = x.clone();
+        for i in 0..out.rows {
+            let di = self.d[i];
+            for v in out.row_mut(i) {
+                *v *= di;
+            }
+        }
+        out
     }
 }
 
@@ -160,10 +233,20 @@ impl LinOp for ShiftedOp<'_> {
         self.inner.n()
     }
     fn apply(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n());
+        assert_eq!(y.len(), self.n());
         self.inner.apply(x, y);
         for i in 0..x.len() {
             y[i] += self.shift * x[i];
         }
+    }
+    fn apply_mat(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows, self.n());
+        let mut out = self.inner.apply_mat(x);
+        for (o, xi) in out.data.iter_mut().zip(&x.data) {
+            *o += self.shift * xi;
+        }
+        out
     }
 }
 
@@ -172,12 +255,19 @@ impl LinOp for ShiftedOp<'_> {
 pub struct LaplaceBOp<'a> {
     pub inner: &'a dyn LinOp,
     pub sqrt_w: Vec<f64>,
+    /// Reusable per-apply workspace (Lanczos calls `apply` thousands of
+    /// times; allocating n doubles per call showed up in profiles).
+    scratch: std::sync::Mutex<Vec<f64>>,
 }
 
 impl<'a> LaplaceBOp<'a> {
     pub fn new(inner: &'a dyn LinOp, w: &[f64]) -> Self {
         assert_eq!(inner.n(), w.len());
-        LaplaceBOp { inner, sqrt_w: w.iter().map(|v| v.max(0.0).sqrt()).collect() }
+        LaplaceBOp {
+            inner,
+            sqrt_w: w.iter().map(|v| v.max(0.0).sqrt()).collect(),
+            scratch: std::sync::Mutex::new(Vec::new()),
+        }
     }
 }
 
@@ -186,8 +276,11 @@ impl LinOp for LaplaceBOp<'_> {
         self.inner.n()
     }
     fn apply(&self, x: &[f64], y: &mut [f64]) {
-        let n = x.len();
-        let mut t = vec![0.0; n];
+        let n = self.n();
+        assert_eq!(x.len(), n);
+        assert_eq!(y.len(), n);
+        let mut t = self.scratch.lock().unwrap();
+        t.resize(n, 0.0);
         for i in 0..n {
             t[i] = self.sqrt_w[i] * x[i];
         }
@@ -195,6 +288,25 @@ impl LinOp for LaplaceBOp<'_> {
         for i in 0..n {
             y[i] = self.sqrt_w[i] * y[i] + x[i];
         }
+    }
+    fn apply_mat(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows, self.n());
+        let mut t = x.clone();
+        for i in 0..t.rows {
+            let s = self.sqrt_w[i];
+            for v in t.row_mut(i) {
+                *v *= s;
+            }
+        }
+        let mut out = self.inner.apply_mat(&t);
+        for i in 0..out.rows {
+            let s = self.sqrt_w[i];
+            let xrow = x.row(i);
+            for (v, xi) in out.row_mut(i).iter_mut().zip(xrow) {
+                *v = s * *v + xi;
+            }
+        }
+        out
     }
 }
 
@@ -232,6 +344,50 @@ mod tests {
         assert_eq!(sh.apply_vec(&[1.0, 2.0, 3.0]), vec![3.0, 6.0, 9.0]);
         let d = DiagOp { d: vec![1.0, 2.0, 3.0] };
         assert_eq!(d.apply_vec(&[1.0, 1.0, 1.0]), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn diag_op_rejects_short_input() {
+        let d = DiagOp { d: vec![1.0, 2.0, 3.0] };
+        let mut y = vec![0.0; 2];
+        d.apply(&[1.0, 1.0], &mut y);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shifted_op_rejects_short_input() {
+        let a = Mat::eye(3);
+        let op = DenseMatOp::new(a);
+        let sh = ShiftedOp { inner: &op, shift: 1.0 };
+        let mut y = vec![0.0; 2];
+        sh.apply(&[1.0, 1.0], &mut y);
+    }
+
+    #[test]
+    fn shifted_diag_laplace_apply_mat_match_columns() {
+        let a = Mat::from_rows(&[vec![1.0, 0.5, 0.1], vec![0.5, 2.0, 0.3], vec![0.1, 0.3, 1.5]]);
+        let op = DenseMatOp::new(a);
+        let x = Mat::from_fn(3, 4, |i, j| (i as f64 + 1.0) * 0.3 - j as f64 * 0.2);
+        let sh = ShiftedOp { inner: &op, shift: 0.7 };
+        let dg = DiagOp { d: vec![0.5, 1.5, -2.0] };
+        let lb = LaplaceBOp::new(&op, &[0.2, 1.0, 3.0]);
+        for (name, o) in
+            [("shifted", &sh as &dyn LinOp), ("diag", &dg), ("laplace_b", &lb)]
+        {
+            let y = o.apply_mat(&x);
+            for j in 0..x.cols {
+                let col = o.apply_vec(&x.col(j));
+                for i in 0..3 {
+                    assert!(
+                        (y[(i, j)] - col[i]).abs() < 1e-14,
+                        "{name} ({i},{j}): {} vs {}",
+                        y[(i, j)],
+                        col[i]
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -223,6 +223,14 @@ impl SkiOp {
         self.w.apply(&yg, y);
     }
 
+    /// Y = (W K_UU W^T) X for a probe block: one CSR sweep per interpolation
+    /// matrix and one fused Kronecker block apply, instead of b round trips.
+    fn apply_wkw_mat(&self, kron: &KronOp, x: &crate::linalg::dense::Mat) -> crate::linalg::dense::Mat {
+        let xg = self.wt.apply_mat(x);
+        let yg = kron.apply_mat(&xg);
+        self.w.apply_mat(&yg)
+    }
+
     /// Map a kernel-hyper index to its (factor, local) pair, or None for
     /// `log_sf`.
     fn hyper_location(&self, i: usize) -> Option<(usize, usize)> {
@@ -294,6 +302,24 @@ impl LinOp for SkiOp {
             }
         }
     }
+    fn apply_mat(&self, x: &crate::linalg::dense::Mat) -> crate::linalg::dense::Mat {
+        assert_eq!(x.rows, self.n);
+        let mut out = self.apply_wkw_mat(&self.kuu, x);
+        let s2 = self.noise_var();
+        if self.diag_correction {
+            for i in 0..self.n {
+                let c = s2 + self.dvec[i];
+                for (o, xi) in out.row_mut(i).iter_mut().zip(x.row(i)) {
+                    *o += c * xi;
+                }
+            }
+        } else {
+            for (o, xi) in out.data.iter_mut().zip(&x.data) {
+                *o += s2 * xi;
+            }
+        }
+        out
+    }
 }
 
 impl KernelOp for SkiOp {
@@ -345,6 +371,40 @@ impl KernelOp for SkiOp {
                 y[p] += dd[p] * x[p];
             }
         }
+    }
+    fn apply_grad_mat(&self, i: usize, x: &crate::linalg::dense::Mat) -> crate::linalg::dense::Mat {
+        assert_eq!(x.rows, self.n);
+        let nk = self.kernel.num_hypers();
+        if i == nk {
+            let s = 2.0 * self.noise_var();
+            let mut out = x.clone();
+            for v in out.data.iter_mut() {
+                *v *= s;
+            }
+            return out;
+        }
+        let mut out = match self.hyper_location(i) {
+            Some((_jf, _local)) => self.apply_wkw_mat(&self.dkrons[i], x),
+            None => {
+                // log_sf: d(sf^2 K)/d log sf = 2 (W K_UU W^T).
+                let mut y = self.apply_wkw_mat(&self.kuu, x);
+                for v in y.data.iter_mut() {
+                    *v *= 2.0;
+                }
+                y
+            }
+        };
+        if self.diag_correction {
+            let mut dd = vec![0.0; self.n];
+            self.dvec_grad(i, &mut dd);
+            for p in 0..self.n {
+                let dp = dd[p];
+                for (o, xi) in out.row_mut(p).iter_mut().zip(x.row(p)) {
+                    *o += dp * xi;
+                }
+            }
+        }
+        out
     }
     fn noise_var(&self) -> f64 {
         (2.0 * self.log_sigma).exp()
@@ -442,6 +502,22 @@ impl KronKernelOp {
         }
         None
     }
+
+    /// Derivative Kronecker operator for factor hyper `(jf, local)` —
+    /// shared by the single-vector and blocked derivative MVMs.
+    fn grad_kron(&self, jf: usize, local: usize) -> KronOp {
+        let factors: Vec<KronFactor> = (0..self.grid.ndims())
+            .map(|j| {
+                let col = if j == jf {
+                    self.dcols[j][local].clone()
+                } else {
+                    self.cols[j].clone()
+                };
+                KronFactor::Toeplitz(ToeplitzOp::new(col))
+            })
+            .collect();
+        KronOp::new(factors, self.kernel.sf2())
+    }
 }
 
 impl LinOp for KronKernelOp {
@@ -454,6 +530,15 @@ impl LinOp for KronKernelOp {
         for (yi, xi) in y.iter_mut().zip(x) {
             *yi += s2 * xi;
         }
+    }
+    fn apply_mat(&self, x: &crate::linalg::dense::Mat) -> crate::linalg::dense::Mat {
+        assert_eq!(x.rows, self.n());
+        let mut out = self.kuu.apply_mat(x);
+        let s2 = self.noise_var();
+        for (o, xi) in out.data.iter_mut().zip(&x.data) {
+            *o += s2 * xi;
+        }
+        out
     }
 }
 
@@ -487,23 +572,35 @@ impl KernelOp for KronKernelOp {
         }
         match self.hyper_location(i) {
             Some((jf, local)) => {
-                let factors: Vec<KronFactor> = (0..self.grid.ndims())
-                    .map(|j| {
-                        let col = if j == jf {
-                            self.dcols[j][local].clone()
-                        } else {
-                            self.cols[j].clone()
-                        };
-                        KronFactor::Toeplitz(ToeplitzOp::new(col))
-                    })
-                    .collect();
-                KronOp::new(factors, self.kernel.sf2()).apply(x, y);
+                self.grad_kron(jf, local).apply(x, y);
             }
             None => {
                 self.kuu.apply(x, y);
                 for yi in y.iter_mut() {
                     *yi *= 2.0;
                 }
+            }
+        }
+    }
+    fn apply_grad_mat(&self, i: usize, x: &crate::linalg::dense::Mat) -> crate::linalg::dense::Mat {
+        assert_eq!(x.rows, self.n());
+        let nk = self.kernel.num_hypers();
+        if i == nk {
+            let s = 2.0 * self.noise_var();
+            let mut out = x.clone();
+            for v in out.data.iter_mut() {
+                *v *= s;
+            }
+            return out;
+        }
+        match self.hyper_location(i) {
+            Some((jf, local)) => self.grad_kron(jf, local).apply_mat(x),
+            None => {
+                let mut out = self.kuu.apply_mat(x);
+                for v in out.data.iter_mut() {
+                    *v *= 2.0;
+                }
+                out
             }
         }
     }

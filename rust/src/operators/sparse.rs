@@ -48,6 +48,27 @@ impl Csr {
         }
     }
 
+    /// Y = A X for a dense column block (`nrows x b` from `ncols x b`):
+    /// one pass over the sparsity pattern drives all b columns, so each
+    /// stored entry is loaded once per block instead of once per probe.
+    /// Per-column accumulation order matches `apply` exactly.
+    pub fn apply_mat(&self, x: &crate::linalg::dense::Mat) -> crate::linalg::dense::Mat {
+        assert_eq!(x.rows, self.ncols);
+        let b = x.cols;
+        let mut out = crate::linalg::dense::Mat::zeros(self.nrows, b);
+        for i in 0..self.nrows {
+            let orow = &mut out.data[i * b..(i + 1) * b];
+            for k in self.indptr[i]..self.indptr[i + 1] {
+                let v = self.data[k];
+                let xrow = x.row(self.indices[k]);
+                for j in 0..b {
+                    orow[j] += v * xrow[j];
+                }
+            }
+        }
+        out
+    }
+
     /// y = A^T x (accumulating; y is zeroed first).
     pub fn apply_t(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.nrows);
@@ -134,6 +155,20 @@ mod tests {
         let d = a.to_dense();
         let yd = d.matvec(&x);
         assert_eq!(y, yd);
+    }
+
+    #[test]
+    fn apply_mat_matches_columns() {
+        let a = sample();
+        let x = crate::linalg::dense::Mat::from_fn(4, 3, |i, j| (i * 3 + j) as f64 * 0.5 - 2.0);
+        let y = a.apply_mat(&x);
+        for j in 0..3 {
+            let mut col = vec![0.0; 3];
+            a.apply(&x.col(j), &mut col);
+            for i in 0..3 {
+                assert_eq!(y[(i, j)].to_bits(), col[i].to_bits(), "({i},{j})");
+            }
+        }
     }
 
     #[test]

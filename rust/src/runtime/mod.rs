@@ -73,23 +73,37 @@ pub fn load_manifest(dir: &Path) -> Result<HashMap<String, ArtifactSpec>> {
 ///
 /// The PJRT CPU client is internally synchronized; we nevertheless serialize
 /// executions per runtime through a mutex so the wrapper is trivially Sync.
+///
+/// Without the `pjrt` cargo feature (the `xla` crate must be vendored — it
+/// is not in the offline registry), `new` always returns an error so every
+/// caller takes its artifacts-unavailable fallback path.
 pub struct PjrtRuntime {
+    #[allow(dead_code)]
     dir: PathBuf,
     pub specs: HashMap<String, ArtifactSpec>,
+    #[allow(dead_code)]
     inner: Mutex<Inner>,
 }
 
+#[cfg(feature = "pjrt")]
 struct Inner {
     client: xla::PjRtClient,
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(not(feature = "pjrt"))]
+#[allow(dead_code)]
+struct Inner {}
+
 // SAFETY: all access to the client/executables goes through the mutex.
+#[cfg(feature = "pjrt")]
 unsafe impl Send for PjrtRuntime {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for PjrtRuntime {}
 
 impl PjrtRuntime {
     /// Open the artifact directory and create a CPU PJRT client.
+    #[cfg(feature = "pjrt")]
     pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let specs = load_manifest(&dir)?;
@@ -97,8 +111,26 @@ impl PjrtRuntime {
         Ok(PjrtRuntime { dir, specs, inner: Mutex::new(Inner { client, cache: HashMap::new() }) })
     }
 
+    /// Without the `pjrt` feature there is no XLA client: always errors
+    /// (with the feature-flag message, not a manifest I/O error — the
+    /// missing feature is the thing to fix first).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let _ = dir.as_ref();
+        Err(Error::Artifact(
+            "PJRT backend not compiled in (build with --features pjrt and a vendored xla crate)"
+                .into(),
+        ))
+    }
+
+    #[cfg(feature = "pjrt")]
     pub fn platform(&self) -> String {
         self.inner.lock().unwrap().client.platform_name()
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn platform(&self) -> String {
+        "pjrt-disabled".into()
     }
 
     pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
@@ -109,6 +141,15 @@ impl PjrtRuntime {
 
     /// Execute artifact `name` on f32 inputs (flattened, row-major). Shapes
     /// are validated against the manifest. Returns flattened f32 outputs.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn run_f32(&self, _name: &str, _inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        // Unreachable in practice: `new` errors without the feature.
+        Err(Error::Artifact("PJRT backend not compiled in".into()))
+    }
+
+    /// Execute artifact `name` on f32 inputs (flattened, row-major). Shapes
+    /// are validated against the manifest. Returns flattened f32 outputs.
+    #[cfg(feature = "pjrt")]
     pub fn run_f32(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         let spec = self.spec(name)?.clone();
         if inputs.len() != spec.in_shapes.len() {

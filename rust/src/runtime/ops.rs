@@ -195,6 +195,12 @@ impl KernelOp for HybridKernelOp {
     fn apply_grad_all(&self, x: &[f64], ys: &mut [Vec<f64>]) {
         self.native.apply_grad_all(x, ys);
     }
+    fn apply_grad_mat(&self, i: usize, x: &Mat) -> Mat {
+        self.native.apply_grad_mat(i, x)
+    }
+    fn apply_grad_all_mat(&self, x: &Mat) -> Vec<Mat> {
+        self.native.apply_grad_all_mat(x)
+    }
     fn noise_var(&self) -> f64 {
         self.native.noise_var()
     }

@@ -2,9 +2,40 @@
 //! tokio). Probe-level and experiment-level fan-out only needs a parallel
 //! indexed map with static partitioning, which `std::thread::scope` gives us
 //! safely.
+//!
+//! Nesting guard: the estimators fan out over probe blocks while the
+//! operators fan out inside a block apply; without a guard that multiplies
+//! into `threads^2` OS threads. Worker threads spawned here mark
+//! themselves, and any nested `par_map` / `par_chunks_mut` /
+//! [`default_threads`] call from inside a worker runs serially — so
+//! parallelism lives at the outermost level that asked for it (block level
+//! when there are many blocks, operator level when one block runs on the
+//! caller's thread).
 
-/// Number of worker threads to use (capped so tests stay polite).
+use std::cell::Cell;
+
+thread_local! {
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True on a thread spawned by this module (or marked by a worker pool):
+/// nested fan-out should stay serial.
+pub fn in_pool_worker() -> bool {
+    IN_POOL_WORKER.with(|c| c.get())
+}
+
+/// Mark the current thread as a pool worker (used by the batch service's
+/// own worker pool so estimator calls inside it don't nest-fan-out).
+pub fn mark_pool_worker() {
+    IN_POOL_WORKER.with(|c| c.set(true));
+}
+
+/// Number of worker threads to use (capped so tests stay polite; 1 inside
+/// a pool worker to prevent nested oversubscription).
 pub fn default_threads() -> usize {
+    if in_pool_worker() {
+        return 1;
+    }
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4)
@@ -21,7 +52,7 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let threads = threads.max(1).min(n.max(1));
+    let threads = if in_pool_worker() { 1 } else { threads.max(1).min(n.max(1)) };
     if threads == 1 || n <= 1 {
         return (0..n).map(f).collect();
     }
@@ -31,6 +62,7 @@ where
         for (t, slot_chunk) in out.chunks_mut(chunk).enumerate() {
             let f = &f;
             scope.spawn(move || {
+                mark_pool_worker();
                 let base = t * chunk;
                 for (k, slot) in slot_chunk.iter_mut().enumerate() {
                     *slot = Some(f(base + k));
@@ -42,22 +74,36 @@ where
 }
 
 /// Parallel for over mutable chunks of a slice: `f(chunk_index, chunk)`.
+///
+/// At most `threads` workers are spawned; chunks are partitioned into
+/// contiguous groups, one group per worker. (The previous implementation
+/// spawned one thread *per chunk* — `data.len() / chunk` threads — which
+/// oversubscribed badly on large slices.)
 pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, threads: usize, f: F)
 where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
-    let threads = threads.max(1);
-    if threads == 1 || data.len() <= chunk {
+    assert!(chunk > 0, "chunk size must be positive");
+    let threads = if in_pool_worker() { 1 } else { threads.max(1) };
+    let nchunks = data.len().div_ceil(chunk);
+    if threads == 1 || nchunks <= 1 {
         for (i, c) in data.chunks_mut(chunk).enumerate() {
             f(i, c);
         }
         return;
     }
+    let workers = threads.min(nchunks);
+    let per_worker = nchunks.div_ceil(workers);
     std::thread::scope(|scope| {
-        for (i, c) in data.chunks_mut(chunk).enumerate() {
+        for (w, group) in data.chunks_mut(chunk * per_worker).enumerate() {
             let f = &f;
-            scope.spawn(move || f(i, c));
+            scope.spawn(move || {
+                mark_pool_worker();
+                for (k, c) in group.chunks_mut(chunk).enumerate() {
+                    f(w * per_worker + k, c);
+                }
+            });
         }
     });
 }
@@ -88,5 +134,35 @@ mod tests {
             }
         });
         assert!(v.iter().all(|&x| x > 0));
+    }
+
+    #[test]
+    fn par_chunks_mut_indices_match_serial() {
+        // Chunk indices must be the global chunk numbers regardless of how
+        // chunks are grouped onto workers.
+        for threads in [1usize, 2, 3, 8, 64] {
+            let mut v = vec![0usize; 103];
+            par_chunks_mut(&mut v, 10, threads, |i, c| {
+                for x in c.iter_mut() {
+                    *x = i;
+                }
+            });
+            for (pos, &x) in v.iter().enumerate() {
+                assert_eq!(x, pos / 10, "threads={threads} pos={pos}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_caps_spawned_workers() {
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+        // 50 chunks but only 4 threads allowed: at most 4 distinct workers.
+        let ids: Mutex<HashSet<std::thread::ThreadId>> = Mutex::new(HashSet::new());
+        let mut v = vec![0u8; 500];
+        par_chunks_mut(&mut v, 10, 4, |_, _| {
+            ids.lock().unwrap().insert(std::thread::current().id());
+        });
+        assert!(ids.lock().unwrap().len() <= 4, "spawned {}", ids.lock().unwrap().len());
     }
 }

@@ -9,8 +9,12 @@
 
 use gpsld::grid::{Grid, GridDim, InterpOrder};
 use gpsld::kernels::{IsoKernel, Kernel, SeparableKernel, Shape};
+use gpsld::linalg::dense::Mat;
+use gpsld::operators::ski::KronKernelOp;
 use gpsld::operators::toeplitz::ToeplitzOp;
-use gpsld::operators::{DenseKernelOp, KernelOp, LinOp, SkiOp};
+use gpsld::operators::{
+    DenseKernelOp, DenseMatOp, FitcOp, KernelOp, KronFactor, KronOp, LinOp, SkiOp, SumKernelOp,
+};
 use gpsld::util::rng::Rng;
 
 const SHAPES: [Shape; 4] = [Shape::Rbf, Shape::Matern12, Shape::Matern32, Shape::Matern52];
@@ -181,6 +185,216 @@ fn prop_surrogate_interpolates() {
                 assert!((s.eval(p) - v).abs() < 1e-6 * (1.0 + v.abs()));
             }
         }
+    }
+}
+
+/// Max tolerance for "blocked == per-column" comparisons (the block-probe
+/// contract promises bitwise identity; 1e-12 relative leaves headroom for
+/// future implementations that reassociate).
+const BLOCK_TOL: f64 = 1e-12;
+
+fn assert_apply_mat_matches(name: &str, op: &dyn LinOp, x: &Mat) {
+    let y = op.apply_mat(x);
+    assert_eq!((y.rows, y.cols), (x.rows, x.cols), "{name} shape");
+    for j in 0..x.cols {
+        let col = op.apply_vec(&x.col(j));
+        for i in 0..x.rows {
+            assert!(
+                (y[(i, j)] - col[i]).abs() <= BLOCK_TOL * (1.0 + col[i].abs()),
+                "{name} apply_mat ({i},{j}): {} vs {}",
+                y[(i, j)],
+                col[i]
+            );
+        }
+    }
+}
+
+fn assert_grad_mats_match(name: &str, op: &dyn KernelOp, x: &Mat) {
+    let all = op.apply_grad_all_mat(x);
+    assert_eq!(all.len(), op.num_hypers(), "{name} grad count");
+    let mut col = vec![0.0; x.rows];
+    for i in 0..op.num_hypers() {
+        let gm = op.apply_grad_mat(i, x);
+        for j in 0..x.cols {
+            op.apply_grad(i, &x.col(j), &mut col);
+            for r in 0..x.rows {
+                assert!(
+                    (gm[(r, j)] - col[r]).abs() <= BLOCK_TOL * (1.0 + col[r].abs()),
+                    "{name} apply_grad_mat hyper {i} ({r},{j}): {} vs {}",
+                    gm[(r, j)],
+                    col[r]
+                );
+                assert!(
+                    (all[i][(r, j)] - col[r]).abs() <= BLOCK_TOL * (1.0 + col[r].abs()),
+                    "{name} apply_grad_all_mat hyper {i} ({r},{j}): {} vs {}",
+                    all[i][(r, j)],
+                    col[r]
+                );
+            }
+        }
+    }
+}
+
+/// Property (block-probe contract): `apply_mat` / `apply_grad_mat` /
+/// `apply_grad_all_mat` match column-by-column `apply` / `apply_grad` for
+/// every operator type — dense kernel, plain dense, Toeplitz, Kronecker,
+/// SKI (both diagonal-correction modes), grid Kron kernel, FITC and SoR,
+/// additive sums, and the shifted/diagonal wrappers.
+#[test]
+fn prop_blocked_applies_match_columns() {
+    let mut rng = Rng::new(900);
+    let n = 24;
+    let b = 5;
+    let pts1: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform_in(0.0, 2.0)]).collect();
+    let pts2: Vec<Vec<f64>> =
+        (0..n).map(|_| vec![rng.uniform(), rng.uniform()]).collect();
+    let x = Mat::from_fn(n, b, |_, _| rng.gaussian());
+
+    // Dense kernel operator.
+    let dense = DenseKernelOp::new(
+        pts1.clone(),
+        Box::new(IsoKernel::new(Shape::Matern32, 1, 0.4, 1.1)),
+        0.2,
+    );
+    assert_apply_mat_matches("dense_kernel", &dense, &x);
+    assert_grad_mats_match("dense_kernel", &dense, &x);
+
+    // Plain dense matrix operator.
+    let mut a = Mat::from_fn(n, n, |_, _| rng.gaussian());
+    a.symmetrize();
+    a.add_diag(n as f64);
+    assert_apply_mat_matches("dense_mat", &DenseMatOp::new(a.clone()), &x);
+
+    // Toeplitz.
+    let col: Vec<f64> = (0..n).map(|k| (1.5 + rng.uniform()) * (-0.1 * k as f64).exp()).collect();
+    assert_apply_mat_matches("toeplitz", &ToeplitzOp::new(col.clone()), &x);
+
+    // Kronecker (dense x toeplitz x dense), n = 2*4*3 = 24.
+    let mut ka = Mat::from_fn(2, 2, |_, _| rng.gaussian());
+    ka.symmetrize();
+    ka.add_diag(2.0);
+    let mut kc = Mat::from_fn(3, 3, |_, _| rng.gaussian());
+    kc.symmetrize();
+    kc.add_diag(3.0);
+    let kron = KronOp::new(
+        vec![
+            KronFactor::Dense(ka),
+            KronFactor::Toeplitz(ToeplitzOp::new(vec![2.0, 0.8, 0.1, 0.02])),
+            KronFactor::Dense(kc),
+        ],
+        1.3,
+    );
+    assert_apply_mat_matches("kron", &kron, &x);
+
+    // SKI with and without the diagonal correction.
+    for diag_corr in [false, true] {
+        let grid = Grid::new(vec![GridDim { lo: -0.1, hi: 2.1, m: 16 }]);
+        let ski = SkiOp::new(
+            &pts1,
+            grid,
+            SeparableKernel::iso(Shape::Rbf, 1, 0.3, 1.0),
+            0.15,
+            InterpOrder::Cubic,
+            diag_corr,
+        );
+        let name = if diag_corr { "ski_diag" } else { "ski" };
+        assert_apply_mat_matches(name, &ski, &x);
+        assert_grad_mats_match(name, &ski, &x);
+    }
+
+    // Grid Kron kernel operator (W = I), n = 6*4 = 24.
+    let grid2 = Grid::new(vec![
+        GridDim { lo: 0.0, hi: 1.0, m: 6 },
+        GridDim { lo: 0.0, hi: 1.0, m: 4 },
+    ]);
+    let kk = KronKernelOp::new(grid2, SeparableKernel::iso(Shape::Matern52, 2, 0.5, 0.9), 0.1);
+    assert_apply_mat_matches("kron_kernel", &kk, &x);
+    assert_grad_mats_match("kron_kernel", &kk, &x);
+
+    // FITC and SoR.
+    for fitc in [false, true] {
+        let ind: Vec<Vec<f64>> = (0..6).map(|i| vec![2.0 * i as f64 / 5.0]).collect();
+        let op = FitcOp::new(
+            pts1.clone(),
+            ind,
+            Box::new(IsoKernel::new(Shape::Rbf, 1, 0.5, 1.0)),
+            0.25,
+            fitc,
+        )
+        .unwrap();
+        let name = if fitc { "fitc" } else { "sor" };
+        assert_apply_mat_matches(name, &op, &x);
+        assert_grad_mats_match(name, &op, &x);
+    }
+
+    // Additive sum of two dense kernels.
+    let p1 = DenseKernelOp::new(
+        pts2.clone(),
+        Box::new(IsoKernel::new(Shape::Rbf, 2, 0.5, 1.0)),
+        1.0,
+    );
+    let p2 = DenseKernelOp::new(
+        pts2.clone(),
+        Box::new(IsoKernel::new(Shape::Matern12, 2, 0.8, 0.6)),
+        1.0,
+    );
+    let sum = SumKernelOp::new(vec![Box::new(p1), Box::new(p2)], 0.3);
+    assert_apply_mat_matches("sum", &sum, &x);
+    assert_grad_mats_match("sum", &sum, &x);
+
+    // Shifted view over a dense operator.
+    let base = DenseMatOp::new(a);
+    let shifted = gpsld::operators::ShiftedOp { inner: &base, shift: 0.9 };
+    assert_apply_mat_matches("shifted", &shifted, &x);
+}
+
+/// Regression (block-probe contract, estimator level): SLQ estimates are
+/// bit-identical at b=1 and b=8 under a fixed seed, including on the
+/// structured SKI path where block applies go through the shared FFT plan.
+#[test]
+fn prop_slq_block_invariance() {
+    use gpsld::estimators::slq::{slq_logdet, SlqOptions};
+    let mut rng = Rng::new(950);
+    let n = 80;
+    let pts: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform_in(0.0, 3.0)]).collect();
+    let grid = Grid::covering(&pts, &[40], 0.1);
+    let ski = SkiOp::new(
+        &pts,
+        grid,
+        SeparableKernel::iso(Shape::Rbf, 1, 0.3, 1.0),
+        0.2,
+        InterpOrder::Cubic,
+        false,
+    );
+    let dense = DenseKernelOp::new(
+        pts,
+        Box::new(IsoKernel::new(Shape::Rbf, 1, 0.3, 1.0)),
+        0.2,
+    );
+    for (name, op) in [("ski", &ski as &dyn KernelOp), ("dense", &dense)] {
+        let e1 = slq_logdet(
+            op,
+            &SlqOptions { steps: 20, probes: 8, seed: 42, block_size: 1, ..Default::default() },
+        )
+        .unwrap();
+        let e8 = slq_logdet(
+            op,
+            &SlqOptions { steps: 20, probes: 8, seed: 42, block_size: 8, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(
+            e1.value.to_bits(),
+            e8.value.to_bits(),
+            "{name}: {} vs {}",
+            e1.value,
+            e8.value
+        );
+        assert_eq!(e1.std_err.to_bits(), e8.std_err.to_bits(), "{name} std_err");
+        assert_eq!(e1.grad.len(), e8.grad.len(), "{name} grad len");
+        for (g1, g8) in e1.grad.iter().zip(&e8.grad) {
+            assert_eq!(g1.to_bits(), g8.to_bits(), "{name} grad");
+        }
+        assert_eq!(e1.mvms, e8.mvms, "{name} probe-column mvms");
     }
 }
 

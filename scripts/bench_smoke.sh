@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Perf smoke: run the blocked-MVM sweep (dense / Toeplitz / SKI at
+# n in {1k, 4k}, b in {1, 8, 32}) and emit BENCH_mvm.json at the repo root
+# so successive PRs have a throughput trajectory to compare against.
+#
+# Usage: scripts/bench_smoke.sh [output.json]
+set -euo pipefail
+
+repo_root="$(cd "$(dirname "$0")/.." && pwd)"
+out="${1:-$repo_root/BENCH_mvm.json}"
+
+cd "$repo_root/rust"
+cargo bench --bench bench_perf_mvm -- --smoke --json "$out"
+
+echo "BENCH_mvm rows:"
+cat "$out"
