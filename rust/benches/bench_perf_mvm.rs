@@ -7,7 +7,8 @@
 //! Machine-readable mode (used by `scripts/bench_smoke.sh`):
 //!
 //! ```text
-//! cargo bench --bench bench_perf_mvm -- --smoke --json BENCH_mvm.json
+//! cargo bench --bench bench_perf_mvm -- --smoke \
+//!     --json BENCH_mvm.json --json-cg BENCH_cg.json
 //! ```
 //!
 //! runs the dense/Toeplitz/SKI block sweep at n in {1k, 4k}, b in
@@ -15,6 +16,13 @@
 //! `{op, n, b, ns_per_apply, gbps}` where `ns_per_apply` is ns per
 //! probe-column and `gbps` is *modeled* memory traffic (documented per
 //! operator below) — a trajectory metric, not a hardware counter.
+//!
+//! `--json-cg` additionally runs the block-CG solve sweep and writes
+//! `{op, n, rhs, block, ns_per_solve_col, mvms, block_applies, converged}`
+//! per case: `ns_per_solve_col` is wall time per right-hand-side column,
+//! `mvms` / `block_applies` mirror `BlockCgInfo` (block-amortized applies
+//! are the hardware-executed count and must be <= per-column MVMs), and
+//! `converged` counts columns that hit the tolerance.
 
 use std::time::Instant;
 
@@ -25,8 +33,8 @@ use gpsld::estimators::slq::{slq_logdet, SlqOptions};
 use gpsld::grid::{Grid, InterpOrder};
 use gpsld::kernels::{IsoKernel, SeparableKernel, Shape};
 use gpsld::linalg::dense::Mat;
-use gpsld::operators::{DenseKernelOp, KernelOp, LinOp, SkiOp, ToeplitzOp};
-use gpsld::solvers::cg::cg;
+use gpsld::operators::{DenseKernelOp, KernelOp, LinOp, ShiftedOp, SkiOp, ToeplitzOp};
+use gpsld::solvers::{cg, cg_block, CgOptions};
 use gpsld::util::bench::{black_box, Bench};
 use gpsld::util::rng::Rng;
 
@@ -39,8 +47,9 @@ struct SweepRow {
     gbps: f64,
 }
 
-/// Time `f` (which applies one full block) and return seconds per call.
-fn time_block(mut f: impl FnMut() -> f64) -> f64 {
+/// Warmup-then-budgeted-reps timing loop: run `f` once untimed, then
+/// repeat until `cap` reps or (`min_reps` reps and `budget_s` elapsed).
+fn time_adaptive(cap: usize, min_reps: usize, budget_s: f64, mut f: impl FnMut() -> f64) -> f64 {
     black_box(f()); // warmup
     let mut iters = 0usize;
     let start = Instant::now();
@@ -49,11 +58,16 @@ fn time_block(mut f: impl FnMut() -> f64) -> f64 {
         black_box(f());
         iters += 1;
         elapsed = start.elapsed().as_secs_f64();
-        if iters >= 20 || (iters >= 3 && elapsed > 0.3) {
+        if iters >= cap || (iters >= min_reps && elapsed > budget_s) {
             break;
         }
     }
     elapsed / iters as f64
+}
+
+/// Time `f` (which applies one full block) and return seconds per call.
+fn time_block(f: impl FnMut() -> f64) -> f64 {
+    time_adaptive(20, 3, 0.3, f)
 }
 
 fn log2_usize(x: usize) -> usize {
@@ -141,6 +155,124 @@ fn block_sweep(ns: &[usize], bs: &[usize]) -> Vec<SweepRow> {
     rows
 }
 
+/// One measured block-CG case for the JSON report.
+struct CgSweepRow {
+    op: &'static str,
+    n: usize,
+    rhs: usize,
+    block: usize,
+    ns_per_solve_col: f64,
+    mvms: usize,
+    block_applies: usize,
+    converged: usize,
+}
+
+/// Time one full block solve (solves are much slower than single applies,
+/// so the rep cap is kept low).
+fn time_solve(f: impl FnMut() -> f64) -> f64 {
+    time_adaptive(5, 2, 0.4, f)
+}
+
+/// Block-CG sweep over the same operator structures as the MVM sweep.
+/// The tolerances/noise levels are chosen so the solves converge in tens
+/// of iterations — this measures solver throughput trajectory, not GP
+/// fidelity.
+fn cg_sweep(blocks: &[usize]) -> Vec<CgSweepRow> {
+    const RHS: usize = 8;
+    let mut rows = Vec::new();
+    let mut rng = Rng::new(17);
+    let push = |op_name: &'static str, n: usize, op: &dyn LinOp, rng: &mut Rng, rows: &mut Vec<CgSweepRow>| {
+        let opts_base = CgOptions { tol: 1e-6, max_iters: 120, block_size: 1 };
+        let b = Mat::from_fn(n, RHS, |_, _| rng.gaussian());
+        for &blk in blocks {
+            let opts = CgOptions { block_size: blk, ..opts_base };
+            // Accounting numbers come from the warmup solve (deterministic,
+            // so every rep reports the same counts).
+            let mut acct = None;
+            let secs = time_solve(|| {
+                let (x, info) = cg_block(op, &b, None, &opts);
+                if acct.is_none() {
+                    acct = Some(info);
+                }
+                x.data[0]
+            });
+            let info = acct.expect("time_solve runs at least once");
+            rows.push(CgSweepRow {
+                op: op_name,
+                n,
+                rhs: RHS,
+                block: blk,
+                ns_per_solve_col: secs * 1e9 / RHS as f64,
+                mvms: info.mvms,
+                block_applies: info.block_applies,
+                converged: info.cols.iter().filter(|c| c.converged).count(),
+            });
+        }
+    };
+
+    // Dense kernel operator (noise bounds the condition number).
+    for &n in &[1000usize, 2000] {
+        let pts2: Vec<Vec<f64>> =
+            (0..n).map(|_| vec![rng.gaussian(), rng.gaussian()]).collect();
+        let dense = DenseKernelOp::new(
+            pts2,
+            Box::new(IsoKernel::new(Shape::Rbf, 2, 0.5, 1.0)),
+            1.5,
+        );
+        push("dense", n, &dense, &mut rng, &mut rows);
+    }
+
+    // Shifted symmetric Toeplitz (the shift plays the role of the noise).
+    for &n in &[1000usize, 4000] {
+        let col: Vec<f64> = (0..n).map(|k| (-0.003 * k as f64).exp()).collect();
+        let top = ToeplitzOp::new(col);
+        let shifted = ShiftedOp { inner: &top, shift: 10.0 };
+        push("toeplitz", n, &shifted, &mut rng, &mut rows);
+    }
+
+    // 1-D SKI.
+    for &n in &[1000usize, 4000] {
+        let pts1: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform_in(0.0, 4.0)]).collect();
+        let grid = Grid::covering(&pts1, &[n], 0.05);
+        let ski = SkiOp::new(
+            &pts1,
+            grid,
+            SeparableKernel::iso(Shape::Rbf, 1, 0.05, 1.0),
+            0.1,
+            InterpOrder::Cubic,
+            false,
+        );
+        push("ski", n, &ski, &mut rng, &mut rows);
+    }
+    rows
+}
+
+fn write_cg_json(rows: &[CgSweepRow], path: &str) {
+    let mut out = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"op\": \"{}\", \"n\": {}, \"rhs\": {}, \"block\": {}, \"ns_per_solve_col\": {:.1}, \"mvms\": {}, \"block_applies\": {}, \"converged\": {}}}{}\n",
+            r.op,
+            r.n,
+            r.rhs,
+            r.block,
+            r.ns_per_solve_col,
+            r.mvms,
+            r.block_applies,
+            r.converged,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("]\n");
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => {
+            eprintln!("failed to write {path}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
 fn write_json(rows: &[SweepRow], path: &str) {
     let mut out = String::from("[\n");
     for (i, r) in rows.iter().enumerate() {
@@ -164,7 +296,7 @@ fn write_json(rows: &[SweepRow], path: &str) {
     }
 }
 
-fn run_smoke(json_path: Option<&str>) {
+fn run_smoke(json_path: Option<&str>, json_cg_path: Option<&str>) {
     let rows = block_sweep(&[1000, 4000], &[1, 8, 32]);
     println!("{:<10} {:>6} {:>4} {:>14} {:>10}", "op", "n", "b", "ns/apply-col", "eff GB/s");
     for r in &rows {
@@ -176,22 +308,42 @@ fn run_smoke(json_path: Option<&str>) {
     if let Some(path) = json_path {
         write_json(&rows, path);
     }
+    if json_cg_path.is_some() {
+        let cg_rows = cg_sweep(&[1, 8]);
+        println!(
+            "{:<10} {:>6} {:>4} {:>6} {:>16} {:>8} {:>8} {:>6}",
+            "op", "n", "rhs", "block", "ns/solve-col", "mvms", "applies", "conv"
+        );
+        for r in &cg_rows {
+            println!(
+                "{:<10} {:>6} {:>4} {:>6} {:>16.1} {:>8} {:>8} {:>6}",
+                r.op, r.n, r.rhs, r.block, r.ns_per_solve_col, r.mvms, r.block_applies, r.converged
+            );
+        }
+        if let Some(path) = json_cg_path {
+            write_cg_json(&cg_rows, path);
+        }
+    }
 }
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if args.iter().any(|a| a == "--smoke") {
-        let json_path = match args.iter().position(|a| a == "--json") {
-            Some(i) => match args.get(i + 1) {
-                Some(p) => Some(p.clone()),
-                None => {
-                    eprintln!("--json needs an output path");
-                    std::process::exit(2);
-                }
-            },
-            None => None,
+        let path_after = |flag: &str| -> Option<String> {
+            match args.iter().position(|a| a == flag) {
+                Some(i) => match args.get(i + 1) {
+                    Some(p) => Some(p.clone()),
+                    None => {
+                        eprintln!("{flag} needs an output path");
+                        std::process::exit(2);
+                    }
+                },
+                None => None,
+            }
         };
-        run_smoke(json_path.as_deref());
+        let json_path = path_after("--json");
+        let json_cg_path = path_after("--json-cg");
+        run_smoke(json_path.as_deref(), json_cg_path.as_deref());
         return;
     }
 
@@ -275,13 +427,22 @@ fn main() {
         )
     });
 
-    // --- CG solve (the alpha term) ---
+    // --- CG solve (the alpha term) + block-CG RHS sweep ---
     Bench::header("CG solve on SKI n=8000 m=4000");
     let rhs: Vec<f64> = (0..d.n_train()).map(|_| rng.gaussian()).collect();
+    let cg_opts = CgOptions { tol: 1e-8, max_iters: 500, block_size: 1 };
     b.run("cg tol=1e-8", || {
-        let (x, info) = cg(ski, &rhs, 1e-8, 500);
+        let (x, info) = cg(ski, &rhs, &cg_opts);
         black_box((x[0], info.iters))
     });
+    let rhs_blk = Mat::from_fn(d.n_train(), 8, |_, _| rng.gaussian());
+    for bsz in [1usize, 8] {
+        let opts = CgOptions { block_size: bsz, ..cg_opts };
+        b.run(&format!("cg_block 8 rhs block={bsz}"), || {
+            let (x, info) = cg_block(ski, &rhs_blk, None, &opts);
+            black_box((x.data[0], info.block_applies))
+        });
+    }
 
     // --- Dense + PJRT artifact paths (the L1/L2 hot path) ---
     if let Some(res) = cli::run_experiment("perf", Scale::Small) {

@@ -1,14 +1,16 @@
 //! Hand-rolled CLI (clap is not in the offline registry).
 //!
 //! ```text
-//! gpsld exp <id> [--scale small|paper] [--block <b>]   run a paper experiment
-//! gpsld exp all  [--scale small|paper] [--block <b>]   run every experiment
+//! gpsld exp <id> [--scale small|paper] [--block <b>] [--cg-block <b>]
+//! gpsld exp all  [--scale small|paper] [--block <b>] [--cg-block <b>]
 //! gpsld artifacts                                      list/verify PJRT artifacts
 //! gpsld info                                           version + feature summary
 //! ```
 //!
 //! `--block <b>` sets the probe-block width used by every estimator in the
-//! run (the default for `SlqOptions`/`ChebOptions` and the service layer).
+//! run (the default for `SlqOptions`/`ChebOptions` and the service layer);
+//! `--cg-block <b>` sets the right-hand-side block width for the block-CG
+//! solver (the default for `CgOptions`).
 
 use super::{experiments, figures, ExpResult, Scale};
 
@@ -20,8 +22,9 @@ const EXP_IDS: &[&str] = &[
 pub fn usage() -> String {
     format!(
         "gpsld {} — Scalable Log Determinants for GP Kernel Learning (NIPS 2017 repro)\n\n\
-         USAGE:\n  gpsld exp <id|all> [--scale small|paper] [--block <b>] [--md <file>]\n  gpsld artifacts\n  gpsld info\n\n\
-         `--block <b>` sets the default probe-block width for blocked MVMs.\n\n\
+         USAGE:\n  gpsld exp <id|all> [--scale small|paper] [--block <b>] [--cg-block <b>] [--md <file>]\n  gpsld artifacts\n  gpsld info\n\n\
+         `--block <b>` sets the default probe-block width for blocked MVMs.\n\
+         `--cg-block <b>` sets the default RHS block width for block-CG solves.\n\n\
          EXPERIMENTS: {}\n",
         crate::version(),
         EXP_IDS.join(", ")
@@ -75,6 +78,16 @@ pub fn main_with_args(args: &[String]) -> i32 {
                             Some(b) if b >= 1 => crate::estimators::set_default_block_size(b),
                             _ => {
                                 eprintln!("--block needs a positive integer");
+                                return 2;
+                            }
+                        }
+                        i += 2;
+                    }
+                    "--cg-block" => {
+                        match args.get(i + 1).and_then(|s| s.parse::<usize>().ok()) {
+                            Some(b) if b >= 1 => crate::solvers::set_default_cg_block_size(b),
+                            _ => {
+                                eprintln!("--cg-block needs a positive integer");
                                 return 2;
                             }
                         }
@@ -168,5 +181,16 @@ mod tests {
     #[test]
     fn unknown_experiment_is_none() {
         assert!(run_experiment("nope", Scale::Small).is_none());
+    }
+
+    #[test]
+    fn cg_block_flag_rejects_zero_and_garbage() {
+        // Rejected before any experiment runs (and before the process-wide
+        // default is touched).
+        assert_eq!(main_with_args(&["exp".into(), "fig1".into(), "--cg-block".into(), "0".into()]), 2);
+        assert_eq!(
+            main_with_args(&["exp".into(), "fig1".into(), "--cg-block".into(), "x".into()]),
+            2
+        );
     }
 }

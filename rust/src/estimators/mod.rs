@@ -37,6 +37,10 @@
 //!   fusion inside an operator (`DenseKernelOp::apply_grad_all_mat`
 //!   computes all hypers in a single sweep but still counts `nh`).
 //!   At `block_size = 1` the two units coincide.
+//!
+//! The solver layer reports cost in the same two units
+//! (`solvers::BlockCgInfo::{mvms, block_applies}`) so solve and logdet
+//! budgets are directly comparable.
 
 pub mod chebyshev;
 pub mod exact;
@@ -65,28 +69,10 @@ pub fn default_block_size() -> usize {
     DEFAULT_BLOCK_SIZE.load(Ordering::Relaxed)
 }
 
-/// Partition of `count` probe columns into `block_size`-wide blocks —
-/// the one place the clamp/rounding lives so every estimator slices the
-/// probe matrix identically.
-#[derive(Clone, Copy, Debug)]
-pub(crate) struct BlockPartition {
-    pub bs: usize,
-    pub nblocks: usize,
-    count: usize,
-}
-
-impl BlockPartition {
-    pub fn new(count: usize, block_size: usize) -> Self {
-        let bs = block_size.max(1).min(count.max(1));
-        BlockPartition { bs, nblocks: count.div_ceil(bs), count }
-    }
-
-    /// (first column, width) of block `bi`.
-    pub fn range(&self, bi: usize) -> (usize, usize) {
-        let j0 = bi * self.bs;
-        (j0, self.bs.min(self.count - j0))
-    }
-}
+/// Probe-column partitioning — shared with the block-CG solver so probe
+/// sets and right-hand-side sets slice identically
+/// ([`crate::util::blocks::BlockPartition`]).
+pub(crate) use crate::util::blocks::BlockPartition;
 
 /// A stochastic estimate of `log|K̃|` and its hyper-derivatives.
 #[derive(Clone, Debug)]

@@ -16,7 +16,7 @@ use crate::kernels::{IsoKernel, Kernel, Shape};
 use crate::linalg::dense::Mat;
 use crate::opt::adam::{adam, AdamOptions};
 use crate::operators::{DenseKernelOp, KernelOp};
-use crate::solvers::cg::cg;
+use crate::solvers::{cg, CgOptions};
 use crate::util::rng::Rng;
 use crate::util::stats::dot;
 
@@ -30,6 +30,8 @@ pub struct DeepKernelGp {
     pub log_sigma: f64,
     pub mean: f64,
     pub slq: SlqOptions,
+    /// Settings for the `alpha = K̃^{-1}(y − μ)` solves.
+    pub cg: CgOptions,
 }
 
 /// One marginal-likelihood evaluation's outputs.
@@ -52,6 +54,7 @@ impl DeepKernelGp {
             log_sigma: sigma.ln(),
             mean,
             slq: SlqOptions { steps: 20, probes: 4, ..Default::default() },
+            cg: CgOptions { tol: 1e-8, max_iters: 800, ..Default::default() },
         }
     }
 
@@ -99,7 +102,14 @@ impl DeepKernelGp {
         let (feats, tape) = self.net.forward(&self.x);
         let op = self.build_op(&feats);
         let r: Vec<f64> = self.y.iter().map(|v| v - self.mean).collect();
-        let (alpha, _) = cg(&op, &r, 1e-8, 800);
+        let (alpha, ainfo) = cg(&op, &r, &self.cg);
+        if !ainfo.converged {
+            eprintln!(
+                "dkl: alpha solve did not converge (residual {:.3e}); \
+                 marginal likelihood and gradients may be off",
+                ainfo.residual
+            );
+        }
 
         // Logdet value + hyper grads + solve probes (g ≈ K̃^{-1} z).
         let mut slq = self.slq;
@@ -224,7 +234,13 @@ impl DeepKernelGp {
         let feats = self.features();
         let op = self.build_op(&feats);
         let r: Vec<f64> = self.y.iter().map(|v| v - self.mean).collect();
-        let (alpha, _) = cg(&op, &r, 1e-8, 800);
+        let (alpha, ainfo) = cg(&op, &r, &self.cg);
+        if !ainfo.converged {
+            eprintln!(
+                "dkl: predict alpha solve did not converge (residual {:.3e})",
+                ainfo.residual
+            );
+        }
         let (ztest, _) = self.net.forward(xtest);
         let kern = IsoKernel {
             shape: Shape::Rbf,

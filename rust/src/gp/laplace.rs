@@ -14,7 +14,7 @@
 use crate::error::Result;
 use crate::estimators::slq::slq_trace_fn;
 use crate::operators::{KernelOp, LaplaceBOp};
-use crate::solvers::cg::cg_with_guess;
+use crate::solvers::{cg_with_guess, CgOptions};
 use crate::util::stats::dot;
 
 use super::likelihoods::Likelihood;
@@ -24,8 +24,8 @@ use super::likelihoods::Likelihood;
 pub struct LaplaceOptions {
     pub newton_max_iters: usize,
     pub newton_tol: f64,
-    pub cg_tol: f64,
-    pub cg_max_iters: usize,
+    /// Newton inner-solve settings (shared [`CgOptions`] struct).
+    pub cg: CgOptions,
     /// SLQ settings for log|B|.
     pub slq_steps: usize,
     pub slq_probes: usize,
@@ -38,8 +38,7 @@ impl Default for LaplaceOptions {
         LaplaceOptions {
             newton_max_iters: 50,
             newton_tol: 1e-6,
-            cg_tol: 1e-8,
-            cg_max_iters: 500,
+            cg: CgOptions { tol: 1e-8, max_iters: 500, ..Default::default() },
             slq_steps: 25,
             slq_probes: 6,
             seed: 0,
@@ -108,13 +107,15 @@ impl<O: KernelOp> LaplaceGp<O> {
             let sqrt_w: Vec<f64> = w.iter().map(|v| v.max(0.0).sqrt()).collect();
             let rhs: Vec<f64> = (0..n).map(|i| sqrt_w[i] * kb[i]).collect();
             let bop = LaplaceBOp::new(&self.op, &w);
-            let (sol, _info) = cg_with_guess(
-                &bop,
-                &rhs,
-                bsol_warm.as_deref(),
-                opts.cg_tol,
-                opts.cg_max_iters,
-            );
+            let (sol, info) =
+                cg_with_guess(&bop, &rhs, bsol_warm.as_deref(), &opts.cg);
+            if !info.converged {
+                eprintln!(
+                    "laplace: Newton inner solve did not converge at iteration {it} \
+                     (residual {:.3e}); mode estimate may be off",
+                    info.residual
+                );
+            }
             bsol_warm = Some(sol.clone());
             for i in 0..n {
                 a[i] = b[i] - sqrt_w[i] * sol[i];

@@ -17,7 +17,8 @@ use crate::estimators::{exact, LogdetEstimate};
 use crate::opt::lbfgs::{lbfgs, LbfgsOptions};
 use crate::opt::OptResult;
 use crate::operators::{KernelOp, LinOp};
-use crate::solvers::cg::{cg_with_guess, CgInfo};
+use crate::linalg::dense::Mat;
+use crate::solvers::{cg_block, cg_with_guess, BlockCgInfo, CgInfo, CgOptions};
 use crate::util::stats::dot;
 
 /// Kernel operators that can also produce predictive quantities.
@@ -79,8 +80,9 @@ pub struct GpRegression<O: PredictiveOp> {
     pub y: Vec<f64>,
     /// Constant mean (defaults to mean(y)).
     pub mean: f64,
-    pub cg_tol: f64,
-    pub cg_max_iters: usize,
+    /// Solver settings shared by the training `alpha` solve and the
+    /// predictive-variance block solve.
+    pub cg: CgOptions,
     alpha_cache: Option<Vec<f64>>,
 }
 
@@ -88,7 +90,13 @@ impl<O: PredictiveOp> GpRegression<O> {
     pub fn new(op: O, y: Vec<f64>) -> Self {
         assert_eq!(op.n(), y.len());
         let mean = crate::util::stats::mean(&y);
-        GpRegression { op, y, mean, cg_tol: 1e-8, cg_max_iters: 1000, alpha_cache: None }
+        GpRegression {
+            op,
+            y,
+            mean,
+            cg: CgOptions { tol: 1e-8, max_iters: 1000, ..Default::default() },
+            alpha_cache: None,
+        }
     }
 
     pub fn n(&self) -> usize {
@@ -102,13 +110,8 @@ impl<O: PredictiveOp> GpRegression<O> {
     /// α = K̃^{-1}(y - μ) by warm-started CG.
     pub fn alpha(&mut self) -> (Vec<f64>, CgInfo) {
         let r = self.residual();
-        let (a, info) = cg_with_guess(
-            &self.op,
-            &r,
-            self.alpha_cache.as_deref(),
-            self.cg_tol,
-            self.cg_max_iters,
-        );
+        let (a, info) =
+            cg_with_guess(&self.op, &r, self.alpha_cache.as_deref(), &self.cg);
         self.alpha_cache = Some(a.clone());
         (a, info)
     }
@@ -230,16 +233,46 @@ impl<O: PredictiveOp> GpRegression<O> {
     }
 
     /// Predictive variance of the latent + noise at test points:
-    /// `k(x*,x*) + σ² − k_*^T K̃^{-1} k_*` (one CG solve per point).
+    /// `k(x*,x*) + σ² − k_*^T K̃^{-1} k_*`. All test-point columns are
+    /// batched through **one** block-CG solve; non-converged columns are
+    /// reported on stderr (use [`GpRegression::predict_var_info`] to
+    /// inspect convergence programmatically).
     pub fn predict_var(&mut self, test: &[Vec<f64>]) -> Vec<f64> {
+        let (vars, info) = self.predict_var_info(test);
+        if !info.all_converged() {
+            let bad = info.cols.iter().filter(|c| !c.converged).count();
+            eprintln!(
+                "predict_var: {bad}/{} solves did not converge \
+                 (worst residual {:.3e}); variances may be unreliable",
+                info.cols.len(),
+                info.worst_residual()
+            );
+        }
+        vars
+    }
+
+    /// [`GpRegression::predict_var`] plus the block-solve convergence
+    /// report: per-column `CgInfo` and the `mvms`/`block_applies`
+    /// accounting. A column that did not converge yields a variance from
+    /// the best available iterate — callers deciding on calibrated
+    /// uncertainties should check `info.all_converged()`.
+    pub fn predict_var_info(&mut self, test: &[Vec<f64>]) -> (Vec<f64>, BlockCgInfo) {
         let s2 = self.op.noise_var();
-        test.iter()
-            .map(|x| {
-                let kstar = self.op.cross_col(x);
-                let (sol, _) = cg_with_guess(&self.op, &kstar, None, self.cg_tol, self.cg_max_iters);
-                (self.op.prior_var(x) + s2 - dot(&kstar, &sol)).max(1e-12)
+        let n = self.n();
+        let mut kmat = Mat::zeros(n, test.len());
+        for (t, x) in test.iter().enumerate() {
+            kmat.set_col(t, &self.op.cross_col(x));
+        }
+        let (sols, info) = cg_block(&self.op, &kmat, None, &self.cg);
+        let vars = test
+            .iter()
+            .enumerate()
+            .map(|(t, x)| {
+                let quad = kmat.col_dot_pair(&sols, t);
+                (self.op.prior_var(x) + s2 - quad).max(1e-12)
             })
-            .collect()
+            .collect();
+        (vars, info)
     }
 }
 
@@ -468,6 +501,42 @@ mod tests {
             }
             assert!((pred[i] - want).abs() < 1e-5, "i={i}: {} vs {want}", pred[i]);
         }
+    }
+
+    #[test]
+    fn predict_var_block_matches_per_point_cg() {
+        // The batched predictive-variance solve must be bit-identical to
+        // the old one-cold-CG-per-point formulation, while consuming fewer
+        // block-amortized applies.
+        let mut gp = setup(40, 8);
+        gp.cg.block_size = 8;
+        let test_pts: Vec<Vec<f64>> =
+            (0..6).map(|t| vec![0.3 + 0.6 * t as f64]).collect();
+        let (vars, info) = gp.predict_var_info(&test_pts);
+        assert!(info.all_converged());
+        assert!(info.block_applies <= info.mvms);
+        assert!(info.block_applies < info.mvms, "blocking should amortize");
+        let s2 = gp.op.noise_var();
+        for (t, x) in test_pts.iter().enumerate() {
+            let kstar = gp.op.cross_col(x);
+            let (sol, si) = cg_with_guess(&gp.op, &kstar, None, &gp.cg);
+            assert!(si.converged);
+            let want = (gp.op.prior_var(x) + s2 - dot(&kstar, &sol)).max(1e-12);
+            assert_eq!(vars[t].to_bits(), want.to_bits(), "point {t}");
+        }
+    }
+
+    #[test]
+    fn predict_var_info_flags_non_converged_solves() {
+        // Bugfix regression: a starved iteration budget must be *visible*
+        // to callers instead of silently yielding garbage variances.
+        let mut gp = setup(50, 9);
+        gp.cg = CgOptions { tol: 1e-12, max_iters: 1, ..Default::default() };
+        let (vars, info) = gp.predict_var_info(&[vec![0.7], vec![2.1]]);
+        assert_eq!(vars.len(), 2);
+        assert!(!info.all_converged());
+        assert!(info.cols.iter().any(|c| !c.converged));
+        assert!(info.worst_residual() > 1e-12);
     }
 
     #[test]

@@ -86,6 +86,22 @@ pub trait LinOp: Send + Sync {
         out
     }
 
+    /// `R = B − A X` in one blocked apply — the shared residual update
+    /// behind the iterative solvers (warm-start initialization,
+    /// true-residual confirmation). Entry `(i, j)` is computed as
+    /// `b[(i, j)] − (A x_j)[i]`, exactly the single-vector path's
+    /// arithmetic, so it inherits the column-independence contract of
+    /// [`LinOp::apply_mat`].
+    fn residual_mat(&self, b: &Mat, x: &Mat) -> Mat {
+        assert_eq!(b.rows, self.n());
+        assert_eq!((b.rows, b.cols), (x.rows, x.cols));
+        let mut r = self.apply_mat(x);
+        for (ri, bi) in r.data.iter_mut().zip(&b.data) {
+            *ri = bi - *ri;
+        }
+        r
+    }
+
     /// Materialize as a dense matrix (test/baseline utility: O(n^2) applies).
     fn to_dense(&self) -> Mat {
         let n = self.n();
@@ -386,6 +402,22 @@ mod tests {
                         col[i]
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn residual_mat_matches_per_column() {
+        let a = Mat::from_rows(&[vec![1.5, 0.4, 0.1], vec![0.4, 2.0, 0.2], vec![0.1, 0.2, 1.2]]);
+        let op = DenseMatOp::new(a);
+        let x = Mat::from_fn(3, 2, |i, j| (i as f64 - j as f64) * 0.5);
+        let b = Mat::from_fn(3, 2, |i, j| (i * 2 + j) as f64 * 0.3);
+        let r = op.residual_mat(&b, &x);
+        for j in 0..2 {
+            let ax = op.apply_vec(&x.col(j));
+            for i in 0..3 {
+                let want = b[(i, j)] - ax[i];
+                assert_eq!(r[(i, j)].to_bits(), want.to_bits(), "({i},{j})");
             }
         }
     }

@@ -1,0 +1,396 @@
+//! Block conjugate gradients: all right-hand sides advance in lockstep
+//! through **one blocked [`LinOp::apply_mat`] per iteration**, so every
+//! pass over the operator's structure (dense kernel entries, circulant
+//! spectra, Kronecker modes) is amortized across the whole block — the
+//! solver-side counterpart of the estimators' block-probe engine.
+//!
+//! Per-column arithmetic (alpha, beta, residual recurrences, convergence
+//! and indefiniteness tests) is exactly the scalar path of
+//! [`super::cg::cg_with_guess`]; combined with the operators' column-
+//! independence contract (`apply_mat` column j ≡ `apply` of column j,
+//! bitwise) the block solve is **bit-identical** to solving column by
+//! column. Converged (or bailed) columns are *deflated*: they drop out of
+//! the active block, so late stragglers don't force redundant applies for
+//! the columns that finished early.
+
+use crate::linalg::dense::Mat;
+use crate::operators::LinOp;
+use crate::util::blocks::BlockPartition;
+use crate::util::stats::{axpy, dot, norm2};
+
+use super::cg::{residual_scale, CgInfo, CgOptions};
+
+/// Statistics for one block solve, mirroring
+/// `LogdetEstimate::{mvms, block_applies}`.
+#[derive(Clone, Debug)]
+pub struct BlockCgInfo {
+    /// Per-column run statistics — identical to what column-by-column
+    /// [`super::cg::cg_with_guess`] reports for that column.
+    pub cols: Vec<CgInfo>,
+    /// Total probe-column MVMs (the sum of `cols[j].mvms`): the
+    /// block-width-independent cost the paper's figures count.
+    pub mvms: usize,
+    /// Block-amortized applies: one per `apply_mat` call, however many
+    /// columns it carried. Always `<= mvms`; equal when `block_size = 1`.
+    pub block_applies: usize,
+}
+
+impl BlockCgInfo {
+    pub fn all_converged(&self) -> bool {
+        self.cols.iter().all(|c| c.converged)
+    }
+
+    /// Largest per-column iteration count.
+    pub fn max_iters(&self) -> usize {
+        self.cols.iter().map(|c| c.iters).max().unwrap_or(0)
+    }
+
+    /// Largest per-column exit residual (NaN if any column's residual is
+    /// NaN — a non-finite solve must not masquerade as a perfect one).
+    pub fn worst_residual(&self) -> f64 {
+        self.cols
+            .iter()
+            .map(|c| c.residual)
+            .fold(0.0, |a, b| if a.is_nan() || b.is_nan() { f64::NAN } else { a.max(b) })
+    }
+}
+
+/// Per-column lockstep state.
+struct Col {
+    /// Global column index in the RHS matrix.
+    j: usize,
+    x: Vec<f64>,
+    r: Vec<f64>,
+    p: Vec<f64>,
+    rs_old: f64,
+    scale: f64,
+    info: CgInfo,
+}
+
+/// Solve `A X = B` for all columns of `B`, `block_size` columns at a time.
+///
+/// `x0` supplies warm starts for every column (shape must match `b`).
+/// Returns the solution block and per-column + block-amortized statistics.
+pub fn cg_block<O: LinOp + ?Sized>(
+    op: &O,
+    b: &Mat,
+    x0: Option<&Mat>,
+    opts: &CgOptions,
+) -> (Mat, BlockCgInfo) {
+    let n = op.n();
+    assert_eq!(b.rows, n);
+    if let Some(g) = x0 {
+        assert_eq!((g.rows, g.cols), (b.rows, b.cols));
+    }
+    let mut out = Mat::zeros(n, b.cols);
+    let mut infos = vec![CgInfo { iters: 0, residual: 0.0, converged: false, mvms: 0 }; b.cols];
+    let mut block_applies = 0usize;
+    if b.cols == 0 {
+        return (out, BlockCgInfo { cols: infos, mvms: 0, block_applies });
+    }
+    let part = BlockPartition::new(b.cols, opts.block_size);
+    for bi in 0..part.nblocks {
+        let (j0, w) = part.range(bi);
+        solve_lockstep(op, b, x0, j0, w, opts, &mut out, &mut infos, &mut block_applies);
+    }
+    let mvms = infos.iter().map(|c| c.mvms).sum();
+    (out, BlockCgInfo { cols: infos, mvms, block_applies })
+}
+
+/// Batched CG over independent column vectors — a thin wrapper that packs
+/// the right-hand sides into one block and runs [`cg_block`].
+pub fn cg_batch<O: LinOp + ?Sized>(
+    op: &O,
+    bs: &[Vec<f64>],
+    opts: &CgOptions,
+) -> Vec<(Vec<f64>, CgInfo)> {
+    let n = op.n();
+    let mut b = Mat::zeros(n, bs.len());
+    for (j, col) in bs.iter().enumerate() {
+        b.set_col(j, col);
+    }
+    let (x, info) = cg_block(op, &b, None, opts);
+    info.cols
+        .iter()
+        .enumerate()
+        .map(|(j, ci)| (x.col(j), *ci))
+        .collect()
+}
+
+/// Run one `w`-wide column group `[j0, j0 + w)` in lockstep to completion.
+#[allow(clippy::too_many_arguments)]
+fn solve_lockstep<O: LinOp + ?Sized>(
+    op: &O,
+    b: &Mat,
+    x0: Option<&Mat>,
+    j0: usize,
+    w: usize,
+    opts: &CgOptions,
+    out: &mut Mat,
+    infos: &mut [CgInfo],
+    block_applies: &mut usize,
+) {
+    let n = op.n();
+    let mut cols: Vec<Col> = (j0..j0 + w)
+        .map(|j| {
+            let bj = b.col(j);
+            let scale = residual_scale(norm2(&bj));
+            let x = match x0 {
+                Some(g) => g.col(j),
+                None => vec![0.0; n],
+            };
+            Col {
+                j,
+                x,
+                r: bj,
+                p: Vec::new(),
+                rs_old: 0.0,
+                scale,
+                info: CgInfo { iters: 0, residual: 0.0, converged: false, mvms: 0 },
+            }
+        })
+        .collect();
+
+    // Warm-start residual R = B − A X0 — one blocked apply for the group.
+    if x0.is_some() {
+        let all: Vec<usize> = (0..w).collect();
+        let xblk = assemble(&cols, &all, Field::X);
+        let rmat = op.residual_mat(&b.sub_cols(j0, w), &xblk);
+        *block_applies += 1;
+        for (c, s) in cols.iter_mut().enumerate() {
+            s.info.mvms += 1;
+            rmat.col_into(c, &mut s.r);
+        }
+    }
+
+    // Initial residual check (already the true residual) + deflation.
+    let mut active: Vec<usize> = Vec::new();
+    for (c, s) in cols.iter_mut().enumerate() {
+        s.p = s.r.clone();
+        s.rs_old = dot(&s.r, &s.r);
+        s.info.residual = s.rs_old.sqrt() / s.scale;
+        if s.info.residual <= opts.tol {
+            s.info.converged = true;
+        } else {
+            active.push(c);
+        }
+    }
+
+    let mut ap = vec![0.0; n];
+    let mut rt = vec![0.0; n];
+    for it in 0..opts.max_iters {
+        if active.is_empty() {
+            break;
+        }
+        // One blocked apply over all still-active search directions.
+        let pblk = assemble(&cols, &active, Field::P);
+        let apblk = op.apply_mat(&pblk);
+        *block_applies += 1;
+
+        let mut next_active: Vec<usize> = Vec::new();
+        let mut bail: Vec<usize> = Vec::new();
+        let mut check: Vec<usize> = Vec::new();
+        for (c, &ci) in active.iter().enumerate() {
+            let s = &mut cols[ci];
+            s.info.mvms += 1;
+            apblk.col_into(c, &mut ap);
+            let pap = dot(&s.p, &ap);
+            if pap <= 0.0 || !pap.is_finite() {
+                // Indefiniteness bail: report the true residual (batched
+                // below) and deflate with the best iterate.
+                s.info.iters = it;
+                bail.push(ci);
+                continue;
+            }
+            let alpha = s.rs_old / pap;
+            axpy(alpha, &s.p, &mut s.x);
+            axpy(-alpha, &ap, &mut s.r);
+            let rs_new = dot(&s.r, &s.r);
+            s.info.iters = it + 1;
+            s.info.residual = rs_new.sqrt() / s.scale;
+            if s.info.residual <= opts.tol {
+                // Recurrence passed — confirm against the true residual
+                // (batched below); defer the beta/p update.
+                check.push(ci);
+                continue;
+            }
+            let beta = rs_new / s.rs_old;
+            for i in 0..n {
+                s.p[i] = s.r[i] + beta * s.p[i];
+            }
+            s.rs_old = rs_new;
+            next_active.push(ci);
+        }
+
+        // Batched true-residual pass: convergence confirmations + bails
+        // share one blocked apply.
+        if !bail.is_empty() || !check.is_empty() {
+            let idxs: Vec<usize> = bail.iter().chain(check.iter()).copied().collect();
+            let xblk = assemble(&cols, &idxs, Field::X);
+            let mut bblk = Mat::zeros(n, idxs.len());
+            for (c, &ci) in idxs.iter().enumerate() {
+                bblk.set_col(c, &b.col(cols[ci].j));
+            }
+            let rmat = op.residual_mat(&bblk, &xblk);
+            *block_applies += 1;
+            let nbail = bail.len();
+            for (c, &ci) in idxs.iter().enumerate() {
+                let s = &mut cols[ci];
+                s.info.mvms += 1;
+                rmat.col_into(c, &mut rt);
+                let rs_true = dot(&rt, &rt);
+                s.info.residual = rs_true.sqrt() / s.scale;
+                if c < nbail {
+                    // Bailed column: stays non-converged, deflated.
+                } else if s.info.residual <= opts.tol {
+                    s.info.converged = true;
+                } else {
+                    // Drift: restart from the true residual, stay active.
+                    s.r.copy_from_slice(&rt);
+                    s.p.copy_from_slice(&rt);
+                    s.rs_old = rs_true;
+                    next_active.push(ci);
+                }
+            }
+        }
+        active = next_active;
+    }
+
+    for s in cols {
+        out.set_col(s.j, &s.x);
+        infos[s.j] = s.info;
+    }
+}
+
+/// Which per-column vector to pack into a block.
+#[derive(Clone, Copy)]
+enum Field {
+    /// Current iterate `x`.
+    X,
+    /// Search direction `p`.
+    P,
+}
+
+/// Pack the selected column states' `field` vectors into an `n x k` block.
+fn assemble(cols: &[Col], idxs: &[usize], field: Field) -> Mat {
+    let n = cols[idxs[0]].x.len();
+    let mut m = Mat::zeros(n, idxs.len());
+    for (c, &ci) in idxs.iter().enumerate() {
+        let v: &[f64] = match field {
+            Field::X => &cols[ci].x,
+            Field::P => &cols[ci].p,
+        };
+        m.set_col(c, v);
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::cg::{cg, cg_with_guess};
+    use super::*;
+    use crate::operators::DenseMatOp;
+
+    fn spd_op(n: usize) -> DenseMatOp {
+        let b = Mat::from_fn(n, n, |i, j| (((i + 2) * (j + 3)) % 11) as f64 / 11.0);
+        let mut a = b.matmul(&b.transpose());
+        a.add_diag(n as f64 * 0.4);
+        DenseMatOp::new(a)
+    }
+
+    fn rhs(n: usize, k: usize) -> Mat {
+        Mat::from_fn(n, k, |i, j| ((i * 7 + j * 13) % 19) as f64 / 19.0 - 0.4)
+    }
+
+    #[test]
+    fn block_matches_scalar_bitwise() {
+        let n = 24;
+        let op = spd_op(n);
+        let b = rhs(n, 5);
+        for bs in [1usize, 2, 3, 5, 8] {
+            let opts = CgOptions { tol: 1e-10, max_iters: 200, block_size: bs };
+            let (x, info) = cg_block(&op, &b, None, &opts);
+            assert_eq!(info.cols.len(), 5);
+            for j in 0..5 {
+                let (xs, si) = cg(&op, &b.col(j), &opts);
+                for i in 0..n {
+                    assert_eq!(x[(i, j)].to_bits(), xs[i].to_bits(), "bs={bs} ({i},{j})");
+                }
+                assert_eq!(info.cols[j].iters, si.iters, "bs={bs} col {j}");
+                assert_eq!(info.cols[j].converged, si.converged);
+                assert_eq!(info.cols[j].mvms, si.mvms);
+                assert_eq!(info.cols[j].residual.to_bits(), si.residual.to_bits());
+            }
+            assert!(info.block_applies <= info.mvms);
+            if bs == 1 {
+                assert_eq!(info.block_applies, info.mvms);
+            }
+        }
+    }
+
+    #[test]
+    fn warm_start_block_matches_scalar_bitwise() {
+        let n = 18;
+        let op = spd_op(n);
+        let b = rhs(n, 4);
+        let g = Mat::from_fn(n, 4, |i, j| ((i + j) % 5) as f64 * 0.1);
+        let opts = CgOptions { tol: 1e-9, max_iters: 150, block_size: 4 };
+        let (x, info) = cg_block(&op, &b, Some(&g), &opts);
+        for j in 0..4 {
+            let gj = g.col(j);
+            let (xs, si) = cg_with_guess(&op, &b.col(j), Some(&gj), &opts);
+            for i in 0..n {
+                assert_eq!(x[(i, j)].to_bits(), xs[i].to_bits(), "({i},{j})");
+            }
+            assert_eq!(info.cols[j].mvms, si.mvms);
+        }
+    }
+
+    #[test]
+    fn deflation_stops_charging_converged_columns() {
+        let n = 16;
+        let op = spd_op(n);
+        // Column 0 is zero (converges instantly, 0 MVMs); column 1 is hard.
+        let mut b = Mat::zeros(n, 2);
+        b.set_col(1, &(0..n).map(|i| (i as f64 * 0.3).sin()).collect::<Vec<_>>());
+        let opts = CgOptions { tol: 1e-10, max_iters: 200, block_size: 2 };
+        let (_, info) = cg_block(&op, &b, None, &opts);
+        assert!(info.cols[0].converged);
+        assert_eq!(info.cols[0].mvms, 0);
+        assert!(info.cols[1].converged);
+        assert!(info.cols[1].mvms > 0);
+        assert!(info.block_applies <= info.mvms);
+    }
+
+    #[test]
+    fn empty_rhs_is_fine() {
+        let op = spd_op(6);
+        let b = Mat::zeros(6, 0);
+        let (x, info) = cg_block(&op, &b, None, &CgOptions::default());
+        assert_eq!((x.rows, x.cols), (6, 0));
+        assert!(info.cols.is_empty());
+        assert_eq!(info.mvms, 0);
+        assert_eq!(info.block_applies, 0);
+        assert!(info.all_converged());
+    }
+
+    #[test]
+    fn cg_batch_wraps_block() {
+        let n = 20;
+        let op = spd_op(n);
+        let bs: Vec<Vec<f64>> = (0..3)
+            .map(|j| (0..n).map(|i| ((i + j * 5) as f64 * 0.21).cos()).collect())
+            .collect();
+        let opts = CgOptions { tol: 1e-10, max_iters: 200, block_size: 3 };
+        let results = cg_batch(&op, &bs, &opts);
+        assert_eq!(results.len(), 3);
+        for (j, (x, info)) in results.iter().enumerate() {
+            let (xs, si) = cg(&op, &bs[j], &opts);
+            assert!(info.converged);
+            assert_eq!(info.iters, si.iters);
+            for i in 0..n {
+                assert_eq!(x[i].to_bits(), xs[i].to_bits(), "col {j} row {i}");
+            }
+        }
+    }
+}

@@ -1,2 +1,60 @@
 //! Iterative solvers over [`crate::operators::LinOp`].
+//!
+//! # The block-solve contract
+//!
+//! Stochastic estimators and predictive equations generate many
+//! simultaneous right-hand sides (probe sets, test-point cross-covariance
+//! columns), so the **hot path is the block solve**: [`block::cg_block`]
+//! advances every column in lockstep through one blocked
+//! [`crate::operators::LinOp::apply_mat`] per iteration, mirroring the
+//! estimators' block-probe engine. The contract:
+//!
+//! * **Bit-identical to scalar.** Alpha/beta/residual recurrences and every
+//!   convergence or indefiniteness test are per-column; combined with the
+//!   operators' column-independence contract, column `j` of a block solve
+//!   is bitwise identical to a scalar [`cg::cg_with_guess`] on column `j`
+//!   (enforced by `tests/proptests.rs` for every operator type and block
+//!   width). Blocking changes only how many columns each pass over the
+//!   operator's structure amortizes.
+//! * **Deflation.** Converged and bailed columns drop out of the active
+//!   block; late stragglers never force redundant applies for columns that
+//!   finished early.
+//! * **True-residual convergence.** `converged` is only reported after the
+//!   recurrence residual is confirmed against `‖b − A x‖` (one extra MVM);
+//!   on drift the recurrence restarts from the true residual. The
+//!   relative-residual scale falls back to absolute for near-zero
+//!   right-hand sides ([`cg::residual_scale`]).
+//! * **Accounting.** [`block::BlockCgInfo`] mirrors
+//!   `LogdetEstimate::{mvms, block_applies}`: per-column MVMs (comparable
+//!   across block widths) and block-amortized applies (what the hardware
+//!   executes; one per `apply_mat` call).
+//!
+//! Scalar entry points ([`cg::cg`], [`cg::cg_with_guess`]) remain for
+//! one-RHS sites (the training-loop `alpha` solve, Laplace Newton inner
+//! solves) and as the reference implementation; [`block::cg_batch`] is a
+//! thin wrapper over the block engine. All entry points share
+//! [`cg::CgOptions`]; the default `block_size` is process-wide
+//! ([`default_cg_block_size`], CLI `--cg-block`).
+pub mod block;
 pub mod cg;
+
+pub use block::{cg_batch, cg_block, BlockCgInfo};
+pub use cg::{cg, cg_with_guess, CgInfo, CgOptions};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide default right-hand-side block width used by
+/// `CgOptions::default`. The coordinator CLI's `--cg-block` flag threads
+/// through here (the estimators' probe width has its own knob,
+/// `estimators::default_block_size`).
+static DEFAULT_CG_BLOCK_SIZE: AtomicUsize = AtomicUsize::new(16);
+
+/// Set the process-wide default RHS block width (clamped to >= 1).
+pub fn set_default_cg_block_size(b: usize) {
+    DEFAULT_CG_BLOCK_SIZE.store(b.max(1), Ordering::Relaxed);
+}
+
+/// Current process-wide default RHS block width.
+pub fn default_cg_block_size() -> usize {
+    DEFAULT_CG_BLOCK_SIZE.load(Ordering::Relaxed)
+}

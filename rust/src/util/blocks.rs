@@ -1,0 +1,56 @@
+//! Column-block partitioning shared by the estimators' probe drivers and
+//! the solvers' right-hand-side batching — the one place the clamp/rounding
+//! lives so every blocked consumer slices a column set identically.
+
+/// Partition of `count` columns into `block_size`-wide blocks.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockPartition {
+    pub bs: usize,
+    pub nblocks: usize,
+    count: usize,
+}
+
+impl BlockPartition {
+    pub fn new(count: usize, block_size: usize) -> Self {
+        let bs = block_size.max(1).min(count.max(1));
+        BlockPartition { bs, nblocks: count.div_ceil(bs), count }
+    }
+
+    /// (first column, width) of block `bi`.
+    pub fn range(&self, bi: usize) -> (usize, usize) {
+        let j0 = bi * self.bs;
+        (j0, self.bs.min(self.count - j0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_all_columns_once() {
+        for count in [0usize, 1, 5, 8, 9, 17] {
+            for bsz in [1usize, 2, 4, 8, 100] {
+                let part = BlockPartition::new(count, bsz);
+                let mut covered = 0;
+                for bi in 0..part.nblocks {
+                    let (j0, w) = part.range(bi);
+                    assert_eq!(j0, covered, "count={count} bs={bsz}");
+                    assert!(w >= 1);
+                    covered += w;
+                }
+                assert_eq!(covered, count, "count={count} bs={bsz}");
+            }
+        }
+    }
+
+    #[test]
+    fn clamps_block_size() {
+        let part = BlockPartition::new(3, 100);
+        assert_eq!(part.bs, 3);
+        assert_eq!(part.nblocks, 1);
+        let part = BlockPartition::new(5, 0);
+        assert_eq!(part.bs, 1);
+        assert_eq!(part.nblocks, 5);
+    }
+}

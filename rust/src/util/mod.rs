@@ -1,5 +1,7 @@
-//! Shared utilities: RNG, parallel helpers, statistics, bench harness.
+//! Shared utilities: RNG, parallel helpers, statistics, bench harness,
+//! column-block partitioning.
 pub mod bench;
+pub mod blocks;
 pub mod parallel;
 pub mod rng;
 pub mod stats;

@@ -398,6 +398,206 @@ fn prop_slq_block_invariance() {
     }
 }
 
+/// Block-solve contract: `cg_block` is bit-identical to column-by-column
+/// scalar `cg_with_guess` — solutions, iteration counts, residuals,
+/// convergence flags, and per-column MVM accounting — while never
+/// executing more block-amortized applies than per-column MVMs.
+fn assert_cg_block_matches(name: &str, op: &dyn LinOp, b: &Mat, x0: Option<&Mat>) {
+    use gpsld::solvers::{cg_block, cg_with_guess, CgOptions};
+    for bs in [1usize, 2, 3, 5, 8] {
+        let opts = CgOptions { tol: 1e-10, max_iters: 150, block_size: bs };
+        let (x, info) = cg_block(op, b, x0, &opts);
+        assert_eq!(info.cols.len(), b.cols, "{name} bs={bs} info count");
+        let mut col_mvms = 0;
+        for j in 0..b.cols {
+            let g = x0.map(|m| m.col(j));
+            let (xs, si) = cg_with_guess(op, &b.col(j), g.as_deref(), &opts);
+            for i in 0..b.rows {
+                assert_eq!(
+                    x[(i, j)].to_bits(),
+                    xs[i].to_bits(),
+                    "{name} bs={bs} x({i},{j}): {} vs {}",
+                    x[(i, j)],
+                    xs[i]
+                );
+            }
+            let ci = &info.cols[j];
+            assert_eq!(ci.iters, si.iters, "{name} bs={bs} col {j} iters");
+            assert_eq!(ci.converged, si.converged, "{name} bs={bs} col {j} converged");
+            assert_eq!(ci.mvms, si.mvms, "{name} bs={bs} col {j} mvms");
+            assert_eq!(
+                ci.residual.to_bits(),
+                si.residual.to_bits(),
+                "{name} bs={bs} col {j} residual: {} vs {}",
+                ci.residual,
+                si.residual
+            );
+            col_mvms += si.mvms;
+        }
+        assert_eq!(info.mvms, col_mvms, "{name} bs={bs} total mvms");
+        assert!(
+            info.block_applies <= info.mvms,
+            "{name} bs={bs}: block applies {} > mvms {}",
+            info.block_applies,
+            info.mvms
+        );
+        if bs == 1 {
+            assert_eq!(info.block_applies, info.mvms, "{name} bs=1 amortization");
+        }
+    }
+}
+
+/// Property (block-solve contract): block-CG matches scalar CG bit for bit
+/// on every operator type — dense kernel, plain dense, shifted Toeplitz,
+/// Kronecker, SKI (both diagonal-correction modes), grid Kron kernel,
+/// FITC and SoR, additive sums, and the Laplace B wrapper — cold and
+/// warm-started, at every block width.
+#[test]
+fn prop_cg_block_matches_scalar_cg() {
+    let mut rng = Rng::new(1100);
+    let n = 24;
+    let k = 5;
+    let pts1: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform_in(0.0, 2.0)]).collect();
+    let pts2: Vec<Vec<f64>> =
+        (0..n).map(|_| vec![rng.uniform(), rng.uniform()]).collect();
+    let b = Mat::from_fn(n, k, |_, _| rng.gaussian());
+    let x0 = Mat::from_fn(n, k, |_, _| 0.3 * rng.gaussian());
+
+    // Dense kernel operator.
+    let dense = DenseKernelOp::new(
+        pts1.clone(),
+        Box::new(IsoKernel::new(Shape::Matern32, 1, 0.4, 1.1)),
+        0.3,
+    );
+    assert_cg_block_matches("dense_kernel", &dense, &b, None);
+    assert_cg_block_matches("dense_kernel_warm", &dense, &b, Some(&x0));
+
+    // Plain dense SPD matrix operator.
+    let mut a = Mat::from_fn(n, n, |_, _| rng.gaussian());
+    a.symmetrize();
+    a.add_diag(n as f64);
+    let dmat = DenseMatOp::new(a);
+    assert_cg_block_matches("dense_mat", &dmat, &b, None);
+    assert_cg_block_matches("dense_mat_warm", &dmat, &b, Some(&x0));
+
+    // Shifted symmetric Toeplitz (exponential-decay kernel + "noise").
+    let col: Vec<f64> =
+        (0..n).map(|j| (1.5 + rng.uniform()) * (-0.1 * j as f64).exp()).collect();
+    let top = ToeplitzOp::new(col);
+    let shifted = gpsld::operators::ShiftedOp { inner: &top, shift: 1.0 };
+    assert_cg_block_matches("toeplitz_shifted", &shifted, &b, None);
+
+    // Kronecker (dense x toeplitz x dense), n = 2*4*3 = 24.
+    let mut ka = Mat::from_fn(2, 2, |_, _| rng.gaussian());
+    ka.symmetrize();
+    ka.add_diag(2.0);
+    let mut kc = Mat::from_fn(3, 3, |_, _| rng.gaussian());
+    kc.symmetrize();
+    kc.add_diag(3.0);
+    let kron = KronOp::new(
+        vec![
+            KronFactor::Dense(ka),
+            KronFactor::Toeplitz(ToeplitzOp::new(vec![2.0, 0.8, 0.1, 0.02])),
+            KronFactor::Dense(kc),
+        ],
+        1.3,
+    );
+    assert_cg_block_matches("kron", &kron, &b, None);
+
+    // SKI with and without the diagonal correction.
+    for diag_corr in [false, true] {
+        let grid = Grid::new(vec![GridDim { lo: -0.1, hi: 2.1, m: 16 }]);
+        let ski = SkiOp::new(
+            &pts1,
+            grid,
+            SeparableKernel::iso(Shape::Rbf, 1, 0.3, 1.0),
+            0.2,
+            InterpOrder::Cubic,
+            diag_corr,
+        );
+        let name = if diag_corr { "ski_diag" } else { "ski" };
+        assert_cg_block_matches(name, &ski, &b, None);
+    }
+
+    // Grid Kron kernel operator (W = I), n = 6*4 = 24.
+    let grid2 = Grid::new(vec![
+        GridDim { lo: 0.0, hi: 1.0, m: 6 },
+        GridDim { lo: 0.0, hi: 1.0, m: 4 },
+    ]);
+    let kk = KronKernelOp::new(grid2, SeparableKernel::iso(Shape::Matern52, 2, 0.5, 0.9), 0.15);
+    assert_cg_block_matches("kron_kernel", &kk, &b, None);
+
+    // FITC and SoR.
+    for fitc in [false, true] {
+        let ind: Vec<Vec<f64>> = (0..6).map(|i| vec![2.0 * i as f64 / 5.0]).collect();
+        let op = FitcOp::new(
+            pts1.clone(),
+            ind,
+            Box::new(IsoKernel::new(Shape::Rbf, 1, 0.5, 1.0)),
+            0.3,
+            fitc,
+        )
+        .unwrap();
+        let name = if fitc { "fitc" } else { "sor" };
+        assert_cg_block_matches(name, &op, &b, None);
+    }
+
+    // Additive sum of two dense kernels.
+    let p1 = DenseKernelOp::new(
+        pts2.clone(),
+        Box::new(IsoKernel::new(Shape::Rbf, 2, 0.5, 1.0)),
+        1.0,
+    );
+    let p2 = DenseKernelOp::new(
+        pts2.clone(),
+        Box::new(IsoKernel::new(Shape::Matern12, 2, 0.8, 0.6)),
+        1.0,
+    );
+    let sum = SumKernelOp::new(vec![Box::new(p1), Box::new(p2)], 0.4);
+    assert_cg_block_matches("sum", &sum, &b, None);
+
+    // Laplace B wrapper over the dense kernel (the Newton inner-solve op).
+    let w: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+    let lb = gpsld::operators::LaplaceBOp::new(&dense, &w);
+    assert_cg_block_matches("laplace_b", &lb, &b, None);
+}
+
+/// Property (true-residual convergence): whenever CG reports `converged`,
+/// the *recomputed* true residual honors the tolerance — the recurrence
+/// residual alone is not trusted.
+#[test]
+fn prop_cg_converged_implies_true_residual() {
+    use gpsld::solvers::{cg_block, CgOptions};
+    use gpsld::util::stats::norm2;
+    let mut rng = Rng::new(1200);
+    for case in 0..10 {
+        let n = 20 + rng.below(40);
+        let pts: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform_in(0.0, 3.0)]).collect();
+        let op = DenseKernelOp::new(
+            pts,
+            Box::new(IsoKernel::new(rand_shape(&mut rng), 1, 0.2 + rng.uniform(), 1.0)),
+            0.05 + 0.3 * rng.uniform(),
+        );
+        let b = Mat::from_fn(n, 3, |_, _| rng.gaussian());
+        let opts = CgOptions { tol: 1e-9, max_iters: 4 * n, block_size: 3 };
+        let (x, info) = cg_block(&op, &b, None, &opts);
+        for j in 0..3 {
+            let ci = &info.cols[j];
+            if !ci.converged {
+                continue;
+            }
+            let ax = op.apply_vec(&x.col(j));
+            let bj = b.col(j);
+            let rtrue: Vec<f64> = (0..n).map(|i| bj[i] - ax[i]).collect();
+            let rel = norm2(&rtrue) / norm2(&bj);
+            assert!(
+                rel <= opts.tol * (1.0 + 1e-12),
+                "case {case} col {j}: converged but true residual {rel}"
+            );
+        }
+    }
+}
+
 /// Property: derivative MVMs match finite differences for random SKI
 /// configurations (routing/batching/state invariance of the operator).
 #[test]

@@ -1,16 +1,21 @@
 #!/usr/bin/env bash
 # Perf smoke: run the blocked-MVM sweep (dense / Toeplitz / SKI at
-# n in {1k, 4k}, b in {1, 8, 32}) and emit BENCH_mvm.json at the repo root
-# so successive PRs have a throughput trajectory to compare against.
+# n in {1k, 4k}, b in {1, 8, 32}) and the block-CG solve sweep (same
+# operator structures, 8 RHS, block in {1, 8}), emitting BENCH_mvm.json
+# and BENCH_cg.json at the repo root so successive PRs have a throughput
+# trajectory — MVMs *and* solves — to compare against.
 #
-# Usage: scripts/bench_smoke.sh [output.json]
+# Usage: scripts/bench_smoke.sh [mvm_output.json] [cg_output.json]
 set -euo pipefail
 
 repo_root="$(cd "$(dirname "$0")/.." && pwd)"
-out="${1:-$repo_root/BENCH_mvm.json}"
+out_mvm="${1:-$repo_root/BENCH_mvm.json}"
+out_cg="${2:-$repo_root/BENCH_cg.json}"
 
 cd "$repo_root/rust"
-cargo bench --bench bench_perf_mvm -- --smoke --json "$out"
+cargo bench --bench bench_perf_mvm -- --smoke --json "$out_mvm" --json-cg "$out_cg"
 
 echo "BENCH_mvm rows:"
-cat "$out"
+cat "$out_mvm"
+echo "BENCH_cg rows:"
+cat "$out_cg"
