@@ -23,9 +23,16 @@
 //! `mvms` / `block_applies` mirror `BlockCgInfo` (block-amortized applies
 //! are the hardware-executed count and must be <= per-column MVMs), and
 //! `converged` counts columns that hit the tolerance.
+//!
+//! `--json-precond` runs the pivoted-Cholesky preconditioning sweep
+//! (rank × σ on an ill-conditioned dense RBF kernel) and writes
+//! `{op, n, sigma, rank, cg_iters, lanczos_steps, ns_per_solve_col}` per
+//! case — rank 0 is the unpreconditioned baseline, so the iteration-count
+//! reduction is measured rather than asserted.
 
 use std::time::Instant;
 
+use gpsld::coordinator::figures::{precond_sweep, PrecondSweepRow};
 use gpsld::coordinator::{cli, Scale};
 use gpsld::data;
 use gpsld::estimators::chebyshev::{chebyshev_logdet, ChebOptions};
@@ -182,7 +189,7 @@ fn cg_sweep(blocks: &[usize]) -> Vec<CgSweepRow> {
     let mut rows = Vec::new();
     let mut rng = Rng::new(17);
     let push = |op_name: &'static str, n: usize, op: &dyn LinOp, rng: &mut Rng, rows: &mut Vec<CgSweepRow>| {
-        let opts_base = CgOptions { tol: 1e-6, max_iters: 120, block_size: 1 };
+        let opts_base = CgOptions { tol: 1e-6, max_iters: 120, block_size: 1, ..Default::default() };
         let b = Mat::from_fn(n, RHS, |_, _| rng.gaussian());
         for &blk in blocks {
             let opts = CgOptions { block_size: blk, ..opts_base };
@@ -247,21 +254,13 @@ fn cg_sweep(blocks: &[usize]) -> Vec<CgSweepRow> {
     rows
 }
 
-fn write_cg_json(rows: &[CgSweepRow], path: &str) {
+/// Shared JSON-array writer: each entry is one pre-formatted row object.
+fn write_rows_json(path: &str, rows: &[String]) {
     let mut out = String::from("[\n");
     for (i, r) in rows.iter().enumerate() {
-        out.push_str(&format!(
-            "  {{\"op\": \"{}\", \"n\": {}, \"rhs\": {}, \"block\": {}, \"ns_per_solve_col\": {:.1}, \"mvms\": {}, \"block_applies\": {}, \"converged\": {}}}{}\n",
-            r.op,
-            r.n,
-            r.rhs,
-            r.block,
-            r.ns_per_solve_col,
-            r.mvms,
-            r.block_applies,
-            r.converged,
-            if i + 1 < rows.len() { "," } else { "" }
-        ));
+        out.push_str("  ");
+        out.push_str(r);
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
     }
     out.push_str("]\n");
     match std::fs::write(path, &out) {
@@ -271,32 +270,55 @@ fn write_cg_json(rows: &[CgSweepRow], path: &str) {
             std::process::exit(1);
         }
     }
+}
+
+/// Serialize the shared precond sweep rows (see
+/// `gpsld::coordinator::figures::precond_sweep` — the metric definitions
+/// live there, next to the CLI perf table that prints the same sweep).
+fn write_precond_json(rows: &[PrecondSweepRow], path: &str) {
+    let formatted: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"op\": \"{}\", \"n\": {}, \"sigma\": {}, \"rank\": {}, \"cg_iters\": {}, \"lanczos_steps\": {}, \"ns_per_solve_col\": {:.1}}}",
+                r.op, r.n, r.sigma, r.rank, r.cg_iters, r.lanczos_steps, r.ns_per_solve_col
+            )
+        })
+        .collect();
+    write_rows_json(path, &formatted);
+}
+
+fn write_cg_json(rows: &[CgSweepRow], path: &str) {
+    let formatted: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"op\": \"{}\", \"n\": {}, \"rhs\": {}, \"block\": {}, \"ns_per_solve_col\": {:.1}, \"mvms\": {}, \"block_applies\": {}, \"converged\": {}}}",
+                r.op, r.n, r.rhs, r.block, r.ns_per_solve_col, r.mvms, r.block_applies, r.converged
+            )
+        })
+        .collect();
+    write_rows_json(path, &formatted);
 }
 
 fn write_json(rows: &[SweepRow], path: &str) {
-    let mut out = String::from("[\n");
-    for (i, r) in rows.iter().enumerate() {
-        out.push_str(&format!(
-            "  {{\"op\": \"{}\", \"n\": {}, \"b\": {}, \"ns_per_apply\": {:.1}, \"gbps\": {:.3}}}{}\n",
-            r.op,
-            r.n,
-            r.b,
-            r.ns_per_apply,
-            r.gbps,
-            if i + 1 < rows.len() { "," } else { "" }
-        ));
-    }
-    out.push_str("]\n");
-    match std::fs::write(path, &out) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => {
-            eprintln!("failed to write {path}: {e}");
-            std::process::exit(1);
-        }
-    }
+    let formatted: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"op\": \"{}\", \"n\": {}, \"b\": {}, \"ns_per_apply\": {:.1}, \"gbps\": {:.3}}}",
+                r.op, r.n, r.b, r.ns_per_apply, r.gbps
+            )
+        })
+        .collect();
+    write_rows_json(path, &formatted);
 }
 
-fn run_smoke(json_path: Option<&str>, json_cg_path: Option<&str>) {
+fn run_smoke(
+    json_path: Option<&str>,
+    json_cg_path: Option<&str>,
+    json_precond_path: Option<&str>,
+) {
     let rows = block_sweep(&[1000, 4000], &[1, 8, 32]);
     println!("{:<10} {:>6} {:>4} {:>14} {:>10}", "op", "n", "b", "ns/apply-col", "eff GB/s");
     for r in &rows {
@@ -324,6 +346,22 @@ fn run_smoke(json_path: Option<&str>, json_cg_path: Option<&str>) {
             write_cg_json(&cg_rows, path);
         }
     }
+    if json_precond_path.is_some() {
+        let pc_rows = precond_sweep(&[1000], &[0.1, 0.01], &[0, 8, 32]);
+        println!(
+            "{:<10} {:>6} {:>7} {:>5} {:>9} {:>14} {:>16}",
+            "op", "n", "sigma", "rank", "cg_iters", "lanczos_steps", "ns/solve-col"
+        );
+        for r in &pc_rows {
+            println!(
+                "{:<10} {:>6} {:>7} {:>5} {:>9} {:>14} {:>16.1}",
+                r.op, r.n, r.sigma, r.rank, r.cg_iters, r.lanczos_steps, r.ns_per_solve_col
+            );
+        }
+        if let Some(path) = json_precond_path {
+            write_precond_json(&pc_rows, path);
+        }
+    }
 }
 
 fn main() {
@@ -343,7 +381,12 @@ fn main() {
         };
         let json_path = path_after("--json");
         let json_cg_path = path_after("--json-cg");
-        run_smoke(json_path.as_deref(), json_cg_path.as_deref());
+        let json_precond_path = path_after("--json-precond");
+        run_smoke(
+            json_path.as_deref(),
+            json_cg_path.as_deref(),
+            json_precond_path.as_deref(),
+        );
         return;
     }
 
@@ -430,7 +473,7 @@ fn main() {
     // --- CG solve (the alpha term) + block-CG RHS sweep ---
     Bench::header("CG solve on SKI n=8000 m=4000");
     let rhs: Vec<f64> = (0..d.n_train()).map(|_| rng.gaussian()).collect();
-    let cg_opts = CgOptions { tol: 1e-8, max_iters: 500, block_size: 1 };
+    let cg_opts = CgOptions { tol: 1e-8, max_iters: 500, block_size: 1, ..Default::default() };
     b.run("cg tol=1e-8", || {
         let (x, info) = cg(ski, &rhs, &cg_opts);
         black_box((x[0], info.iters))

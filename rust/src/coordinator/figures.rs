@@ -417,6 +417,31 @@ pub fn perf_mvm(scale: Scale) -> ExpResult {
         ]);
     }
 
+    // §Precond — the shared rank × σ preconditioning sweep (see
+    // [`precond_sweep`]; `bench_perf_mvm --json-precond` emits the same
+    // rows machine-readably). Iteration/step counts land in the value
+    // column alongside the timing rows.
+    {
+        let n = match scale {
+            Scale::Small => 400,
+            Scale::Paper => 1000,
+        };
+        for r in precond_sweep(&[n], &[0.1, 0.01], &[0, 8, 32]) {
+            rows.push(vec![
+                format!("precond_n{}_sig{}_r{}_cg_iters", r.n, r.sigma, r.rank),
+                format!("{}", r.cg_iters),
+            ]);
+            rows.push(vec![
+                format!("precond_n{}_sig{}_r{}_lanczos_steps", r.n, r.sigma, r.rank),
+                format!("{}", r.lanczos_steps),
+            ]);
+            rows.push(vec![
+                format!("precond_n{}_sig{}_r{}_solve8_ms", r.n, r.sigma, r.rank),
+                format!("{:.3}", r.ns_per_solve_col * 8.0 / 1e6),
+            ]);
+        }
+    }
+
     // End-to-end SLQ (25 steps, 5 probes, with grads) on SKI m=4000, plus
     // the SKI block sweep.
     {
@@ -453,5 +478,74 @@ pub fn perf_mvm(scale: Scale) -> ExpResult {
         ]);
     }
 
-    ExpResult { id: "perf", header: vec!["case", "ms"], rows }
+    ExpResult { id: "perf", header: vec!["case", "value"], rows }
+}
+
+/// One case of the rank × σ pivoted-Cholesky preconditioning sweep.
+pub struct PrecondSweepRow {
+    pub op: &'static str,
+    pub n: usize,
+    pub sigma: f64,
+    pub rank: usize,
+    /// Worst-column PCG iteration count of an 8-RHS block solve (tol 1e-8).
+    pub cg_iters: usize,
+    /// Lanczos quadrature steps per probe to 1e-4
+    /// ([`crate::estimators::lanczos::logdet_steps_to_tol`]).
+    pub lanczos_steps: usize,
+    /// Wall time per solved column (one warmup + one timed block solve).
+    pub ns_per_solve_col: f64,
+}
+
+/// The rank × σ preconditioning sweep on an ill-conditioned dense RBF
+/// kernel — the one definition shared by the CLI perf table and
+/// `bench_perf_mvm --json-precond` (`BENCH_precond.json`), so the two
+/// surfaces report identically-defined numbers. rank 0 is the
+/// unpreconditioned baseline: the iteration-count reduction is measured,
+/// not asserted.
+pub fn precond_sweep(ns: &[usize], sigmas: &[f64], ranks: &[usize]) -> Vec<PrecondSweepRow> {
+    use crate::estimators::lanczos::logdet_steps_to_tol;
+    use crate::linalg::dense::Mat;
+    use crate::solvers::{
+        build_preconditioner, pcg_block, CgOptions, PrecondOptions, Preconditioner,
+    };
+    use crate::util::bench::black_box;
+    let mut rows = Vec::new();
+    let mut rng = Rng::new(29);
+    for &n in ns {
+        let pts: Vec<Vec<f64>> =
+            (0..n).map(|_| vec![rng.uniform_in(0.0, 3.0)]).collect();
+        for &sigma in sigmas {
+            let op = DenseKernelOp::new(
+                pts.clone(),
+                Box::new(IsoKernel::new(Shape::Rbf, 1, 0.5, 1.0)),
+                sigma,
+            );
+            let b = Mat::from_fn(n, 8, |_, _| rng.gaussian());
+            let mut z = vec![0.0; n];
+            rng.fill_gaussian(&mut z);
+            for &rank in ranks {
+                let pc = build_preconditioner(&op, PrecondOptions::rank(rank));
+                let pcd = pc.as_ref().map(|p| p as &dyn Preconditioner);
+                let opts = CgOptions { tol: 1e-8, max_iters: 5000, ..Default::default() };
+                // Warmup solve doubles as the (deterministic) accounting run.
+                let (_, info) = pcg_block(&op, &b, None, pcd, &opts);
+                let t0 = Instant::now();
+                let (x, _) = pcg_block(&op, &b, None, pcd, &opts);
+                black_box(x.data[0]);
+                let secs = t0.elapsed().as_secs_f64();
+                let lanczos_steps = logdet_steps_to_tol(&op, pcd, &z, n.min(200), 1e-4)
+                    .expect("precond sweep: lanczos quadrature failed");
+                rows.push(PrecondSweepRow {
+                    op: "dense_rbf",
+                    n,
+                    sigma,
+                    rank,
+                    cg_iters: info.max_iters(),
+                    lanczos_steps,
+                    ns_per_solve_col: secs * 1e9 / 8.0,
+                });
+            }
+        }
+    }
+    rows
 }

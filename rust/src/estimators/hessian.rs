@@ -13,7 +13,7 @@ use super::probes::{ProbeKind, ProbeSet};
 use super::slq::slq_solves;
 use crate::error::Result;
 use crate::operators::KernelOp;
-use crate::solvers::{cg_block, CgOptions};
+use crate::solvers::{build_preconditioner, pcg_block, CgOptions, Preconditioner};
 use crate::util::stats::dot;
 
 /// How the probe solves `q = K̃^{-1} z` are produced.
@@ -25,7 +25,9 @@ pub enum HessianSolves {
     /// High-accuracy solves through the block-CG engine: one lockstep
     /// block solve per probe set, iterating to the CG tolerance instead of
     /// a fixed Lanczos depth. Costs extra MVMs but removes the truncation
-    /// bias on ill-conditioned operators.
+    /// bias on ill-conditioned operators. When the options' `precond`
+    /// knob has a nonzero rank, the solves run through PCG with a pivoted-
+    /// Cholesky preconditioner built once per estimate.
     BlockCg(CgOptions),
 }
 
@@ -103,13 +105,20 @@ pub fn logdet_hessian(op: &mut dyn KernelOp, opts: &HessianOptions) -> Result<He
     // Independent probe pairs: z_p and w_p.
     let zs = ProbeSet::new(n, opts.probes, ProbeKind::Rademacher, opts.seed);
     let ws = ProbeSet::new(n, opts.probes, ProbeKind::Rademacher, opts.seed ^ 0x9E3779B97F4A7C15);
+    // One pivoted-Cholesky preconditioner per estimate, shared by both
+    // probe-set solves (only the BlockCg backend uses it).
+    let pc = match opts.solves {
+        HessianSolves::BlockCg(cg_opts) => build_preconditioner(&*op, cg_opts.precond),
+        HessianSolves::Lanczos => None,
+    };
     // Probe solves: either the free Lanczos byproduct (§3.2) or the
-    // block-CG engine when the caller wants solves at CG accuracy.
+    // block-(P)CG engine when the caller wants solves at CG accuracy.
     let solve_set = |ps: &ProbeSet| -> Vec<Vec<f64>> {
         match opts.solves {
             HessianSolves::Lanczos => slq_solves(&*op, ps, opts.steps, opts.threads),
             HessianSolves::BlockCg(cg_opts) => {
-                let (x, info) = cg_block(&*op, &ps.as_mat(), None, &cg_opts);
+                let pcd = pc.as_ref().map(|p| p as &dyn Preconditioner);
+                let (x, info) = pcg_block(&*op, &ps.as_mat(), None, pcd, &cg_opts);
                 if !info.all_converged() {
                     let bad = info.cols.iter().filter(|c| !c.converged).count();
                     eprintln!(
@@ -250,6 +259,47 @@ mod tests {
                 assert!(
                     (est.mean[i][j] - truth[i][j]).abs()
                         < 6.0 * est.std_err[i][j] + 0.05 * scale,
+                    "({i},{j}): {} vs {} (se {})",
+                    est.mean[i][j],
+                    truth[i][j],
+                    est.std_err[i][j]
+                );
+            }
+        }
+    }
+
+    /// PCG-backed probe solves (precond rank > 0) leave the estimator
+    /// tracking the exact Hessian, like the unpreconditioned backend.
+    #[test]
+    fn preconditioned_block_cg_solves_track_exact() {
+        let mut rng = Rng::new(43);
+        let pts: Vec<Vec<f64>> =
+            (0..40).map(|_| vec![rng.uniform_in(0.0, 3.0)]).collect();
+        let mut op = DenseKernelOp::new(
+            pts,
+            Box::new(IsoKernel::new(Shape::Rbf, 1, 0.6, 1.0)),
+            0.4,
+        );
+        let truth = exact_hessian(&mut op);
+        let mut cg_opts = crate::solvers::CgOptions::new(1e-10, 400);
+        cg_opts.precond = crate::solvers::PrecondOptions::rank(12);
+        let est = logdet_hessian(
+            &mut op,
+            &HessianOptions {
+                steps: 40,
+                probes: 150,
+                seed: 11,
+                solves: HessianSolves::BlockCg(cg_opts),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for i in 0..3 {
+            for j in 0..3 {
+                let scale = truth[i][j].abs().max(1.0);
+                assert!(
+                    (est.mean[i][j] - truth[i][j]).abs()
+                        < 6.0 * est.std_err[i][j] + 0.06 * scale,
                     "({i},{j}): {} vs {} (se {})",
                     est.mean[i][j],
                     truth[i][j],

@@ -179,6 +179,61 @@ pub fn lanczos_block<O: LinOp + ?Sized>(op: &O, z: &Mat, m: usize) -> Vec<Lanczo
         .collect()
 }
 
+/// Smallest Lanczos step count at which the Gauss quadrature estimate of
+/// `weight * e_1ᵀ f(T) e_1` has converged: the first prefix length m where
+/// consecutive estimates differ by less than `tol * (|estimate| + 1)`.
+/// Returns `alphas.len()` if the run never settles. This is the
+/// "Lanczos steps per probe" metric of the preconditioning benchmarks —
+/// computed post hoc from one full run, so measuring it costs nothing
+/// beyond the run itself.
+pub fn quadrature_steps_to_tol(
+    alphas: &[f64],
+    betas: &[f64],
+    weight: f64,
+    f: impl Fn(f64) -> f64 + Copy,
+    tol: f64,
+) -> crate::error::Result<usize> {
+    use crate::linalg::tridiag::lanczos_quadrature;
+    let m = alphas.len();
+    if m == 0 {
+        return Ok(0);
+    }
+    let mut prev = lanczos_quadrature(&alphas[..1], &[], weight, f)?;
+    for k in 2..=m {
+        let cur = lanczos_quadrature(&alphas[..k], &betas[..k - 1], weight, f)?;
+        if (cur - prev).abs() <= tol * (cur.abs() + 1.0) {
+            return Ok(k);
+        }
+        prev = cur;
+    }
+    Ok(m)
+}
+
+/// The "Lanczos steps per probe" metric shared by the CLI perf experiment
+/// and `bench_perf_mvm --json-precond`: run one (optionally preconditioned)
+/// Lanczos pass from probe `z` and report the quadrature convergence point
+/// of the log-determinant integrand via [`quadrature_steps_to_tol`]. With a
+/// preconditioner the pass runs on the split `P^{-1/2} K̃ P^{-1/2}`.
+/// Defining the metric once keeps the perf table and the JSON sweep from
+/// drifting apart.
+pub fn logdet_steps_to_tol<O: LinOp + ?Sized>(
+    op: &O,
+    pc: Option<&dyn crate::solvers::Preconditioner>,
+    z: &[f64],
+    max_steps: usize,
+    tol: f64,
+) -> crate::error::Result<usize> {
+    let f = |lam: f64| lam.max(1e-300).ln();
+    let r = match pc {
+        Some(p) => {
+            let pop = crate::solvers::PreconditionedOp::new(op, p);
+            lanczos(&pop, z, max_steps)
+        }
+        None => lanczos(op, z, max_steps),
+    };
+    quadrature_steps_to_tol(&r.alphas, &r.betas, r.znorm * r.znorm, f, tol)
+}
+
 /// Extremal eigenvalue estimates from a short Lanczos run on a random
 /// probe, with safety margins — used to scale the Chebyshev expansion
 /// (which, unlike Lanczos, needs to know the spectrum's interval; supp. C.2

@@ -26,6 +26,29 @@
 //! **bit-identical for every block size** — blocking changes only how many
 //! columns each pass over the operator's structure amortizes.
 //!
+//! ## Preconditioned SLQ
+//!
+//! On ill-conditioned `K̃` (small σ), Lanczos needs many steps to resolve
+//! the quadrature near the spectrum's low end. [`slq::slq_logdet_pc`]
+//! accepts a [`crate::solvers::Preconditioner`] `P ≈ K̃` (rank-k pivoted
+//! Cholesky + noise, built by `solvers::build_preconditioner`) and uses
+//! the exact identity
+//!
+//! ```text
+//! log|K̃| = log|P| + tr log(P^{-1/2} K̃ P^{-1/2})
+//! ```
+//!
+//! so the stochastic part only sees the *flattened* spectrum of the
+//! symmetric split `M = P^{-1/2} K̃ P^{-1/2}` (applied through the
+//! preconditioner's low-rank factor; each `M` apply costs exactly one
+//! `K̃` MVM). `log|P|` is closed-form and exact, so the correction adds no
+//! stochastic error. Derivatives use
+//! `tr(K̃⁻¹ ∂K̃) = E[(P^{-1/2} M⁻¹ z)ᵀ ∂K̃ (P^{-1/2} z)]`, with `M⁻¹ z`
+//! the free Lanczos byproduct. The identity holds for any *fixed* SPD `P`,
+//! so the estimate stays unbiased even though `P` was built at the current
+//! hypers. With `pc = None` (or `--precond-rank 0`) the preconditioned
+//! entry points are bit-identical to the plain ones.
+//!
 //! ## MVM accounting
 //!
 //! [`LogdetEstimate`] reports cost in two units:

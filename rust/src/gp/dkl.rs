@@ -10,13 +10,13 @@
 
 use crate::error::Result;
 use crate::estimators::probes::{ProbeKind, ProbeSet};
-use crate::estimators::slq::{slq_logdet, SlqOptions};
+use crate::estimators::slq::{slq_logdet_pc, SlqOptions};
 use crate::kernels::deep::Mlp;
 use crate::kernels::{IsoKernel, Kernel, Shape};
 use crate::linalg::dense::Mat;
 use crate::opt::adam::{adam, AdamOptions};
 use crate::operators::{DenseKernelOp, KernelOp};
-use crate::solvers::{cg, CgOptions};
+use crate::solvers::{build_preconditioner, pcg, pcg_block, CgOptions, Preconditioner};
 use crate::util::rng::Rng;
 use crate::util::stats::dot;
 
@@ -96,13 +96,18 @@ impl DeepKernelGp {
         )
     }
 
-    /// Marginal likelihood and full gradient (network + hypers).
+    /// Marginal likelihood and full gradient (network + hypers). The
+    /// `cg.precond` knob preconditions the alpha solve, the SLQ logdet,
+    /// and the feature-gradient probe solves (the operator is rebuilt from
+    /// the current features each evaluation, so the factor is too).
     pub fn mll_and_grad(&mut self, seed: u64) -> Result<DklEval> {
         let n = self.x.rows;
         let (feats, tape) = self.net.forward(&self.x);
         let op = self.build_op(&feats);
+        let pc = build_preconditioner(&op, self.cg.precond);
+        let pcd = pc.as_ref().map(|p| p as &dyn Preconditioner);
         let r: Vec<f64> = self.y.iter().map(|v| v - self.mean).collect();
-        let (alpha, ainfo) = cg(&op, &r, &self.cg);
+        let (alpha, ainfo) = pcg(&op, &r, pcd, &self.cg);
         if !ainfo.converged {
             eprintln!(
                 "dkl: alpha solve did not converge (residual {:.3e}); \
@@ -114,7 +119,7 @@ impl DeepKernelGp {
         // Logdet value + hyper grads + solve probes (g ≈ K̃^{-1} z).
         let mut slq = self.slq;
         slq.seed = seed;
-        let ld = slq_logdet(&op, &slq)?;
+        let ld = slq_logdet_pc(&op, pcd, &slq)?;
         let fit = dot(&r, &alpha);
         let mll = -0.5 * (fit + ld.value + n as f64 * (2.0 * std::f64::consts::PI).ln());
 
@@ -128,9 +133,29 @@ impl DeepKernelGp {
         }
 
         // Feature gradients via G = 1/2 (α α^T − K̃^{-1}), with K̃^{-1}
-        // estimated from Lanczos solves on fresh probes.
+        // estimated from probe solves: truncated Lanczos by default, or —
+        // when the precond knob is on — block PCG at the CG tolerance,
+        // since these solves suffer exactly the small-σ truncation bias
+        // the preconditioner targets.
         let probes = ProbeSet::new(n, self.slq.probes, ProbeKind::Rademacher, seed ^ 0xABCD);
-        let gs = crate::estimators::slq::slq_solves(&op, &probes, self.slq.steps, self.slq.threads);
+        let gs: Vec<Vec<f64>> = match pcd {
+            Some(_) => {
+                let (x, info) = pcg_block(&op, &probes.as_mat(), None, pcd, &self.cg);
+                if !info.all_converged() {
+                    let bad = info.cols.iter().filter(|c| !c.converged).count();
+                    eprintln!(
+                        "dkl: {bad}/{} feature-gradient probe solves did not converge \
+                         (worst residual {:.3e}); network gradients may be off",
+                        info.cols.len(),
+                        info.worst_residual()
+                    );
+                }
+                (0..x.cols).map(|j| x.col(j)).collect()
+            }
+            None => {
+                crate::estimators::slq::slq_solves(&op, &probes, self.slq.steps, self.slq.threads)
+            }
+        };
         let k = op.kernel_matrix(); // dense noise-free K
         let ell2 = (2.0 * self.log_ell).exp();
         // M = K ∘ G with G = 1/2(αα^T − mean_p sym(g_p z_p^T)).
@@ -229,12 +254,15 @@ impl DeepKernelGp {
         Ok(-res.fx)
     }
 
-    /// Predictive mean at new inputs.
+    /// Predictive mean at new inputs (the alpha solve honors the same
+    /// `cg.precond` knob as training).
     pub fn predict(&self, xtest: &Mat) -> Result<Vec<f64>> {
         let feats = self.features();
         let op = self.build_op(&feats);
+        let pc = build_preconditioner(&op, self.cg.precond);
         let r: Vec<f64> = self.y.iter().map(|v| v - self.mean).collect();
-        let (alpha, ainfo) = cg(&op, &r, &self.cg);
+        let (alpha, ainfo) =
+            pcg(&op, &r, pc.as_ref().map(|p| p as &dyn Preconditioner), &self.cg);
         if !ainfo.converged {
             eprintln!(
                 "dkl: predict alpha solve did not converge (residual {:.3e})",

@@ -11,14 +11,18 @@
 use crate::error::{Error, Result};
 use crate::kernels::Kernel as _;
 use crate::estimators::chebyshev::{chebyshev_logdet, ChebOptions};
-use crate::estimators::slq::{slq_logdet, SlqOptions};
+use crate::estimators::slq::SlqOptions;
 use crate::estimators::surrogate::LogdetSurrogate;
 use crate::estimators::{exact, LogdetEstimate};
 use crate::opt::lbfgs::{lbfgs, LbfgsOptions};
 use crate::opt::OptResult;
 use crate::operators::{KernelOp, LinOp};
 use crate::linalg::dense::Mat;
-use crate::solvers::{cg_block, cg_with_guess, BlockCgInfo, CgInfo, CgOptions};
+use crate::solvers::{
+    build_preconditioner, pcg_block, pcg_with_guess, BlockCgInfo, CgInfo, CgOptions,
+    PivCholPrecond, PrecondOptions, Preconditioner,
+};
+use crate::util::blocks::BlockPartition;
 use crate::util::stats::dot;
 
 /// Kernel operators that can also produce predictive quantities.
@@ -81,9 +85,21 @@ pub struct GpRegression<O: PredictiveOp> {
     /// Constant mean (defaults to mean(y)).
     pub mean: f64,
     /// Solver settings shared by the training `alpha` solve and the
-    /// predictive-variance block solve.
+    /// predictive-variance block solve. Its `precond` knob (CLI
+    /// `--precond-rank`, 0 = off) controls the pivoted-Cholesky
+    /// preconditioner built (and cached per hyper setting) for every
+    /// solve and SLQ logdet on this model.
     pub cg: CgOptions,
+    /// Warm-start later predictive-variance column groups from the nearest
+    /// already-solved test column (neighboring test points have similar
+    /// `k_*` columns). On by default; only kicks in when the test set
+    /// spans more than one `block_size`-wide group, so single-group solves
+    /// stay bit-identical to cold ones.
+    pub warm_start_predict_var: bool,
     alpha_cache: Option<Vec<f64>>,
+    /// Preconditioner cache: the options it was built under, plus the
+    /// factor (`None` when building was skipped or impossible).
+    pc_cache: Option<(PrecondOptions, Option<PivCholPrecond>)>,
 }
 
 impl<O: PredictiveOp> GpRegression<O> {
@@ -95,7 +111,9 @@ impl<O: PredictiveOp> GpRegression<O> {
             y,
             mean,
             cg: CgOptions { tol: 1e-8, max_iters: 1000, ..Default::default() },
+            warm_start_predict_var: true,
             alpha_cache: None,
+            pc_cache: None,
         }
     }
 
@@ -107,11 +125,42 @@ impl<O: PredictiveOp> GpRegression<O> {
         self.y.iter().map(|v| v - self.mean).collect()
     }
 
-    /// α = K̃^{-1}(y - μ) by warm-started CG.
+    /// (Re)build the pivoted-Cholesky preconditioner if the knob asks for
+    /// one and the cache is stale (hypers or options changed).
+    fn refresh_precond(&mut self) {
+        let popts = self.cg.precond;
+        if popts.rank == 0 {
+            self.pc_cache = None;
+            return;
+        }
+        let stale = match &self.pc_cache {
+            Some((cached, _)) => *cached != popts,
+            None => true,
+        };
+        if stale {
+            self.pc_cache = Some((popts, build_preconditioner(&self.op, popts)));
+        }
+    }
+
+    /// The cached preconditioner as a trait object (None when off).
+    fn precond(&self) -> Option<&dyn Preconditioner> {
+        self.pc_cache
+            .as_ref()
+            .and_then(|(_, pc)| pc.as_ref())
+            .map(|p| p as &dyn Preconditioner)
+    }
+
+    /// α = K̃^{-1}(y - μ) by warm-started (preconditioned) CG.
     pub fn alpha(&mut self) -> (Vec<f64>, CgInfo) {
+        self.refresh_precond();
         let r = self.residual();
-        let (a, info) =
-            cg_with_guess(&self.op, &r, self.alpha_cache.as_deref(), &self.cg);
+        let (a, info) = pcg_with_guess(
+            &self.op,
+            &r,
+            self.alpha_cache.as_deref(),
+            self.precond(),
+            &self.cg,
+        );
         self.alpha_cache = Some(a.clone());
         (a, info)
     }
@@ -120,15 +169,21 @@ impl<O: PredictiveOp> GpRegression<O> {
     pub fn set_hypers(&mut self, h: &[f64]) {
         self.op.set_hypers(h);
         // keep alpha as warm start — K̃ changed only slightly per step.
+        // The preconditioner tracks K̃ exactly, so it must be rebuilt.
+        self.pc_cache = None;
     }
 
-    /// Log-determinant estimate under the chosen estimator.
+    /// Log-determinant estimate under the chosen estimator. SLQ runs
+    /// preconditioned when the `cg.precond` knob is on (the identity
+    /// `log|K̃| = log|P| + tr log(P^{-1/2} K̃ P^{-1/2})` keeps the estimate
+    /// unbiased; see `estimators::slq::slq_logdet_pc`).
     pub fn logdet(&mut self, est: &Estimator, grads: bool) -> Result<LogdetEstimate> {
         match est {
             Estimator::Slq(o) => {
                 let mut o = *o;
                 o.grads = grads;
-                slq_logdet(&self.op, &o)
+                self.refresh_precond();
+                crate::estimators::slq::slq_logdet_pc(&self.op, self.precond(), &o)
             }
             Estimator::Chebyshev(o) => {
                 let mut o = *o;
@@ -256,14 +311,67 @@ impl<O: PredictiveOp> GpRegression<O> {
     /// accounting. A column that did not converge yields a variance from
     /// the best available iterate — callers deciding on calibrated
     /// uncertainties should check `info.all_converged()`.
+    ///
+    /// When the test set spans more than one `block_size`-wide column
+    /// group and [`GpRegression::warm_start_predict_var`] is on, groups
+    /// after the first are warm-started from the nearest already-solved
+    /// column (`k_*` columns of neighboring test points are close, so the
+    /// previous solution is a good starting iterate).
+    /// `info.warm_saved_iters` reports the iterations observed saved
+    /// relative to the cold first group's worst column; a single-group
+    /// solve is always cold and bit-identical to the unwarmed path.
     pub fn predict_var_info(&mut self, test: &[Vec<f64>]) -> (Vec<f64>, BlockCgInfo) {
+        self.refresh_precond();
         let s2 = self.op.noise_var();
         let n = self.n();
         let mut kmat = Mat::zeros(n, test.len());
         for (t, x) in test.iter().enumerate() {
             kmat.set_col(t, &self.op.cross_col(x));
         }
-        let (sols, info) = cg_block(&self.op, &kmat, None, &self.cg);
+        let part = BlockPartition::new(test.len(), self.cg.block_size);
+        let (sols, info) = if !self.warm_start_predict_var || part.nblocks <= 1 {
+            pcg_block(&self.op, &kmat, None, self.precond(), &self.cg)
+        } else {
+            // Group-sequential warm starting: solve the first group cold,
+            // then seed every column of group b with the solution of the
+            // last column of group b-1 (its nearest solved neighbor).
+            let mut sols = Mat::zeros(n, test.len());
+            let mut cols = Vec::with_capacity(test.len());
+            let mut mvms = 0;
+            let mut block_applies = 0;
+            let mut cold_baseline = 0usize;
+            let mut warm_saved_iters = 0usize;
+            let mut prev_last: Option<Vec<f64>> = None;
+            for bi in 0..part.nblocks {
+                let (j0, w) = part.range(bi);
+                let bblk = kmat.sub_cols(j0, w);
+                let x0 = prev_last.as_ref().map(|seed| {
+                    let mut g = Mat::zeros(n, w);
+                    for c in 0..w {
+                        g.set_col(c, seed);
+                    }
+                    g
+                });
+                let gopts = CgOptions { block_size: w, ..self.cg };
+                let (x, ginfo) =
+                    pcg_block(&self.op, &bblk, x0.as_ref(), self.precond(), &gopts);
+                if bi == 0 {
+                    cold_baseline = ginfo.max_iters();
+                } else {
+                    for c in &ginfo.cols {
+                        warm_saved_iters += cold_baseline.saturating_sub(c.iters);
+                    }
+                }
+                prev_last = Some(x.col(w - 1));
+                for c in 0..w {
+                    sols.set_col(j0 + c, &x.col(c));
+                }
+                cols.extend(ginfo.cols);
+                mvms += ginfo.mvms;
+                block_applies += ginfo.block_applies;
+            }
+            (sols, BlockCgInfo { cols, mvms, block_applies, warm_saved_iters })
+        };
         let vars = test
             .iter()
             .enumerate()
@@ -376,6 +484,7 @@ mod tests {
     use crate::kernels::{IsoKernel, Shape};
     use crate::linalg::chol::Cholesky;
     use crate::operators::DenseKernelOp;
+    use crate::solvers::cg_with_guess;
     use crate::util::rng::Rng;
 
     /// Sample y from the GP prior at given hypers (exact, small n).
@@ -524,6 +633,64 @@ mod tests {
             let want = (gp.op.prior_var(x) + s2 - dot(&kstar, &sol)).max(1e-12);
             assert_eq!(vars[t].to_bits(), want.to_bits(), "point {t}");
         }
+    }
+
+    #[test]
+    fn warm_started_predict_var_matches_cold_and_saves_iters() {
+        // Closely spaced test points across several column groups at small
+        // noise (the regime where neighboring k_* solves genuinely share
+        // information): warm starts must not change the variances beyond
+        // solver tolerance, and should demonstrably save iterations.
+        let mut gp = setup(60, 11);
+        gp.set_hypers(&[(0.5f64).ln(), 0.0, (0.05f64).ln()]);
+        gp.cg.block_size = 4;
+        gp.cg.tol = 1e-10;
+        let test_pts: Vec<Vec<f64>> =
+            (0..16).map(|t| vec![1.0 + 0.002 * t as f64]).collect();
+        let (warm_vars, warm_info) = gp.predict_var_info(&test_pts);
+        assert!(warm_info.all_converged());
+        gp.warm_start_predict_var = false;
+        let (cold_vars, cold_info) = gp.predict_var_info(&test_pts);
+        assert!(cold_info.all_converged());
+        assert_eq!(cold_info.warm_saved_iters, 0);
+        for (w, c) in warm_vars.iter().zip(&cold_vars) {
+            assert!((w - c).abs() < 1e-6 * (1.0 + c.abs()), "{w} vs {c}");
+        }
+        assert!(
+            warm_info.warm_saved_iters > 0,
+            "clustered test points should save iterations ({} groups)",
+            4
+        );
+        assert!(warm_info.mvms < cold_info.mvms, "warm starts should cut MVMs");
+    }
+
+    #[test]
+    fn preconditioned_training_path_matches_unpreconditioned() {
+        // Same model, same estimator: the rank-16 preconditioned mll must
+        // agree with the unpreconditioned one (both to solver/SLQ
+        // accuracy), with fewer alpha-solve iterations at small sigma.
+        let mut gp = setup(80, 12);
+        gp.set_hypers(&[(0.5f64).ln(), 0.0, (0.05f64).ln()]);
+        // Cold unpreconditioned alpha solve + mll.
+        gp.alpha_cache = None;
+        let (_, info0) = gp.alpha();
+        let (mll0, _) = gp.mll(&Estimator::Exact, false).unwrap();
+        // Cold preconditioned alpha solve + mll.
+        gp.cg.precond = crate::solvers::PrecondOptions::rank(16);
+        gp.alpha_cache = None;
+        let (_, info1) = gp.alpha();
+        let (mll1, _) = gp.mll(&Estimator::Exact, false).unwrap();
+        assert!(
+            (mll0 - mll1).abs() < 1e-4 * (1.0 + mll0.abs()),
+            "{mll0} vs {mll1}"
+        );
+        assert!(info0.converged && info1.converged);
+        assert!(
+            info1.iters < info0.iters,
+            "preconditioned alpha solve should take fewer iterations: {} vs {}",
+            info1.iters,
+            info0.iters
+        );
     }
 
     #[test]

@@ -4,4 +4,5 @@ pub mod dense;
 pub mod eigh;
 pub mod fft;
 pub mod lu;
+pub mod pchol;
 pub mod tridiag;

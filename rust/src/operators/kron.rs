@@ -36,6 +36,14 @@ impl KronFactor {
     pub fn eigvals(&self) -> crate::error::Result<Vec<f64>> {
         Ok(eigh(&self.to_dense())?.eigvals)
     }
+
+    /// Diagonal of the factor (O(m); Toeplitz diagonals are constant).
+    pub fn diag(&self) -> Vec<f64> {
+        match self {
+            KronFactor::Dense(a) => a.diag(),
+            KronFactor::Toeplitz(t) => t.diag(),
+        }
+    }
 }
 
 /// `scale * (F_1 ⊗ F_2 ⊗ ... ⊗ F_d)` acting on vectors of length
@@ -139,6 +147,25 @@ impl KronOp {
                 *v *= self.scale;
             }
         }
+    }
+
+    /// Diagonal of the (scaled) Kronecker product: the outer product of
+    /// the factor diagonals, in the operator's row-major layout (last
+    /// factor fastest). O(n) — needed by the pivoted-Cholesky
+    /// preconditioner and FITC-style corrections.
+    pub fn diag(&self) -> Vec<f64> {
+        let mut out = vec![self.scale];
+        for f in &self.factors {
+            let fd = f.diag();
+            let mut next = Vec::with_capacity(out.len() * fd.len());
+            for &o in &out {
+                for &d in &fd {
+                    next.push(o * d);
+                }
+            }
+            out = next;
+        }
+        out
     }
 
     /// All eigenvalues of the (scaled) Kronecker product: outer products of
@@ -272,6 +299,27 @@ mod tests {
         let want = crate::linalg::eigh::eigh(&full).unwrap().eigvals;
         for i in 0..6 {
             assert!((got[i] - want[i]).abs() < 1e-8, "{got:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn diag_matches_dense() {
+        let mut rng = Rng::new(17);
+        let a = rand_sym(2, &mut rng);
+        let c = rand_sym(3, &mut rng);
+        let op = KronOp::new(
+            vec![
+                KronFactor::Dense(a),
+                KronFactor::Toeplitz(ToeplitzOp::new(vec![3.0, 1.0, 0.2])),
+                KronFactor::Dense(c),
+            ],
+            1.7,
+        );
+        let got = op.diag();
+        let want = op.to_dense().diag();
+        assert_eq!(got.len(), want.len());
+        for i in 0..got.len() {
+            assert!((got[i] - want[i]).abs() < 1e-10, "i={i}: {} vs {}", got[i], want[i]);
         }
     }
 

@@ -174,8 +174,12 @@ pub trait KernelOp: LinOp {
         (2.0 * h[h.len() - 1]).exp()
     }
 
-    /// Diagonal of K̃, when cheaply available (used by predictive variance
-    /// and FITC-style corrections).
+    /// Diagonal of K̃, when cheaply available — used by predictive
+    /// variance, FITC-style corrections, and the pivoted-Cholesky
+    /// preconditioner (`linalg::pchol` seeds its greedy pivot selection
+    /// from this diagonal; an operator returning `None` simply runs
+    /// unpreconditioned). Dense, SKI, grid-Kronecker, FITC/SoR, and sum
+    /// operators all return `Some`.
     fn diag(&self) -> Option<Vec<f64>> {
         None
     }

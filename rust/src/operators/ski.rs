@@ -607,6 +607,11 @@ impl KernelOp for KronKernelOp {
     fn noise_var(&self) -> f64 {
         (2.0 * self.log_sigma).exp()
     }
+    fn diag(&self) -> Option<Vec<f64>> {
+        // diag(sf² kron(T_j)) + σ²: the Kronecker diagonal is O(n).
+        let s2 = self.noise_var();
+        Some(self.kuu.diag().iter().map(|&v| v + s2).collect())
+    }
 }
 
 #[cfg(test)]
@@ -734,6 +739,21 @@ mod tests {
                     want
                 );
             }
+        }
+    }
+
+    #[test]
+    fn kron_kernel_diag_matches_dense() {
+        let kern = SeparableKernel::iso(Shape::Rbf, 2, 0.4, 1.3);
+        let grid = Grid::new(vec![
+            GridDim { lo: 0.0, hi: 1.0, m: 5 },
+            GridDim { lo: 0.0, hi: 1.0, m: 3 },
+        ]);
+        let op = KronKernelOp::new(grid, kern, 0.2);
+        let got = op.diag().expect("KronKernelOp exposes its diagonal");
+        let want = op.to_dense().diag();
+        for i in 0..15 {
+            assert!((got[i] - want[i]).abs() < 1e-10, "i={i}: {} vs {}", got[i], want[i]);
         }
     }
 

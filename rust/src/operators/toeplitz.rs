@@ -68,6 +68,13 @@ impl ToeplitzOp {
         }
     }
 
+    /// Diagonal of the (constant-diagonal) Toeplitz matrix — feeds
+    /// `KronOp::diag` and the pivoted-Cholesky preconditioner of the
+    /// grid kernel operators.
+    pub fn diag(&self) -> Vec<f64> {
+        vec![self.col[0]; self.m()]
+    }
+
     /// Dense materialization (for the scaled-eigenvalue baseline's factor
     /// eigendecompositions and for tests).
     pub fn to_dense_mat(&self) -> crate::linalg::dense::Mat {

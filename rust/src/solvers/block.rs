@@ -19,6 +19,7 @@ use crate::util::blocks::BlockPartition;
 use crate::util::stats::{axpy, dot, norm2};
 
 use super::cg::{residual_scale, CgInfo, CgOptions};
+use super::precond::Preconditioner;
 
 /// Statistics for one block solve, mirroring
 /// `LogdetEstimate::{mvms, block_applies}`.
@@ -32,7 +33,14 @@ pub struct BlockCgInfo {
     pub mvms: usize,
     /// Block-amortized applies: one per `apply_mat` call, however many
     /// columns it carried. Always `<= mvms`; equal when `block_size = 1`.
+    /// Preconditioner applications are low-rank products, not operator
+    /// MVMs, and are not counted here.
     pub block_applies: usize,
+    /// Iterations observed saved by a warm-start strategy, relative to the
+    /// caller's cold baseline (0 for plain cold solves). Set by callers
+    /// that orchestrate warm starts across column groups — see
+    /// `GpRegression::predict_var_info` — not by the solver itself.
+    pub warm_saved_iters: usize,
 }
 
 impl BlockCgInfo {
@@ -86,7 +94,10 @@ pub fn cg_block<O: LinOp + ?Sized>(
     let mut infos = vec![CgInfo { iters: 0, residual: 0.0, converged: false, mvms: 0 }; b.cols];
     let mut block_applies = 0usize;
     if b.cols == 0 {
-        return (out, BlockCgInfo { cols: infos, mvms: 0, block_applies });
+        return (
+            out,
+            BlockCgInfo { cols: infos, mvms: 0, block_applies, warm_saved_iters: 0 },
+        );
     }
     let part = BlockPartition::new(b.cols, opts.block_size);
     for bi in 0..part.nblocks {
@@ -94,7 +105,48 @@ pub fn cg_block<O: LinOp + ?Sized>(
         solve_lockstep(op, b, x0, j0, w, opts, &mut out, &mut infos, &mut block_applies);
     }
     let mvms = infos.iter().map(|c| c.mvms).sum();
-    (out, BlockCgInfo { cols: infos, mvms, block_applies })
+    (out, BlockCgInfo { cols: infos, mvms, block_applies, warm_saved_iters: 0 })
+}
+
+/// Preconditioned block CG. `pc = None` is *exactly* [`cg_block`] — same
+/// code path, bit-identical results. With a preconditioner, every column
+/// runs the scalar PCG recurrences of [`super::cg::pcg_with_guess`] in
+/// lockstep: one blocked operator apply **and one blocked `P⁻¹` apply**
+/// per iteration, with the same convergence deflation and batched
+/// true-residual confirmation as the unpreconditioned engine. Column `j`
+/// is bitwise identical to scalar `pcg_with_guess` on column `j`.
+pub fn pcg_block<O: LinOp + ?Sized>(
+    op: &O,
+    b: &Mat,
+    x0: Option<&Mat>,
+    pc: Option<&dyn Preconditioner>,
+    opts: &CgOptions,
+) -> (Mat, BlockCgInfo) {
+    let Some(pc) = pc else {
+        return cg_block(op, b, x0, opts);
+    };
+    let n = op.n();
+    assert_eq!(b.rows, n);
+    assert_eq!(pc.n(), n);
+    if let Some(g) = x0 {
+        assert_eq!((g.rows, g.cols), (b.rows, b.cols));
+    }
+    let mut out = Mat::zeros(n, b.cols);
+    let mut infos = vec![CgInfo { iters: 0, residual: 0.0, converged: false, mvms: 0 }; b.cols];
+    let mut block_applies = 0usize;
+    if b.cols == 0 {
+        return (
+            out,
+            BlockCgInfo { cols: infos, mvms: 0, block_applies, warm_saved_iters: 0 },
+        );
+    }
+    let part = BlockPartition::new(b.cols, opts.block_size);
+    for bi in 0..part.nblocks {
+        let (j0, w) = part.range(bi);
+        solve_lockstep_pc(op, pc, b, x0, j0, w, opts, &mut out, &mut infos, &mut block_applies);
+    }
+    let mvms = infos.iter().map(|c| c.mvms).sum();
+    (out, BlockCgInfo { cols: infos, mvms, block_applies, warm_saved_iters: 0 })
 }
 
 /// Batched CG over independent column vectors — a thin wrapper that packs
@@ -262,6 +314,189 @@ fn solve_lockstep<O: LinOp + ?Sized>(
     }
 }
 
+/// Run one `w`-wide column group `[j0, j0 + w)` of **preconditioned** CG in
+/// lockstep to completion. Per-column arithmetic is exactly
+/// [`super::cg::pcg_with_guess`]; the blocked `P⁻¹` applications go through
+/// [`Preconditioner::apply_inv_mat`], whose columns are bitwise identical
+/// to the scalar `apply_inv`, so the lockstep solve stays bit-identical to
+/// column-by-column scalar PCG.
+#[allow(clippy::too_many_arguments)]
+fn solve_lockstep_pc<O: LinOp + ?Sized>(
+    op: &O,
+    pc: &dyn Preconditioner,
+    b: &Mat,
+    x0: Option<&Mat>,
+    j0: usize,
+    w: usize,
+    opts: &CgOptions,
+    out: &mut Mat,
+    infos: &mut [CgInfo],
+    block_applies: &mut usize,
+) {
+    let n = op.n();
+    let mut cols: Vec<Col> = (j0..j0 + w)
+        .map(|j| {
+            let bj = b.col(j);
+            let scale = residual_scale(norm2(&bj));
+            let x = match x0 {
+                Some(g) => g.col(j),
+                None => vec![0.0; n],
+            };
+            Col {
+                j,
+                x,
+                r: bj,
+                p: Vec::new(),
+                // Holds the PCG inner product r^T z (not r^T r).
+                rs_old: 0.0,
+                scale,
+                info: CgInfo { iters: 0, residual: 0.0, converged: false, mvms: 0 },
+            }
+        })
+        .collect();
+
+    // Warm-start residual R = B − A X0 — one blocked apply for the group.
+    if x0.is_some() {
+        let all: Vec<usize> = (0..w).collect();
+        let xblk = assemble(&cols, &all, Field::X);
+        let rmat = op.residual_mat(&b.sub_cols(j0, w), &xblk);
+        *block_applies += 1;
+        for (c, s) in cols.iter_mut().enumerate() {
+            s.info.mvms += 1;
+            rmat.col_into(c, &mut s.r);
+        }
+    }
+
+    // Initial residual check (already the true residual) + deflation.
+    let mut active: Vec<usize> = Vec::new();
+    for (c, s) in cols.iter_mut().enumerate() {
+        s.info.residual = norm2(&s.r) / s.scale;
+        if s.info.residual <= opts.tol {
+            s.info.converged = true;
+        } else {
+            active.push(c);
+        }
+    }
+
+    // Initial preconditioned direction: one blocked P⁻¹ over the group.
+    if !active.is_empty() {
+        let rblk = assemble(&cols, &active, Field::R);
+        let zblk = pc.apply_inv_mat(&rblk);
+        let mut z = vec![0.0; n];
+        for (c, &ci) in active.iter().enumerate() {
+            let s = &mut cols[ci];
+            zblk.col_into(c, &mut z);
+            s.p = z.clone();
+            s.rs_old = dot(&s.r, &z);
+        }
+    }
+
+    let mut ap = vec![0.0; n];
+    let mut rt = vec![0.0; n];
+    let mut z = vec![0.0; n];
+    for it in 0..opts.max_iters {
+        if active.is_empty() {
+            break;
+        }
+        // One blocked operator apply over all still-active directions.
+        let pblk = assemble(&cols, &active, Field::P);
+        let apblk = op.apply_mat(&pblk);
+        *block_applies += 1;
+
+        let mut cont: Vec<usize> = Vec::new();
+        let mut bail: Vec<usize> = Vec::new();
+        let mut check: Vec<usize> = Vec::new();
+        for (c, &ci) in active.iter().enumerate() {
+            let s = &mut cols[ci];
+            s.info.mvms += 1;
+            apblk.col_into(c, &mut ap);
+            let pap = dot(&s.p, &ap);
+            if pap <= 0.0 || !pap.is_finite() {
+                s.info.iters = it;
+                bail.push(ci);
+                continue;
+            }
+            let alpha = s.rs_old / pap;
+            axpy(alpha, &s.p, &mut s.x);
+            axpy(-alpha, &ap, &mut s.r);
+            s.info.iters = it + 1;
+            s.info.residual = norm2(&s.r) / s.scale;
+            if s.info.residual <= opts.tol {
+                // Recurrence passed — confirm the true residual (batched).
+                check.push(ci);
+                continue;
+            }
+            cont.push(ci);
+        }
+
+        let mut next_active: Vec<usize> = Vec::new();
+
+        // Batched P⁻¹ over the columns that simply continue iterating.
+        if !cont.is_empty() {
+            let rblk = assemble(&cols, &cont, Field::R);
+            let zblk = pc.apply_inv_mat(&rblk);
+            for (c, &ci) in cont.iter().enumerate() {
+                let s = &mut cols[ci];
+                zblk.col_into(c, &mut z);
+                let rz_new = dot(&s.r, &z);
+                let beta = rz_new / s.rs_old;
+                for i in 0..n {
+                    s.p[i] = z[i] + beta * s.p[i];
+                }
+                s.rs_old = rz_new;
+                next_active.push(ci);
+            }
+        }
+
+        // Batched true-residual pass: confirmations + bails share one
+        // blocked apply; drifted columns restart from the true residual
+        // with one more blocked P⁻¹.
+        if !bail.is_empty() || !check.is_empty() {
+            let idxs: Vec<usize> = bail.iter().chain(check.iter()).copied().collect();
+            let xblk = assemble(&cols, &idxs, Field::X);
+            let mut bblk = Mat::zeros(n, idxs.len());
+            for (c, &ci) in idxs.iter().enumerate() {
+                bblk.set_col(c, &b.col(cols[ci].j));
+            }
+            let rmat = op.residual_mat(&bblk, &xblk);
+            *block_applies += 1;
+            let nbail = bail.len();
+            let mut drift: Vec<usize> = Vec::new();
+            for (c, &ci) in idxs.iter().enumerate() {
+                let s = &mut cols[ci];
+                s.info.mvms += 1;
+                rmat.col_into(c, &mut rt);
+                s.info.residual = norm2(&rt) / s.scale;
+                if c < nbail {
+                    // Bailed column: stays non-converged, deflated.
+                } else if s.info.residual <= opts.tol {
+                    s.info.converged = true;
+                } else {
+                    s.r.copy_from_slice(&rt);
+                    drift.push(ci);
+                }
+            }
+            if !drift.is_empty() {
+                let rblk = assemble(&cols, &drift, Field::R);
+                let zblk = pc.apply_inv_mat(&rblk);
+                for (c, &ci) in drift.iter().enumerate() {
+                    let s = &mut cols[ci];
+                    zblk.col_into(c, &mut z);
+                    s.p.copy_from_slice(&z);
+                    s.rs_old = dot(&s.r, &z);
+                    next_active.push(ci);
+                }
+            }
+        }
+        active = next_active;
+    }
+
+    for s in cols {
+        out.set_col(s.j, &s.x);
+        infos[s.j] = s.info;
+    }
+}
+
 /// Which per-column vector to pack into a block.
 #[derive(Clone, Copy)]
 enum Field {
@@ -269,6 +504,8 @@ enum Field {
     X,
     /// Search direction `p`.
     P,
+    /// Residual `r` (the input of the blocked `P⁻¹` applies).
+    R,
 }
 
 /// Pack the selected column states' `field` vectors into an `n x k` block.
@@ -279,6 +516,7 @@ fn assemble(cols: &[Col], idxs: &[usize], field: Field) -> Mat {
         let v: &[f64] = match field {
             Field::X => &cols[ci].x,
             Field::P => &cols[ci].p,
+            Field::R => &cols[ci].r,
         };
         m.set_col(c, v);
     }
@@ -308,7 +546,7 @@ mod tests {
         let op = spd_op(n);
         let b = rhs(n, 5);
         for bs in [1usize, 2, 3, 5, 8] {
-            let opts = CgOptions { tol: 1e-10, max_iters: 200, block_size: bs };
+            let opts = CgOptions { tol: 1e-10, max_iters: 200, block_size: bs, ..Default::default() };
             let (x, info) = cg_block(&op, &b, None, &opts);
             assert_eq!(info.cols.len(), 5);
             for j in 0..5 {
@@ -334,7 +572,7 @@ mod tests {
         let op = spd_op(n);
         let b = rhs(n, 4);
         let g = Mat::from_fn(n, 4, |i, j| ((i + j) % 5) as f64 * 0.1);
-        let opts = CgOptions { tol: 1e-9, max_iters: 150, block_size: 4 };
+        let opts = CgOptions { tol: 1e-9, max_iters: 150, block_size: 4, ..Default::default() };
         let (x, info) = cg_block(&op, &b, Some(&g), &opts);
         for j in 0..4 {
             let gj = g.col(j);
@@ -353,7 +591,7 @@ mod tests {
         // Column 0 is zero (converges instantly, 0 MVMs); column 1 is hard.
         let mut b = Mat::zeros(n, 2);
         b.set_col(1, &(0..n).map(|i| (i as f64 * 0.3).sin()).collect::<Vec<_>>());
-        let opts = CgOptions { tol: 1e-10, max_iters: 200, block_size: 2 };
+        let opts = CgOptions { tol: 1e-10, max_iters: 200, block_size: 2, ..Default::default() };
         let (_, info) = cg_block(&op, &b, None, &opts);
         assert!(info.cols[0].converged);
         assert_eq!(info.cols[0].mvms, 0);
@@ -375,13 +613,73 @@ mod tests {
     }
 
     #[test]
+    fn pcg_block_none_is_cg_block_bitwise() {
+        let n = 20;
+        let op = spd_op(n);
+        let b = rhs(n, 4);
+        let opts = CgOptions { tol: 1e-10, max_iters: 200, block_size: 3, ..Default::default() };
+        let (xc, ic) = cg_block(&op, &b, None, &opts);
+        let (xp, ip) = pcg_block(&op, &b, None, None, &opts);
+        assert_eq!(xc.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   xp.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+        assert_eq!(ic.mvms, ip.mvms);
+        assert_eq!(ic.block_applies, ip.block_applies);
+    }
+
+    #[test]
+    fn pcg_block_matches_scalar_pcg_bitwise() {
+        use super::super::cg::pcg_with_guess;
+        use super::super::precond::{build_preconditioner, PrecondOptions};
+        use crate::kernels::{IsoKernel, Shape};
+        use crate::operators::DenseKernelOp;
+        use crate::util::rng::Rng;
+        let n = 26;
+        let mut rng = Rng::new(41);
+        let pts: Vec<Vec<f64>> =
+            (0..n).map(|_| vec![rng.uniform_in(0.0, 3.0)]).collect();
+        let op = DenseKernelOp::new(
+            pts,
+            Box::new(IsoKernel::new(Shape::Rbf, 1, 0.5, 1.0)),
+            0.05,
+        );
+        let pc = build_preconditioner(&op, PrecondOptions::rank(6)).unwrap();
+        let b = rhs(n, 5);
+        let g = Mat::from_fn(n, 5, |i, j| ((i + 2 * j) % 7) as f64 * 0.05);
+        for x0 in [None, Some(&g)] {
+            for bs in [1usize, 2, 5] {
+                let opts =
+                    CgOptions { tol: 1e-9, max_iters: 400, block_size: bs, ..Default::default() };
+                let (x, info) = pcg_block(&op, &b, x0, Some(&pc), &opts);
+                for j in 0..5 {
+                    let gj = x0.map(|m| m.col(j));
+                    let (xs, si) =
+                        pcg_with_guess(&op, &b.col(j), gj.as_deref(), Some(&pc), &opts);
+                    for i in 0..n {
+                        assert_eq!(
+                            x[(i, j)].to_bits(),
+                            xs[i].to_bits(),
+                            "warm={} bs={bs} ({i},{j})",
+                            x0.is_some()
+                        );
+                    }
+                    assert_eq!(info.cols[j].iters, si.iters, "bs={bs} col {j}");
+                    assert_eq!(info.cols[j].converged, si.converged);
+                    assert_eq!(info.cols[j].mvms, si.mvms);
+                    assert_eq!(info.cols[j].residual.to_bits(), si.residual.to_bits());
+                }
+                assert!(info.block_applies <= info.mvms);
+            }
+        }
+    }
+
+    #[test]
     fn cg_batch_wraps_block() {
         let n = 20;
         let op = spd_op(n);
         let bs: Vec<Vec<f64>> = (0..3)
             .map(|j| (0..n).map(|i| ((i + j * 5) as f64 * 0.21).cos()).collect())
             .collect();
-        let opts = CgOptions { tol: 1e-10, max_iters: 200, block_size: 3 };
+        let opts = CgOptions { tol: 1e-10, max_iters: 200, block_size: 3, ..Default::default() };
         let results = cg_batch(&op, &bs, &opts);
         assert_eq!(results.len(), 3);
         for (j, (x, info)) in results.iter().enumerate() {

@@ -35,11 +35,41 @@
 //! thin wrapper over the block engine. All entry points share
 //! [`cg::CgOptions`]; the default `block_size` is process-wide
 //! ([`default_cg_block_size`], CLI `--cg-block`).
+//!
+//! # Preconditioning
+//!
+//! Both Chebyshev/Lanczos step counts and CG iteration counts degrade with
+//! the condition number of `K̃ = K + σ²I` — exactly the small-σ regime
+//! kernel learning drives into. [`precond`] supplies the remedy: a rank-k
+//! pivoted Cholesky `K ≈ L Lᵀ` becomes the SPD preconditioner
+//! `P = L Lᵀ + σ² I` with closed-form `P⁻¹`, symmetric `P^{-1/2}`, and
+//! exact `log|P|` (the [`precond::Preconditioner`] contract — see that
+//! module's docs for what an implementation must satisfy).
+//!
+//! * **Solves** go through [`cg::pcg`] / [`cg::pcg_with_guess`] /
+//!   [`block::pcg_block`]: the PR 2 lockstep/deflation/true-residual
+//!   machinery, iterating on the preconditioned system. Convergence is
+//!   still declared on the unpreconditioned `‖b − A x‖`, so iteration
+//!   counts at equal tolerance are directly comparable. With `pc = None`
+//!   these **are** the unpreconditioned entry points (same code path,
+//!   bit-identical), so `--precond-rank 0` changes nothing.
+//! * **Log determinants** use the identity
+//!   `log|K̃| = log|P| + tr log(P^{-1/2} K̃ P^{-1/2})` — the stochastic
+//!   estimator only sees the flattened spectrum
+//!   (`estimators::slq::slq_logdet_pc`).
+//! * The `precond` knob on [`cg::CgOptions`] ([`precond::PrecondOptions`],
+//!   CLI `--precond-rank`, process default [`default_precond_rank`])
+//!   tells the entry points that own a kernel operator what rank to build;
+//!   the built [`precond::Preconditioner`] is then passed down explicitly.
 pub mod block;
 pub mod cg;
+pub mod precond;
 
-pub use block::{cg_batch, cg_block, BlockCgInfo};
-pub use cg::{cg, cg_with_guess, CgInfo, CgOptions};
+pub use block::{cg_batch, cg_block, pcg_block, BlockCgInfo};
+pub use cg::{cg, cg_with_guess, pcg, pcg_with_guess, CgInfo, CgOptions};
+pub use precond::{
+    build_preconditioner, PivCholPrecond, PrecondOptions, PreconditionedOp, Preconditioner,
+};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -57,4 +87,20 @@ pub fn set_default_cg_block_size(b: usize) {
 /// Current process-wide default RHS block width.
 pub fn default_cg_block_size() -> usize {
     DEFAULT_CG_BLOCK_SIZE.load(Ordering::Relaxed)
+}
+
+/// Process-wide default pivoted-Cholesky preconditioner rank used by
+/// `PrecondOptions::default` (and therefore `CgOptions::default`). 0 (the
+/// default) disables preconditioning; the coordinator CLI's
+/// `--precond-rank` flag threads through here.
+static DEFAULT_PRECOND_RANK: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the process-wide default preconditioner rank (0 = off).
+pub fn set_default_precond_rank(rank: usize) {
+    DEFAULT_PRECOND_RANK.store(rank, Ordering::Relaxed);
+}
+
+/// Current process-wide default preconditioner rank.
+pub fn default_precond_rank() -> usize {
+    DEFAULT_PRECOND_RANK.load(Ordering::Relaxed)
 }

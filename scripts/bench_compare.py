@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_*.json runs and fail loudly on regressions.
+
+Usage: bench_compare.py PREV.json CURRENT.json [--threshold 0.20]
+
+Rows are JSON objects; the identity of a row is every non-metric field
+(op, n, b, rhs, block, sigma, rank, ...), and the compared metrics are the
+timing fields (ns_per_apply / ns_per_solve_col — lower is better) plus the
+work counters (mvms / block_applies / cg_iters / lanczos_steps — lower is
+better, and far less noisy than wall time). A current row whose metric
+exceeds the previous run's by more than the threshold fraction is a
+regression; the script prints every regression and exits 2 so CI and
+scripts/bench_smoke.sh stop on it. Rows present in only one run are
+reported but not fatal (sweeps grow over time).
+"""
+
+import json
+import sys
+
+# Lower-is-better metrics. Timing is noisy; counters are exact.
+TIMING_METRICS = ("ns_per_apply", "ns_per_solve_col")
+COUNTER_METRICS = ("mvms", "block_applies", "cg_iters", "lanczos_steps")
+# Higher-is-better, exact: ANY drop is a regression (a solve that stops
+# converging often also gets *faster*, so the timing gate alone would
+# count the breakage as an improvement).
+HIGHER_BETTER = ("converged",)
+# Fields that are measurements rather than identity, but not compared.
+NON_IDENTITY = set(TIMING_METRICS) | set(COUNTER_METRICS) | set(HIGHER_BETTER) | {"gbps"}
+
+
+def row_key(row):
+    return tuple(sorted((k, v) for k, v in row.items() if k not in NON_IDENTITY))
+
+
+def load(path):
+    with open(path) as f:
+        rows = json.load(f)
+    if not isinstance(rows, list):
+        sys.exit(f"bench_compare: {path} is not a JSON array")
+    out = {}
+    for row in rows:
+        key = row_key(row)
+        if key in out:
+            sys.exit(f"bench_compare: duplicate row identity in {path}: {key}")
+        out[key] = row
+    return out
+
+
+def fmt_key(key):
+    return " ".join(f"{k}={v}" for k, v in key)
+
+
+def main(argv):
+    threshold = 0.20
+    args = []
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a.startswith("--threshold"):
+            if "=" in a:
+                threshold = float(a.split("=", 1)[1])
+            else:
+                threshold = float(argv[i + 1])
+                i += 1
+        elif a.startswith("--"):
+            sys.exit(f"bench_compare: unknown flag {a}\n{__doc__}")
+        else:
+            args.append(a)
+        i += 1
+    if len(args) != 2:
+        sys.exit(__doc__)
+    prev, cur = load(args[0]), load(args[1])
+
+    regressions = []
+    improvements = 0
+    for key, crow in cur.items():
+        prow = prev.get(key)
+        if prow is None:
+            print(f"bench_compare: new row (no baseline): {fmt_key(key)}")
+            continue
+        for metric in TIMING_METRICS + COUNTER_METRICS:
+            if metric not in crow or metric not in prow:
+                continue
+            old, new = float(prow[metric]), float(crow[metric])
+            if old < 0:
+                continue
+            if old == 0:
+                # A zero baseline must not disable the gate: any rise from
+                # exactly 0 (e.g. a trivially-converged count) is flagged.
+                if new > 0:
+                    regressions.append(
+                        f"  {fmt_key(key)}: {metric} rose from 0 -> {new:g}"
+                    )
+                continue
+            rel = (new - old) / old
+            if rel > threshold:
+                regressions.append(
+                    f"  {fmt_key(key)}: {metric} {old:g} -> {new:g} (+{100 * rel:.1f}%)"
+                )
+            elif rel < -threshold:
+                improvements += 1
+        for metric in HIGHER_BETTER:
+            if metric not in crow or metric not in prow:
+                continue
+            old, new = float(prow[metric]), float(crow[metric])
+            if new < old:
+                regressions.append(
+                    f"  {fmt_key(key)}: {metric} dropped {old:g} -> {new:g}"
+                )
+    for key in prev:
+        if key not in cur:
+            print(f"bench_compare: row disappeared from current run: {fmt_key(key)}")
+
+    if regressions:
+        print(
+            f"bench_compare: {len(regressions)} regression(s) over "
+            f"{100 * threshold:.0f}% vs {args[0]}:",
+            file=sys.stderr,
+        )
+        for r in regressions:
+            print(r, file=sys.stderr)
+        sys.exit(2)
+    print(
+        f"bench_compare: OK — {len(cur)} rows vs {args[0]}, "
+        f"{improvements} improvement(s), no regression over {100 * threshold:.0f}%"
+    )
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

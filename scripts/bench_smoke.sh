@@ -1,21 +1,58 @@
 #!/usr/bin/env bash
 # Perf smoke: run the blocked-MVM sweep (dense / Toeplitz / SKI at
-# n in {1k, 4k}, b in {1, 8, 32}) and the block-CG solve sweep (same
-# operator structures, 8 RHS, block in {1, 8}), emitting BENCH_mvm.json
-# and BENCH_cg.json at the repo root so successive PRs have a throughput
-# trajectory — MVMs *and* solves — to compare against.
+# n in {1k, 4k}, b in {1, 8, 32}), the block-CG solve sweep (same
+# operator structures, 8 RHS, block in {1, 8}), and the pivoted-Cholesky
+# preconditioning sweep (rank x sigma on an ill-conditioned dense RBF),
+# emitting BENCH_mvm.json, BENCH_cg.json, and BENCH_precond.json at the
+# repo root so successive PRs have a throughput trajectory — MVMs, solves,
+# and preconditioned iteration counts — to compare against.
 #
-# Usage: scripts/bench_smoke.sh [mvm_output.json] [cg_output.json]
+# When a previous BENCH_*.json exists it is rotated to BENCH_*.prev.json
+# and diffed against the fresh run with scripts/bench_compare.py, which
+# fails loudly (exit 2) on >20% regressions in timing or iteration/MVM
+# counts. Set BENCH_SKIP_COMPARE=1 to suppress the gate (e.g. when moving
+# between machines, where wall-clock baselines are meaningless).
+#
+# Usage: scripts/bench_smoke.sh [mvm_output.json] [cg_output.json] [precond_output.json]
 set -euo pipefail
 
 repo_root="$(cd "$(dirname "$0")/.." && pwd)"
 out_mvm="${1:-$repo_root/BENCH_mvm.json}"
 out_cg="${2:-$repo_root/BENCH_cg.json}"
+out_precond="${3:-$repo_root/BENCH_precond.json}"
 
+# Write the fresh run to .new files first, gate it against the current
+# baselines, and only rotate once everything passed — neither a failed
+# bench nor a regressed run may replace the baseline (otherwise a rerun
+# would compare the regression against itself and print OK).
 cd "$repo_root/rust"
-cargo bench --bench bench_perf_mvm -- --smoke --json "$out_mvm" --json-cg "$out_cg"
+cargo bench --bench bench_perf_mvm -- --smoke \
+    --json "$out_mvm.new" --json-cg "$out_cg.new" --json-precond "$out_precond.new"
 
 echo "BENCH_mvm rows:"
-cat "$out_mvm"
+cat "$out_mvm.new"
 echo "BENCH_cg rows:"
-cat "$out_cg"
+cat "$out_cg.new"
+echo "BENCH_precond rows:"
+cat "$out_precond.new"
+
+if [[ "${BENCH_SKIP_COMPARE:-0}" != "1" ]]; then
+    fail=0
+    for out in "$out_mvm" "$out_cg" "$out_precond"; do
+        if [[ -f "$out" ]]; then
+            python3 "$repo_root/scripts/bench_compare.py" "$out" "$out.new" || fail=1
+        fi
+    done
+    if [[ "$fail" != "0" ]]; then
+        echo "bench_smoke: regression gate failed; baselines kept," \
+             "fresh run left in BENCH_*.json.new for inspection" >&2
+        exit 2
+    fi
+fi
+
+for out in "$out_mvm" "$out_cg" "$out_precond"; do
+    if [[ -f "$out" ]]; then
+        mv "$out" "${out%.json}.prev.json"
+    fi
+    mv "$out.new" "$out"
+done
