@@ -18,21 +18,28 @@
 //! operator below) — a trajectory metric, not a hardware counter.
 //!
 //! `--json-cg` additionally runs the block-CG solve sweep and writes
-//! `{op, n, rhs, block, ns_per_solve_col, mvms, block_applies, converged}`
-//! per case: `ns_per_solve_col` is wall time per right-hand-side column,
-//! `mvms` / `block_applies` mirror `BlockCgInfo` (block-amortized applies
-//! are the hardware-executed count and must be <= per-column MVMs), and
-//! `converged` counts columns that hit the tolerance.
+//! `{op, n, rhs, block, threads, ns_per_solve_col, mvms, block_applies,
+//! converged}` per case: `ns_per_solve_col` is wall time per
+//! right-hand-side column, `threads` is the RHS-group worker count (a
+//! 1-vs-N sweep; solver results are bit-identical across thread counts,
+//! so `mvms` / `block_applies` / `converged` only depend on the other
+//! fields), `mvms` / `block_applies` mirror `BlockCgInfo` (block-amortized
+//! applies are the hardware-executed count and must be <= per-column
+//! MVMs), and `converged` counts columns that hit the tolerance.
 //!
 //! `--json-precond` runs the pivoted-Cholesky preconditioning sweep
-//! (rank × σ on an ill-conditioned dense RBF kernel) and writes
-//! `{op, n, sigma, rank, cg_iters, lanczos_steps, ns_per_solve_col}` per
-//! case — rank 0 is the unpreconditioned baseline, so the iteration-count
-//! reduction is measured rather than asserted.
+//! (rank × σ × (block, threads) on an ill-conditioned dense RBF kernel)
+//! and writes `{op, n, sigma, rank, block, threads, cg_iters, converged,
+//! lanczos_steps, ns_per_solve_col}` per case — rank 0 is the
+//! unpreconditioned baseline, block 8 the single-group amortized
+//! production configuration (its thread budget drives operator-internal
+//! threading), block 2 the 4-group RHS fan-out, and threads 1 each
+//! block's serial baseline, so the iteration-count and wall-clock
+//! reductions are measured rather than asserted.
 
 use std::time::Instant;
 
-use gpsld::coordinator::figures::{precond_sweep, PrecondSweepRow};
+use gpsld::coordinator::figures::{precond_sweep, PrecondSweepRow, SWEEP_THREADS};
 use gpsld::coordinator::{cli, Scale};
 use gpsld::data;
 use gpsld::estimators::chebyshev::{chebyshev_logdet, ChebOptions};
@@ -168,6 +175,10 @@ struct CgSweepRow {
     n: usize,
     rhs: usize,
     block: usize,
+    /// RHS-group worker count for this solve (identity field in
+    /// `bench_compare.py` — single- and multi-thread rows are gated
+    /// separately).
+    threads: usize,
     ns_per_solve_col: f64,
     mvms: usize,
     block_applies: usize,
@@ -183,8 +194,12 @@ fn time_solve(f: impl FnMut() -> f64) -> f64 {
 /// Block-CG sweep over the same operator structures as the MVM sweep.
 /// The tolerances/noise levels are chosen so the solves converge in tens
 /// of iterations — this measures solver throughput trajectory, not GP
-/// fidelity.
-fn cg_sweep(blocks: &[usize]) -> Vec<CgSweepRow> {
+/// fidelity. Each (op, n, block) case runs once per thread count in
+/// `threads`: at block < RHS the right-hand sides split into several
+/// groups, so the multi-thread rows measure the RHS-group fan-out (the
+/// solver's results are bit-identical either way, so only
+/// `ns_per_solve_col` moves between thread rows).
+fn cg_sweep(blocks: &[usize], threads: &[usize]) -> Vec<CgSweepRow> {
     const RHS: usize = 8;
     let mut rows = Vec::new();
     let mut rng = Rng::new(17);
@@ -192,28 +207,38 @@ fn cg_sweep(blocks: &[usize]) -> Vec<CgSweepRow> {
         let opts_base = CgOptions { tol: 1e-6, max_iters: 120, block_size: 1, ..Default::default() };
         let b = Mat::from_fn(n, RHS, |_, _| rng.gaussian());
         for &blk in blocks {
-            let opts = CgOptions { block_size: blk, ..opts_base };
-            // Accounting numbers come from the warmup solve (deterministic,
-            // so every rep reports the same counts).
-            let mut acct = None;
-            let secs = time_solve(|| {
-                let (x, info) = cg_block(op, &b, None, &opts);
-                if acct.is_none() {
-                    acct = Some(info);
-                }
-                x.data[0]
-            });
-            let info = acct.expect("time_solve runs at least once");
-            rows.push(CgSweepRow {
-                op: op_name,
-                n,
-                rhs: RHS,
-                block: blk,
-                ns_per_solve_col: secs * 1e9 / RHS as f64,
-                mvms: info.mvms,
-                block_applies: info.block_applies,
-                converged: info.cols.iter().filter(|c| c.converged).count(),
-            });
+            for &t in threads {
+                // Pin the process default to `t` during the measured
+                // solves so the row's `threads` means the TOTAL worker
+                // budget (operator-internal threading included) — a fair
+                // 1-vs-N comparison on any core count; results are
+                // thread-invariant regardless.
+                let opts = CgOptions { block_size: blk, threads: t, ..opts_base };
+                // Accounting numbers come from the warmup solve
+                // (deterministic, so every rep reports the same counts).
+                let mut acct = None;
+                let secs = gpsld::util::parallel::with_default_threads(t, || {
+                    time_solve(|| {
+                        let (x, info) = cg_block(op, &b, None, &opts);
+                        if acct.is_none() {
+                            acct = Some(info);
+                        }
+                        x.data[0]
+                    })
+                });
+                let info = acct.expect("time_solve runs at least once");
+                rows.push(CgSweepRow {
+                    op: op_name,
+                    n,
+                    rhs: RHS,
+                    block: blk,
+                    threads: t,
+                    ns_per_solve_col: secs * 1e9 / RHS as f64,
+                    mvms: info.mvms,
+                    block_applies: info.block_applies,
+                    converged: info.cols.iter().filter(|c| c.converged).count(),
+                });
+            }
         }
     };
 
@@ -280,8 +305,8 @@ fn write_precond_json(rows: &[PrecondSweepRow], path: &str) {
         .iter()
         .map(|r| {
             format!(
-                "{{\"op\": \"{}\", \"n\": {}, \"sigma\": {}, \"rank\": {}, \"cg_iters\": {}, \"lanczos_steps\": {}, \"ns_per_solve_col\": {:.1}}}",
-                r.op, r.n, r.sigma, r.rank, r.cg_iters, r.lanczos_steps, r.ns_per_solve_col
+                "{{\"op\": \"{}\", \"n\": {}, \"sigma\": {}, \"rank\": {}, \"block\": {}, \"threads\": {}, \"cg_iters\": {}, \"converged\": {}, \"lanczos_steps\": {}, \"ns_per_solve_col\": {:.1}}}",
+                r.op, r.n, r.sigma, r.rank, r.block, r.threads, r.cg_iters, r.converged, r.lanczos_steps, r.ns_per_solve_col
             )
         })
         .collect();
@@ -293,8 +318,8 @@ fn write_cg_json(rows: &[CgSweepRow], path: &str) {
         .iter()
         .map(|r| {
             format!(
-                "{{\"op\": \"{}\", \"n\": {}, \"rhs\": {}, \"block\": {}, \"ns_per_solve_col\": {:.1}, \"mvms\": {}, \"block_applies\": {}, \"converged\": {}}}",
-                r.op, r.n, r.rhs, r.block, r.ns_per_solve_col, r.mvms, r.block_applies, r.converged
+                "{{\"op\": \"{}\", \"n\": {}, \"rhs\": {}, \"block\": {}, \"threads\": {}, \"ns_per_solve_col\": {:.1}, \"mvms\": {}, \"block_applies\": {}, \"converged\": {}}}",
+                r.op, r.n, r.rhs, r.block, r.threads, r.ns_per_solve_col, r.mvms, r.block_applies, r.converged
             )
         })
         .collect();
@@ -331,15 +356,20 @@ fn run_smoke(
         write_json(&rows, path);
     }
     if json_cg_path.is_some() {
-        let cg_rows = cg_sweep(&[1, 8]);
+        // The 1-vs-N thread sweep: N is fixed (not auto-detected) so row
+        // identities stay comparable across machines and runs. block=1
+        // splits the 8 RHS into 8 groups — the configuration where the
+        // RHS-group fan-out has the most to parallelize.
+        let cg_rows = cg_sweep(&[1, 8], &[1, SWEEP_THREADS]);
         println!(
-            "{:<10} {:>6} {:>4} {:>6} {:>16} {:>8} {:>8} {:>6}",
-            "op", "n", "rhs", "block", "ns/solve-col", "mvms", "applies", "conv"
+            "{:<10} {:>6} {:>4} {:>6} {:>3} {:>16} {:>8} {:>8} {:>6}",
+            "op", "n", "rhs", "block", "t", "ns/solve-col", "mvms", "applies", "conv"
         );
         for r in &cg_rows {
             println!(
-                "{:<10} {:>6} {:>4} {:>6} {:>16.1} {:>8} {:>8} {:>6}",
-                r.op, r.n, r.rhs, r.block, r.ns_per_solve_col, r.mvms, r.block_applies, r.converged
+                "{:<10} {:>6} {:>4} {:>6} {:>3} {:>16.1} {:>8} {:>8} {:>6}",
+                r.op, r.n, r.rhs, r.block, r.threads, r.ns_per_solve_col, r.mvms,
+                r.block_applies, r.converged
             );
         }
         if let Some(path) = json_cg_path {
@@ -347,15 +377,17 @@ fn run_smoke(
         }
     }
     if json_precond_path.is_some() {
-        let pc_rows = precond_sweep(&[1000], &[0.1, 0.01], &[0, 8, 32]);
+        let pc_rows = precond_sweep(&[1000], &[0.1, 0.01], &[0, 8, 32], &[1, SWEEP_THREADS]);
         println!(
-            "{:<10} {:>6} {:>7} {:>5} {:>9} {:>14} {:>16}",
-            "op", "n", "sigma", "rank", "cg_iters", "lanczos_steps", "ns/solve-col"
+            "{:<10} {:>6} {:>7} {:>5} {:>3} {:>3} {:>9} {:>5} {:>14} {:>16}",
+            "op", "n", "sigma", "rank", "b", "t", "cg_iters", "conv", "lanczos_steps",
+            "ns/solve-col"
         );
         for r in &pc_rows {
             println!(
-                "{:<10} {:>6} {:>7} {:>5} {:>9} {:>14} {:>16.1}",
-                r.op, r.n, r.sigma, r.rank, r.cg_iters, r.lanczos_steps, r.ns_per_solve_col
+                "{:<10} {:>6} {:>7} {:>5} {:>3} {:>3} {:>9} {:>5} {:>14} {:>16.1}",
+                r.op, r.n, r.sigma, r.rank, r.block, r.threads, r.cg_iters, r.converged,
+                r.lanczos_steps, r.ns_per_solve_col
             );
         }
         if let Some(path) = json_precond_path {

@@ -1,8 +1,8 @@
 //! Hand-rolled CLI (clap is not in the offline registry).
 //!
 //! ```text
-//! gpsld exp <id> [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>]
-//! gpsld exp all  [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>]
+//! gpsld exp <id> [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>] [--threads <t>]
+//! gpsld exp all  [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>] [--threads <t>]
 //! gpsld artifacts                                      list/verify PJRT artifacts
 //! gpsld info                                           version + feature summary
 //! ```
@@ -13,7 +13,10 @@
 //! solver (the default for `CgOptions`); `--precond-rank <k>` sets the
 //! pivoted-Cholesky preconditioner rank for every solve and SLQ logdet
 //! (0, the default, disables preconditioning — bit-identical to not
-//! passing the flag).
+//! passing the flag); `--threads <t>` sets the process-default worker
+//! count for RHS-group and probe-block fan-out
+//! (`util::parallel::set_default_threads`; results are bit-identical at
+//! any thread count, only wall-clock changes).
 
 use super::{experiments, figures, ExpResult, Scale};
 
@@ -25,10 +28,11 @@ const EXP_IDS: &[&str] = &[
 pub fn usage() -> String {
     format!(
         "gpsld {} — Scalable Log Determinants for GP Kernel Learning (NIPS 2017 repro)\n\n\
-         USAGE:\n  gpsld exp <id|all> [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>] [--md <file>]\n  gpsld artifacts\n  gpsld info\n\n\
+         USAGE:\n  gpsld exp <id|all> [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>] [--threads <t>] [--md <file>]\n  gpsld artifacts\n  gpsld info\n\n\
          `--block <b>` sets the default probe-block width for blocked MVMs.\n\
          `--cg-block <b>` sets the default RHS block width for block-CG solves.\n\
-         `--precond-rank <k>` sets the pivoted-Cholesky preconditioner rank (0 = off).\n\n\
+         `--precond-rank <k>` sets the pivoted-Cholesky preconditioner rank (0 = off).\n\
+         `--threads <t>` sets the default worker count for RHS-group/probe-block fan-out.\n\n\
          EXPERIMENTS: {}\n",
         crate::version(),
         EXP_IDS.join(", ")
@@ -67,14 +71,29 @@ pub fn main_with_args(args: &[String]) -> i32 {
             while i < args.len() {
                 match args[i].as_str() {
                     "--scale" => {
-                        scale = args
-                            .get(i + 1)
-                            .and_then(|s| Scale::parse(s))
-                            .unwrap_or(Scale::Small);
+                        // Reject garbage like every other flag — silently
+                        // falling back to small-scale would let a typo'd
+                        // "paper" run (and record) the wrong experiment.
+                        match args.get(i + 1).and_then(|s| Scale::parse(s)) {
+                            Some(s) => scale = s,
+                            None => {
+                                eprintln!("--scale needs 'small' or 'paper'");
+                                return 2;
+                            }
+                        }
                         i += 2;
                     }
                     "--md" => {
-                        md_out = args.get(i + 1).cloned();
+                        // Like the other flags: a missing operand is an
+                        // error, not a silent no-op that runs the whole
+                        // experiment and writes nothing.
+                        match args.get(i + 1) {
+                            Some(p) => md_out = Some(p.clone()),
+                            None => {
+                                eprintln!("--md needs an output path");
+                                return 2;
+                            }
+                        }
                         i += 2;
                     }
                     "--block" => {
@@ -92,6 +111,18 @@ pub fn main_with_args(args: &[String]) -> i32 {
                             Some(b) if b >= 1 => crate::solvers::set_default_cg_block_size(b),
                             _ => {
                                 eprintln!("--cg-block needs a positive integer");
+                                return 2;
+                            }
+                        }
+                        i += 2;
+                    }
+                    "--threads" => {
+                        match args.get(i + 1).and_then(|s| s.parse::<usize>().ok()) {
+                            Some(t) if t >= 1 => {
+                                crate::util::parallel::set_default_threads(t)
+                            }
+                            _ => {
+                                eprintln!("--threads needs a positive integer");
                                 return 2;
                             }
                         }
@@ -163,7 +194,10 @@ pub fn main_with_args(args: &[String]) -> i32 {
         Some("info") => {
             println!("gpsld {}", crate::version());
             println!("estimators: lanczos(slq), chebyshev, surrogate, scaled_eig, exact");
-            println!("solvers: cg/block-cg with pivoted-Cholesky PCG (--precond-rank)");
+            println!(
+                "solvers: cg/block-cg with pivoted-Cholesky PCG (--precond-rank), \
+                 parallel RHS groups (--threads)"
+            );
             println!("operators: dense, toeplitz, kronecker, ski(+diag), fitc/sor, sum");
             println!("likelihoods: gaussian, poisson(lgcp), negative-binomial");
             println!("runtime: PJRT CPU via xla crate; artifacts from python/compile (JAX+Pallas)");
@@ -210,6 +244,73 @@ mod tests {
         assert_eq!(crate::solvers::default_precond_rank(), 0);
         assert_eq!(
             main_with_args(&["exp".into(), "fig1".into(), "--precond-rank".into(), "x".into()]),
+            2
+        );
+    }
+
+    #[test]
+    fn threads_flag_sets_default_and_rejects_zero() {
+        // A valid value lands in the process default (restored to auto
+        // afterwards — every consumer is bit-identical across thread
+        // counts, so a transient override only changes scheduling). The
+        // lock serializes against the util::parallel test mutating the
+        // same process-wide default.
+        let _guard = crate::util::parallel::TEST_DEFAULT_THREADS_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        // Pin to the current raw value: the drop guard restores whatever
+        // was set before this test on every exit path (asserts included).
+        crate::util::parallel::with_default_threads(
+            crate::util::parallel::raw_default_threads(),
+            || {
+                assert_eq!(
+                    main_with_args(&[
+                        "exp".into(),
+                        "nope".into(),
+                        "--threads".into(),
+                        "2".into()
+                    ]),
+                    2 // unknown experiment, but the flag itself parsed fine
+                );
+                assert_eq!(crate::util::parallel::default_threads(), 2);
+                // 0 and garbage are rejected before any experiment runs.
+                assert_eq!(
+                    main_with_args(&[
+                        "exp".into(),
+                        "fig1".into(),
+                        "--threads".into(),
+                        "0".into()
+                    ]),
+                    2
+                );
+                assert_eq!(
+                    main_with_args(&[
+                        "exp".into(),
+                        "fig1".into(),
+                        "--threads".into(),
+                        "x".into()
+                    ]),
+                    2
+                );
+            },
+        );
+    }
+
+    #[test]
+    fn scale_flag_rejects_garbage() {
+        // A typo'd scale must error before any experiment runs, not
+        // silently fall back to small.
+        assert_eq!(
+            main_with_args(&["exp".into(), "fig1".into(), "--scale".into(), "Paper".into()]),
+            2
+        );
+        assert_eq!(
+            main_with_args(&["exp".into(), "fig1".into(), "--scale".into()]),
+            2
+        );
+        // --md with no operand must error too, before any experiment runs.
+        assert_eq!(
+            main_with_args(&["exp".into(), "fig1".into(), "--md".into()]),
             2
         );
     }

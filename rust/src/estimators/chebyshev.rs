@@ -34,6 +34,9 @@ pub struct ChebOptions {
     pub grads: bool,
     /// Eigenvalue bracket; estimated via Lanczos Ritz values when `None`.
     pub lambda_bounds: Option<(f64, f64)>,
+    /// Worker threads across probe blocks (shared `util::parallel` pool;
+    /// bit-identical estimates for every thread count). Defaults to the
+    /// process default (CLI `--threads`).
     pub threads: usize,
     /// Probe-block width b for blocked MVMs (1 reproduces the per-probe
     /// path apply-for-apply; estimates are identical either way).

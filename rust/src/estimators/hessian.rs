@@ -37,6 +37,10 @@ pub struct HessianOptions {
     pub steps: usize,
     pub probes: usize,
     pub seed: u64,
+    /// Worker threads for the probe-block solves: the Lanczos backend fans
+    /// probe blocks over `util::parallel` directly, and the BlockCg backend
+    /// additionally honors its own `CgOptions::threads` for the RHS-group
+    /// fan-out. Defaults to the process default (CLI `--threads`).
     pub threads: usize,
     /// FD step for second kernel derivatives.
     pub fd_eps: f64,

@@ -36,7 +36,10 @@ pub struct SlqOptions {
     pub seed: u64,
     /// Also estimate all hyper-derivatives.
     pub grads: bool,
-    /// Worker threads across probe blocks.
+    /// Worker threads across probe blocks (the same `util::parallel` pool
+    /// the block-CG engine fans RHS groups over; estimates are
+    /// bit-identical for every thread count). Defaults to the process
+    /// default (`util::parallel::default_threads`, CLI `--threads`).
     pub threads: usize,
     /// Probe-block width b for blocked MVMs (1 reproduces the per-probe
     /// path apply-for-apply; estimates are identical either way).

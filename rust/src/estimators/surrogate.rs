@@ -130,13 +130,28 @@ impl LogdetSurrogate {
         let mut build_mvms = 0;
         let mut opts = *slq;
         opts.grads = false;
+        // The design loop mutates the operator's hyperparameters, so the
+        // original setting must be restored on *every* exit path — a
+        // mid-loop SLQ failure must not leave the operator parked at an
+        // arbitrary design point (a `?` here used to skip the restore).
+        let mut failure = None;
         for p in &pts {
             op.set_hypers(p);
-            let est = slq_logdet(op, &opts)?;
-            vals.push(est.value);
-            build_mvms += est.mvms;
+            match slq_logdet(op, &opts) {
+                Ok(est) => {
+                    vals.push(est.value);
+                    build_mvms += est.mvms;
+                }
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
         }
         op.set_hypers(&h0);
+        if let Some(e) = failure {
+            return Err(e);
+        }
         Ok(LogdetSurrogate {
             surrogate: RbfSurrogate::fit(pts, &vals)?,
             bounds: bounds.to_vec(),
@@ -157,8 +172,23 @@ impl LogdetSurrogate {
         self.surrogate.eval(&self.clamp(theta))
     }
 
+    /// Gradient of the *clamped* surrogate `θ ↦ s(clamp(θ))` — what
+    /// [`LogdetSurrogate::eval`] actually computes. By the chain rule of
+    /// `clamp`, coordinates strictly outside the box have zero derivative:
+    /// the function is constant along them there. (Returning the interior
+    /// gradient at the clamped point — the old behavior — pushed
+    /// optimizers at the boundary with the derivative of a function they
+    /// were not on.) Exactly *at* a bound the one-sided interior
+    /// derivative is kept, matching the inward direction an optimizer can
+    /// still move in.
     pub fn grad(&self, theta: &[f64]) -> Vec<f64> {
-        self.surrogate.grad(&self.clamp(theta))
+        let mut g = self.surrogate.grad(&self.clamp(theta));
+        for (gk, (&t, &(lo, hi))) in g.iter_mut().zip(theta.iter().zip(&self.bounds)) {
+            if t < lo || t > hi {
+                *gk = 0.0;
+            }
+        }
+        g
     }
 }
 
@@ -166,7 +196,48 @@ impl LogdetSurrogate {
 mod tests {
     use super::*;
     use crate::kernels::{IsoKernel, Shape};
-    use crate::operators::DenseKernelOp;
+    use crate::operators::{DenseKernelOp, LinOp};
+
+    /// A kernel operator that produces garbage (NaN) MVMs whenever its
+    /// first hyper exceeds a threshold — SLQ on it fails with a clean
+    /// `Err` (the tridiagonal eigensolver refuses NaN input), which is
+    /// exactly the mid-build failure mode the restore bugfix guards.
+    struct FailingOp {
+        inner: DenseKernelOp,
+        fail_above: f64,
+    }
+
+    impl LinOp for FailingOp {
+        fn n(&self) -> usize {
+            self.inner.n()
+        }
+        fn apply(&self, x: &[f64], y: &mut [f64]) {
+            self.inner.apply(x, y);
+            if self.inner.hypers()[0] > self.fail_above {
+                for v in y.iter_mut() {
+                    *v = f64::NAN;
+                }
+            }
+        }
+    }
+
+    impl KernelOp for FailingOp {
+        fn num_hypers(&self) -> usize {
+            self.inner.num_hypers()
+        }
+        fn hypers(&self) -> Vec<f64> {
+            self.inner.hypers()
+        }
+        fn set_hypers(&mut self, h: &[f64]) {
+            self.inner.set_hypers(h)
+        }
+        fn hyper_names(&self) -> Vec<String> {
+            self.inner.hyper_names()
+        }
+        fn apply_grad(&self, i: usize, x: &[f64], y: &mut [f64]) {
+            self.inner.apply_grad(i, x, y)
+        }
+    }
 
     #[test]
     fn interpolates_exactly_at_design_points() {
@@ -217,6 +288,73 @@ mod tests {
             let dn = s.eval(&xp);
             let fd = (up - dn) / (2.0 * eps);
             assert!((g[k] - fd).abs() < 1e-5 * (1.0 + fd.abs()));
+        }
+    }
+
+    /// Bugfix regression: a design-point SLQ failure mid-build must leave
+    /// the operator at the hypers it entered with, and surface the error.
+    #[test]
+    fn build_restores_hypers_when_slq_fails() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(21);
+        let pts: Vec<Vec<f64>> =
+            (0..40).map(|_| vec![rng.uniform_in(0.0, 3.0)]).collect();
+        let inner = DenseKernelOp::new(
+            pts,
+            Box::new(IsoKernel::new(Shape::Rbf, 1, 0.5, 1.0)),
+            0.3,
+        );
+        let h0 = inner.hypers();
+        // Poison the top 40% of the box in the first hyper: the Latin
+        // hypercube puts one design point per stratum, so with 8 points at
+        // least three land above the threshold — the build *must* fail.
+        let mut op = FailingOp { inner, fail_above: h0[0] + 0.1 };
+        let bounds: Vec<(f64, f64)> =
+            h0.iter().map(|&h| (h - 0.5, h + 0.5)).collect();
+        let slq = SlqOptions { steps: 10, probes: 3, seed: 1, ..Default::default() };
+        let res = LogdetSurrogate::build(&mut op, &bounds, 8, &slq, 5);
+        assert!(res.is_err(), "poisoned design points should fail the build");
+        assert_eq!(op.hypers(), h0, "hypers must be restored on the error path");
+    }
+
+    /// Bugfix regression: the gradient of the clamped surrogate is zero
+    /// along coordinates strictly outside the box (the clamped function is
+    /// constant there), and matches finite differences of `eval` — the
+    /// function callers actually optimize — on both sides of the boundary.
+    #[test]
+    fn clamped_gradient_matches_fd_across_boundary() {
+        let pts: Vec<Vec<f64>> = (0..9)
+            .map(|i| vec![(i as f64 * 0.29) % 1.0, (i as f64 * 0.53) % 1.0])
+            .collect();
+        let vals: Vec<f64> =
+            pts.iter().map(|p| (p[0] * 2.0).sin() + p[1] * p[1] - p[0] * p[1]).collect();
+        let sur = LogdetSurrogate {
+            surrogate: RbfSurrogate::fit(pts, &vals).unwrap(),
+            bounds: vec![(0.0, 1.0), (0.0, 1.0)],
+            build_mvms: 0,
+        };
+        let eps = 1e-6;
+        // Above the box in dim 0, below it in dim 0, and interior.
+        for theta in [[1.3, 0.4], [-0.2, 0.6], [0.5, 0.5]] {
+            let g = sur.grad(&theta);
+            for k in 0..2 {
+                let mut tp = theta;
+                tp[k] += eps;
+                let up = sur.eval(&tp);
+                tp[k] -= 2.0 * eps;
+                let dn = sur.eval(&tp);
+                let fd = (up - dn) / (2.0 * eps);
+                assert!(
+                    (g[k] - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+                    "theta {theta:?} dim {k}: grad {} vs fd {fd}",
+                    g[k]
+                );
+            }
+            let out0 = theta[0] < 0.0 || theta[0] > 1.0;
+            if out0 {
+                assert_eq!(g[0], 0.0, "clamped coordinate must have zero gradient");
+                assert!(g[1] != 0.0, "interior coordinate keeps its derivative");
+            }
         }
     }
 

@@ -30,7 +30,9 @@ pub struct DeepKernelGp {
     pub log_sigma: f64,
     pub mean: f64,
     pub slq: SlqOptions,
-    /// Settings for the `alpha = K̃^{-1}(y − μ)` solves.
+    /// Settings for the `alpha = K̃^{-1}(y − μ)` solves; its `threads`
+    /// knob also fans the block-PCG feature-gradient probe solves across
+    /// RHS-group workers (results bit-identical at any thread count).
     pub cg: CgOptions,
 }
 

@@ -34,6 +34,10 @@ pub struct LaplaceOptions {
     pub slq_steps: usize,
     pub slq_probes: usize,
     pub seed: u64,
+    /// Worker threads for the `log|B|` probe blocks (the Newton inner
+    /// solves are single-RHS and stay scalar; the shared `cg.threads` knob
+    /// applies wherever a multi-group block solve appears). Defaults to
+    /// the process default (CLI `--threads`).
     pub threads: usize,
 }
 

@@ -88,7 +88,9 @@ pub struct GpRegression<O: PredictiveOp> {
     /// predictive-variance block solve. Its `precond` knob (CLI
     /// `--precond-rank`, 0 = off) controls the pivoted-Cholesky
     /// preconditioner built (and cached per hyper setting) for every
-    /// solve and SLQ logdet on this model.
+    /// solve and SLQ logdet on this model; its `threads` knob (CLI
+    /// `--threads`) fans multi-group predictive-variance solves across
+    /// RHS-group workers (bit-identical results at any thread count).
     pub cg: CgOptions,
     /// Warm-start later predictive-variance column groups from the nearest
     /// already-solved test column (neighboring test points have similar
@@ -320,6 +322,14 @@ impl<O: PredictiveOp> GpRegression<O> {
     /// `info.warm_saved_iters` reports the iterations observed saved
     /// relative to the cold first group's worst column; a single-group
     /// solve is always cold and bit-identical to the unwarmed path.
+    ///
+    /// Threading: with warm starts off the groups are independent and the
+    /// block engine fans them across `cg.threads` workers. The
+    /// warm-started path is group-*sequential* by construction (group `b`
+    /// seeds from group `b−1`'s solution), so it stays serial at the group
+    /// level regardless of `cg.threads` — the strategy choice is
+    /// deliberately independent of the thread count so results never
+    /// depend on it.
     pub fn predict_var_info(&mut self, test: &[Vec<f64>]) -> (Vec<f64>, BlockCgInfo) {
         self.refresh_precond();
         let s2 = self.op.noise_var();

@@ -92,9 +92,12 @@ pub fn tridiag_eig_first_row(diag: &[f64], offdiag: &[f64]) -> Result<TridiagEig
         }
     }
 
-    // Sort ascending by eigenvalue, carrying first components.
+    // Sort ascending by eigenvalue, carrying first components. Total
+    // order: identical to partial_cmp on the finite values QL converges
+    // to, but never panics if a NaN slips through (NaN-poisoned input
+    // normally exhausts the QL iteration budget and errors above).
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap());
+    idx.sort_by(|&a, &b| d[a].total_cmp(&d[b]));
     let eigvals: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
     let first_components: Vec<f64> = idx.iter().map(|&i| z[i]).collect();
     Ok(TridiagEig { eigvals, first_components })

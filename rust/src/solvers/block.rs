@@ -12,10 +12,21 @@
 //! column. Converged (or bailed) columns are *deflated*: they drop out of
 //! the active block, so late stragglers don't force redundant applies for
 //! the columns that finished early.
+//!
+//! When the right-hand sides span more than one `block_size`-wide group,
+//! the groups run on `CgOptions::threads` [`crate::util::parallel`]
+//! workers (one lockstep solve per worker at a time). Groups share no
+//! state — each keeps its own lockstep/deflation/true-residual machinery
+//! and writes disjoint columns of the output — so results stay
+//! bit-identical for every thread count; the nested thread-budget guard
+//! caps operator-level threading inside one group at the worker's share
+//! of the requested threads, so the two levels compose instead of
+//! multiplying.
 
 use crate::linalg::dense::Mat;
 use crate::operators::LinOp;
 use crate::util::blocks::BlockPartition;
+use crate::util::parallel;
 use crate::util::stats::{axpy, dot, norm2};
 
 use super::cg::{residual_scale, CgInfo, CgOptions};
@@ -75,6 +86,22 @@ struct Col {
     info: CgInfo,
 }
 
+/// A finished column: just the solution and its statistics. The CG
+/// scratch (`r`, `p`) is dropped when a group's lockstep loop exits, so
+/// groups awaiting the merge hold only what the merge consumes — not ~3x
+/// the solution memory per column.
+struct SolvedCol {
+    j: usize,
+    x: Vec<f64>,
+    info: CgInfo,
+}
+
+/// Strip a group's column states down to their [`SolvedCol`] results,
+/// releasing the scratch vectors.
+fn finish_group(cols: Vec<Col>) -> Vec<SolvedCol> {
+    cols.into_iter().map(|s| SolvedCol { j: s.j, x: s.x, info: s.info }).collect()
+}
+
 /// Solve `A X = B` for all columns of `B`, `block_size` columns at a time.
 ///
 /// `x0` supplies warm starts for every column (shape must match `b`).
@@ -92,18 +119,21 @@ pub fn cg_block<O: LinOp + ?Sized>(
     }
     let mut out = Mat::zeros(n, b.cols);
     let mut infos = vec![CgInfo { iters: 0, residual: 0.0, converged: false, mvms: 0 }; b.cols];
-    let mut block_applies = 0usize;
     if b.cols == 0 {
         return (
             out,
-            BlockCgInfo { cols: infos, mvms: 0, block_applies, warm_saved_iters: 0 },
+            BlockCgInfo { cols: infos, mvms: 0, block_applies: 0, warm_saved_iters: 0 },
         );
     }
+    // One worker per RHS group: the groups are fully independent (each
+    // keeps its own lockstep state and owns a disjoint column range), so
+    // fanning them across threads changes scheduling only — never results.
     let part = BlockPartition::new(b.cols, opts.block_size);
-    for bi in 0..part.nblocks {
+    let groups = parallel::par_map(part.nblocks, opts.threads, |bi| {
         let (j0, w) = part.range(bi);
-        solve_lockstep(op, b, x0, j0, w, opts, &mut out, &mut infos, &mut block_applies);
-    }
+        solve_lockstep(op, b, x0, j0, w, opts)
+    });
+    let block_applies = merge_groups(groups, &mut out, &mut infos);
     let mvms = infos.iter().map(|c| c.mvms).sum();
     (out, BlockCgInfo { cols: infos, mvms, block_applies, warm_saved_iters: 0 })
 }
@@ -133,18 +163,20 @@ pub fn pcg_block<O: LinOp + ?Sized>(
     }
     let mut out = Mat::zeros(n, b.cols);
     let mut infos = vec![CgInfo { iters: 0, residual: 0.0, converged: false, mvms: 0 }; b.cols];
-    let mut block_applies = 0usize;
     if b.cols == 0 {
         return (
             out,
-            BlockCgInfo { cols: infos, mvms: 0, block_applies, warm_saved_iters: 0 },
+            BlockCgInfo { cols: infos, mvms: 0, block_applies: 0, warm_saved_iters: 0 },
         );
     }
+    // Same worker-per-group fan-out as [`cg_block`]; the blocked `P⁻¹`
+    // applies are column-independent, so groups stay data-independent.
     let part = BlockPartition::new(b.cols, opts.block_size);
-    for bi in 0..part.nblocks {
+    let groups = parallel::par_map(part.nblocks, opts.threads, |bi| {
         let (j0, w) = part.range(bi);
-        solve_lockstep_pc(op, pc, b, x0, j0, w, opts, &mut out, &mut infos, &mut block_applies);
-    }
+        solve_lockstep_pc(op, pc, b, x0, j0, w, opts)
+    });
+    let block_applies = merge_groups(groups, &mut out, &mut infos);
     let mvms = infos.iter().map(|c| c.mvms).sum();
     (out, BlockCgInfo { cols: infos, mvms, block_applies, warm_saved_iters: 0 })
 }
@@ -169,8 +201,34 @@ pub fn cg_batch<O: LinOp + ?Sized>(
         .collect()
 }
 
+/// Merge per-group worker results back into the shared output — solved
+/// columns land at their global column index (`SolvedCol::j`), so the
+/// merged solution and per-column statistics are identical to the serial
+/// engine's regardless of which worker finished when. Returns the summed
+/// block-amortized apply count. The one merge contract for both the
+/// plain and the preconditioned engine.
+fn merge_groups(
+    groups: Vec<(Vec<SolvedCol>, usize)>,
+    out: &mut Mat,
+    infos: &mut [CgInfo],
+) -> usize {
+    let mut block_applies = 0usize;
+    for (cols, group_applies) in groups {
+        block_applies += group_applies;
+        for s in cols {
+            out.set_col(s.j, &s.x);
+            infos[s.j] = s.info;
+        }
+    }
+    block_applies
+}
+
 /// Run one `w`-wide column group `[j0, j0 + w)` in lockstep to completion.
-#[allow(clippy::too_many_arguments)]
+///
+/// This is the per-worker unit of the RHS-group fan-out: it owns all its
+/// state and returns the finished column states plus the group's
+/// block-amortized apply count, so concurrent groups never touch shared
+/// mutable data.
 fn solve_lockstep<O: LinOp + ?Sized>(
     op: &O,
     b: &Mat,
@@ -178,11 +236,9 @@ fn solve_lockstep<O: LinOp + ?Sized>(
     j0: usize,
     w: usize,
     opts: &CgOptions,
-    out: &mut Mat,
-    infos: &mut [CgInfo],
-    block_applies: &mut usize,
-) {
+) -> (Vec<SolvedCol>, usize) {
     let n = op.n();
+    let mut block_applies = 0usize;
     let mut cols: Vec<Col> = (j0..j0 + w)
         .map(|j| {
             let bj = b.col(j);
@@ -208,7 +264,7 @@ fn solve_lockstep<O: LinOp + ?Sized>(
         let all: Vec<usize> = (0..w).collect();
         let xblk = assemble(&cols, &all, Field::X);
         let rmat = op.residual_mat(&b.sub_cols(j0, w), &xblk);
-        *block_applies += 1;
+        block_applies += 1;
         for (c, s) in cols.iter_mut().enumerate() {
             s.info.mvms += 1;
             rmat.col_into(c, &mut s.r);
@@ -237,7 +293,7 @@ fn solve_lockstep<O: LinOp + ?Sized>(
         // One blocked apply over all still-active search directions.
         let pblk = assemble(&cols, &active, Field::P);
         let apblk = op.apply_mat(&pblk);
-        *block_applies += 1;
+        block_applies += 1;
 
         let mut next_active: Vec<usize> = Vec::new();
         let mut bail: Vec<usize> = Vec::new();
@@ -284,7 +340,7 @@ fn solve_lockstep<O: LinOp + ?Sized>(
                 bblk.set_col(c, &b.col(cols[ci].j));
             }
             let rmat = op.residual_mat(&bblk, &xblk);
-            *block_applies += 1;
+            block_applies += 1;
             let nbail = bail.len();
             for (c, &ci) in idxs.iter().enumerate() {
                 let s = &mut cols[ci];
@@ -308,10 +364,7 @@ fn solve_lockstep<O: LinOp + ?Sized>(
         active = next_active;
     }
 
-    for s in cols {
-        out.set_col(s.j, &s.x);
-        infos[s.j] = s.info;
-    }
+    (finish_group(cols), block_applies)
 }
 
 /// Run one `w`-wide column group `[j0, j0 + w)` of **preconditioned** CG in
@@ -319,8 +372,8 @@ fn solve_lockstep<O: LinOp + ?Sized>(
 /// [`super::cg::pcg_with_guess`]; the blocked `P⁻¹` applications go through
 /// [`Preconditioner::apply_inv_mat`], whose columns are bitwise identical
 /// to the scalar `apply_inv`, so the lockstep solve stays bit-identical to
-/// column-by-column scalar PCG.
-#[allow(clippy::too_many_arguments)]
+/// column-by-column scalar PCG. Like [`solve_lockstep`], this is the
+/// self-contained per-worker unit of the RHS-group fan-out.
 fn solve_lockstep_pc<O: LinOp + ?Sized>(
     op: &O,
     pc: &dyn Preconditioner,
@@ -329,11 +382,9 @@ fn solve_lockstep_pc<O: LinOp + ?Sized>(
     j0: usize,
     w: usize,
     opts: &CgOptions,
-    out: &mut Mat,
-    infos: &mut [CgInfo],
-    block_applies: &mut usize,
-) {
+) -> (Vec<SolvedCol>, usize) {
     let n = op.n();
+    let mut block_applies = 0usize;
     let mut cols: Vec<Col> = (j0..j0 + w)
         .map(|j| {
             let bj = b.col(j);
@@ -360,7 +411,7 @@ fn solve_lockstep_pc<O: LinOp + ?Sized>(
         let all: Vec<usize> = (0..w).collect();
         let xblk = assemble(&cols, &all, Field::X);
         let rmat = op.residual_mat(&b.sub_cols(j0, w), &xblk);
-        *block_applies += 1;
+        block_applies += 1;
         for (c, s) in cols.iter_mut().enumerate() {
             s.info.mvms += 1;
             rmat.col_into(c, &mut s.r);
@@ -401,7 +452,7 @@ fn solve_lockstep_pc<O: LinOp + ?Sized>(
         // One blocked operator apply over all still-active directions.
         let pblk = assemble(&cols, &active, Field::P);
         let apblk = op.apply_mat(&pblk);
-        *block_applies += 1;
+        block_applies += 1;
 
         let mut cont: Vec<usize> = Vec::new();
         let mut bail: Vec<usize> = Vec::new();
@@ -459,7 +510,7 @@ fn solve_lockstep_pc<O: LinOp + ?Sized>(
                 bblk.set_col(c, &b.col(cols[ci].j));
             }
             let rmat = op.residual_mat(&bblk, &xblk);
-            *block_applies += 1;
+            block_applies += 1;
             let nbail = bail.len();
             let mut drift: Vec<usize> = Vec::new();
             for (c, &ci) in idxs.iter().enumerate() {
@@ -491,10 +542,7 @@ fn solve_lockstep_pc<O: LinOp + ?Sized>(
         active = next_active;
     }
 
-    for s in cols {
-        out.set_col(s.j, &s.x);
-        infos[s.j] = s.info;
-    }
+    (finish_group(cols), block_applies)
 }
 
 /// Which per-column vector to pack into a block.
@@ -669,6 +717,85 @@ mod tests {
                 }
                 assert!(info.block_applies <= info.mvms);
             }
+        }
+    }
+
+    /// RHS-group fan-out changes scheduling only: solutions, per-column
+    /// statistics, and block-amortized accounting are bit-identical for
+    /// every thread count, cold and warm.
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let n = 22;
+        let op = spd_op(n);
+        let b = rhs(n, 7);
+        let g = Mat::from_fn(n, 7, |i, j| ((i + 3 * j) % 6) as f64 * 0.07);
+        for x0 in [None, Some(&g)] {
+            for bs in [1usize, 2, 3] {
+                let base = CgOptions {
+                    tol: 1e-10,
+                    max_iters: 200,
+                    block_size: bs,
+                    threads: 1,
+                    ..Default::default()
+                };
+                let (x1, i1) = cg_block(&op, &b, x0, &base);
+                for threads in [2usize, 8] {
+                    let opts = CgOptions { threads, ..base };
+                    let (xt, it) = cg_block(&op, &b, x0, &opts);
+                    assert_eq!(
+                        x1.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        xt.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "warm={} bs={bs} threads={threads}",
+                        x0.is_some()
+                    );
+                    assert_eq!(i1.mvms, it.mvms, "bs={bs} threads={threads}");
+                    assert_eq!(i1.block_applies, it.block_applies);
+                    for (a, c) in i1.cols.iter().zip(&it.cols) {
+                        assert_eq!(a.iters, c.iters);
+                        assert_eq!(a.converged, c.converged);
+                        assert_eq!(a.residual.to_bits(), c.residual.to_bits());
+                    }
+                }
+            }
+        }
+    }
+
+    /// Same invariance through the preconditioned engine.
+    #[test]
+    fn pcg_thread_count_does_not_change_results() {
+        use super::super::precond::{build_preconditioner, PrecondOptions};
+        use crate::kernels::{IsoKernel, Shape};
+        use crate::operators::DenseKernelOp;
+        use crate::util::rng::Rng;
+        let n = 24;
+        let mut rng = Rng::new(53);
+        let pts: Vec<Vec<f64>> =
+            (0..n).map(|_| vec![rng.uniform_in(0.0, 3.0)]).collect();
+        let op = DenseKernelOp::new(
+            pts,
+            Box::new(IsoKernel::new(Shape::Rbf, 1, 0.5, 1.0)),
+            0.1,
+        );
+        let pc = build_preconditioner(&op, PrecondOptions::rank(6)).unwrap();
+        let b = rhs(n, 6);
+        let base = CgOptions {
+            tol: 1e-9,
+            max_iters: 400,
+            block_size: 2,
+            threads: 1,
+            ..Default::default()
+        };
+        let (x1, i1) = pcg_block(&op, &b, None, Some(&pc), &base);
+        for threads in [2usize, 8] {
+            let opts = CgOptions { threads, ..base };
+            let (xt, it) = pcg_block(&op, &b, None, Some(&pc), &opts);
+            assert_eq!(
+                x1.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                xt.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "threads={threads}"
+            );
+            assert_eq!(i1.mvms, it.mvms);
+            assert_eq!(i1.block_applies, it.block_applies);
         }
     }
 

@@ -31,6 +31,14 @@ pub struct CgOptions {
     /// Right-hand-side block width for [`super::block::cg_block`] /
     /// [`super::block::cg_batch`]; scalar solves ignore it.
     pub block_size: usize,
+    /// Worker threads across RHS groups for the block engine: each
+    /// `block_size`-wide group of a multi-group solve runs on its own
+    /// `util::parallel` worker (results are bit-identical for every
+    /// thread count — see the module docs of [`crate::solvers`]). Scalar
+    /// solves and single-group blocks ignore it. Defaults to the process
+    /// default ([`crate::util::parallel::default_threads`], CLI
+    /// `--threads`).
+    pub threads: usize,
     /// Pivoted-Cholesky preconditioner knob (`rank` 0 = off). The solver
     /// functions take the *built* [`Preconditioner`] as an argument; this
     /// knob is how the entry points that own a kernel operator
@@ -45,6 +53,7 @@ impl Default for CgOptions {
             tol: 1e-8,
             max_iters: 1000,
             block_size: super::default_cg_block_size(),
+            threads: crate::util::parallel::default_threads(),
             precond: PrecondOptions::default(),
         }
     }

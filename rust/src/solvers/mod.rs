@@ -27,7 +27,23 @@
 //! * **Accounting.** [`block::BlockCgInfo`] mirrors
 //!   `LogdetEstimate::{mvms, block_applies}`: per-column MVMs (comparable
 //!   across block widths) and block-amortized applies (what the hardware
-//!   executes; one per `apply_mat` call).
+//!   executes; one per `apply_mat` call). Per-group counts are merged back
+//!   by global column index, so the merged report is identical to the
+//!   serial engine's.
+//! * **RHS-group parallelism.** A multi-group solve fans its
+//!   `block_size`-wide groups across `CgOptions::threads` workers
+//!   ([`crate::util::parallel`] owns the pool; the CLI `--threads` flag
+//!   sets the process default). Groups are data-independent — each worker
+//!   runs one complete lockstep solve with its own deflation and
+//!   true-residual state and writes a disjoint column range — so results
+//!   are **bit-identical for every thread count** (proptest-enforced
+//!   across `threads ∈ {1, 2, 8}`). The nested thread-*budget* guard
+//!   keeps operator-level threading from multiplying under the group
+//!   workers: each worker's nested fan-out is capped by its share of the
+//!   requested threads (serial when there are as many groups as threads;
+//!   leftover threads flow down to the blocked applies when groups are
+//!   few), and with one group (or `threads = 1`) the group runs on the
+//!   caller's thread with the operators' full internal parallelism.
 //!
 //! Scalar entry points ([`cg::cg`], [`cg::cg_with_guess`]) remain for
 //! one-RHS sites (the training-loop `alpha` solve, Laplace Newton inner

@@ -1,68 +1,170 @@
 //! Minimal scoped-thread parallelism (the offline registry has no rayon or
-//! tokio). Probe-level and experiment-level fan-out only needs a parallel
-//! indexed map with static partitioning, which `std::thread::scope` gives us
-//! safely.
+//! tokio). Probe-level, RHS-group, and experiment-level fan-out only needs
+//! a parallel indexed map with static partitioning, which
+//! `std::thread::scope` gives us safely.
 //!
-//! Nesting guard: the estimators fan out over probe blocks while the
-//! operators fan out inside a block apply; without a guard that multiplies
-//! into `threads^2` OS threads. Worker threads spawned here mark
-//! themselves, and any nested `par_map` / `par_chunks_mut` /
-//! [`default_threads`] call from inside a worker runs serially — so
-//! parallelism lives at the outermost level that asked for it (block level
-//! when there are many blocks, operator level when one block runs on the
-//! caller's thread).
+//! # The RHS-group / probe-block worker contract
+//!
+//! The *callers* own the pool: the solvers (`solvers::block::cg_block` /
+//! `pcg_block`) spawn one worker per `BlockPartition` right-hand-side
+//! group, and the estimators' probe drivers (SLQ, Chebyshev, the Hessian
+//! probe solves) fan their probe blocks across the same [`par_map`]
+//! machinery. Workers never share solver state: each group carries its own
+//! lockstep/deflation/true-residual (solvers) or Lanczos/Chebyshev
+//! recurrence (estimators) state, and per-column arithmetic is untouched
+//! by the fan-out — so results are **bit-identical for every thread
+//! count** (the groups are data-independent; only wall-clock changes).
+//! Cross-group reductions (per-column infos, `block_applies` sums,
+//! per-probe value vectors) are indexed by global column/probe position,
+//! so the reduction order is also thread-count independent.
+//!
+//! Nesting guard (thread *budget*): the solvers/estimators fan out over
+//! groups while the operators fan out inside a block apply; without a
+//! guard that multiplies into `threads^2` OS threads. Each worker spawned
+//! here inherits its share of the requested thread count
+//! (`requested / workers`, remainder to the first workers, at least 1),
+//! and any nested `par_map` /
+//! `par_chunks_mut` / [`default_threads`] call from inside a worker is
+//! capped by that budget — so total concurrency never exceeds what the
+//! outermost caller asked for, while leftover threads still flow down
+//! when there are fewer groups than threads (e.g. 2 RHS groups on a
+//! 16-thread request leave each group an 8-thread budget for its blocked
+//! applies, instead of serializing them). With as many workers as
+//! threads the budget is 1 and nested calls run serially, which is the
+//! classic guard.
+//!
+//! The process-wide default worker count is settable
+//! ([`set_default_threads`], CLI `--threads`); 0 (the initial state) means
+//! "auto": `available_parallelism`, capped at 16.
 
 use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 thread_local! {
-    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+    /// `None` off-pool; `Some(b)` on a pool worker with a nested-fan-out
+    /// budget of `b` threads.
+    static WORKER_BUDGET: Cell<Option<usize>> = const { Cell::new(None) };
 }
 
 /// True on a thread spawned by this module (or marked by a worker pool):
-/// nested fan-out should stay serial.
+/// nested fan-out is capped by the worker's thread budget.
 pub fn in_pool_worker() -> bool {
-    IN_POOL_WORKER.with(|c| c.get())
+    WORKER_BUDGET.with(|c| c.get().is_some())
 }
 
-/// Mark the current thread as a pool worker (used by the batch service's
-/// own worker pool so estimator calls inside it don't nest-fan-out).
+/// Mark the current thread as a pool worker with a serial (budget 1)
+/// nested fan-out — used by the batch service's own worker pool so
+/// estimator calls inside it don't nest-fan-out.
 pub fn mark_pool_worker() {
-    IN_POOL_WORKER.with(|c| c.set(true));
+    set_worker_budget(1);
 }
 
-/// Number of worker threads to use (capped so tests stay polite; 1 inside
-/// a pool worker to prevent nested oversubscription).
-pub fn default_threads() -> usize {
-    if in_pool_worker() {
-        return 1;
+/// Mark the current thread as a pool worker with the given nested budget.
+fn set_worker_budget(budget: usize) {
+    WORKER_BUDGET.with(|c| c.set(Some(budget.max(1))));
+}
+
+/// Hard ceiling on workers spawned by any single fan-out. Every spawn
+/// path funnels through [`effective_threads`], so an absurd request
+/// (`--threads 100000`, or a huge `CgOptions::threads`) degrades to this
+/// cap instead of attempting one scoped OS thread per row/group.
+pub const MAX_THREADS: usize = 256;
+
+/// Clamp a requested thread count by the enclosing worker's budget (the
+/// request itself off-pool) and by [`MAX_THREADS`]; always >= 1.
+fn effective_threads(threads: usize) -> usize {
+    let t = threads.clamp(1, MAX_THREADS);
+    WORKER_BUDGET.with(|c| c.get()).map_or(t, |b| b.max(1).min(t))
+}
+
+/// Process-wide default worker count; 0 = auto-detect. The coordinator
+/// CLI's `--threads` flag threads through [`set_default_threads`].
+static DEFAULT_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Serializes the tests that mutate the process-wide thread default (this
+/// module's and the CLI flag's) — they assert on the value they just set,
+/// so concurrent test threads must not interleave between set and read.
+#[cfg(test)]
+pub(crate) static TEST_DEFAULT_THREADS_LOCK: std::sync::Mutex<()> =
+    std::sync::Mutex::new(());
+
+/// Set the process-wide default worker count used by [`default_threads`]
+/// (and therefore by `CgOptions::default`, `SlqOptions::default`,
+/// `ChebOptions::default`, ...). 0 restores auto-detection.
+pub fn set_default_threads(t: usize) {
+    DEFAULT_THREADS.store(t, Ordering::Relaxed);
+}
+
+/// The raw process-wide default (0 = auto) — lets benches save and
+/// restore the setting around a controlled thread sweep.
+pub fn raw_default_threads() -> usize {
+    DEFAULT_THREADS.load(Ordering::Relaxed)
+}
+
+/// Run `f` with the process-wide default pinned to `t`, restoring the
+/// previous raw setting afterwards — on panic too (drop guard). The bench
+/// thread sweeps use this so a row's `threads` means the total worker
+/// budget; results are thread-invariant, so pinning only affects timing.
+pub fn with_default_threads<R>(t: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            set_default_threads(self.0);
+        }
     }
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-        .min(16)
+    let _restore = Restore(raw_default_threads());
+    set_default_threads(t);
+    f()
+}
+
+/// Number of worker threads to use: the process default when one was set
+/// (capped at [`MAX_THREADS`]), otherwise `available_parallelism` capped
+/// at 16 so tests stay polite. Inside a pool worker this is the worker's
+/// nested budget (1 when the pool above used every requested thread),
+/// preventing oversubscription.
+pub fn default_threads() -> usize {
+    if let Some(b) = WORKER_BUDGET.with(|c| c.get()) {
+        return b.max(1);
+    }
+    match DEFAULT_THREADS.load(Ordering::Relaxed) {
+        0 => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(16),
+        t => t.min(MAX_THREADS),
+    }
 }
 
 /// Parallel indexed map: computes `f(i)` for `i in 0..n`, preserving order.
 ///
 /// Falls back to a sequential loop when `n` is small or one thread is
-/// requested — the closure must be `Sync` (called from many threads) and the
-/// result `Send`.
+/// requested (or allowed by the enclosing worker's budget) — the closure
+/// must be `Sync` (called from many threads) and the result `Send`. Each
+/// spawned worker carries a nested budget of its share of the requested
+/// threads, so fan-out levels compose to at most the requested total.
 pub fn par_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let threads = if in_pool_worker() { 1 } else { threads.max(1).min(n.max(1)) };
-    if threads == 1 || n <= 1 {
+    let requested = effective_threads(threads);
+    let fanout = requested.min(n.max(1));
+    if fanout == 1 || n <= 1 {
         return (0..n).map(f).collect();
     }
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let chunk = n.div_ceil(threads);
+    let chunk = n.div_ceil(fanout);
+    let workers = n.div_ceil(chunk);
+    // Divide the requested threads over the workers, handing the
+    // remainder to the first workers so none of the budget is stranded
+    // (e.g. 8 threads over 3 workers -> budgets 3, 3, 2).
+    let (base_budget, extra) = (requested / workers, requested % workers);
     std::thread::scope(|scope| {
         for (t, slot_chunk) in out.chunks_mut(chunk).enumerate() {
             let f = &f;
+            let budget = (base_budget + usize::from(t < extra)).max(1);
             scope.spawn(move || {
-                mark_pool_worker();
+                set_worker_budget(budget);
                 let base = t * chunk;
                 for (k, slot) in slot_chunk.iter_mut().enumerate() {
                     *slot = Some(f(base + k));
@@ -85,21 +187,25 @@ where
     F: Fn(usize, &mut [T]) + Sync,
 {
     assert!(chunk > 0, "chunk size must be positive");
-    let threads = if in_pool_worker() { 1 } else { threads.max(1) };
+    let requested = effective_threads(threads);
     let nchunks = data.len().div_ceil(chunk);
-    if threads == 1 || nchunks <= 1 {
+    if requested == 1 || nchunks <= 1 {
         for (i, c) in data.chunks_mut(chunk).enumerate() {
             f(i, c);
         }
         return;
     }
-    let workers = threads.min(nchunks);
+    let workers = requested.min(nchunks);
     let per_worker = nchunks.div_ceil(workers);
+    let spawned = nchunks.div_ceil(per_worker);
+    // Remainder threads go to the first workers (see par_map).
+    let (base_budget, extra) = (requested / spawned, requested % spawned);
     std::thread::scope(|scope| {
         for (w, group) in data.chunks_mut(chunk * per_worker).enumerate() {
             let f = &f;
+            let budget = (base_budget + usize::from(w < extra)).max(1);
             scope.spawn(move || {
-                mark_pool_worker();
+                set_worker_budget(budget);
                 for (k, c) in group.chunks_mut(chunk).enumerate() {
                     f(w * per_worker + k, c);
                 }
@@ -151,6 +257,49 @@ mod tests {
                 assert_eq!(x, pos / 10, "threads={threads} pos={pos}");
             }
         }
+    }
+
+    #[test]
+    fn leftover_threads_flow_down_to_workers() {
+        // 2 workers on an 8-thread request: each inherits a 4-thread
+        // nested budget; with as many workers as threads the budget is 1;
+        // a remainder goes to the first workers so no thread is stranded.
+        assert_eq!(par_map(2, 8, |_| default_threads()), vec![4, 4]);
+        assert_eq!(par_map(8, 8, |_| default_threads()), vec![1; 8]);
+        assert_eq!(par_map(3, 8, |_| default_threads()), vec![3, 3, 2]);
+        // A budget-1 worker runs nested fan-out serially, still marked.
+        let nested = par_map(4, 4, |_| par_map(3, 16, |_| in_pool_worker()));
+        assert!(nested.iter().flatten().all(|&w| w));
+        // mark_pool_worker (the service pool) keeps the serial semantics.
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                mark_pool_worker();
+                assert!(in_pool_worker());
+                assert_eq!(default_threads(), 1);
+                assert_eq!(par_map(4, 8, |i| i), vec![0, 1, 2, 3]);
+            });
+        });
+    }
+
+    #[test]
+    fn default_threads_honors_process_override() {
+        // Other tests in this process read default_threads() concurrently,
+        // but every consumer is bit-identical across thread counts, so a
+        // transiently overridden default only changes their scheduling.
+        // Pinning to the current raw value restores it on every exit path
+        // (including assert panics).
+        let _guard =
+            TEST_DEFAULT_THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        with_default_threads(raw_default_threads(), || {
+            set_default_threads(3);
+            assert_eq!(default_threads(), 3);
+            // Absurd requests degrade to the spawn ceiling instead of
+            // attempting thousands of scoped OS threads.
+            set_default_threads(100_000);
+            assert_eq!(default_threads(), MAX_THREADS);
+            set_default_threads(0);
+            assert!(default_threads() >= 1);
+        });
     }
 
     #[test]

@@ -31,13 +31,20 @@ pub fn std_err(xs: &[f64]) -> f64 {
     std_dev(xs) / (xs.len() as f64).sqrt()
 }
 
-/// Median (copies + sorts).
+/// Median (copies + sorts). A NaN anywhere in the input propagates to a
+/// NaN median — like [`mean`] — rather than panicking in the sort
+/// comparator (the old `partial_cmp().unwrap()`) or silently skewing the
+/// order statistics (a NaN sorted to one end shifts which element the
+/// middle index selects).
 pub fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
+    if xs.iter().any(|x| x.is_nan()) {
+        return f64::NAN;
+    }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]
@@ -46,14 +53,17 @@ pub fn median(xs: &[f64]) -> f64 {
     }
 }
 
-/// Mean squared error between predictions and targets.
+/// Mean squared error between predictions and targets (allocation-free).
 pub fn mse(pred: &[f64], truth: &[f64]) -> f64 {
     assert_eq!(pred.len(), truth.len());
-    mean(&pred
-        .iter()
-        .zip(truth)
-        .map(|(p, t)| (p - t) * (p - t))
-        .collect::<Vec<_>>())
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let mut s = 0.0;
+    for (p, t) in pred.iter().zip(truth) {
+        s += (p - t) * (p - t);
+    }
+    s / pred.len() as f64
 }
 
 /// Root mean squared error.
@@ -130,6 +140,38 @@ mod tests {
     fn median_even_odd() {
         assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
         assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    /// Bugfix regression: NaN input used to panic inside the sort
+    /// comparator (`partial_cmp().unwrap()`); it now propagates — a NaN
+    /// median is detectable, a panic (or a silently shifted middle
+    /// element) is not. Signs pinned via copysign since `f64::NAN`'s sign
+    /// bit is unspecified.
+    #[test]
+    fn median_propagates_nan_input() {
+        let pnan = f64::NAN.copysign(1.0);
+        let nnan = f64::NAN.copysign(-1.0);
+        assert!(median(&[3.0, pnan, 1.0]).is_nan());
+        assert!(median(&[1.0, 2.0, 5.0, pnan, 3.0]).is_nan());
+        assert!(median(&[nnan, 0.5, 2.0]).is_nan());
+        assert!(median(&[f64::NAN]).is_nan());
+        assert!(median(&[pnan, nnan]).is_nan());
+    }
+
+    /// The other NaN-adjacent helpers propagate rather than panic.
+    #[test]
+    fn stats_helpers_propagate_nan() {
+        assert!(mean(&[1.0, f64::NAN]).is_nan());
+        assert!(mse(&[f64::NAN, 1.0], &[0.0, 1.0]).is_nan());
+        assert!(std_err(&[1.0, f64::NAN, 2.0]).is_nan());
+        assert!(smae(&[f64::NAN, 1.0], &[0.0, 1.0]).is_nan());
+    }
+
+    #[test]
+    fn mse_empty_is_zero() {
+        assert_eq!(mse(&[], &[]), 0.0);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(median(&[]), 0.0);
     }
 
     #[test]

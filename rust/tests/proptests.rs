@@ -572,6 +572,335 @@ fn prop_cg_block_matches_scalar_cg() {
     assert_cg_block_matches("laplace_b", &lb, &b, None);
 }
 
+/// Thread-invariance contract: the RHS-group fan-out must be invisible in
+/// the results — solutions, per-column statistics, and block-amortized
+/// accounting bit-identical across `threads ∈ {1, 2, 8}`, cold and warm,
+/// preconditioned and not.
+fn assert_block_solve_thread_invariant(
+    name: &str,
+    op: &dyn LinOp,
+    pc: Option<&dyn gpsld::solvers::Preconditioner>,
+    b: &Mat,
+    x0: Option<&Mat>,
+) {
+    use gpsld::solvers::{pcg_block, CgOptions};
+    for bs in [1usize, 2, 3] {
+        let base = CgOptions {
+            tol: 1e-10,
+            max_iters: 300,
+            block_size: bs,
+            threads: 1,
+            ..Default::default()
+        };
+        let (x1, i1) = pcg_block(op, b, x0, pc, &base);
+        for threads in [2usize, 8] {
+            let opts = CgOptions { threads, ..base };
+            let (xt, it) = pcg_block(op, b, x0, pc, &opts);
+            for (a, c) in x1.data.iter().zip(&xt.data) {
+                assert_eq!(
+                    a.to_bits(),
+                    c.to_bits(),
+                    "{name} warm={} pc={} bs={bs} threads={threads}: {a} vs {c}",
+                    x0.is_some(),
+                    pc.is_some()
+                );
+            }
+            assert_eq!(i1.mvms, it.mvms, "{name} bs={bs} threads={threads} mvms");
+            assert_eq!(
+                i1.block_applies, it.block_applies,
+                "{name} bs={bs} threads={threads} applies"
+            );
+            for (j, (a, c)) in i1.cols.iter().zip(&it.cols).enumerate() {
+                assert_eq!(a.iters, c.iters, "{name} bs={bs} threads={threads} col {j}");
+                assert_eq!(a.converged, c.converged, "{name} col {j}");
+                assert_eq!(a.mvms, c.mvms, "{name} col {j}");
+                assert_eq!(a.residual.to_bits(), c.residual.to_bits(), "{name} col {j}");
+            }
+        }
+    }
+}
+
+/// Property (thread invariance, solver level): `cg_block` / `pcg_block`
+/// results are bit-identical across `threads ∈ {1, 2, 8}` for every
+/// operator type, cold and warm, preconditioned (where the operator
+/// exposes a diagonal) and not.
+#[test]
+fn prop_block_solves_thread_invariant() {
+    use gpsld::solvers::{build_preconditioner, PrecondOptions, Preconditioner};
+    let mut rng = Rng::new(1500);
+    let n = 24;
+    let k = 7;
+    let pts1: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform_in(0.0, 2.0)]).collect();
+    let b = Mat::from_fn(n, k, |_, _| rng.gaussian());
+    let x0 = Mat::from_fn(n, k, |_, _| 0.3 * rng.gaussian());
+
+    // Dense kernel — cold, warm, and preconditioned.
+    let dense = DenseKernelOp::new(
+        pts1.clone(),
+        Box::new(IsoKernel::new(Shape::Matern32, 1, 0.4, 1.1)),
+        0.2,
+    );
+    assert_block_solve_thread_invariant("dense_kernel", &dense, None, &b, None);
+    assert_block_solve_thread_invariant("dense_kernel_warm", &dense, None, &b, Some(&x0));
+    let pc = build_preconditioner(&dense, PrecondOptions::rank(8)).unwrap();
+    let pcd = Some(&pc as &dyn Preconditioner);
+    assert_block_solve_thread_invariant("dense_kernel_pcg", &dense, pcd, &b, None);
+    assert_block_solve_thread_invariant("dense_kernel_pcg_warm", &dense, pcd, &b, Some(&x0));
+
+    // Plain dense SPD matrix.
+    let mut a = Mat::from_fn(n, n, |_, _| rng.gaussian());
+    a.symmetrize();
+    a.add_diag(n as f64);
+    let dmat = DenseMatOp::new(a);
+    assert_block_solve_thread_invariant("dense_mat", &dmat, None, &b, None);
+
+    // Shifted symmetric Toeplitz.
+    let col: Vec<f64> =
+        (0..n).map(|j| (1.5 + rng.uniform()) * (-0.1 * j as f64).exp()).collect();
+    let top = ToeplitzOp::new(col);
+    let shifted = gpsld::operators::ShiftedOp { inner: &top, shift: 1.0 };
+    assert_block_solve_thread_invariant("toeplitz_shifted", &shifted, None, &b, None);
+
+    // Kronecker (dense x toeplitz x dense), n = 2*4*3 = 24.
+    let mut ka = Mat::from_fn(2, 2, |_, _| rng.gaussian());
+    ka.symmetrize();
+    ka.add_diag(2.0);
+    let mut kc = Mat::from_fn(3, 3, |_, _| rng.gaussian());
+    kc.symmetrize();
+    kc.add_diag(3.0);
+    let kron = KronOp::new(
+        vec![
+            KronFactor::Dense(ka),
+            KronFactor::Toeplitz(ToeplitzOp::new(vec![2.0, 0.8, 0.1, 0.02])),
+            KronFactor::Dense(kc),
+        ],
+        1.3,
+    );
+    assert_block_solve_thread_invariant("kron", &kron, None, &b, None);
+
+    // SKI (both diagonal-correction modes), preconditioned too.
+    for diag_corr in [false, true] {
+        let grid = Grid::new(vec![GridDim { lo: -0.1, hi: 2.1, m: 16 }]);
+        let ski = SkiOp::new(
+            &pts1,
+            grid,
+            SeparableKernel::iso(Shape::Rbf, 1, 0.3, 1.0),
+            0.2,
+            InterpOrder::Cubic,
+            diag_corr,
+        );
+        let name = if diag_corr { "ski_diag" } else { "ski" };
+        assert_block_solve_thread_invariant(name, &ski, None, &b, None);
+        let pc = build_preconditioner(&ski, PrecondOptions::rank(6)).unwrap();
+        assert_block_solve_thread_invariant(
+            name,
+            &ski,
+            Some(&pc as &dyn Preconditioner),
+            &b,
+            Some(&x0),
+        );
+    }
+
+    // Grid Kron kernel (W = I), n = 6*4 = 24.
+    let grid2 = Grid::new(vec![
+        GridDim { lo: 0.0, hi: 1.0, m: 6 },
+        GridDim { lo: 0.0, hi: 1.0, m: 4 },
+    ]);
+    let kk = KronKernelOp::new(grid2, SeparableKernel::iso(Shape::Matern52, 2, 0.5, 0.9), 0.15);
+    assert_block_solve_thread_invariant("kron_kernel", &kk, None, &b, None);
+
+    // FITC and SoR.
+    for fitc in [false, true] {
+        let ind: Vec<Vec<f64>> = (0..6).map(|i| vec![2.0 * i as f64 / 5.0]).collect();
+        let op = FitcOp::new(
+            pts1.clone(),
+            ind,
+            Box::new(IsoKernel::new(Shape::Rbf, 1, 0.5, 1.0)),
+            0.3,
+            fitc,
+        )
+        .unwrap();
+        let name = if fitc { "fitc" } else { "sor" };
+        assert_block_solve_thread_invariant(name, &op, None, &b, None);
+    }
+
+    // Additive sum of two dense kernels.
+    let pts2: Vec<Vec<f64>> =
+        (0..n).map(|_| vec![rng.uniform(), rng.uniform()]).collect();
+    let p1 = DenseKernelOp::new(
+        pts2.clone(),
+        Box::new(IsoKernel::new(Shape::Rbf, 2, 0.5, 1.0)),
+        1.0,
+    );
+    let p2 = DenseKernelOp::new(
+        pts2.clone(),
+        Box::new(IsoKernel::new(Shape::Matern12, 2, 0.8, 0.6)),
+        1.0,
+    );
+    let sum = SumKernelOp::new(vec![Box::new(p1), Box::new(p2)], 0.4);
+    assert_block_solve_thread_invariant("sum", &sum, None, &b, None);
+
+    // Laplace B wrapper (the Newton inner-solve operator).
+    let w: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+    let lb = gpsld::operators::LaplaceBOp::new(&dense, &w);
+    assert_block_solve_thread_invariant("laplace_b", &lb, None, &b, None);
+}
+
+/// Property (thread invariance, operator level, ABOVE the internal
+/// threading gates): the small-n solver/estimator invariance tests never
+/// reach the operators' own parallel paths (dense engages at
+/// `n·n·b >= 4e6`, Toeplitz at `fft_work·b >= 250e3`), so this case
+/// drives `apply_mat` past both thresholds and pins the blocked result
+/// bit-identical across process-default thread counts — the composition
+/// the worker thread-budget guard newly enables (operator threads running
+/// under group workers) must never change per-element accumulation.
+/// (Integration tests run in their own process, so pinning the process
+/// default here cannot race the lib tests' default-mutating cases.)
+#[test]
+fn prop_operator_internal_threading_bit_invariant() {
+    use gpsld::util::parallel::with_default_threads;
+    let mut rng = Rng::new(1700);
+
+    // Dense kernel above the 4M-entry gate: n² · b = 1024² · 4 ≈ 4.2M.
+    let n = 1024;
+    let pts: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.gaussian()]).collect();
+    let dense = DenseKernelOp::new(
+        pts,
+        Box::new(IsoKernel::new(Shape::Rbf, 1, 0.5, 1.0)),
+        0.3,
+    );
+    let x = Mat::from_fn(n, 4, |_, _| rng.gaussian());
+    let y1 = with_default_threads(1, || dense.apply_mat(&x));
+    let y8 = with_default_threads(8, || dense.apply_mat(&x));
+    for (a, c) in y1.data.iter().zip(&y8.data) {
+        assert_eq!(a.to_bits(), c.to_bits(), "dense threaded apply_mat drifted");
+    }
+    // And the threaded block path still matches the single-vector path
+    // column-for-column, bitwise (the PR 1 column-independence contract).
+    for j in 0..4 {
+        let col = dense.apply_vec(&x.col(j));
+        for i in 0..n {
+            assert_eq!(y8[(i, j)].to_bits(), col[i].to_bits(), "dense col {j}");
+        }
+    }
+
+    // Toeplitz above the FFT-work gate: len·log2(len)·b ≈ 4096·12·8 ≈ 393k.
+    let tcol: Vec<f64> = (0..2048).map(|k| (-0.001 * k as f64).exp()).collect();
+    let top = ToeplitzOp::new(tcol);
+    let xt = Mat::from_fn(2048, 8, |_, _| rng.gaussian());
+    let t1 = with_default_threads(1, || top.apply_mat(&xt));
+    let t8 = with_default_threads(8, || top.apply_mat(&xt));
+    for (a, c) in t1.data.iter().zip(&t8.data) {
+        assert_eq!(a.to_bits(), c.to_bits(), "toeplitz threaded apply_mat drifted");
+    }
+}
+
+/// Property (thread invariance, estimator level): SLQ and Chebyshev
+/// estimates — values, std errors, gradients, per-probe vectors, and MVM
+/// accounting — are bit-identical across `threads ∈ {1, 2, 8}`, plain and
+/// preconditioned, on dense and structured operators.
+#[test]
+fn prop_estimators_thread_invariant() {
+    use gpsld::estimators::chebyshev::{chebyshev_logdet, ChebOptions};
+    use gpsld::estimators::slq::{slq_logdet, slq_logdet_pc, SlqOptions};
+    use gpsld::solvers::{build_preconditioner, PrecondOptions, Preconditioner};
+    let mut rng = Rng::new(1600);
+    let n = 60;
+    let pts: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform_in(0.0, 3.0)]).collect();
+    let grid = Grid::covering(&pts, &[32], 0.1);
+    let ski = SkiOp::new(
+        &pts,
+        grid,
+        SeparableKernel::iso(Shape::Rbf, 1, 0.3, 1.0),
+        0.2,
+        InterpOrder::Cubic,
+        false,
+    );
+    let dense = DenseKernelOp::new(
+        pts.clone(),
+        Box::new(IsoKernel::new(Shape::Rbf, 1, 0.3, 1.0)),
+        0.2,
+    );
+    for (name, op) in [("dense", &dense as &dyn KernelOp), ("ski", &ski)] {
+        // Small block size so 8 probes span several blocks to fan out.
+        let s1 = slq_logdet(
+            op,
+            &SlqOptions { steps: 15, probes: 8, seed: 5, block_size: 2, threads: 1, ..Default::default() },
+        )
+        .unwrap();
+        let c1 = chebyshev_logdet(
+            op,
+            &ChebOptions {
+                degree: 25,
+                probes: 8,
+                seed: 5,
+                lambda_bounds: Some((0.02, 40.0)),
+                block_size: 2,
+                threads: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for threads in [2usize, 8] {
+            let st = slq_logdet(
+                op,
+                &SlqOptions { steps: 15, probes: 8, seed: 5, block_size: 2, threads, ..Default::default() },
+            )
+            .unwrap();
+            assert_eq!(s1.value.to_bits(), st.value.to_bits(), "{name} slq t={threads}");
+            assert_eq!(s1.std_err.to_bits(), st.std_err.to_bits(), "{name} slq se");
+            assert_eq!(s1.mvms, st.mvms, "{name} slq mvms");
+            assert_eq!(s1.block_applies, st.block_applies, "{name} slq applies");
+            for (a, c) in s1.grad.iter().zip(&st.grad) {
+                assert_eq!(a.to_bits(), c.to_bits(), "{name} slq grad t={threads}");
+            }
+            for (a, c) in s1.per_probe.iter().zip(&st.per_probe) {
+                assert_eq!(a.to_bits(), c.to_bits(), "{name} slq per-probe t={threads}");
+            }
+            let ct = chebyshev_logdet(
+                op,
+                &ChebOptions {
+                    degree: 25,
+                    probes: 8,
+                    seed: 5,
+                    lambda_bounds: Some((0.02, 40.0)),
+                    block_size: 2,
+                    threads,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            assert_eq!(c1.value.to_bits(), ct.value.to_bits(), "{name} cheb t={threads}");
+            assert_eq!(c1.std_err.to_bits(), ct.std_err.to_bits(), "{name} cheb se");
+            assert_eq!(c1.mvms, ct.mvms, "{name} cheb mvms");
+            for (a, c) in c1.grad.iter().zip(&ct.grad) {
+                assert_eq!(a.to_bits(), c.to_bits(), "{name} cheb grad t={threads}");
+            }
+        }
+    }
+    // Preconditioned SLQ is thread-invariant too.
+    let pc = build_preconditioner(&dense, PrecondOptions::rank(8)).unwrap();
+    let pcd = Some(&pc as &dyn Preconditioner);
+    let p1 = slq_logdet_pc(
+        &dense,
+        pcd,
+        &SlqOptions { steps: 15, probes: 8, seed: 9, block_size: 2, threads: 1, ..Default::default() },
+    )
+    .unwrap();
+    for threads in [2usize, 8] {
+        let pt = slq_logdet_pc(
+            &dense,
+            pcd,
+            &SlqOptions { steps: 15, probes: 8, seed: 9, block_size: 2, threads, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(p1.value.to_bits(), pt.value.to_bits(), "pc slq t={threads}");
+        for (a, c) in p1.grad.iter().zip(&pt.grad) {
+            assert_eq!(a.to_bits(), c.to_bits(), "pc slq grad t={threads}");
+        }
+    }
+}
+
 /// Property (true-residual convergence): whenever CG reports `converged`,
 /// the *recomputed* true residual honors the tolerance — the recurrence
 /// residual alone is not trusted.

@@ -4,14 +4,18 @@
 Usage: bench_compare.py PREV.json CURRENT.json [--threshold 0.20]
 
 Rows are JSON objects; the identity of a row is every non-metric field
-(op, n, b, rhs, block, sigma, rank, ...), and the compared metrics are the
-timing fields (ns_per_apply / ns_per_solve_col — lower is better) plus the
-work counters (mvms / block_applies / cg_iters / lanczos_steps — lower is
-better, and far less noisy than wall time). A current row whose metric
-exceeds the previous run's by more than the threshold fraction is a
-regression; the script prints every regression and exits 2 so CI and
-scripts/bench_smoke.sh stop on it. Rows present in only one run are
-reported but not fatal (sweeps grow over time).
+(op, n, b, rhs, block, threads, sigma, rank, ...), and the compared
+metrics are the timing fields (ns_per_apply / ns_per_solve_col — lower is
+better) plus the work counters (mvms / block_applies / cg_iters /
+lanczos_steps — lower is better, and far less noisy than wall time). In
+particular `threads` is an identity field, NOT a metric: the single- and
+multi-thread rows of the 1-vs-N sweep are gated separately, so a
+multi-thread speedup can never mask (or be mistaken for) a single-thread
+regression. A current row whose metric exceeds the previous run's by more
+than the threshold fraction is a regression; the script prints every
+regression and exits 2 so CI and scripts/bench_smoke.sh stop on it. Rows
+present in only one run are reported but not fatal (sweeps grow over
+time).
 """
 
 import json
@@ -25,6 +29,8 @@ COUNTER_METRICS = ("mvms", "block_applies", "cg_iters", "lanczos_steps")
 # count the breakage as an improvement).
 HIGHER_BETTER = ("converged",)
 # Fields that are measurements rather than identity, but not compared.
+# Everything else — including `threads` — is identity: a (op, n, block,
+# threads=1) row only ever compares against its threads=1 baseline.
 NON_IDENTITY = set(TIMING_METRICS) | set(COUNTER_METRICS) | set(HIGHER_BETTER) | {"gbps"}
 
 
@@ -56,12 +62,14 @@ def main(argv):
     i = 0
     while i < len(argv):
         a = argv[i]
-        if a.startswith("--threshold"):
+        if a == "--threshold" or a.startswith("--threshold="):
             if "=" in a:
                 threshold = float(a.split("=", 1)[1])
-            else:
+            elif i + 1 < len(argv):
                 threshold = float(argv[i + 1])
                 i += 1
+            else:
+                sys.exit(f"bench_compare: --threshold needs a value\n{__doc__}")
         elif a.startswith("--"):
             sys.exit(f"bench_compare: unknown flag {a}\n{__doc__}")
         else:
@@ -73,11 +81,13 @@ def main(argv):
 
     regressions = []
     improvements = 0
+    matched = 0
     for key, crow in cur.items():
         prow = prev.get(key)
         if prow is None:
             print(f"bench_compare: new row (no baseline): {fmt_key(key)}")
             continue
+        matched += 1
         for metric in TIMING_METRICS + COUNTER_METRICS:
             if metric not in crow or metric not in prow:
                 continue
@@ -110,6 +120,24 @@ def main(argv):
     for key in prev:
         if key not in cur:
             print(f"bench_compare: row disappeared from current run: {fmt_key(key)}")
+
+    if prev and matched == 0:
+        # A schema change (new identity field) makes every row "new" — and
+        # a broken bench can emit zero rows — and either would otherwise
+        # pass vacuously, letting bench_smoke.sh rotate the old baseline
+        # away on a trivially-green run. Make the operator acknowledge the
+        # re-baseline explicitly, and only for the affected file stems so
+        # the unchanged files stay gated.
+        stem = args[1].rsplit("/", 1)[-1].split(".", 1)[0]
+        print(
+            f"bench_compare: NO rows of {args[1]} match any baseline row in "
+            f"{args[0]} — the row identity schema changed (or the bench "
+            "emitted nothing); nothing was gated. Re-baseline deliberately "
+            f'with BENCH_SKIP_COMPARE="{stem}" (space-separate several '
+            "stems; plain BENCH_SKIP_COMPARE=1 skips EVERY file).",
+            file=sys.stderr,
+        )
+        sys.exit(2)
 
     if regressions:
         print(

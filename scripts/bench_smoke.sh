@@ -1,17 +1,26 @@
 #!/usr/bin/env bash
 # Perf smoke: run the blocked-MVM sweep (dense / Toeplitz / SKI at
 # n in {1k, 4k}, b in {1, 8, 32}), the block-CG solve sweep (same
-# operator structures, 8 RHS, block in {1, 8}), and the pivoted-Cholesky
-# preconditioning sweep (rank x sigma on an ill-conditioned dense RBF),
-# emitting BENCH_mvm.json, BENCH_cg.json, and BENCH_precond.json at the
-# repo root so successive PRs have a throughput trajectory — MVMs, solves,
-# and preconditioned iteration counts — to compare against.
+# operator structures, 8 RHS, block in {1, 8}, RHS-group threads in
+# {1, 4} — the 1-vs-N thread sweep; multi-thread rows should sit strictly
+# below their single-thread twins on the multi-group configurations), and
+# the pivoted-Cholesky preconditioning sweep (rank x sigma x threads on an
+# ill-conditioned dense RBF), emitting BENCH_mvm.json, BENCH_cg.json, and
+# BENCH_precond.json at the repo root so successive PRs have a throughput
+# trajectory — MVMs, solves, thread scaling, and preconditioned iteration
+# counts — to compare against.
 #
 # When a previous BENCH_*.json exists it is rotated to BENCH_*.prev.json
 # and diffed against the fresh run with scripts/bench_compare.py, which
 # fails loudly (exit 2) on >20% regressions in timing or iteration/MVM
-# counts. Set BENCH_SKIP_COMPARE=1 to suppress the gate (e.g. when moving
-# between machines, where wall-clock baselines are meaningless).
+# counts — or when ZERO rows match the baseline (a row-identity schema
+# change, e.g. this PR adding the threads/block columns, must be
+# re-baselined deliberately, not rotated in on a vacuously green run).
+# Set BENCH_SKIP_COMPARE=1 to suppress the gate for ALL files (e.g. when
+# moving between machines, where wall-clock baselines are meaningless), or
+# to a space-separated list of file stems (BENCH_SKIP_COMPARE="BENCH_cg
+# BENCH_precond") to re-baseline only the files whose schema changed while
+# the others stay gated.
 #
 # Usage: scripts/bench_smoke.sh [mvm_output.json] [cg_output.json] [precond_output.json]
 set -euo pipefail
@@ -36,18 +45,36 @@ cat "$out_cg.new"
 echo "BENCH_precond rows:"
 cat "$out_precond.new"
 
-if [[ "${BENCH_SKIP_COMPARE:-0}" != "1" ]]; then
-    fail=0
-    for out in "$out_mvm" "$out_cg" "$out_precond"; do
-        if [[ -f "$out" ]]; then
-            python3 "$repo_root/scripts/bench_compare.py" "$out" "$out.new" || fail=1
-        fi
-    done
-    if [[ "$fail" != "0" ]]; then
-        echo "bench_smoke: regression gate failed; baselines kept," \
-             "fresh run left in BENCH_*.json.new for inspection" >&2
-        exit 2
+# True when the gate is suppressed for this output file: "1" skips all,
+# otherwise BENCH_SKIP_COMPARE is a list of file stems to skip.
+skip_compare() {
+    local name
+    name="$(basename "$1")"
+    case "${BENCH_SKIP_COMPARE:-0}" in
+        1) return 0 ;;
+        0 | "") return 1 ;;
+        *)
+            local stem
+            for stem in $BENCH_SKIP_COMPARE; do
+                if [[ "$name" == "$stem"* ]]; then
+                    return 0
+                fi
+            done
+            return 1
+            ;;
+    esac
+}
+
+fail=0
+for out in "$out_mvm" "$out_cg" "$out_precond"; do
+    if [[ -f "$out" ]] && ! skip_compare "$out"; then
+        python3 "$repo_root/scripts/bench_compare.py" "$out" "$out.new" || fail=1
     fi
+done
+if [[ "$fail" != "0" ]]; then
+    echo "bench_smoke: regression gate failed; baselines kept," \
+         "fresh run left in BENCH_*.json.new for inspection" >&2
+    exit 2
 fi
 
 for out in "$out_mvm" "$out_cg" "$out_precond"; do
