@@ -12,20 +12,25 @@
 //! ```
 //!
 //! runs the dense/Toeplitz/SKI block sweep at n in {1k, 4k}, b in
-//! {1, 8, 32} and writes one JSON row per case:
-//! `{op, n, b, ns_per_apply, gbps}` where `ns_per_apply` is ns per
-//! probe-column and `gbps` is *modeled* memory traffic (documented per
-//! operator below) — a trajectory metric, not a hardware counter.
+//! {1, 8, 32}, once per precision mode, and writes one JSON row per case:
+//! `{op, n, b, precision, ns_per_apply, gbps}` where `precision` is the
+//! MVM mode (`"f64"` baseline / `"f32f64"` mixed — f32 storage panels,
+//! f64 accumulation), `ns_per_apply` is ns per probe-column and `gbps` is
+//! *modeled* memory traffic (documented per operator below) — a
+//! trajectory metric, not a hardware counter.
 //!
 //! `--json-cg` additionally runs the block-CG solve sweep and writes
-//! `{op, n, rhs, block, threads, ns_per_solve_col, mvms, block_applies,
-//! converged}` per case: `ns_per_solve_col` is wall time per
-//! right-hand-side column, `threads` is the RHS-group worker count (a
+//! `{op, n, rhs, block, threads, precision, ns_per_solve_col, mvms,
+//! block_applies, converged}` per case: `ns_per_solve_col` is wall time
+//! per right-hand-side column, `threads` is the RHS-group worker count (a
 //! 1-vs-N sweep; solver results are bit-identical across thread counts,
 //! so `mvms` / `block_applies` / `converged` only depend on the other
-//! fields), `mvms` / `block_applies` mirror `BlockCgInfo` (block-amortized
-//! applies are the hardware-executed count and must be <= per-column
-//! MVMs), and `converged` counts columns that hit the tolerance.
+//! fields), `precision` selects the inner-iteration MVM mode (`f32f64`
+//! solves still confirm convergence against the f64 true residual, so
+//! `converged` means the same thing in both modes), `mvms` /
+//! `block_applies` mirror `BlockCgInfo` (block-amortized applies are the
+//! hardware-executed count and must be <= per-column MVMs), and
+//! `converged` counts columns that hit the tolerance.
 //!
 //! `--json-precond` runs the pivoted-Cholesky preconditioning sweep
 //! (rank × σ × (block, threads) on an ill-conditioned dense RBF kernel)
@@ -57,6 +62,10 @@ struct SweepRow {
     op: &'static str,
     n: usize,
     b: usize,
+    /// MVM precision mode for this row (`"f64"` / `"f32f64"`) — an
+    /// identity field in `bench_compare.py`, so the mixed rows are gated
+    /// against their own history, never against the f64 baseline.
+    precision: &'static str,
     ns_per_apply: f64,
     gbps: f64,
 }
@@ -88,14 +97,22 @@ fn log2_usize(x: usize) -> usize {
     (usize::BITS - x.leading_zeros()) as usize - 1
 }
 
-/// Dense/Toeplitz/SKI block sweep at the given sizes. Modeled bytes per
-/// block apply:
-/// * dense: one pass over K plus the block in/out — `8 (n² + 2 n b)`;
+/// Dense/Toeplitz/SKI block sweep at the given sizes, once per precision
+/// mode (the `f32f64` rows time [`LinOp::apply_mat_prec`], f32-panel
+/// caches warmed by the untimed warmup apply). Modeled bytes per block
+/// apply — the mixed rows model the f32 storage panels where a path
+/// actually has one:
+/// * dense: one pass over K plus the block in/out — `8 n² + 16 n b`
+///   (f64) / `4 n² + 16 n b` (mixed: K panel is f32, block stays f64);
 /// * toeplitz: per column, 2 FFTs of length L touching `16 L` bytes per
-///   stage plus one spectrum read — `16 b L (2 log2 L + 1)`;
-/// * ski: two CSR sweeps (16 bytes/nnz) plus the grid-factor circulant —
-///   `b (32 nnz + 16 L (2 log2 L + 1))`.
+///   stage plus one spectrum read — `16 b L (2 log2 L + 1)` in *both*
+///   modes (mixed only stages in/out; the transform stays f64);
+/// * ski: two CSR sweeps plus the grid-factor circulant —
+///   `b (32 nnz + 16 L (2 log2 L + 1))` (f64) / `b (16 nnz + ...)`
+///   (mixed: f32 values + u32 indices halve the sweep).
 fn block_sweep(ns: &[usize], bs: &[usize]) -> Vec<SweepRow> {
+    use gpsld::util::precision::Precision;
+    const PRECISIONS: [Precision; 2] = [Precision::F64, Precision::F32F64];
     let mut rows = Vec::new();
     let mut rng = Rng::new(7);
     for &n in ns {
@@ -109,15 +126,22 @@ fn block_sweep(ns: &[usize], bs: &[usize]) -> Vec<SweepRow> {
         );
         for &b in bs {
             let x = Mat::from_fn(n, b, |_, _| rng.gaussian());
-            let secs = time_block(|| dense.apply_mat(&x).data[0]);
-            let bytes = 8.0 * (n as f64 * n as f64 + 2.0 * (n * b) as f64);
-            rows.push(SweepRow {
-                op: "dense",
-                n,
-                b,
-                ns_per_apply: secs * 1e9 / b as f64,
-                gbps: bytes / secs / 1e9,
-            });
+            for prec in PRECISIONS {
+                let secs = time_block(|| dense.apply_mat_prec(&x, prec).data[0]);
+                let kbytes = match prec {
+                    Precision::F64 => 8.0,
+                    Precision::F32F64 => 4.0,
+                };
+                let bytes = kbytes * (n as f64 * n as f64) + 16.0 * (n * b) as f64;
+                rows.push(SweepRow {
+                    op: "dense",
+                    n,
+                    b,
+                    precision: prec.name(),
+                    ns_per_apply: secs * 1e9 / b as f64,
+                    gbps: bytes / secs / 1e9,
+                });
+            }
         }
 
         // Symmetric Toeplitz operator of the same order.
@@ -126,16 +150,19 @@ fn block_sweep(ns: &[usize], bs: &[usize]) -> Vec<SweepRow> {
         let fft_len = (2 * n).next_power_of_two();
         for &b in bs {
             let x = Mat::from_fn(n, b, |_, _| rng.gaussian());
-            let secs = time_block(|| top.apply_mat(&x).data[0]);
-            let bytes =
-                16.0 * (b * fft_len) as f64 * (2.0 * log2_usize(fft_len) as f64 + 1.0);
-            rows.push(SweepRow {
-                op: "toeplitz",
-                n,
-                b,
-                ns_per_apply: secs * 1e9 / b as f64,
-                gbps: bytes / secs / 1e9,
-            });
+            for prec in PRECISIONS {
+                let secs = time_block(|| top.apply_mat_prec(&x, prec).data[0]);
+                let bytes =
+                    16.0 * (b * fft_len) as f64 * (2.0 * log2_usize(fft_len) as f64 + 1.0);
+                rows.push(SweepRow {
+                    op: "toeplitz",
+                    n,
+                    b,
+                    precision: prec.name(),
+                    ns_per_apply: secs * 1e9 / b as f64,
+                    gbps: bytes / secs / 1e9,
+                });
+            }
         }
 
         // 1-D SKI with a grid of the same order as n.
@@ -153,17 +180,26 @@ fn block_sweep(ns: &[usize], bs: &[usize]) -> Vec<SweepRow> {
         let grid_fft_len = (2 * ski.m()).next_power_of_two();
         for &b in bs {
             let x = Mat::from_fn(n, b, |_, _| rng.gaussian());
-            let secs = time_block(|| ski.apply_mat(&x).data[0]);
-            let bytes = (b as f64)
-                * (32.0 * nnz as f64
-                    + 16.0 * grid_fft_len as f64 * (2.0 * log2_usize(grid_fft_len) as f64 + 1.0));
-            rows.push(SweepRow {
-                op: "ski",
-                n,
-                b,
-                ns_per_apply: secs * 1e9 / b as f64,
-                gbps: bytes / secs / 1e9,
-            });
+            for prec in PRECISIONS {
+                let secs = time_block(|| ski.apply_mat_prec(&x, prec).data[0]);
+                let csr_bytes = match prec {
+                    Precision::F64 => 32.0,
+                    Precision::F32F64 => 16.0,
+                };
+                let bytes = (b as f64)
+                    * (csr_bytes * nnz as f64
+                        + 16.0
+                            * grid_fft_len as f64
+                            * (2.0 * log2_usize(grid_fft_len) as f64 + 1.0));
+                rows.push(SweepRow {
+                    op: "ski",
+                    n,
+                    b,
+                    precision: prec.name(),
+                    ns_per_apply: secs * 1e9 / b as f64,
+                    gbps: bytes / secs / 1e9,
+                });
+            }
         }
     }
     rows
@@ -179,6 +215,10 @@ struct CgSweepRow {
     /// `bench_compare.py` — single- and multi-thread rows are gated
     /// separately).
     threads: usize,
+    /// MVM precision for the solve's inner iterations (identity field;
+    /// `"f32f64"` rows may show different `mvms` than the f64 rows because
+    /// refinement restarts cost confirmation applies).
+    precision: &'static str,
     ns_per_solve_col: f64,
     mvms: usize,
     block_applies: usize,
@@ -200,7 +240,9 @@ fn time_solve(f: impl FnMut() -> f64) -> f64 {
 /// solver's results are bit-identical either way, so only
 /// `ns_per_solve_col` moves between thread rows).
 fn cg_sweep(blocks: &[usize], threads: &[usize]) -> Vec<CgSweepRow> {
+    use gpsld::util::precision::Precision;
     const RHS: usize = 8;
+    const PRECISIONS: [Precision; 2] = [Precision::F64, Precision::F32F64];
     let mut rows = Vec::new();
     let mut rng = Rng::new(17);
     let push = |op_name: &'static str, n: usize, op: &dyn LinOp, rng: &mut Rng, rows: &mut Vec<CgSweepRow>| {
@@ -208,36 +250,44 @@ fn cg_sweep(blocks: &[usize], threads: &[usize]) -> Vec<CgSweepRow> {
         let b = Mat::from_fn(n, RHS, |_, _| rng.gaussian());
         for &blk in blocks {
             for &t in threads {
-                // Pin the process default to `t` during the measured
-                // solves so the row's `threads` means the TOTAL worker
-                // budget (operator-internal threading included) — a fair
-                // 1-vs-N comparison on any core count; results are
-                // thread-invariant regardless.
-                let opts = CgOptions { block_size: blk, threads: t, ..opts_base };
-                // Accounting numbers come from the warmup solve
-                // (deterministic, so every rep reports the same counts).
-                let mut acct = None;
-                let secs = gpsld::util::parallel::with_default_threads(t, || {
-                    time_solve(|| {
-                        let (x, info) = cg_block(op, &b, None, &opts);
-                        if acct.is_none() {
-                            acct = Some(info);
-                        }
-                        x.data[0]
-                    })
-                });
-                let info = acct.expect("time_solve runs at least once");
-                rows.push(CgSweepRow {
-                    op: op_name,
-                    n,
-                    rhs: RHS,
-                    block: blk,
-                    threads: t,
-                    ns_per_solve_col: secs * 1e9 / RHS as f64,
-                    mvms: info.mvms,
-                    block_applies: info.block_applies,
-                    converged: info.cols.iter().filter(|c| c.converged).count(),
-                });
+                for prec in PRECISIONS {
+                    // Pin the process default to `t` during the measured
+                    // solves so the row's `threads` means the TOTAL worker
+                    // budget (operator-internal threading included) — a fair
+                    // 1-vs-N comparison on any core count; results are
+                    // thread-invariant regardless.
+                    let opts = CgOptions {
+                        block_size: blk,
+                        threads: t,
+                        precision: prec,
+                        ..opts_base
+                    };
+                    // Accounting numbers come from the warmup solve
+                    // (deterministic, so every rep reports the same counts).
+                    let mut acct = None;
+                    let secs = gpsld::util::parallel::with_default_threads(t, || {
+                        time_solve(|| {
+                            let (x, info) = cg_block(op, &b, None, &opts);
+                            if acct.is_none() {
+                                acct = Some(info);
+                            }
+                            x.data[0]
+                        })
+                    });
+                    let info = acct.expect("time_solve runs at least once");
+                    rows.push(CgSweepRow {
+                        op: op_name,
+                        n,
+                        rhs: RHS,
+                        block: blk,
+                        threads: t,
+                        precision: prec.name(),
+                        ns_per_solve_col: secs * 1e9 / RHS as f64,
+                        mvms: info.mvms,
+                        block_applies: info.block_applies,
+                        converged: info.cols.iter().filter(|c| c.converged).count(),
+                    });
+                }
             }
         }
     };
@@ -318,8 +368,8 @@ fn write_cg_json(rows: &[CgSweepRow], path: &str) {
         .iter()
         .map(|r| {
             format!(
-                "{{\"op\": \"{}\", \"n\": {}, \"rhs\": {}, \"block\": {}, \"threads\": {}, \"ns_per_solve_col\": {:.1}, \"mvms\": {}, \"block_applies\": {}, \"converged\": {}}}",
-                r.op, r.n, r.rhs, r.block, r.threads, r.ns_per_solve_col, r.mvms, r.block_applies, r.converged
+                "{{\"op\": \"{}\", \"n\": {}, \"rhs\": {}, \"block\": {}, \"threads\": {}, \"precision\": \"{}\", \"ns_per_solve_col\": {:.1}, \"mvms\": {}, \"block_applies\": {}, \"converged\": {}}}",
+                r.op, r.n, r.rhs, r.block, r.threads, r.precision, r.ns_per_solve_col, r.mvms, r.block_applies, r.converged
             )
         })
         .collect();
@@ -331,8 +381,8 @@ fn write_json(rows: &[SweepRow], path: &str) {
         .iter()
         .map(|r| {
             format!(
-                "{{\"op\": \"{}\", \"n\": {}, \"b\": {}, \"ns_per_apply\": {:.1}, \"gbps\": {:.3}}}",
-                r.op, r.n, r.b, r.ns_per_apply, r.gbps
+                "{{\"op\": \"{}\", \"n\": {}, \"b\": {}, \"precision\": \"{}\", \"ns_per_apply\": {:.1}, \"gbps\": {:.3}}}",
+                r.op, r.n, r.b, r.precision, r.ns_per_apply, r.gbps
             )
         })
         .collect();
@@ -345,11 +395,14 @@ fn run_smoke(
     json_precond_path: Option<&str>,
 ) {
     let rows = block_sweep(&[1000, 4000], &[1, 8, 32]);
-    println!("{:<10} {:>6} {:>4} {:>14} {:>10}", "op", "n", "b", "ns/apply-col", "eff GB/s");
+    println!(
+        "{:<10} {:>6} {:>4} {:>8} {:>14} {:>10}",
+        "op", "n", "b", "prec", "ns/apply-col", "eff GB/s"
+    );
     for r in &rows {
         println!(
-            "{:<10} {:>6} {:>4} {:>14.1} {:>10.3}",
-            r.op, r.n, r.b, r.ns_per_apply, r.gbps
+            "{:<10} {:>6} {:>4} {:>8} {:>14.1} {:>10.3}",
+            r.op, r.n, r.b, r.precision, r.ns_per_apply, r.gbps
         );
     }
     if let Some(path) = json_path {
@@ -362,14 +415,14 @@ fn run_smoke(
         // RHS-group fan-out has the most to parallelize.
         let cg_rows = cg_sweep(&[1, 8], &[1, SWEEP_THREADS]);
         println!(
-            "{:<10} {:>6} {:>4} {:>6} {:>3} {:>16} {:>8} {:>8} {:>6}",
-            "op", "n", "rhs", "block", "t", "ns/solve-col", "mvms", "applies", "conv"
+            "{:<10} {:>6} {:>4} {:>6} {:>3} {:>8} {:>16} {:>8} {:>8} {:>6}",
+            "op", "n", "rhs", "block", "t", "prec", "ns/solve-col", "mvms", "applies", "conv"
         );
         for r in &cg_rows {
             println!(
-                "{:<10} {:>6} {:>4} {:>6} {:>3} {:>16.1} {:>8} {:>8} {:>6}",
-                r.op, r.n, r.rhs, r.block, r.threads, r.ns_per_solve_col, r.mvms,
-                r.block_applies, r.converged
+                "{:<10} {:>6} {:>4} {:>6} {:>3} {:>8} {:>16.1} {:>8} {:>8} {:>6}",
+                r.op, r.n, r.rhs, r.block, r.threads, r.precision, r.ns_per_solve_col,
+                r.mvms, r.block_applies, r.converged
             );
         }
         if let Some(path) = json_cg_path {
@@ -431,7 +484,7 @@ fn main() {
     for r in &sweep {
         println!(
             "{:<28} {:>12.1} ns/col {:>10.3} eff GB/s",
-            format!("{}_n{}_b{}", r.op, r.n, r.b),
+            format!("{}_n{}_b{}_{}", r.op, r.n, r.b, r.precision),
             r.ns_per_apply,
             r.gbps
         );

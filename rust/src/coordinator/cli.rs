@@ -1,8 +1,8 @@
 //! Hand-rolled CLI (clap is not in the offline registry).
 //!
 //! ```text
-//! gpsld exp <id> [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>] [--threads <t>]
-//! gpsld exp all  [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>] [--threads <t>]
+//! gpsld exp <id> [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>] [--threads <t>] [--precision f64|f32f64]
+//! gpsld exp all  [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>] [--threads <t>] [--precision f64|f32f64]
 //! gpsld artifacts                                      list/verify PJRT artifacts
 //! gpsld info                                           version + feature summary
 //! ```
@@ -16,7 +16,12 @@
 //! passing the flag); `--threads <t>` sets the process-default worker
 //! count for RHS-group and probe-block fan-out
 //! (`util::parallel::set_default_threads`; results are bit-identical at
-//! any thread count, only wall-clock changes).
+//! any thread count, only wall-clock changes); `--precision f64|f32f64`
+//! sets the process-default MVM precision for block solves and estimators
+//! (`util::precision::set_default_precision`; `f64`, the default, is
+//! bit-identical to not passing the flag, and block-CG convergence is
+//! always confirmed against the f64 true residual in either mode — see
+//! the `solvers` module docs).
 
 use super::{experiments, figures, ExpResult, Scale};
 
@@ -28,11 +33,12 @@ const EXP_IDS: &[&str] = &[
 pub fn usage() -> String {
     format!(
         "gpsld {} — Scalable Log Determinants for GP Kernel Learning (NIPS 2017 repro)\n\n\
-         USAGE:\n  gpsld exp <id|all> [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>] [--threads <t>] [--md <file>]\n  gpsld artifacts\n  gpsld info\n\n\
+         USAGE:\n  gpsld exp <id|all> [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>] [--threads <t>] [--precision f64|f32f64] [--md <file>]\n  gpsld artifacts\n  gpsld info\n\n\
          `--block <b>` sets the default probe-block width for blocked MVMs.\n\
          `--cg-block <b>` sets the default RHS block width for block-CG solves.\n\
          `--precond-rank <k>` sets the pivoted-Cholesky preconditioner rank (0 = off).\n\
-         `--threads <t>` sets the default worker count for RHS-group/probe-block fan-out.\n\n\
+         `--threads <t>` sets the default worker count for RHS-group/probe-block fan-out.\n\
+         `--precision f64|f32f64` sets the default MVM precision (f32 storage / f64 accumulation; solves still confirm in f64).\n\n\
          EXPERIMENTS: {}\n",
         crate::version(),
         EXP_IDS.join(", ")
@@ -128,6 +134,18 @@ pub fn main_with_args(args: &[String]) -> i32 {
                         }
                         i += 2;
                     }
+                    "--precision" => {
+                        match args.get(i + 1).and_then(|s| {
+                            crate::util::precision::Precision::parse(s)
+                        }) {
+                            Some(p) => crate::util::precision::set_default_precision(p),
+                            None => {
+                                eprintln!("--precision needs 'f64' or 'f32f64'");
+                                return 2;
+                            }
+                        }
+                        i += 2;
+                    }
                     "--precond-rank" => {
                         // 0 is legal: it means "preconditioning off".
                         match args.get(i + 1).and_then(|s| s.parse::<usize>().ok()) {
@@ -197,6 +215,10 @@ pub fn main_with_args(args: &[String]) -> i32 {
             println!(
                 "solvers: cg/block-cg with pivoted-Cholesky PCG (--precond-rank), \
                  parallel RHS groups (--threads)"
+            );
+            println!(
+                "precision: f64 (default) | f32f64 mixed MVMs with f64 \
+                 iterative-refinement confirmation (--precision)"
             );
             println!("operators: dense, toeplitz, kronecker, ski(+diag), fitc/sor, sum");
             println!("likelihoods: gaussian, poisson(lgcp), negative-binomial");
@@ -294,6 +316,46 @@ mod tests {
                 );
             },
         );
+    }
+
+    #[test]
+    fn precision_flag_sets_default_and_rejects_garbage() {
+        use crate::util::precision::{
+            default_precision, with_default_precision, Precision, TEST_DEFAULT_PRECISION_LOCK,
+        };
+        // Serialize against the util::precision tests mutating the same
+        // process-wide default; the drop guard restores the prior value on
+        // every exit path.
+        let _guard = TEST_DEFAULT_PRECISION_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        with_default_precision(default_precision(), || {
+            assert_eq!(
+                main_with_args(&[
+                    "exp".into(),
+                    "nope".into(),
+                    "--precision".into(),
+                    "f32f64".into()
+                ]),
+                2 // unknown experiment, but the flag itself parsed fine
+            );
+            assert_eq!(default_precision(), Precision::F32F64);
+            // Garbage and a missing operand are rejected (exit 2) before
+            // any experiment runs.
+            assert_eq!(
+                main_with_args(&[
+                    "exp".into(),
+                    "fig1".into(),
+                    "--precision".into(),
+                    "f16".into()
+                ]),
+                2
+            );
+            assert_eq!(
+                main_with_args(&["exp".into(), "fig1".into(), "--precision".into()]),
+                2
+            );
+        });
     }
 
     #[test]

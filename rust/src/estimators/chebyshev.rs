@@ -41,6 +41,14 @@ pub struct ChebOptions {
     /// Probe-block width b for blocked MVMs (1 reproduces the per-probe
     /// path apply-for-apply; estimates are identical either way).
     pub block_size: usize,
+    /// MVM precision for the `K̃`-applies of the Chebyshev recurrences
+    /// (every `B x` in both the moment and the coupled derivative
+    /// recurrence): `F64` is bit-identical to the pre-knob estimator;
+    /// `F32F64` runs the recurrences on the storage-rounded operator. The
+    /// spectrum bracket, Chebyshev coefficients, and derivative passes
+    /// (`apply_grad_all_mat`) always stay f64. Defaults to the process
+    /// default (CLI `--precision`).
+    pub precision: crate::util::precision::Precision,
 }
 
 impl Default for ChebOptions {
@@ -54,6 +62,7 @@ impl Default for ChebOptions {
             lambda_bounds: None,
             threads: parallel::default_threads(),
             block_size: super::default_block_size(),
+            precision: crate::util::precision::default_precision(),
         }
     }
 }
@@ -106,9 +115,10 @@ pub fn chebyshev_logdet(op: &dyn KernelOp, opts: &ChebOptions) -> Result<LogdetE
     let scale = 2.0 / (b - a);
     let shift = (b + a) / (b - a);
 
-    // B X = scale * K̃ X - shift * X; dB/dθ X = scale * dK̃ X.
+    // B X = scale * K̃ X - shift * X; dB/dθ X = scale * dK̃ X. The K̃ MVM
+    // honors `opts.precision`; the affine map stays f64.
     let apply_b_mat = |x: &Mat| -> Mat {
-        let mut y = op.apply_mat(x);
+        let mut y = op.apply_mat_prec(x, opts.precision);
         for (yi, xi) in y.data.iter_mut().zip(&x.data) {
             *yi = scale * *yi - shift * *xi;
         }

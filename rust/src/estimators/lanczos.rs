@@ -7,6 +7,7 @@
 
 use crate::linalg::dense::Mat;
 use crate::operators::LinOp;
+use crate::util::precision::Precision;
 use crate::util::rng::Rng;
 use crate::util::stats::{axpy, dot, norm2};
 
@@ -88,6 +89,24 @@ struct ColState {
 /// finds an invariant subspace (`beta ~ 0`) drops out of subsequent block
 /// applies; the block shrinks rather than padding with dead columns.
 pub fn lanczos_block<O: LinOp + ?Sized>(op: &O, z: &Mat, m: usize) -> Vec<LanczosResult> {
+    lanczos_block_prec(op, z, m, Precision::F64)
+}
+
+/// [`lanczos_block`] with the block MVMs routed through
+/// [`LinOp::apply_mat_prec`]. `Precision::F64` **is** `lanczos_block`
+/// (same code, and the trait routes the F64 arm to `apply_mat`).
+/// `F32F64` runs the recurrence on the reduced-precision operator: the
+/// Lanczos vectors, reorthogonalization, and T entries all stay f64, so
+/// the result is an *exact* tridiagonalization of the (deterministic)
+/// rounded operator — the quadrature values it feeds move by the
+/// operator's storage-rounding perturbation, which the SLQ estimator's
+/// own Monte-Carlo noise dominates at the paper's probe counts.
+pub fn lanczos_block_prec<O: LinOp + ?Sized>(
+    op: &O,
+    z: &Mat,
+    m: usize,
+    prec: Precision,
+) -> Vec<LanczosResult> {
     let n = op.n();
     assert_eq!(z.rows, n);
     let b = z.cols;
@@ -120,7 +139,7 @@ pub fn lanczos_block<O: LinOp + ?Sized>(op: &O, z: &Mat, m: usize) -> Vec<Lanczo
                 xb[(i, k)] = cols[c].q[j][i];
             }
         }
-        let wb = op.apply_mat(&xb);
+        let wb = op.apply_mat_prec(&xb, prec);
         for (k, &c) in act.iter().enumerate() {
             let st = &mut cols[c];
             st.mvms += 1;
@@ -351,6 +370,37 @@ mod tests {
             let gs = single.solve_e1();
             for (a, b) in g.iter().zip(&gs) {
                 assert_eq!(a.to_bits(), b.to_bits(), "col {j} solve");
+            }
+        }
+    }
+
+    /// The precision knob on the block driver: F64 is `lanczos_block`
+    /// bitwise, and F32F64 is exactly Lanczos run (in f64) on the rounded
+    /// operator — pinned by building that operator explicitly.
+    #[test]
+    fn block_prec_f64_identity_and_mixed_is_rounded_operator() {
+        let op = spd_op(26, 21);
+        let mut rng = Rng::new(22);
+        let z = Mat::from_fn(26, 3, |_, _| rng.gaussian());
+        let plain = lanczos_block(&op, &z, 8);
+        let f64_path = lanczos_block_prec(&op, &z, 8, Precision::F64);
+        let rounded = DenseMatOp::new(Mat {
+            rows: op.a.rows,
+            cols: op.a.cols,
+            data: op.a.data.iter().map(|&v| f64::from(v as f32)).collect(),
+        });
+        let mixed = lanczos_block_prec(&op, &z, 8, Precision::F32F64);
+        let want = lanczos_block(&rounded, &z, 8);
+        for j in 0..3 {
+            for (a, b) in f64_path[j].alphas.iter().zip(&plain[j].alphas) {
+                assert_eq!(a.to_bits(), b.to_bits(), "f64 col {j}");
+            }
+            assert_eq!(mixed[j].alphas.len(), want[j].alphas.len(), "col {j}");
+            for (a, b) in mixed[j].alphas.iter().zip(&want[j].alphas) {
+                assert_eq!(a.to_bits(), b.to_bits(), "mixed col {j} alpha");
+            }
+            for (a, b) in mixed[j].betas.iter().zip(&want[j].betas) {
+                assert_eq!(a.to_bits(), b.to_bits(), "mixed col {j} beta");
             }
         }
     }

@@ -16,7 +16,7 @@
 //! sizes; see the module docs of [`crate::estimators`] for the accounting
 //! convention (`mvms` vs `block_applies`).
 
-use super::lanczos::lanczos_block;
+use super::lanczos::{lanczos_block, lanczos_block_prec};
 use super::probes::{combine, ProbeKind, ProbeSet};
 use super::{BlockPartition, LogdetEstimate};
 use crate::error::Result;
@@ -44,6 +44,14 @@ pub struct SlqOptions {
     /// Probe-block width b for blocked MVMs (1 reproduces the per-probe
     /// path apply-for-apply; estimates are identical either way).
     pub block_size: usize,
+    /// MVM precision for the Lanczos block applies
+    /// ([`super::lanczos::lanczos_block_prec`]): `F64` is bit-identical to
+    /// the pre-knob estimator; `F32F64` tridiagonalizes the (deterministic)
+    /// storage-rounded operator, perturbing the quadrature values well
+    /// below the estimator's own Monte-Carlo noise. Derivative passes
+    /// (`apply_grad_all_mat`) and preconditioner algebra always stay f64.
+    /// Defaults to the process default (CLI `--precision`).
+    pub precision: crate::util::precision::Precision,
 }
 
 impl Default for SlqOptions {
@@ -56,6 +64,7 @@ impl Default for SlqOptions {
             grads: true,
             threads: parallel::default_threads(),
             block_size: super::default_block_size(),
+            precision: crate::util::precision::default_precision(),
         }
     }
 }
@@ -102,8 +111,8 @@ pub fn slq_logdet_pc(
             let (j0, w) = part.range(bi);
             let zblk = z.sub_cols(j0, w);
             let res = match &pop {
-                Some(pop) => lanczos_block(pop, &zblk, opts.steps.min(n)),
-                None => lanczos_block(op, &zblk, opts.steps.min(n)),
+                Some(pop) => lanczos_block_prec(pop, &zblk, opts.steps.min(n), opts.precision),
+                None => lanczos_block_prec(op, &zblk, opts.steps.min(n), opts.precision),
             };
             let mut quads = Vec::with_capacity(w);
             let mut mvms = 0;

@@ -1,6 +1,19 @@
 //! Row-major dense matrix with the handful of BLAS-3 style operations the
 //! estimators and baselines need. Deliberately simple; the hot paths of the
 //! paper's method are MVMs against *structured* operators, not dense algebra.
+//!
+//! # Precision contract (see [`crate::util::precision`])
+//!
+//! [`Mat`] is always f64. [`MatF32`] is a read-only f32 *storage panel* of
+//! an f64 matrix, used by the mixed-precision (`Precision::F32F64`) apply
+//! paths: the panel halves the bytes the bandwidth-bound GEMM streams, but
+//! **every accumulator stays f64** — each stored f32 is widened back to
+//! f64 before it enters any product, so [`MatF32::matmul_into_threads`]
+//! computes exactly what the f64 kernel would on the rounded matrix
+//! `f64::from(a as f32)`. Nothing in this module makes an f32-precision
+//! *arithmetic* decision; the only precision loss is the one storage
+//! rounding, which keeps the forward error at one ulp(f32) per stored
+//! entry (the basis of the operators' n-scaled error bound).
 
 use std::fmt;
 
@@ -215,9 +228,7 @@ impl Mat {
                         for kk in kb..kend {
                             let a = arow[kk];
                             let brow = other.row(kk);
-                            for j in 0..n {
-                                orow[j] += a * brow[j];
-                            }
+                            axpy_row(a, brow, orow);
                         }
                     }
                 }
@@ -289,6 +300,106 @@ impl Mat {
             }
         }
         tr
+    }
+}
+
+/// SIMD-friendly row update `o += a * b`: fixed-width accumulator strips
+/// via `chunks_exact` so the compiler sees no aliasing and a known trip
+/// count. The j-elements are independent (each output element still
+/// accumulates in ascending-k order outside), so strip-mining cannot
+/// change any result bit.
+#[inline]
+fn axpy_row(a: f64, b: &[f64], o: &mut [f64]) {
+    const STRIP: usize = 8;
+    let mut oc = o.chunks_exact_mut(STRIP);
+    let mut bc = b.chunks_exact(STRIP);
+    for (os, bs) in oc.by_ref().zip(bc.by_ref()) {
+        for t in 0..STRIP {
+            os[t] += a * bs[t];
+        }
+    }
+    for (ot, bt) in oc.into_remainder().iter_mut().zip(bc.remainder()) {
+        *ot += a * bt;
+    }
+}
+
+/// Row-major f32 storage panel of an f64 matrix — the dense side of the
+/// mixed-precision mode (module docs). Read-only by design: panels are
+/// built once from the f64 source (`from_mat`) and invalidated whenever
+/// the source changes, never mutated in place.
+#[derive(Clone, PartialEq)]
+pub struct MatF32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for MatF32 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "MatF32({}x{})", self.rows, self.cols)
+    }
+}
+
+impl MatF32 {
+    /// Round an f64 matrix to its f32 storage panel (one `as f32` rounding
+    /// per entry — the only precision loss in the mixed path).
+    pub fn from_mat(a: &Mat) -> Self {
+        MatF32 {
+            rows: a.rows,
+            cols: a.cols,
+            data: a.data.iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// out = self * other with f64 accumulation: the same cache-blocked,
+    /// row-partitioned kernel as [`Mat::matmul_into_threads`], streaming
+    /// the f32 panel (half the bytes of the f64 kernel's dominant term)
+    /// and widening each stored value to f64 before it enters a product.
+    /// Bitwise equal to the f64 kernel run on the rounded matrix, for any
+    /// thread count.
+    pub fn matmul_into_threads(&self, other: &Mat, out: &mut Mat, threads: usize) {
+        assert_eq!(self.cols, other.rows);
+        assert_eq!((out.rows, out.cols), (self.rows, other.cols));
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        out.data.fill(0.0);
+        if m == 0 || n == 0 {
+            return;
+        }
+        let rows_per = m.div_ceil(threads.max(1)).max(1);
+        crate::util::parallel::par_chunks_mut(
+            &mut out.data,
+            rows_per * n,
+            threads,
+            |ci, chunk| {
+                let row0 = ci * rows_per;
+                let nrows = chunk.len() / n;
+                const BK: usize = 64;
+                for kb in (0..k).step_by(BK) {
+                    let kend = (kb + BK).min(k);
+                    for r in 0..nrows {
+                        let arow = self.row(row0 + r);
+                        let orow = &mut chunk[r * n..(r + 1) * n];
+                        for kk in kb..kend {
+                            let a = f64::from(arow[kk]);
+                            let brow = other.row(kk);
+                            axpy_row(a, brow, orow);
+                        }
+                    }
+                }
+            },
+        );
+    }
+
+    /// Allocating wrapper over [`MatF32::matmul_into_threads`].
+    pub fn matmul_threads(&self, other: &Mat, threads: usize) -> Mat {
+        let mut out = Mat::zeros(self.rows, other.cols);
+        self.matmul_into_threads(other, &mut out, threads);
+        out
     }
 }
 
@@ -380,6 +491,55 @@ mod tests {
         let ab = a.matmul(&b);
         let tr: f64 = ab.diag().iter().sum();
         assert!((a.trace_product(&b) - tr).abs() < 1e-10);
+    }
+
+    /// The mixed kernel is exactly "round the stored matrix once, then do
+    /// f64 arithmetic": it must match the f64 kernel run on the rounded
+    /// matrix bit for bit, at any thread count.
+    #[test]
+    fn f32_panel_matmul_is_f64_matmul_of_rounded_matrix() {
+        let a = Mat::from_fn(23, 17, |i, j| {
+            if (i + j) % 5 == 0 { 0.0 } else { ((i * 13 + j * 7) % 29) as f64 * 0.113 - 1.1 }
+        });
+        let b = Mat::from_fn(17, 6, |i, j| (i as f64 * 0.31 - j as f64 * 0.17).sin());
+        let panel = MatF32::from_mat(&a);
+        let rounded = Mat {
+            rows: a.rows,
+            cols: a.cols,
+            data: a.data.iter().map(|&v| f64::from(v as f32)).collect(),
+        };
+        for threads in [1usize, 3] {
+            let got = panel.matmul_threads(&b, threads);
+            let mut want = Mat::zeros(a.rows, b.cols);
+            rounded.matmul_into_threads(&b, &mut want, threads);
+            for (g, w) in got.data.iter().zip(&want.data) {
+                assert_eq!(g.to_bits(), w.to_bits());
+            }
+        }
+    }
+
+    /// Forward error of the mixed GEMM vs full f64: bounded by one
+    /// ulp(f32) relative rounding per stored entry, i.e.
+    /// `|err| <= eps32 * sum_k |a_ik| |b_kj|` (plus f64 noise).
+    #[test]
+    fn f32_panel_matmul_error_within_storage_rounding_bound() {
+        let a = Mat::from_fn(31, 19, |i, j| ((i * 7 + j * 11) % 23) as f64 * 0.217 - 2.0);
+        let b = Mat::from_fn(19, 4, |i, j| (i as f64 + 1.0) * 0.1 - j as f64 * 0.33);
+        let exact = a.matmul(&b);
+        let got = MatF32::from_mat(&a).matmul_threads(&b, 1);
+        let eps32 = f32::EPSILON as f64;
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mag: f64 =
+                    (0..a.cols).map(|k| (a[(i, k)] * b[(k, j)]).abs()).sum();
+                let err = (got[(i, j)] - exact[(i, j)]).abs();
+                assert!(
+                    err <= eps32 * mag + 1e-12,
+                    "({i},{j}): err {err:e} vs bound {:e}",
+                    eps32 * mag
+                );
+            }
+        }
     }
 
     #[test]

@@ -80,6 +80,32 @@ impl LinOp for SumKernelOp {
         }
         out
     }
+    /// Precision distributes over the sum: each part applies in the requested
+    /// mode (parts without an f32 path fall through to exact f64 via the
+    /// trait default), and the shared noise term stays f64. F64 mode is
+    /// `apply_mat` itself.
+    fn apply_mat_prec(
+        &self,
+        x: &crate::linalg::dense::Mat,
+        prec: crate::util::precision::Precision,
+    ) -> crate::linalg::dense::Mat {
+        use crate::util::precision::Precision;
+        match prec {
+            Precision::F64 => self.apply_mat(x),
+            Precision::F32F64 => {
+                assert_eq!(x.rows, self.n());
+                let mut out = crate::linalg::dense::Mat::zeros(x.rows, x.cols);
+                for p in &self.parts {
+                    out.add_assign(&p.apply_mat_prec(x, prec));
+                }
+                let s2 = self.noise_var();
+                for (o, xi) in out.data.iter_mut().zip(&x.data) {
+                    *o += s2 * xi;
+                }
+                out
+            }
+        }
+    }
 }
 
 impl KernelOp for SumKernelOp {
@@ -222,6 +248,34 @@ mod tests {
         // 2 + 2 kernel hypers + 1 shared noise.
         assert_eq!(op.num_hypers(), 5);
         assert_eq!(op.hyper_names().last().unwrap(), "log_sigma");
+    }
+
+    /// F64 mode is bitwise `apply_mat`; mixed mode is bitwise the sum of the
+    /// parts' own mixed applies plus the exact f64 noise term.
+    #[test]
+    fn apply_mat_prec_distributes_over_parts() {
+        use crate::linalg::dense::Mat;
+        use crate::util::precision::Precision;
+        let (_, op) = parts(10);
+        let mut rng = Rng::new(9);
+        let x = Mat::from_fn(10, 3, |_, _| rng.gaussian());
+        let f64_path = op.apply_mat_prec(&x, Precision::F64);
+        let plain = op.apply_mat(&x);
+        for (a, b) in f64_path.data.iter().zip(&plain.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let mixed = op.apply_mat_prec(&x, Precision::F32F64);
+        let mut want = Mat::zeros(10, 3);
+        for p in &op.parts {
+            want.add_assign(&p.apply_mat_prec(&x, Precision::F32F64));
+        }
+        let s2 = op.noise_var();
+        for (o, xi) in want.data.iter_mut().zip(&x.data) {
+            *o += s2 * xi;
+        }
+        for (a, b) in mixed.data.iter().zip(&want.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -5,8 +5,9 @@
 
 use super::{KernelOp, LinOp};
 use crate::kernels::Kernel;
-use crate::linalg::dense::Mat;
+use crate::linalg::dense::{Mat, MatF32};
 use crate::util::parallel;
+use crate::util::precision::Precision;
 
 /// `K̃ = K(X, X) + σ² I` with `K` materialized.
 pub struct DenseKernelOp {
@@ -14,6 +15,9 @@ pub struct DenseKernelOp {
     pub kernel: Box<dyn Kernel>,
     pub log_sigma: f64,
     k: Mat,
+    /// Lazily built f32 storage panel of `k` for mixed-precision applies;
+    /// invalidated by `refresh()` whenever the kernel matrix changes.
+    k32: std::sync::OnceLock<MatF32>,
 }
 
 impl DenseKernelOp {
@@ -23,6 +27,7 @@ impl DenseKernelOp {
             kernel,
             log_sigma: sigma.ln(),
             k: Mat::zeros(0, 0),
+            k32: std::sync::OnceLock::new(),
         };
         op.refresh();
         op
@@ -71,6 +76,8 @@ impl DenseKernelOp {
             row
         });
         self.k = Mat::from_rows(&rows);
+        // Any cached f32 panel mirrors the old K: drop it.
+        self.k32 = std::sync::OnceLock::new();
     }
 }
 
@@ -105,6 +112,34 @@ impl LinOp for DenseKernelOp {
             *o += s2 * xi;
         }
         out
+    }
+    /// Mixed mode streams the lazily cached f32 panel of K through the
+    /// f64-accumulating GEMM (half the memory traffic of the n×n term);
+    /// the noise diagonal `σ² x` stays exact f64, and F64 mode is
+    /// `apply_mat` itself.
+    fn apply_mat_prec(&self, x: &Mat, prec: Precision) -> Mat {
+        match prec {
+            Precision::F64 => self.apply_mat(x),
+            Precision::F32F64 => {
+                let n = self.n();
+                assert_eq!(x.rows, n);
+                let b = x.cols;
+                let mut out = Mat::zeros(n, b);
+                if b == 0 || n == 0 {
+                    return out;
+                }
+                let panel = self.k32.get_or_init(|| MatF32::from_mat(&self.k));
+                // Same thread gate as the f64 path (flop count unchanged).
+                let threads =
+                    if n * n * b >= 4_000_000 { parallel::default_threads() } else { 1 };
+                panel.matmul_into_threads(x, &mut out, threads);
+                let s2 = self.noise_var();
+                for (o, xi) in out.data.iter_mut().zip(&x.data) {
+                    *o += s2 * xi;
+                }
+                out
+            }
+        }
     }
     fn to_dense(&self) -> Mat {
         self.full_matrix()
@@ -333,6 +368,49 @@ mod tests {
                 assert!((y[p] - fd).abs() < 1e-5 * (1.0 + fd.abs()));
             }
         }
+    }
+
+    /// F64 mode is bitwise `apply_mat`; mixed mode equals the f64 GEMM run on
+    /// the rounded K (bitwise, via the MatF32 contract) and stays within the
+    /// storage-rounding error bound; `set_hypers` drops the stale panel.
+    #[test]
+    fn apply_mat_prec_contract_and_refresh() {
+        let mut op = make(24, 11);
+        let mut rng = Rng::new(12);
+        let x = Mat::from_fn(24, 3, |_, _| rng.gaussian());
+        let f64_path = op.apply_mat_prec(&x, Precision::F64);
+        let plain = op.apply_mat(&x);
+        for (a, b) in f64_path.data.iter().zip(&plain.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let check_mixed = |op: &DenseKernelOp, x: &Mat| {
+            let mixed = op.apply_mat_prec(x, Precision::F32F64);
+            // Reference: f64 GEMM on the rounded K + exact noise term.
+            let rounded = Mat {
+                rows: op.kernel_matrix().rows,
+                cols: op.kernel_matrix().cols,
+                data: op
+                    .kernel_matrix()
+                    .data
+                    .iter()
+                    .map(|&v| f64::from(v as f32))
+                    .collect(),
+            };
+            let mut want = rounded.matmul(x);
+            let s2 = op.noise_var();
+            for (o, xi) in want.data.iter_mut().zip(&x.data) {
+                *o += s2 * xi;
+            }
+            for (a, b) in mixed.data.iter().zip(&want.data) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        };
+        check_mixed(&op, &x);
+        // Changing hypers rebuilds K; the panel must follow the new K.
+        let mut h = op.hypers();
+        h[0] += 0.25;
+        op.set_hypers(&h);
+        check_mixed(&op, &x);
     }
 
     #[test]

@@ -8,6 +8,7 @@ use super::LinOp;
 use crate::linalg::dense::Mat;
 use crate::linalg::eigh::eigh;
 use crate::linalg::fft::Cpx;
+use crate::util::precision::Precision;
 
 /// One factor of the Kronecker product.
 pub enum KronFactor {
@@ -72,7 +73,14 @@ impl KronOp {
     /// Per-column arithmetic is identical for any `bcols` (the column index
     /// only changes strides), so block results are bitwise equal to
     /// column-by-column applies.
-    fn mode_apply_block(&self, k: usize, x: &mut Vec<f64>, scratch: &mut Vec<f64>, bcols: usize) {
+    fn mode_apply_block(
+        &self,
+        k: usize,
+        x: &mut Vec<f64>,
+        scratch: &mut Vec<f64>,
+        bcols: usize,
+        prec: Precision,
+    ) {
         let dims = self.shape();
         let m = dims[k];
         let right: usize = dims[k + 1..].iter().product::<usize>() * bcols;
@@ -81,11 +89,14 @@ impl KronOp {
         if left == 1 && right == bcols {
             // Contiguous (m x b) block: delegate to the factor's own blocked
             // apply (Toeplitz shares its FFT plan and fans columns out
-            // across threads; dense uses the cache-blocked matmul).
+            // across threads; dense uses the cache-blocked matmul). The
+            // precision knob reaches the Toeplitz staging here — the 1-D
+            // SKI hot path is exactly this branch; dense factors stay f64
+            // (they are small and exact).
             let xm = Mat { rows: m, cols: bcols, data: std::mem::take(x) };
             let ym = match &self.factors[k] {
                 KronFactor::Dense(a) => a.matmul(&xm),
-                KronFactor::Toeplitz(t) => t.apply_mat(&xm),
+                KronFactor::Toeplitz(t) => t.apply_mat_prec(&xm, prec),
             };
             *x = ym.data;
             return;
@@ -136,11 +147,15 @@ impl KronOp {
         std::mem::swap(x, scratch);
     }
 
-    /// Run all mode products over `bcols` stacked columns in place.
-    fn block_apply_data(&self, data: &mut Vec<f64>, bcols: usize) {
+    /// Run all mode products over `bcols` stacked columns in place. The
+    /// precision knob only reaches the contiguous single-factor branch
+    /// (the 1-D SKI hot path); the strided multi-factor fiber loops stay
+    /// f64 — mixed precision is an opt-in bandwidth optimization, and an
+    /// exact path is always a valid implementation of it.
+    fn block_apply_data(&self, data: &mut Vec<f64>, bcols: usize, prec: Precision) {
         let mut scratch = Vec::new();
         for k in 0..self.factors.len() {
-            self.mode_apply_block(k, data, &mut scratch, bcols);
+            self.mode_apply_block(k, data, &mut scratch, bcols, prec);
         }
         if self.scale != 1.0 {
             for v in data.iter_mut() {
@@ -198,7 +213,7 @@ impl LinOp for KronOp {
         assert_eq!(x.len(), self.n());
         assert_eq!(y.len(), self.n());
         let mut cur = x.to_vec();
-        self.block_apply_data(&mut cur, 1);
+        self.block_apply_data(&mut cur, 1, Precision::F64);
         y.copy_from_slice(&cur);
     }
     /// Fused block apply: the probe block is one extra trailing tensor mode,
@@ -207,7 +222,14 @@ impl LinOp for KronOp {
         assert_eq!(x.rows, self.n());
         let b = x.cols;
         let mut data = x.data.clone();
-        self.block_apply_data(&mut data, b);
+        self.block_apply_data(&mut data, b, Precision::F64);
+        Mat { rows: x.rows, cols: b, data }
+    }
+    fn apply_mat_prec(&self, x: &Mat, prec: Precision) -> Mat {
+        assert_eq!(x.rows, self.n());
+        let b = x.cols;
+        let mut data = x.data.clone();
+        self.block_apply_data(&mut data, b, prec);
         Mat { rows: x.rows, cols: b, data }
     }
 }

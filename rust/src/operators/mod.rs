@@ -33,6 +33,31 @@
 //!   (`block_applies`, what the hardware actually executes). Operators don't
 //!   count anything themselves.
 //!
+//! # The precision contract (see [`crate::util::precision`])
+//!
+//! [`LinOp::apply_mat_prec`] is the precision-aware entry point the
+//! solvers and estimators drive. Its contract:
+//!
+//! * **`Precision::F64` is `apply_mat`, bitwise.** The default
+//!   implementation *is* `apply_mat`, and every override must route the
+//!   `F64` arm to the identical code — proptests pin this per operator.
+//! * **`Precision::F32F64` stores f32, accumulates f64.** Operators with a
+//!   bandwidth-bound storage panel (the dense kernel matrix, the SKI
+//!   interpolation CSR values, the Toeplitz FFT input/output staging)
+//!   read that panel as f32; every multiply-accumulate widens back to f64
+//!   first, and exact structural terms (the noise diagonal `σ² x`, the
+//!   Toeplitz circulant spectrum, Kronecker factor algebra) stay f64.
+//!   The resulting forward error is bounded by a small multiple of
+//!   `eps(f32) · Σ_k |A_ik||x_kj|` per element.
+//! * **Operators without an f32 panel fall through to f64.** Mixed
+//!   precision is a bandwidth optimization, never an accuracy
+//!   *requirement*: an operator with nothing worth storing in f32
+//!   (diagonal, low-rank, already-factored) simply runs its f64 path, and
+//!   the solvers' refinement logic is still correct (zero extra error).
+//! * **Convergence is still f64.** `residual_mat` has no precision knob on
+//!   purpose — the solvers' true-residual confirmation always runs full
+//!   f64, so `converged == true` keeps its f64 meaning in every mode.
+//!
 //! The PJRT runtime ops (`runtime::ops`) already exposed exactly this
 //! batched interface; the native operators now match it.
 
@@ -48,11 +73,12 @@ pub use combine::SumKernelOp;
 pub use dense_kernel::DenseKernelOp;
 pub use kron::{KronFactor, KronOp};
 pub use lowrank::FitcOp;
-pub use sparse::Csr;
+pub use sparse::{Csr, CsrF32};
 pub use ski::SkiOp;
 pub use toeplitz::ToeplitzOp;
 
 use crate::linalg::dense::Mat;
+use crate::util::precision::Precision;
 
 /// A symmetric linear operator exposed through matrix–vector products.
 pub trait LinOp: Send + Sync {
@@ -84,6 +110,17 @@ pub trait LinOp: Send + Sync {
             out.set_col(j, &yout);
         }
         out
+    }
+
+    /// Precision-aware blocked apply (see the module-level precision
+    /// contract). The default ignores the knob and runs [`LinOp::apply_mat`]
+    /// — which makes `Precision::F64` bit-identical to the historical path
+    /// by construction, and leaves operators without an f32 storage panel
+    /// on their (exact) f64 path in every mode. Operators with a
+    /// bandwidth-bound panel override the `F32F64` arm only.
+    fn apply_mat_prec(&self, x: &Mat, prec: Precision) -> Mat {
+        let _ = prec;
+        self.apply_mat(x)
     }
 
     /// `R = B − A X` in one blocked apply — the shared residual update
@@ -187,13 +224,17 @@ pub trait KernelOp: LinOp {
 
 /// Plain dense symmetric matrix as an operator (tests and small baselines).
 pub struct DenseMatOp {
+    /// The matrix. Treated as immutable after construction — the mixed-
+    /// precision panel below caches its f32 rounding at first use.
     pub a: Mat,
+    /// Lazily built f32 storage panel for `Precision::F32F64` applies.
+    a32: std::sync::OnceLock<crate::linalg::dense::MatF32>,
 }
 
 impl DenseMatOp {
     pub fn new(a: Mat) -> Self {
         assert_eq!(a.rows, a.cols);
-        DenseMatOp { a }
+        DenseMatOp { a, a32: std::sync::OnceLock::new() }
     }
 }
 
@@ -207,6 +248,18 @@ impl LinOp for DenseMatOp {
     fn apply_mat(&self, x: &Mat) -> Mat {
         assert_eq!(x.rows, self.n());
         self.a.matmul(x)
+    }
+    fn apply_mat_prec(&self, x: &Mat, prec: Precision) -> Mat {
+        match prec {
+            Precision::F64 => self.apply_mat(x),
+            Precision::F32F64 => {
+                assert_eq!(x.rows, self.n());
+                let panel = self.a32.get_or_init(|| {
+                    crate::linalg::dense::MatF32::from_mat(&self.a)
+                });
+                panel.matmul_threads(x, 1)
+            }
+        }
     }
     fn to_dense(&self) -> Mat {
         self.a.clone()
@@ -268,6 +321,16 @@ impl LinOp for ShiftedOp<'_> {
         }
         out
     }
+    /// Forwards the precision knob to the wrapped operator; the shift term
+    /// is exact structural arithmetic and stays f64 in every mode.
+    fn apply_mat_prec(&self, x: &Mat, prec: Precision) -> Mat {
+        assert_eq!(x.rows, self.n());
+        let mut out = self.inner.apply_mat_prec(x, prec);
+        for (o, xi) in out.data.iter_mut().zip(&x.data) {
+            *o += self.shift * xi;
+        }
+        out
+    }
 }
 
 /// `D^{1/2} A D^{1/2} + I` — the Laplace approximation's B operator, where
@@ -319,6 +382,27 @@ impl LinOp for LaplaceBOp<'_> {
             }
         }
         let mut out = self.inner.apply_mat(&t);
+        for i in 0..out.rows {
+            let s = self.sqrt_w[i];
+            let xrow = x.row(i);
+            for (v, xi) in out.row_mut(i).iter_mut().zip(xrow) {
+                *v = s * *v + xi;
+            }
+        }
+        out
+    }
+    /// Forwards the precision knob to the wrapped operator; the curvature
+    /// scaling and `+ x` term are exact and stay f64 in every mode.
+    fn apply_mat_prec(&self, x: &Mat, prec: Precision) -> Mat {
+        assert_eq!(x.rows, self.n());
+        let mut t = x.clone();
+        for i in 0..t.rows {
+            let s = self.sqrt_w[i];
+            for v in t.row_mut(i) {
+                *v *= s;
+            }
+        }
+        let mut out = self.inner.apply_mat_prec(&t, prec);
         for i in 0..out.rows {
             let s = self.sqrt_w[i];
             let xrow = x.row(i);

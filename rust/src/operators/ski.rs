@@ -12,11 +12,12 @@
 //! then `log σ` last.
 
 use super::kron::{KronFactor, KronOp};
-use super::sparse::Csr;
+use super::sparse::{Csr, CsrF32};
 use super::toeplitz::ToeplitzOp;
 use super::{KernelOp, LinOp};
 use crate::grid::{Grid, InterpOrder, Stencil};
 use crate::kernels::{Kernel, SeparableKernel};
+use crate::util::precision::Precision;
 
 impl Clone for ToeplitzOp {
     fn clone(&self) -> Self {
@@ -47,6 +48,15 @@ pub struct SkiOp {
 
     w: Csr,
     wt: Csr,
+    /// Lazily built f32/u32 mirrors of `w`/`wt` for mixed-precision sweeps.
+    /// The interpolation weights depend only on points/grid/order — never
+    /// on hypers — so the mirrors cannot go stale across `set_hypers`.
+    w32: std::sync::OnceLock<CsrF32>,
+    wt32: std::sync::OnceLock<CsrF32>,
+    /// Memoized test-set interpolation matrix for [`SkiOp::cross_mvm`]:
+    /// `(fingerprint, W*)` of the last test set seen, so repeated
+    /// predict/variance calls over one test set build `W*` once.
+    wstar_cache: std::sync::Mutex<Option<(u64, Csr)>>,
     stencils: Vec<Vec<Stencil>>,
     n: usize,
 
@@ -94,6 +104,9 @@ impl SkiOp {
             diag_correction,
             w,
             wt,
+            w32: std::sync::OnceLock::new(),
+            wt32: std::sync::OnceLock::new(),
+            wstar_cache: std::sync::Mutex::new(None),
             stencils,
             n,
             cols: vec![Vec::new(); d],
@@ -271,9 +284,41 @@ impl SkiOp {
         }
     }
 
+    /// Fingerprint of a test set for the `W*` memo: the exact coordinate
+    /// bit patterns plus the point count and interpolation order, so any
+    /// change to any coordinate (even by one ulp) misses the cache.
+    fn test_set_fingerprint(&self, test_points: &[Vec<f64>]) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        test_points.len().hash(&mut h);
+        std::mem::discriminant(&self.order).hash(&mut h);
+        for p in test_points {
+            p.len().hash(&mut h);
+            for &c in p {
+                c.to_bits().hash(&mut h);
+            }
+        }
+        h.finish()
+    }
+
     /// Predictive cross-covariance product `K(X*, X) alpha ≈ W* K_UU W^T alpha`.
+    ///
+    /// The test-set interpolation matrix `W*` is memoized per test set
+    /// (keyed on the exact coordinate bits): GP prediction calls this once
+    /// per output (mean, then per-variance solves) over the same `X*`, and
+    /// rebuilding the stencils each call dominated predict profiles.
     pub fn cross_mvm(&self, test_points: &[Vec<f64>], alpha: &[f64]) -> Vec<f64> {
-        let (wstar, _) = self.grid.interp_matrix(test_points, self.order);
+        let key = self.test_set_fingerprint(test_points);
+        let mut cache = self.wstar_cache.lock().unwrap();
+        let rebuild = match cache.as_ref() {
+            Some((k, w)) => *k != key || w.nrows != test_points.len(),
+            None => true,
+        };
+        if rebuild {
+            let (wstar, _) = self.grid.interp_matrix(test_points, self.order);
+            *cache = Some((key, wstar));
+        }
+        let (_, wstar) = cache.as_ref().expect("wstar cache populated above");
         let m = self.m();
         let mut ag = vec![0.0; m];
         self.wt.apply(alpha, &mut ag);
@@ -319,6 +364,41 @@ impl LinOp for SkiOp {
             }
         }
         out
+    }
+    /// Mixed mode runs the two CSR sweeps over the f32/u32 mirrors of
+    /// `W`/`Wᵀ` (half the bytes per nonzero) and stages the grid-factor
+    /// circulant through `KronOp`'s precision path; the noise term and the
+    /// §3.3 diagonal correction stay exact f64, like every structural term.
+    fn apply_mat_prec(
+        &self,
+        x: &crate::linalg::dense::Mat,
+        prec: Precision,
+    ) -> crate::linalg::dense::Mat {
+        match prec {
+            Precision::F64 => self.apply_mat(x),
+            Precision::F32F64 => {
+                assert_eq!(x.rows, self.n);
+                let wt32 = self.wt32.get_or_init(|| CsrF32::from_csr(&self.wt));
+                let w32 = self.w32.get_or_init(|| CsrF32::from_csr(&self.w));
+                let xg = wt32.apply_mat(x);
+                let yg = self.kuu.apply_mat_prec(&xg, prec);
+                let mut out = w32.apply_mat(&yg);
+                let s2 = self.noise_var();
+                if self.diag_correction {
+                    for i in 0..self.n {
+                        let c = s2 + self.dvec[i];
+                        for (o, xi) in out.row_mut(i).iter_mut().zip(x.row(i)) {
+                            *o += c * xi;
+                        }
+                    }
+                } else {
+                    for (o, xi) in out.data.iter_mut().zip(&x.data) {
+                        *o += s2 * xi;
+                    }
+                }
+                out
+            }
+        }
     }
 }
 
@@ -651,6 +731,64 @@ mod tests {
                 got[i],
                 exact[i]
             );
+        }
+    }
+
+    /// The memoized cross_mvm must be invisible: identical results for
+    /// repeated calls on one test set, and a changed test set (even by a
+    /// single coordinate) must not reuse the stale `W*`.
+    #[test]
+    fn cross_mvm_memo_is_invisible() {
+        let mut rng = Rng::new(21);
+        let pts = points_1d(30, 0.0, 3.0, &mut rng);
+        let kern = SeparableKernel::iso(Shape::Rbf, 1, 0.4, 1.0);
+        let grid = Grid::new(vec![GridDim { lo: -0.2, hi: 3.2, m: 64 }]);
+        let ski = SkiOp::new(&pts, grid.clone(), kern.clone(), 0.1, InterpOrder::Cubic, false);
+        let fresh = SkiOp::new(&pts, grid, kern, 0.1, InterpOrder::Cubic, false);
+        let alpha: Vec<f64> = (0..30).map(|_| rng.gaussian()).collect();
+        let test_a = points_1d(12, 0.1, 2.9, &mut rng);
+        let mut test_b = test_a.clone();
+        test_b[7][0] += 0.37;
+        // Warm the cache on A, query B, then A again — every answer must
+        // match a never-cached operator bitwise.
+        for tp in [&test_a, &test_b, &test_a, &test_b] {
+            let got = ski.cross_mvm(tp, &alpha);
+            let want = fresh.cross_mvm(tp, &alpha);
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits());
+            }
+        }
+    }
+
+    /// F64 mode is apply_mat bitwise; mixed mode stays within an n-scaled
+    /// f32 storage-rounding bound of the f64 result.
+    #[test]
+    fn apply_mat_prec_contract() {
+        let mut rng = Rng::new(23);
+        let pts = points_1d(48, 0.0, 3.0, &mut rng);
+        let kern = SeparableKernel::iso(Shape::Rbf, 1, 0.3, 1.1);
+        let grid = Grid::new(vec![GridDim { lo: -0.2, hi: 3.2, m: 80 }]);
+        for diag_corr in [false, true] {
+            let ski =
+                SkiOp::new(&pts, grid.clone(), kern.clone(), 0.2, InterpOrder::Cubic, diag_corr);
+            let x = crate::linalg::dense::Mat::from_fn(48, 5, |_, _| rng.gaussian());
+            let exact = ski.apply_mat(&x);
+            let pinned = ski.apply_mat_prec(&x, Precision::F64);
+            for (a, b) in pinned.data.iter().zip(&exact.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "diag_corr={diag_corr}");
+            }
+            let mixed = ski.apply_mat_prec(&x, Precision::F32F64);
+            let xmax = x.data.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+            let ymax = exact.data.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+            // Generous forward bound: a handful of f32 roundings, each
+            // amplified by at most the operator's row mass (O(m) terms).
+            let bound = 64.0 * f64::from(f32::EPSILON) * (ski.m() as f64) * xmax.max(ymax);
+            for (a, b) in mixed.data.iter().zip(&exact.data) {
+                assert!(
+                    (a - b).abs() <= bound,
+                    "diag_corr={diag_corr}: {a} vs {b} (bound {bound:e})"
+                );
+            }
         }
     }
 

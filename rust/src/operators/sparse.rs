@@ -1,6 +1,13 @@
 //! Compressed sparse row matrices — SKI's interpolation matrix W has 4^d
 //! nonzeros per row (local cubic interpolation), which is what keeps the
 //! n-dependent part of every MVM at O(n).
+//!
+//! [`CsrF32`] is the mixed-precision (`Precision::F32F64`) storage mirror
+//! of a [`Csr`]: f32 values plus u32 column indices, 8 bytes per nonzero
+//! against the f64/usize 16 — the CSR sweep is pure streaming, so the
+//! mirror halves its memory traffic. Accumulation stays f64 (each stored
+//! value is widened before the multiply), matching the sweep order of
+//! [`Csr::apply_mat`] exactly.
 
 /// CSR matrix.
 #[derive(Clone, Debug)]
@@ -130,6 +137,56 @@ impl Csr {
     }
 }
 
+/// f32-value / u32-index storage mirror of a [`Csr`] (module docs). Built
+/// once from the f64 source and invalidated by the owner whenever the
+/// source is rebuilt (e.g. `SkiOp::refresh`).
+#[derive(Clone, Debug)]
+pub struct CsrF32 {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub data: Vec<f32>,
+}
+
+impl CsrF32 {
+    /// Round a CSR to its mixed-precision mirror (one `as f32` rounding
+    /// per stored value; indices must fit u32).
+    pub fn from_csr(a: &Csr) -> Self {
+        assert!(
+            a.ncols <= u32::MAX as usize,
+            "CsrF32 mirror needs column indices that fit u32"
+        );
+        CsrF32 {
+            nrows: a.nrows,
+            ncols: a.ncols,
+            indptr: a.indptr.clone(),
+            indices: a.indices.iter().map(|&c| c as u32).collect(),
+            data: a.data.iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    /// Y = A X with f64 accumulation: the same one-pass-over-sparsity
+    /// sweep as [`Csr::apply_mat`], streaming half the bytes per nonzero.
+    /// Bitwise equal to [`Csr::apply_mat`] on the rounded matrix.
+    pub fn apply_mat(&self, x: &crate::linalg::dense::Mat) -> crate::linalg::dense::Mat {
+        assert_eq!(x.rows, self.ncols);
+        let b = x.cols;
+        let mut out = crate::linalg::dense::Mat::zeros(self.nrows, b);
+        for i in 0..self.nrows {
+            let orow = &mut out.data[i * b..(i + 1) * b];
+            for k in self.indptr[i]..self.indptr[i + 1] {
+                let v = f64::from(self.data[k]);
+                let xrow = x.row(self.indices[k] as usize);
+                for j in 0..b {
+                    orow[j] += v * xrow[j];
+                }
+            }
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,6 +245,33 @@ mod tests {
         let a = sample();
         let att = a.transpose().transpose();
         assert_eq!(a.to_dense().data, att.to_dense().data);
+    }
+
+    /// The f32 mirror is "round stored values once, then f64 arithmetic":
+    /// bitwise equal to the f64 sweep over the rounded CSR.
+    #[test]
+    fn f32_mirror_matches_rounded_csr_bitwise() {
+        let rows: Vec<Vec<(usize, f64)>> = (0..7)
+            .map(|i| {
+                (0..4)
+                    .map(|k| ((i * 3 + k * 5) % 9, ((i * 7 + k) as f64).sin() * 1.7))
+                    .collect()
+            })
+            .collect();
+        let a = Csr::from_rows(9, &rows);
+        let mirror = CsrF32::from_csr(&a);
+        let rounded = Csr {
+            data: a.data.iter().map(|&v| f64::from(v as f32)).collect(),
+            ..a.clone()
+        };
+        let x = crate::linalg::dense::Mat::from_fn(9, 5, |i, j| {
+            (i as f64 * 0.21 - j as f64 * 0.13).cos()
+        });
+        let got = mirror.apply_mat(&x);
+        let want = rounded.apply_mat(&x);
+        for (g, w) in got.data.iter().zip(&want.data) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
     }
 
     #[test]

@@ -7,11 +7,20 @@
 //! (bit-reversal + twiddle tables) across every probe column; the per-column
 //! transforms are arithmetically identical to the single-vector path, so
 //! blocked results are bitwise equal to column-by-column `apply`.
+//!
+//! Mixed precision (`Precision::F32F64`): the FFT *input/output staging*
+//! buffers are the f32 part — the probe block is rounded once on the way
+//! in and the result once on the way out, modeling f32 staging arrays
+//! between the CSR gather and the transform — while the circulant
+//! **spectrum and every FFT butterfly stay f64** (an f32 spectrum would
+//! compound rounding across all log m stages). Error is therefore one
+//! storage rounding on each side of an exact-in-f64 transform.
 
 use super::LinOp;
 use crate::linalg::dense::Mat;
 use crate::linalg::fft::{next_pow2, rfft, Cpx, FftPlan};
 use crate::util::parallel;
+use crate::util::precision::Precision;
 
 /// Symmetric Toeplitz matrix given by its first column, with a cached FFT
 /// of the circulant embedding and a cached FFT plan.
@@ -142,6 +151,25 @@ impl LinOp for ToeplitzOp {
         }
         out
     }
+    /// Mixed mode stages the block through f32 on both sides of the
+    /// (still fully f64) circulant transform — see the module docs.
+    fn apply_mat_prec(&self, x: &Mat, prec: Precision) -> Mat {
+        match prec {
+            Precision::F64 => self.apply_mat(x),
+            Precision::F32F64 => {
+                let staged = Mat {
+                    rows: x.rows,
+                    cols: x.cols,
+                    data: x.data.iter().map(|&v| f64::from(v as f32)).collect(),
+                };
+                let mut out = self.apply_mat(&staged);
+                for v in out.data.iter_mut() {
+                    *v = f64::from(*v as f32);
+                }
+                out
+            }
+        }
+    }
     fn to_dense(&self) -> crate::linalg::dense::Mat {
         self.to_dense_mat()
     }
@@ -205,6 +233,34 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    /// Mixed mode is exactly "round in, f64 transform, round out": pinned
+    /// against that reference bitwise, and F64 mode is `apply_mat` itself.
+    #[test]
+    fn apply_mat_prec_matches_staging_reference() {
+        let mut rng = Rng::new(91);
+        let col: Vec<f64> = (0..33).map(|k| (-0.05 * k as f64).exp() * (1.0 + rng.uniform())).collect();
+        let op = ToeplitzOp::new(col);
+        let x = Mat::from_fn(33, 4, |_, _| rng.gaussian());
+        let f64_path = op.apply_mat_prec(&x, Precision::F64);
+        let plain = op.apply_mat(&x);
+        for (a, b) in f64_path.data.iter().zip(&plain.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let mixed = op.apply_mat_prec(&x, Precision::F32F64);
+        let staged = Mat {
+            rows: x.rows,
+            cols: x.cols,
+            data: x.data.iter().map(|&v| f64::from(v as f32)).collect(),
+        };
+        let mut want = op.apply_mat(&staged);
+        for v in want.data.iter_mut() {
+            *v = f64::from(*v as f32);
+        }
+        for (a, b) in mixed.data.iter().zip(&want.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

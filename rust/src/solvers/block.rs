@@ -22,6 +22,27 @@
 //! caps operator-level threading inside one group at the worker's share
 //! of the requested threads, so the two levels compose instead of
 //! multiplying.
+//!
+//! # Mixed precision as iterative refinement
+//!
+//! `CgOptions::precision = F32F64` routes the per-iteration block apply
+//! through [`LinOp::apply_mat_prec`], so the *search* runs on cheap
+//! reduced-precision MVMs — but the machinery that decides convergence is
+//! untouched: the batched true-residual confirmation and the warm-start
+//! residual go through [`LinOp::residual_mat`], which has **no precision
+//! knob** and always evaluates `B − A X` in full f64. When the (mixed)
+//! recurrence claims convergence but the f64 true residual disagrees, the
+//! existing drift-restart path re-seeds the recurrence from the f64 true
+//! residual and keeps iterating — that loop *is* iterative refinement
+//! (inner: low-precision CG steps; outer: f64 residual correction),
+//! bounded by `max_iters` like everything else. Consequences:
+//!
+//! * `converged == true` means `‖b − A x‖ ≤ tol · scale` **in f64**, in
+//!   both precision modes — mixed precision can cost extra refinement
+//!   restarts, never a falsely-converged answer;
+//! * `precision = F64` calls the same `apply_mat` the pre-knob engine
+//!   called (the trait routes `F64` straight there), so the default mode
+//!   stays bit-identical.
 
 use crate::linalg::dense::Mat;
 use crate::operators::LinOp;
@@ -290,9 +311,10 @@ fn solve_lockstep<O: LinOp + ?Sized>(
         if active.is_empty() {
             break;
         }
-        // One blocked apply over all still-active search directions.
+        // One blocked apply over all still-active search directions — in
+        // `opts.precision` (the only reduced-precision step in the loop).
         let pblk = assemble(&cols, &active, Field::P);
-        let apblk = op.apply_mat(&pblk);
+        let apblk = op.apply_mat_prec(&pblk, opts.precision);
         block_applies += 1;
 
         let mut next_active: Vec<usize> = Vec::new();
@@ -449,9 +471,11 @@ fn solve_lockstep_pc<O: LinOp + ?Sized>(
         if active.is_empty() {
             break;
         }
-        // One blocked operator apply over all still-active directions.
+        // One blocked operator apply over all still-active directions — in
+        // `opts.precision`; the P⁻¹ applies and the true-residual
+        // confirmations below stay f64.
         let pblk = assemble(&cols, &active, Field::P);
-        let apblk = op.apply_mat(&pblk);
+        let apblk = op.apply_mat_prec(&pblk, opts.precision);
         block_applies += 1;
 
         let mut cont: Vec<usize> = Vec::new();
@@ -796,6 +820,85 @@ mod tests {
             );
             assert_eq!(i1.mvms, it.mvms);
             assert_eq!(i1.block_applies, it.block_applies);
+        }
+    }
+
+    /// Mixed-precision refinement contract: with `precision = F32F64` the
+    /// inner applies are reduced-precision, but every column that reports
+    /// `converged` still satisfies `‖b − A x‖ ≤ tol · scale` measured in
+    /// **f64** — cold and warm, plain and preconditioned.
+    #[test]
+    fn mixed_precision_converged_means_f64_residual() {
+        use super::super::cg::residual_scale;
+        use crate::util::precision::Precision;
+        use crate::util::stats::norm2;
+        let n = 30;
+        let op = spd_op(n);
+        let b = rhs(n, 5);
+        let g = Mat::from_fn(n, 5, |i, j| ((i + 2 * j) % 9) as f64 * 0.04);
+        for x0 in [None, Some(&g)] {
+            let opts = CgOptions {
+                tol: 1e-8,
+                max_iters: 500,
+                block_size: 3,
+                precision: Precision::F32F64,
+                ..Default::default()
+            };
+            let (x, info) = cg_block(&op, &b, x0, &opts);
+            assert!(info.all_converged(), "warm={}: {:?}", x0.is_some(), info.cols);
+            for j in 0..5 {
+                let bj = b.col(j);
+                let mut ax = vec![0.0; n];
+                op.apply(&x.col(j), &mut ax);
+                let rtrue: Vec<f64> = (0..n).map(|i| bj[i] - ax[i]).collect();
+                let rel = norm2(&rtrue) / residual_scale(norm2(&bj));
+                assert!(rel <= opts.tol, "warm={} col {j}: f64 residual {rel}", x0.is_some());
+            }
+        }
+    }
+
+    /// Same contract through the preconditioned engine, and the F64 arm of
+    /// the knob stays bitwise the default path.
+    #[test]
+    fn mixed_precision_pcg_and_f64_identity() {
+        use super::super::cg::residual_scale;
+        use super::super::precond::{build_preconditioner, PrecondOptions};
+        use crate::kernels::{IsoKernel, Shape};
+        use crate::operators::DenseKernelOp;
+        use crate::util::precision::Precision;
+        use crate::util::rng::Rng;
+        use crate::util::stats::norm2;
+        let n = 28;
+        let mut rng = Rng::new(67);
+        let pts: Vec<Vec<f64>> =
+            (0..n).map(|_| vec![rng.uniform_in(0.0, 3.0)]).collect();
+        let op = DenseKernelOp::new(
+            pts,
+            Box::new(IsoKernel::new(Shape::Rbf, 1, 0.5, 1.0)),
+            0.1,
+        );
+        let pc = build_preconditioner(&op, PrecondOptions::rank(6)).unwrap();
+        let b = rhs(n, 4);
+        let base = CgOptions { tol: 1e-8, max_iters: 600, block_size: 2, ..Default::default() };
+        // F64 knob == default path, bit for bit.
+        let (xd, _) = pcg_block(&op, &b, None, Some(&pc), &base);
+        let f64_opts = CgOptions { precision: Precision::F64, ..base };
+        let (xf, _) = pcg_block(&op, &b, None, Some(&pc), &f64_opts);
+        assert_eq!(
+            xd.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            xf.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // Mixed: converged ⇒ f64 true residual within tol.
+        let opts = CgOptions { precision: Precision::F32F64, ..base };
+        let (x, info) = pcg_block(&op, &b, None, Some(&pc), &opts);
+        assert!(info.all_converged(), "{:?}", info.cols);
+        for j in 0..4 {
+            let bj = b.col(j);
+            let mut ax = vec![0.0; n];
+            op.apply(&x.col(j), &mut ax);
+            let rtrue: Vec<f64> = (0..n).map(|i| bj[i] - ax[i]).collect();
+            let rel = norm2(&rtrue) / residual_scale(norm2(&bj));
+            assert!(rel <= opts.tol, "col {j}: f64 residual {rel}");
         }
     }
 

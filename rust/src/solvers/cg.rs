@@ -45,6 +45,19 @@ pub struct CgOptions {
     /// (`GpRegression`, Laplace, DKL, the Hessian estimator) decide what
     /// to build. CLI: `--precond-rank`.
     pub precond: PrecondOptions,
+    /// MVM precision for the block engine's inner iterations
+    /// ([`super::block::cg_block`] / [`super::block::pcg_block`]):
+    /// `F32F64` runs the per-iteration block applies through
+    /// [`LinOp::apply_mat_prec`] and treats the solve as iterative
+    /// refinement — convergence is still only ever declared from the f64
+    /// true-residual confirmation, so `converged == true` keeps its
+    /// `‖b − A x‖ ≤ tol` (in f64) meaning in both modes. `F64` is
+    /// bit-identical to the pre-knob engine. The **scalar** paths in this
+    /// file always run f64 and ignore the field (one RHS is latency- not
+    /// bandwidth-bound, and the scalar path is the bitwise reference the
+    /// block engine is pinned against). Defaults to the process default
+    /// ([`crate::util::precision::default_precision`], CLI `--precision`).
+    pub precision: crate::util::precision::Precision,
 }
 
 impl Default for CgOptions {
@@ -55,6 +68,7 @@ impl Default for CgOptions {
             block_size: super::default_cg_block_size(),
             threads: crate::util::parallel::default_threads(),
             precond: PrecondOptions::default(),
+            precision: crate::util::precision::default_precision(),
         }
     }
 }

@@ -77,6 +77,32 @@
 //!   CLI `--precond-rank`, process default [`default_precond_rank`])
 //!   tells the entry points that own a kernel operator what rank to build;
 //!   the built [`precond::Preconditioner`] is then passed down explicitly.
+//!
+//! # Precision contract
+//!
+//! The block engine owns the mixed-precision story
+//! ([`cg::CgOptions::precision`], CLI `--precision`, process default
+//! [`crate::util::precision::default_precision`]):
+//!
+//! * **`F64` is bit-identical to the pre-knob engine.** Every operator's
+//!   `apply_mat_prec(x, F64)` IS `apply_mat(x)`, so a solve with
+//!   `precision: F64` produces bitwise the same iterates, counters, and
+//!   convergence flags as before the knob existed (proptest-pinned).
+//! * **`F32F64` is iterative refinement, not a weaker solve.** Inner
+//!   lockstep iterations drive the recurrence with the operator's mixed
+//!   apply (f32 storage panels, f64 accumulators — see
+//!   [`crate::operators`]); the periodic true-residual confirmation and
+//!   any drift restart always recompute `‖b − A x‖` with the full f64
+//!   operator (`residual_mat` deliberately has no precision knob). The
+//!   restart re-seeds the recurrence from the f64 true residual, which is
+//!   exactly a refinement cycle: each one contracts the true residual by
+//!   roughly `eps_f32 · κ(A)` until the f64 tolerance is met or
+//!   `max_iters` runs out.
+//! * **`converged == true` means the f64 residual test passed** —
+//!   `‖b − A x‖ ≤ tol · scale` evaluated in full f64 — in *both* modes.
+//!   Mixed mode may spend extra iterations (refinement restarts); it never
+//!   weakens what convergence asserts. Scalar entry points ignore the
+//!   field entirely (always f64) and remain the bitwise reference.
 pub mod block;
 pub mod cg;
 pub mod precond;

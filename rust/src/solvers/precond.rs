@@ -278,6 +278,16 @@ impl<O: LinOp + ?Sized> LinOp for PreconditionedOp<'_, O> {
         let t = self.op.apply_mat(&s);
         self.pc.apply_inv_sqrt_mat(&t)
     }
+    /// Precision reaches only the wrapped operator's apply — the low-rank
+    /// `P^{-1/2}` algebra on both sides stays f64 (it is a small-rank
+    /// product, not the bandwidth-bound part). F64 forwards to `apply_mat`
+    /// of the inner op, keeping the F64 arm bit-identical.
+    fn apply_mat_prec(&self, x: &Mat, prec: crate::util::precision::Precision) -> Mat {
+        assert_eq!(x.rows, self.n());
+        let s = self.pc.apply_inv_sqrt_mat(x);
+        let t = self.op.apply_mat_prec(&s, prec);
+        self.pc.apply_inv_sqrt_mat(&t)
+    }
 }
 
 #[cfg(test)]

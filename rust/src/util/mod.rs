@@ -1,7 +1,8 @@
 //! Shared utilities: RNG, parallel helpers, statistics, bench harness,
-//! column-block partitioning.
+//! column-block partitioning, precision mode.
 pub mod bench;
 pub mod blocks;
 pub mod parallel;
+pub mod precision;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,144 @@
+//! Process-wide precision mode for the MVM hot paths.
+//!
+//! # The precision contract
+//!
+//! Every estimator in the paper reduces log-determinant and derivative
+//! cost to fast MVMs, and those MVMs are bandwidth-bound: an f32 storage
+//! panel halves the bytes the dense GEMM, CSR sweep, and FFT staging move
+//! per apply. [`Precision`] selects between:
+//!
+//! * [`Precision::F64`] — every apply path is **bit-identical** to the
+//!   historical f64-only code. This is not "approximately equal": the
+//!   `F64` arm of every `apply_mat_prec` implementation calls the same
+//!   `apply_mat` code that existed before the knob, so proptests pin the
+//!   equality bitwise.
+//! * [`Precision::F32F64`] — operator *storage* panels (the dense kernel
+//!   matrix, CSR interpolation weights, FFT input/output staging) are
+//!   read as f32 while every **accumulation stays f64**. Solver
+//!   convergence is still only ever declared from the f64 true-residual
+//!   confirmation (`solvers::block`), so `converged == true` keeps its
+//!   f64 meaning under iterative refinement.
+//!
+//! The process default mirrors `--threads` / `--cg-block`: the CLI's
+//! `--precision` flag calls [`set_default_precision`], and
+//! `CgOptions::default` / `SlqOptions::default` / `ChebOptions::default`
+//! read [`default_precision`].
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Precision mode for blocked operator applies (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// Full f64 storage and arithmetic — bit-identical to the pre-knob
+    /// code paths.
+    F64,
+    /// f32 storage panels with f64 accumulators; solves stay correct to
+    /// f64 tolerance via iterative refinement.
+    F32F64,
+}
+
+impl Precision {
+    /// Parse the CLI spelling (`"f64"` / `"f32f64"`).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f64" => Some(Precision::F64),
+            "f32f64" => Some(Precision::F32F64),
+            _ => None,
+        }
+    }
+
+    /// The CLI spelling (inverse of [`Precision::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32F64 => "f32f64",
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Process-wide default precision; 0 = F64 (the initial state), 1 = F32F64.
+static DEFAULT_PRECISION: AtomicU8 = AtomicU8::new(0);
+
+/// Set the process-wide default precision used by [`default_precision`]
+/// (and therefore by `CgOptions::default`, `SlqOptions::default`,
+/// `ChebOptions::default`). The CLI `--precision` flag threads through
+/// here, mirroring `parallel::set_default_threads`.
+pub fn set_default_precision(p: Precision) {
+    let v = match p {
+        Precision::F64 => 0,
+        Precision::F32F64 => 1,
+    };
+    DEFAULT_PRECISION.store(v, Ordering::Relaxed);
+}
+
+/// The process-wide default precision (initially [`Precision::F64`], so
+/// every path is bit-identical to the historical code until someone opts
+/// into mixed precision).
+pub fn default_precision() -> Precision {
+    match DEFAULT_PRECISION.load(Ordering::Relaxed) {
+        0 => Precision::F64,
+        _ => Precision::F32F64,
+    }
+}
+
+/// Run `f` with the process-wide default pinned to `p`, restoring the
+/// previous setting afterwards — on panic too (drop guard). Benches use
+/// this for controlled f64-vs-f32f64 sweeps, like
+/// `parallel::with_default_threads`.
+pub fn with_default_precision<R>(p: Precision, f: impl FnOnce() -> R) -> R {
+    struct Restore(Precision);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            set_default_precision(self.0);
+        }
+    }
+    let _restore = Restore(default_precision());
+    set_default_precision(p);
+    f()
+}
+
+/// Serializes tests that mutate the process-wide precision default — they
+/// assert on the value they just set, so concurrent test threads must not
+/// interleave between set and read.
+#[cfg(test)]
+pub(crate) static TEST_DEFAULT_PRECISION_LOCK: std::sync::Mutex<()> =
+    std::sync::Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_and_rejects_garbage() {
+        assert_eq!(Precision::parse("f64"), Some(Precision::F64));
+        assert_eq!(Precision::parse("f32f64"), Some(Precision::F32F64));
+        assert_eq!(Precision::parse("f32"), None);
+        assert_eq!(Precision::parse("mixed"), None);
+        assert_eq!(Precision::parse(""), None);
+        for p in [Precision::F64, Precision::F32F64] {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+            assert_eq!(format!("{p}"), p.name());
+        }
+    }
+
+    #[test]
+    fn default_honors_process_override_and_restores() {
+        let _guard =
+            TEST_DEFAULT_PRECISION_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let before = default_precision();
+        with_default_precision(Precision::F32F64, || {
+            assert_eq!(default_precision(), Precision::F32F64);
+            with_default_precision(Precision::F64, || {
+                assert_eq!(default_precision(), Precision::F64);
+            });
+            assert_eq!(default_precision(), Precision::F32F64);
+        });
+        assert_eq!(default_precision(), before);
+    }
+}

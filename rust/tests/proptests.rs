@@ -15,6 +15,7 @@ use gpsld::operators::toeplitz::ToeplitzOp;
 use gpsld::operators::{
     DenseKernelOp, DenseMatOp, FitcOp, KernelOp, KronFactor, KronOp, LinOp, SkiOp, SumKernelOp,
 };
+use gpsld::util::precision::Precision;
 use gpsld::util::rng::Rng;
 
 const SHAPES: [Shape; 4] = [Shape::Rbf, Shape::Matern12, Shape::Matern32, Shape::Matern52];
@@ -1109,6 +1110,288 @@ fn prop_preconditioned_slq_matches_exact_logdet() {
             est.value,
             est.std_err
         );
+    }
+}
+
+/// Builds one instance of every operator type (n = 24 throughout) and
+/// hands each to `f` — the shared fixture for the precision-contract
+/// properties below, covering both operators with dedicated f32 panels
+/// (dense, CSR/SKI, Toeplitz staging, sums, the shifted/Laplace/
+/// preconditioned wrappers that forward the knob) and operators that
+/// fall through to the exact-f64 trait default (FITC, grid Kron kernel).
+fn for_each_precision_op(f: &mut dyn FnMut(&str, &dyn LinOp)) {
+    use gpsld::solvers::{build_preconditioner, PrecondOptions, PreconditionedOp};
+    let mut rng = Rng::new(2100);
+    let n = 24;
+    let pts1: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform_in(0.0, 2.0)]).collect();
+    let pts2: Vec<Vec<f64>> =
+        (0..n).map(|_| vec![rng.uniform(), rng.uniform()]).collect();
+
+    let dense = DenseKernelOp::new(
+        pts1.clone(),
+        Box::new(IsoKernel::new(Shape::Matern32, 1, 0.4, 1.1)),
+        0.2,
+    );
+    f("dense_kernel", &dense);
+
+    let mut a = Mat::from_fn(n, n, |_, _| rng.gaussian());
+    a.symmetrize();
+    a.add_diag(n as f64);
+    let dmat = DenseMatOp::new(a);
+    f("dense_mat", &dmat);
+
+    let col: Vec<f64> =
+        (0..n).map(|k| (1.5 + rng.uniform()) * (-0.1 * k as f64).exp()).collect();
+    let top = ToeplitzOp::new(col);
+    f("toeplitz", &top);
+    let shifted = gpsld::operators::ShiftedOp { inner: &top, shift: 1.0 };
+    f("toeplitz_shifted", &shifted);
+
+    let mut ka = Mat::from_fn(2, 2, |_, _| rng.gaussian());
+    ka.symmetrize();
+    ka.add_diag(2.0);
+    let mut kc = Mat::from_fn(3, 3, |_, _| rng.gaussian());
+    kc.symmetrize();
+    kc.add_diag(3.0);
+    let kron = KronOp::new(
+        vec![
+            KronFactor::Dense(ka),
+            KronFactor::Toeplitz(ToeplitzOp::new(vec![2.0, 0.8, 0.1, 0.02])),
+            KronFactor::Dense(kc),
+        ],
+        1.3,
+    );
+    f("kron", &kron);
+
+    for diag_corr in [false, true] {
+        let grid = Grid::new(vec![GridDim { lo: -0.1, hi: 2.1, m: 16 }]);
+        let ski = SkiOp::new(
+            &pts1,
+            grid,
+            SeparableKernel::iso(Shape::Rbf, 1, 0.3, 1.0),
+            0.2,
+            InterpOrder::Cubic,
+            diag_corr,
+        );
+        f(if diag_corr { "ski_diag" } else { "ski" }, &ski);
+    }
+
+    let grid2 = Grid::new(vec![
+        GridDim { lo: 0.0, hi: 1.0, m: 6 },
+        GridDim { lo: 0.0, hi: 1.0, m: 4 },
+    ]);
+    let kk = KronKernelOp::new(grid2, SeparableKernel::iso(Shape::Matern52, 2, 0.5, 0.9), 0.15);
+    f("kron_kernel", &kk);
+
+    for fitc in [false, true] {
+        let ind: Vec<Vec<f64>> = (0..6).map(|i| vec![2.0 * i as f64 / 5.0]).collect();
+        let op = FitcOp::new(
+            pts1.clone(),
+            ind,
+            Box::new(IsoKernel::new(Shape::Rbf, 1, 0.5, 1.0)),
+            0.3,
+            fitc,
+        )
+        .unwrap();
+        f(if fitc { "fitc" } else { "sor" }, &op);
+    }
+
+    let p1 = DenseKernelOp::new(
+        pts2.clone(),
+        Box::new(IsoKernel::new(Shape::Rbf, 2, 0.5, 1.0)),
+        1.0,
+    );
+    let p2 = DenseKernelOp::new(
+        pts2.clone(),
+        Box::new(IsoKernel::new(Shape::Matern12, 2, 0.8, 0.6)),
+        1.0,
+    );
+    let sum = SumKernelOp::new(vec![Box::new(p1), Box::new(p2)], 0.4);
+    f("sum", &sum);
+
+    let w: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+    let lb = gpsld::operators::LaplaceBOp::new(&dense, &w);
+    f("laplace_b", &lb);
+
+    let pc = build_preconditioner(&dense, PrecondOptions::rank(6)).unwrap();
+    let pop = PreconditionedOp::new(&dense, &pc);
+    f("preconditioned_split", &pop);
+}
+
+/// Property (precision contract, F64 arm): `apply_mat_prec(x, F64)` is
+/// bit-identical to `apply_mat(x)` for every operator type at block
+/// widths 1 and 8, and a block solve with `precision: F64` pinned
+/// explicitly is bit-identical — solutions, per-column statistics, MVM
+/// accounting — to one using the defaulted options. Threading the
+/// precision knob through must leave the f64 paths untouched.
+#[test]
+fn prop_precision_f64_identity_all_ops() {
+    use gpsld::solvers::{cg_block, CgOptions};
+    for_each_precision_op(&mut |name, op| {
+        let n = op.n();
+        let mut rng = Rng::new(2200);
+        for bcols in [1usize, 8] {
+            let x = Mat::from_fn(n, bcols, |_, _| rng.gaussian());
+            let y = op.apply_mat(&x);
+            let yp = op.apply_mat_prec(&x, Precision::F64);
+            assert_eq!((yp.rows, yp.cols), (y.rows, y.cols), "{name} b={bcols} shape");
+            for (a, c) in y.data.iter().zip(&yp.data) {
+                assert_eq!(a.to_bits(), c.to_bits(), "{name} b={bcols}: {a} vs {c}");
+            }
+        }
+        let b = Mat::from_fn(n, 3, |_, _| rng.gaussian());
+        let base = CgOptions { tol: 1e-9, max_iters: 200, block_size: 2, ..Default::default() };
+        let pinned = CgOptions {
+            tol: 1e-9,
+            max_iters: 200,
+            block_size: 2,
+            precision: Precision::F64,
+            ..Default::default()
+        };
+        let (x1, i1) = cg_block(op, &b, None, &base);
+        let (x2, i2) = cg_block(op, &b, None, &pinned);
+        for (a, c) in x1.data.iter().zip(&x2.data) {
+            assert_eq!(a.to_bits(), c.to_bits(), "{name} solve: {a} vs {c}");
+        }
+        assert_eq!(i1.mvms, i2.mvms, "{name} solve mvms");
+        assert_eq!(i1.block_applies, i2.block_applies, "{name} solve applies");
+        for (j, (a, c)) in i1.cols.iter().zip(&i2.cols).enumerate() {
+            assert_eq!(a.iters, c.iters, "{name} solve col {j} iters");
+            assert_eq!(a.converged, c.converged, "{name} solve col {j} converged");
+            assert_eq!(a.residual.to_bits(), c.residual.to_bits(), "{name} solve col {j}");
+        }
+    });
+}
+
+/// Property (precision contract, mixed arm): the F32F64 apply differs
+/// from f64 by at most a forward-error bound scaled like
+/// `eps_f32 · (‖x‖₁ + ‖y‖∞)` — the only loss is one f32 storage rounding
+/// per operator entry (or per staged value), accumulated in f64. Ops
+/// without an f32 panel fall through to exact f64 (zero difference,
+/// which the bound also accepts); for the dense panels the difference
+/// must be *nonzero*, proving the knob actually reaches storage.
+#[test]
+fn prop_precision_mixed_apply_error_bound() {
+    let eps32 = f64::from(f32::EPSILON);
+    for_each_precision_op(&mut |name, op| {
+        let n = op.n();
+        let mut rng = Rng::new(2300);
+        for bcols in [1usize, 8] {
+            let x = Mat::from_fn(n, bcols, |_, _| rng.gaussian());
+            let y = op.apply_mat(&x);
+            let ym = op.apply_mat_prec(&x, Precision::F32F64);
+            assert_eq!((ym.rows, ym.cols), (y.rows, y.cols), "{name} b={bcols} shape");
+            let mut max_diff = 0.0f64;
+            for j in 0..bcols {
+                let x_l1: f64 = (0..n).map(|i| x[(i, j)].abs()).sum();
+                let y_inf: f64 = (0..n).map(|i| y[(i, j)].abs()).fold(0.0, f64::max);
+                let tol = 64.0 * eps32 * (1.0 + x_l1 + y_inf);
+                for i in 0..n {
+                    let d = (ym[(i, j)] - y[(i, j)]).abs();
+                    max_diff = max_diff.max(d);
+                    assert!(
+                        d <= tol,
+                        "{name} b={bcols} ({i},{j}): |{} - {}| = {d} > {tol}",
+                        ym[(i, j)],
+                        y[(i, j)]
+                    );
+                }
+            }
+            if bcols == 8 && (name == "dense_kernel" || name == "dense_mat") {
+                assert!(max_diff > 0.0, "{name}: mixed apply identical to f64 — knob inert");
+            }
+        }
+    });
+}
+
+/// Property (precision contract, refinement arm): a block solve in
+/// F32F64 mode that reports `converged` meets the *f64* tolerance — the
+/// recomputed full-precision true residual honors `tol` — for dense,
+/// Toeplitz, SKI, and sum operators, cold and warm-started, CG and PCG.
+/// Mixed inner iterations plus f64 confirmation/restart (iterative
+/// refinement) must never weaken what convergence asserts.
+#[test]
+fn prop_precision_refinement_meets_f64_tol() {
+    use gpsld::solvers::{
+        build_preconditioner, cg_block, pcg_block, CgOptions, PrecondOptions, Preconditioner,
+    };
+    use gpsld::util::stats::norm2;
+    let mut rng = Rng::new(2400);
+    let n = 24;
+    let k = 4;
+    let pts: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform_in(0.0, 2.0)]).collect();
+    let b = Mat::from_fn(n, k, |_, _| rng.gaussian());
+    let x0 = Mat::from_fn(n, k, |_, _| 0.3 * rng.gaussian());
+    let opts = CgOptions {
+        tol: 1e-8,
+        max_iters: 800,
+        block_size: 2,
+        precision: Precision::F32F64,
+        ..Default::default()
+    };
+    let check = |name: &str, op: &dyn LinOp, x: &Mat, info: &gpsld::solvers::BlockCgInfo| {
+        for j in 0..k {
+            assert!(info.cols[j].converged, "{name} col {j} failed to converge");
+            let ax = op.apply_vec(&x.col(j));
+            let bj = b.col(j);
+            let rtrue: Vec<f64> = (0..n).map(|i| bj[i] - ax[i]).collect();
+            let rel = norm2(&rtrue) / norm2(&bj);
+            assert!(
+                rel <= opts.tol * (1.0 + 1e-12),
+                "{name} col {j}: converged in mixed mode but f64 residual {rel}"
+            );
+        }
+    };
+
+    let dense = DenseKernelOp::new(
+        pts.clone(),
+        Box::new(IsoKernel::new(Shape::Matern32, 1, 0.4, 1.1)),
+        0.3,
+    );
+    let col: Vec<f64> =
+        (0..n).map(|j| (1.5 + rng.uniform()) * (-0.1 * j as f64).exp()).collect();
+    let top = ToeplitzOp::new(col);
+    let shifted = gpsld::operators::ShiftedOp { inner: &top, shift: 1.0 };
+    let grid = Grid::new(vec![GridDim { lo: -0.1, hi: 2.1, m: 16 }]);
+    let ski = SkiOp::new(
+        &pts,
+        grid,
+        SeparableKernel::iso(Shape::Rbf, 1, 0.3, 1.0),
+        0.2,
+        InterpOrder::Cubic,
+        false,
+    );
+    let s1 = DenseKernelOp::new(
+        pts.clone(),
+        Box::new(IsoKernel::new(Shape::Rbf, 1, 0.5, 1.0)),
+        1.0,
+    );
+    let s2 = DenseKernelOp::new(
+        pts.clone(),
+        Box::new(IsoKernel::new(Shape::Matern12, 1, 0.8, 0.6)),
+        1.0,
+    );
+    let sum = SumKernelOp::new(vec![Box::new(s1), Box::new(s2)], 0.4);
+
+    for (name, op) in [
+        ("dense_kernel", &dense as &dyn LinOp),
+        ("toeplitz_shifted", &shifted),
+        ("ski", &ski),
+        ("sum", &sum),
+    ] {
+        for (warm, guess) in [("cold", None), ("warm", Some(&x0))] {
+            let (x, info) = cg_block(op, &b, guess, &opts);
+            check(&format!("{name}_{warm}"), op, &x, &info);
+        }
+    }
+
+    // PCG: mixed inner applies on the preconditioned system, convergence
+    // still declared on the unpreconditioned f64 residual.
+    let pc = build_preconditioner(&dense, PrecondOptions::rank(6)).unwrap();
+    for (warm, guess) in [("cold", None), ("warm", Some(&x0))] {
+        let (x, info) =
+            pcg_block(&dense, &b, guess, Some(&pc as &dyn Preconditioner), &opts);
+        check(&format!("dense_pcg_{warm}"), &dense, &x, &info);
     }
 }
 

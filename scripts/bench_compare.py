@@ -1,21 +1,36 @@
 #!/usr/bin/env python3
 """Diff two BENCH_*.json runs and fail loudly on regressions.
 
-Usage: bench_compare.py PREV.json CURRENT.json [--threshold 0.20]
+Usage: bench_compare.py PREV.json CURRENT.json [--threshold 0.20] [--min-ns 50]
+       bench_compare.py --self-test
 
 Rows are JSON objects; the identity of a row is every non-metric field
-(op, n, b, rhs, block, threads, sigma, rank, ...), and the compared
-metrics are the timing fields (ns_per_apply / ns_per_solve_col — lower is
-better) plus the work counters (mvms / block_applies / cg_iters /
+(op, n, b, rhs, block, threads, precision, sigma, rank, ...), and the
+compared metrics are the timing fields (ns_per_apply / ns_per_solve_col —
+lower is better) plus the work counters (mvms / block_applies / cg_iters /
 lanczos_steps — lower is better, and far less noisy than wall time). In
-particular `threads` is an identity field, NOT a metric: the single- and
-multi-thread rows of the 1-vs-N sweep are gated separately, so a
-multi-thread speedup can never mask (or be mistaken for) a single-thread
-regression. A current row whose metric exceeds the previous run's by more
+particular `threads` and `precision` are identity fields, NOT metrics:
+the single- and multi-thread rows of the 1-vs-N sweep (and the f64 vs
+f32f64 rows of the precision sweep) are gated separately, so a speedup on
+one configuration can never mask (or be mistaken for) a regression on
+another. A current row whose metric exceeds the previous run's by more
 than the threshold fraction is a regression; the script prints every
 regression and exits 2 so CI and scripts/bench_smoke.sh stop on it. Rows
 present in only one run are reported but not fatal (sweeps grow over
 time).
+
+TIMING metrics additionally honor a minimum-time floor (`--min-ns`,
+default 50 ns): when the absolute rise `new - old` is under the floor,
+the relative gate does not fire. Sub-floor rows time single cheap
+operations where a fixed scheduling/allocator hiccup of a few dozen ns
+easily exceeds 20% *relatively* while meaning nothing — the floor keeps
+the gate sharp on the rows where 20% is real work. Counters are exact and
+get no floor.
+
+`--self-test` runs the built-in unit checks (row identity, both gate
+directions, the floor, the zero-baseline and no-matching-rows paths) and
+exits 0/1 — invoked by scripts/bench_smoke.sh before any real gating so a
+broken comparator fails the smoke run instead of green-lighting it.
 """
 
 import json
@@ -56,29 +71,13 @@ def fmt_key(key):
     return " ".join(f"{k}={v}" for k, v in key)
 
 
-def main(argv):
-    threshold = 0.20
-    args = []
-    i = 0
-    while i < len(argv):
-        a = argv[i]
-        if a == "--threshold" or a.startswith("--threshold="):
-            if "=" in a:
-                threshold = float(a.split("=", 1)[1])
-            elif i + 1 < len(argv):
-                threshold = float(argv[i + 1])
-                i += 1
-            else:
-                sys.exit(f"bench_compare: --threshold needs a value\n{__doc__}")
-        elif a.startswith("--"):
-            sys.exit(f"bench_compare: unknown flag {a}\n{__doc__}")
-        else:
-            args.append(a)
-        i += 1
-    if len(args) != 2:
-        sys.exit(__doc__)
-    prev, cur = load(args[0]), load(args[1])
+def compare(prev, cur, threshold, min_ns):
+    """Gate `cur` rows against `prev`; pure so --self-test can drive it.
 
+    Returns (regressions, improvements, matched): the regression message
+    list, the count of metrics that improved past the threshold, and the
+    number of current rows that had a baseline row to compare against.
+    """
     regressions = []
     improvements = 0
     matched = 0
@@ -97,12 +96,20 @@ def main(argv):
             if old == 0:
                 # A zero baseline must not disable the gate: any rise from
                 # exactly 0 (e.g. a trivially-converged count) is flagged.
-                if new > 0:
+                # Counters only — a timing rise from 0 under the ns floor
+                # is the same sub-resolution noise the floor exists for.
+                if new > 0 and not (metric in TIMING_METRICS and new < min_ns):
                     regressions.append(
                         f"  {fmt_key(key)}: {metric} rose from 0 -> {new:g}"
                     )
                 continue
             rel = (new - old) / old
+            if metric in TIMING_METRICS and abs(new - old) < min_ns:
+                # Sub-floor absolute move: too small to distinguish from
+                # scheduler/allocator jitter on cheap rows, never a
+                # regression no matter how large relatively — and a
+                # sub-floor drop likewise doesn't count as an improvement.
+                continue
             if rel > threshold:
                 regressions.append(
                     f"  {fmt_key(key)}: {metric} {old:g} -> {new:g} (+{100 * rel:.1f}%)"
@@ -120,6 +127,44 @@ def main(argv):
     for key in prev:
         if key not in cur:
             print(f"bench_compare: row disappeared from current run: {fmt_key(key)}")
+    return regressions, improvements, matched
+
+
+def main(argv):
+    threshold = 0.20
+    min_ns = 50.0
+    args = []
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "--self-test":
+            sys.exit(self_test())
+        elif a == "--threshold" or a.startswith("--threshold="):
+            if "=" in a:
+                threshold = float(a.split("=", 1)[1])
+            elif i + 1 < len(argv):
+                threshold = float(argv[i + 1])
+                i += 1
+            else:
+                sys.exit(f"bench_compare: --threshold needs a value\n{__doc__}")
+        elif a == "--min-ns" or a.startswith("--min-ns="):
+            if "=" in a:
+                min_ns = float(a.split("=", 1)[1])
+            elif i + 1 < len(argv):
+                min_ns = float(argv[i + 1])
+                i += 1
+            else:
+                sys.exit(f"bench_compare: --min-ns needs a value\n{__doc__}")
+        elif a.startswith("--"):
+            sys.exit(f"bench_compare: unknown flag {a}\n{__doc__}")
+        else:
+            args.append(a)
+        i += 1
+    if len(args) != 2:
+        sys.exit(__doc__)
+    prev, cur = load(args[0]), load(args[1])
+
+    regressions, improvements, matched = compare(prev, cur, threshold, min_ns)
 
     if prev and matched == 0:
         # A schema change (new identity field) makes every row "new" — and
@@ -152,6 +197,128 @@ def main(argv):
         f"bench_compare: OK — {len(cur)} rows vs {args[0]}, "
         f"{improvements} improvement(s), no regression over {100 * threshold:.0f}%"
     )
+
+
+def self_test():
+    """Unit checks over `compare` with synthetic rows; 0 on pass.
+
+    Covers exactly the properties bench_smoke.sh relies on: identity
+    separation (threads/precision), both gate directions, the timing
+    floor, counter exactness, the converged drop, the zero baseline, and
+    the matched==0 schema-change signal.
+    """
+
+    def rows(*rws):
+        return {row_key(r): r for r in rws}
+
+    checks = 0
+
+    # Identity: threads and precision split rows; a fast f32f64 row must
+    # not be matched against (and so can't mask) a slow f64 row.
+    base = {"op": "dense", "n": 512, "b": 8, "threads": 1, "precision": "f64"}
+    other = dict(base, precision="f32f64")
+    assert row_key(base) != row_key(other)
+    _, _, matched = compare(
+        rows(dict(base, ns_per_apply=1000.0)),
+        rows(dict(other, ns_per_apply=100.0)),
+        0.20,
+        50.0,
+    )
+    assert matched == 0
+    checks += 1
+
+    # Timing regression above threshold AND above the ns floor fires.
+    reg, imp, matched = compare(
+        rows(dict(base, ns_per_apply=1000.0)),
+        rows(dict(base, ns_per_apply=1400.0)),
+        0.20,
+        50.0,
+    )
+    assert matched == 1 and len(reg) == 1 and imp == 0, reg
+    checks += 1
+
+    # Same 40% relative rise, but 12 ns absolute: under the floor, quiet.
+    reg, imp, _ = compare(
+        rows(dict(base, ns_per_apply=30.0)),
+        rows(dict(base, ns_per_apply=42.0)),
+        0.20,
+        50.0,
+    )
+    assert reg == [] and imp == 0, reg
+    checks += 1
+
+    # ... and with the floor disabled the same rise fires again.
+    reg, _, _ = compare(
+        rows(dict(base, ns_per_apply=30.0)),
+        rows(dict(base, ns_per_apply=42.0)),
+        0.20,
+        0.0,
+    )
+    assert len(reg) == 1, reg
+    checks += 1
+
+    # A real improvement (past threshold and floor) is counted, not flagged.
+    reg, imp, _ = compare(
+        rows(dict(base, ns_per_apply=1000.0)),
+        rows(dict(base, ns_per_apply=600.0)),
+        0.20,
+        50.0,
+    )
+    assert reg == [] and imp == 1
+    checks += 1
+
+    # Counters are exact: no floor, a 25% iteration-count rise fires even
+    # though the absolute rise (2) is tiny.
+    reg, _, _ = compare(
+        rows(dict(base, cg_iters=8)),
+        rows(dict(base, cg_iters=10)),
+        0.20,
+        50.0,
+    )
+    assert len(reg) == 1, reg
+    checks += 1
+
+    # converged is higher-better and exact: any drop fires.
+    reg, _, _ = compare(
+        rows(dict(base, converged=1)),
+        rows(dict(base, converged=0)),
+        0.20,
+        50.0,
+    )
+    assert len(reg) == 1, reg
+    checks += 1
+
+    # Zero baseline: a counter rising from exactly 0 fires; a timing
+    # metric rising from 0 to under the floor stays quiet.
+    reg, _, _ = compare(
+        rows(dict(base, cg_iters=0)),
+        rows(dict(base, cg_iters=1)),
+        0.20,
+        50.0,
+    )
+    assert len(reg) == 1, reg
+    reg, _, _ = compare(
+        rows(dict(base, ns_per_apply=0.0)),
+        rows(dict(base, ns_per_apply=20.0)),
+        0.20,
+        50.0,
+    )
+    assert reg == [], reg
+    checks += 1
+
+    # Schema change (new identity field on every row) -> matched == 0,
+    # which main() turns into the explicit re-baseline error.
+    _, _, matched = compare(
+        rows(dict(base, ns_per_apply=1000.0)),
+        rows(dict(base, new_field="x", ns_per_apply=1000.0)),
+        0.20,
+        50.0,
+    )
+    assert matched == 0
+    checks += 1
+
+    print(f"bench_compare: self-test OK ({checks} checks)")
+    return 0
 
 
 if __name__ == "__main__":

@@ -13,14 +13,21 @@
 # When a previous BENCH_*.json exists it is rotated to BENCH_*.prev.json
 # and diffed against the fresh run with scripts/bench_compare.py, which
 # fails loudly (exit 2) on >20% regressions in timing or iteration/MVM
-# counts — or when ZERO rows match the baseline (a row-identity schema
-# change, e.g. this PR adding the threads/block columns, must be
-# re-baselined deliberately, not rotated in on a vacuously green run).
+# counts (timing rises under the 50 ns absolute floor are jitter, not
+# regressions — see --min-ns in bench_compare.py) — or when ZERO rows
+# match the baseline (a row-identity schema change must be re-baselined
+# deliberately, not rotated in on a vacuously green run; the `precision`
+# identity column added by the mixed-precision PR needs
+# BENCH_SKIP_COMPARE="BENCH_mvm BENCH_cg" exactly once).
 # Set BENCH_SKIP_COMPARE=1 to suppress the gate for ALL files (e.g. when
 # moving between machines, where wall-clock baselines are meaningless), or
 # to a space-separated list of file stems (BENCH_SKIP_COMPARE="BENCH_cg
 # BENCH_precond") to re-baseline only the files whose schema changed while
 # the others stay gated.
+#
+# The comparator's own unit checks (scripts/bench_compare.py --self-test)
+# run before anything is benched: a broken gate must fail the smoke run,
+# not wave a regression through.
 #
 # Usage: scripts/bench_smoke.sh [mvm_output.json] [cg_output.json] [precond_output.json]
 set -euo pipefail
@@ -29,6 +36,9 @@ repo_root="$(cd "$(dirname "$0")/.." && pwd)"
 out_mvm="${1:-$repo_root/BENCH_mvm.json}"
 out_cg="${2:-$repo_root/BENCH_cg.json}"
 out_precond="${3:-$repo_root/BENCH_precond.json}"
+
+# Prove the gate itself works before trusting it with real rows.
+python3 "$repo_root/scripts/bench_compare.py" --self-test
 
 # Write the fresh run to .new files first, gate it against the current
 # baselines, and only rotate once everything passed — neither a failed
