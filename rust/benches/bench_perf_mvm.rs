@@ -41,10 +41,21 @@
 //! threading), block 2 the 4-group RHS fan-out, and threads 1 each
 //! block's serial baseline, so the iteration-count and wall-clock
 //! reductions are measured rather than asserted.
+//!
+//! `--json-conf` runs the confidence/adaptive-budget sweep (tolerance × σ
+//! on the same ill-conditioned dense RBF kernel) and writes `{op, n,
+//! sigma, tol, probes_used, steps_used, interval_width, calibrated,
+//! ns_per_estimate}` per case — tol 0 is the fixed-budget baseline,
+//! `probes_used` of an adaptive row must stay at or below it
+//! (lower-is-better in the gate), and `calibrated` is 1 iff the 95%
+//! interval contains the exact log determinant (a calibration regression
+//! fails the gate loudly).
 
 use std::time::Instant;
 
-use gpsld::coordinator::figures::{precond_sweep, PrecondSweepRow, SWEEP_THREADS};
+use gpsld::coordinator::figures::{
+    conf_sweep, precond_sweep, ConfSweepRow, PrecondSweepRow, SWEEP_THREADS,
+};
 use gpsld::coordinator::{cli, Scale};
 use gpsld::data;
 use gpsld::estimators::chebyshev::{chebyshev_logdet, ChebOptions};
@@ -363,6 +374,22 @@ fn write_precond_json(rows: &[PrecondSweepRow], path: &str) {
     write_rows_json(path, &formatted);
 }
 
+/// Serialize the shared confidence sweep rows (see
+/// `gpsld::coordinator::figures::conf_sweep` — the metric definitions
+/// live there, next to the CLI perf table that prints the same sweep).
+fn write_conf_json(rows: &[ConfSweepRow], path: &str) {
+    let formatted: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"op\": \"{}\", \"n\": {}, \"sigma\": {}, \"tol\": {}, \"probes_used\": {}, \"steps_used\": {}, \"interval_width\": {:.6}, \"calibrated\": {}, \"ns_per_estimate\": {:.1}}}",
+                r.op, r.n, r.sigma, r.tol, r.probes_used, r.steps_used, r.interval_width, r.calibrated, r.ns_per_estimate
+            )
+        })
+        .collect();
+    write_rows_json(path, &formatted);
+}
+
 fn write_cg_json(rows: &[CgSweepRow], path: &str) {
     let formatted: Vec<String> = rows
         .iter()
@@ -393,6 +420,7 @@ fn run_smoke(
     json_path: Option<&str>,
     json_cg_path: Option<&str>,
     json_precond_path: Option<&str>,
+    json_conf_path: Option<&str>,
 ) {
     let rows = block_sweep(&[1000, 4000], &[1, 8, 32]);
     println!(
@@ -447,6 +475,23 @@ fn run_smoke(
             write_precond_json(&pc_rows, path);
         }
     }
+    if json_conf_path.is_some() {
+        let conf_rows = conf_sweep(&[300], &[0.1, 0.01], &[0.0, 1.0, 0.25]);
+        println!(
+            "{:<10} {:>6} {:>7} {:>6} {:>7} {:>6} {:>10} {:>5} {:>16}",
+            "op", "n", "sigma", "tol", "probes", "steps", "ci_width", "cal", "ns/estimate"
+        );
+        for r in &conf_rows {
+            println!(
+                "{:<10} {:>6} {:>7} {:>6} {:>7} {:>6} {:>10.4} {:>5} {:>16.1}",
+                r.op, r.n, r.sigma, r.tol, r.probes_used, r.steps_used, r.interval_width,
+                r.calibrated, r.ns_per_estimate
+            );
+        }
+        if let Some(path) = json_conf_path {
+            write_conf_json(&conf_rows, path);
+        }
+    }
 }
 
 fn main() {
@@ -467,10 +512,12 @@ fn main() {
         let json_path = path_after("--json");
         let json_cg_path = path_after("--json-cg");
         let json_precond_path = path_after("--json-precond");
+        let json_conf_path = path_after("--json-conf");
         run_smoke(
             json_path.as_deref(),
             json_cg_path.as_deref(),
             json_precond_path.as_deref(),
+            json_conf_path.as_deref(),
         );
         return;
     }

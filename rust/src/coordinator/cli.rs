@@ -21,7 +21,16 @@
 //! (`util::precision::set_default_precision`; `f64`, the default, is
 //! bit-identical to not passing the flag, and block-CG convergence is
 //! always confirmed against the f64 true residual in either mode — see
-//! the `solvers` module docs).
+//! the `solvers` module docs); `--probes <p>` / `--steps <m>` set the
+//! process-default probe count and per-probe step budget (Lanczos steps
+//! and Chebyshev degree alike) for every stochastic estimator
+//! (`estimators::set_default_probes`/`set_default_steps`);
+//! `--logdet-tol <t>` turns every SLQ/Chebyshev logdet into an adaptive
+//! run that grows the probe budget until the 95% confidence interval's
+//! half-width clears `t` (`estimators::set_default_logdet_tol`; unset,
+//! the default, keeps fixed budgets bit-identical to not passing the
+//! flag — see the `estimators` module docs for the evidence/confidence
+//! contract).
 
 use super::{experiments, figures, ExpResult, Scale};
 
@@ -33,12 +42,15 @@ const EXP_IDS: &[&str] = &[
 pub fn usage() -> String {
     format!(
         "gpsld {} — Scalable Log Determinants for GP Kernel Learning (NIPS 2017 repro)\n\n\
-         USAGE:\n  gpsld exp <id|all> [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>] [--threads <t>] [--precision f64|f32f64] [--md <file>]\n  gpsld artifacts\n  gpsld info\n\n\
+         USAGE:\n  gpsld exp <id|all> [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>] [--threads <t>] [--precision f64|f32f64] [--probes <p>] [--steps <m>] [--logdet-tol <t>] [--md <file>]\n  gpsld artifacts\n  gpsld info\n\n\
          `--block <b>` sets the default probe-block width for blocked MVMs.\n\
          `--cg-block <b>` sets the default RHS block width for block-CG solves.\n\
          `--precond-rank <k>` sets the pivoted-Cholesky preconditioner rank (0 = off).\n\
          `--threads <t>` sets the default worker count for RHS-group/probe-block fan-out.\n\
-         `--precision f64|f32f64` sets the default MVM precision (f32 storage / f64 accumulation; solves still confirm in f64).\n\n\
+         `--precision f64|f32f64` sets the default MVM precision (f32 storage / f64 accumulation; solves still confirm in f64).\n\
+         `--probes <p>` sets the default probe count for stochastic estimators.\n\
+         `--steps <m>` sets the default per-probe step budget (Lanczos steps / Chebyshev degree).\n\
+         `--logdet-tol <t>` makes logdet estimates adaptive: grow probes until the 95% CI half-width <= t.\n\n\
          EXPERIMENTS: {}\n",
         crate::version(),
         EXP_IDS.join(", ")
@@ -146,6 +158,38 @@ pub fn main_with_args(args: &[String]) -> i32 {
                         }
                         i += 2;
                     }
+                    "--probes" => {
+                        match args.get(i + 1).and_then(|s| s.parse::<usize>().ok()) {
+                            Some(p) if p >= 1 => crate::estimators::set_default_probes(p),
+                            _ => {
+                                eprintln!("--probes needs a positive integer");
+                                return 2;
+                            }
+                        }
+                        i += 2;
+                    }
+                    "--steps" => {
+                        match args.get(i + 1).and_then(|s| s.parse::<usize>().ok()) {
+                            Some(m) if m >= 1 => crate::estimators::set_default_steps(m),
+                            _ => {
+                                eprintln!("--steps needs a positive integer");
+                                return 2;
+                            }
+                        }
+                        i += 2;
+                    }
+                    "--logdet-tol" => {
+                        match args.get(i + 1).and_then(|s| s.parse::<f64>().ok()) {
+                            Some(t) if t > 0.0 && t.is_finite() => {
+                                crate::estimators::set_default_logdet_tol(Some(t))
+                            }
+                            _ => {
+                                eprintln!("--logdet-tol needs a positive finite number");
+                                return 2;
+                            }
+                        }
+                        i += 2;
+                    }
                     "--precond-rank" => {
                         // 0 is legal: it means "preconditioning off".
                         match args.get(i + 1).and_then(|s| s.parse::<usize>().ok()) {
@@ -212,6 +256,10 @@ pub fn main_with_args(args: &[String]) -> i32 {
         Some("info") => {
             println!("gpsld {}", crate::version());
             println!("estimators: lanczos(slq), chebyshev, surrogate, scaled_eig, exact");
+            println!(
+                "confidence: per-probe spectral evidence + 95% intervals on every \
+                 logdet; adaptive probe budgets (--probes, --steps, --logdet-tol)"
+            );
             println!(
                 "solvers: cg/block-cg with pivoted-Cholesky PCG (--precond-rank), \
                  parallel RHS groups (--threads)"
@@ -375,6 +423,79 @@ mod tests {
             main_with_args(&["exp".into(), "fig1".into(), "--md".into()]),
             2
         );
+    }
+
+    #[test]
+    fn probes_steps_flags_set_defaults_and_reject_garbage() {
+        // Valid values land in the process-wide estimator defaults; 0 and
+        // garbage are rejected (exit 2) before any experiment runs. The
+        // defaults are restored afterwards so other tests see the
+        // built-ins (estimator tests construct options explicitly, so a
+        // transient override here cannot skew their budgets).
+        assert_eq!(
+            main_with_args(&["exp".into(), "nope".into(), "--probes".into(), "9".into()]),
+            2 // unknown experiment, but the flag itself parsed fine
+        );
+        assert_eq!(crate::estimators::default_probes(), Some(9));
+        assert_eq!(
+            main_with_args(&["exp".into(), "nope".into(), "--steps".into(), "33".into()]),
+            2
+        );
+        assert_eq!(crate::estimators::default_steps(), Some(33));
+        crate::estimators::set_default_probes(0);
+        crate::estimators::set_default_steps(0);
+        for flag in ["--probes", "--steps"] {
+            for bad in ["0", "x", "-1"] {
+                assert_eq!(
+                    main_with_args(&[
+                        "exp".into(),
+                        "fig1".into(),
+                        flag.into(),
+                        bad.into()
+                    ]),
+                    2,
+                    "{flag} {bad} must be rejected"
+                );
+            }
+            assert_eq!(main_with_args(&["exp".into(), "fig1".into(), flag.into()]), 2);
+        }
+        // Rejected values must not have landed in the defaults.
+        assert_eq!(crate::estimators::default_probes(), None);
+        assert_eq!(crate::estimators::default_steps(), None);
+    }
+
+    #[test]
+    fn logdet_tol_flag_sets_default_and_rejects_garbage() {
+        assert_eq!(
+            main_with_args(&[
+                "exp".into(),
+                "nope".into(),
+                "--logdet-tol".into(),
+                "0.25".into()
+            ]),
+            2 // unknown experiment, but the flag itself parsed fine
+        );
+        assert_eq!(crate::estimators::default_logdet_tol(), Some(0.25));
+        crate::estimators::set_default_logdet_tol(None);
+        // Zero, negatives, non-finite, and garbage are rejected before
+        // any experiment runs.
+        for bad in ["0", "-1e-3", "nan", "inf", "x"] {
+            assert_eq!(
+                main_with_args(&[
+                    "exp".into(),
+                    "fig1".into(),
+                    "--logdet-tol".into(),
+                    bad.into()
+                ]),
+                2,
+                "--logdet-tol {bad} must be rejected"
+            );
+        }
+        assert_eq!(
+            main_with_args(&["exp".into(), "fig1".into(), "--logdet-tol".into()]),
+            2
+        );
+        assert_eq!(crate::estimators::default_logdet_tol(), None);
     }
 
     #[test]

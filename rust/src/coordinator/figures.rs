@@ -62,6 +62,8 @@ pub fn fig3_fig4_cross_sections(scale: Scale) -> ExpResult {
                 format!("{:.1}", eg[0]),
                 format!("{:.1}", slq.grad[0]),
                 format!("{:.1}", cheb.grad[0]),
+                format!("{:.2}", slq.interval.width()),
+                format!("{:.2}", cheb.interval.width()),
             ]);
         }
 
@@ -91,13 +93,18 @@ pub fn fig3_fig4_cross_sections(scale: Scale) -> ExpResult {
                     "-".into(),
                     "-".into(),
                     "-".into(),
+                    format!("{:.2}", slq.interval.width()),
+                    "-".into(),
                 ]);
             }
         }
     }
     ExpResult {
         id: "fig3_fig4",
-        header: vec!["case", "dlog_ell", "exact", "lanczos", "chebyshev", "g_exact", "g_lanczos", "g_chebyshev"],
+        header: vec![
+            "case", "dlog_ell", "exact", "lanczos", "chebyshev", "g_exact", "g_lanczos",
+            "g_chebyshev", "ci_lanczos", "ci_chebyshev",
+        ],
         rows,
     }
 }
@@ -475,6 +482,40 @@ pub fn perf_mvm(scale: Scale) -> ExpResult {
         }
     }
 
+    // §Confidence — the shared tolerance × σ adaptive-budget sweep (see
+    // [`conf_sweep`]; `bench_perf_mvm --json-conf` emits the same rows
+    // machine-readably). Probe/step counts and calibration land in the
+    // value column alongside the timing rows.
+    {
+        let n = match scale {
+            Scale::Small => 300,
+            Scale::Paper => 800,
+        };
+        for r in conf_sweep(&[n], &[0.1, 0.01], &[0.0, 1.0, 0.25]) {
+            let case = format!("conf_n{}_sig{}_tol{}", r.n, r.sigma, r.tol);
+            rows.push(vec![
+                format!("{case}_probes_used"),
+                format!("{}", r.probes_used),
+            ]);
+            rows.push(vec![
+                format!("{case}_steps_used"),
+                format!("{}", r.steps_used),
+            ]);
+            rows.push(vec![
+                format!("{case}_ci_width"),
+                format!("{:.3}", r.interval_width),
+            ]);
+            rows.push(vec![
+                format!("{case}_calibrated"),
+                format!("{}", r.calibrated),
+            ]);
+            rows.push(vec![
+                format!("{case}_estimate_ms"),
+                format!("{:.3}", r.ns_per_estimate / 1e6),
+            ]);
+        }
+    }
+
     // End-to-end SLQ (25 steps, 5 probes, with grads) on SKI m=4000, plus
     // the SKI block sweep.
     {
@@ -549,6 +590,94 @@ pub struct PrecondSweepRow {
     pub lanczos_steps: usize,
     /// Wall time per solved column (one warmup + one timed block solve).
     pub ns_per_solve_col: f64,
+}
+
+/// One case of the tolerance × σ confidence/adaptive-budget sweep.
+pub struct ConfSweepRow {
+    pub op: &'static str,
+    pub n: usize,
+    pub sigma: f64,
+    /// Requested adaptive half-width target (`--logdet-tol` semantics);
+    /// 0 means the fixed-budget reference run (`target_tol` unset).
+    pub tol: f64,
+    /// Probes the estimate actually consumed (== the fixed budget for
+    /// `tol = 0`; the adaptive stopping point otherwise).
+    pub probes_used: usize,
+    /// Longest per-probe Lanczos tridiagonal of the run.
+    pub steps_used: usize,
+    /// Full width of the 95% posterior interval.
+    pub interval_width: f64,
+    /// 1 when the interval contains the exact log determinant, else 0.
+    /// Emitted per row so the bench gate's higher-is-better rule catches a
+    /// calibration regression loudly (a sum over rows would average a
+    /// miss away).
+    pub calibrated: usize,
+    /// Wall time of one full logdet estimate (warmup + averaged reps).
+    pub ns_per_estimate: f64,
+}
+
+/// The tolerance × σ adaptive-budget sweep on an ill-conditioned dense
+/// RBF kernel — the one definition shared by the CLI perf table and
+/// `bench_perf_mvm --json-conf` (`BENCH_conf.json`), so the two surfaces
+/// report identically-defined numbers. `tol = 0` is the fixed-budget
+/// baseline every adaptive row is compared against: adaptive runs must
+/// reach their target with no more probes than the generous fixed
+/// reference while staying calibrated against `exact::exact_logdet`.
+pub fn conf_sweep(ns: &[usize], sigmas: &[f64], tols: &[f64]) -> Vec<ConfSweepRow> {
+    use crate::util::bench::black_box;
+    let mut rows = Vec::new();
+    let mut rng = Rng::new(41);
+    for &n in ns {
+        let pts: Vec<Vec<f64>> =
+            (0..n).map(|_| vec![rng.uniform_in(0.0, 3.0)]).collect();
+        for &sigma in sigmas {
+            let op = DenseKernelOp::new(
+                pts.clone(),
+                Box::new(IsoKernel::new(Shape::Rbf, 1, 0.5, 1.0)),
+                sigma,
+            );
+            let truth = exact::exact_logdet(&op)
+                .expect("conf sweep: exact logdet failed");
+            for &tol in tols {
+                let opts = SlqOptions {
+                    steps: 40,
+                    probes: 16,
+                    grads: false,
+                    seed: 43,
+                    target_tol: if tol > 0.0 { Some(tol) } else { None },
+                    ..Default::default()
+                };
+                // Warmup run doubles as the (deterministic) accounting
+                // run; the timing then averages a few reps so
+                // single-sample wall-clock noise doesn't flake the bench
+                // gate.
+                let est = slq_logdet(&op, &opts)
+                    .expect("conf sweep: slq failed");
+                let t0 = Instant::now();
+                let mut reps = 0usize;
+                loop {
+                    let e = slq_logdet(&op, &opts).expect("conf sweep: slq failed");
+                    black_box(e.value);
+                    reps += 1;
+                    if reps >= 5 || t0.elapsed().as_secs_f64() > 0.4 {
+                        break;
+                    }
+                }
+                rows.push(ConfSweepRow {
+                    op: "dense_rbf",
+                    n,
+                    sigma,
+                    tol,
+                    probes_used: est.probes_used,
+                    steps_used: est.steps_used,
+                    interval_width: est.interval.width(),
+                    calibrated: est.interval.contains(truth) as usize,
+                    ns_per_estimate: t0.elapsed().as_secs_f64() / reps as f64 * 1e9,
+                });
+            }
+        }
+    }
+    rows
 }
 
 /// The rank × σ × (block, threads) preconditioning sweep on an

@@ -15,9 +15,10 @@
 //! single-probe recurrence, so estimates are bit-identical across block
 //! sizes.
 
+use super::confidence;
 use super::lanczos::extremal_eigs;
 use super::probes::{combine, ProbeKind, ProbeSet};
-use super::{BlockPartition, LogdetEstimate};
+use super::{BlockPartition, LogdetEstimate, SpectralEvidence};
 use crate::error::Result;
 use crate::linalg::dense::Mat;
 use crate::operators::{KernelOp, LinOp};
@@ -27,7 +28,12 @@ use crate::util::parallel;
 #[derive(Clone, Copy, Debug)]
 pub struct ChebOptions {
     /// Polynomial degree / number of moments (paper uses 100 for Fig. 1).
+    /// Defaults to the process `--steps` override when set (the CLI's
+    /// per-probe step budget covers Lanczos steps and Chebyshev degree
+    /// alike), else 100.
     pub degree: usize,
+    /// Number of probe vectors. With `target_tol` set this is only the
+    /// seed of the adaptive schedule (see [`super::slq::SlqOptions`]).
     pub probes: usize,
     pub kind: ProbeKind,
     pub seed: u64,
@@ -49,13 +55,25 @@ pub struct ChebOptions {
     /// (`apply_grad_all_mat`) always stay f64. Defaults to the process
     /// default (CLI `--precision`).
     pub precision: crate::util::precision::Precision,
+    /// Adaptive stopping tolerance — same contract as
+    /// [`super::slq::SlqOptions::target_tol`]: `Some(tol)` grows the probe
+    /// set until the 95% half-width clears `tol`; `None` (default, CLI
+    /// `--logdet-tol`) is the fixed budget, bit-identical to the
+    /// pre-evidence estimator.
+    pub target_tol: Option<f64>,
+    /// Probe ceiling for adaptive mode (clamped to >= 2).
+    pub max_probes: usize,
+    /// Degree ceiling for adaptive mode: 0 = no extra cap, otherwise the
+    /// degree is `degree.min(max_steps)`. Ignored when `target_tol` is
+    /// `None`.
+    pub max_steps: usize,
 }
 
 impl Default for ChebOptions {
     fn default() -> Self {
         ChebOptions {
-            degree: 100,
-            probes: 5,
+            degree: super::default_steps().unwrap_or(100),
+            probes: super::default_probes().unwrap_or(5),
             kind: ProbeKind::Rademacher,
             seed: 0,
             grads: true,
@@ -63,6 +81,9 @@ impl Default for ChebOptions {
             threads: parallel::default_threads(),
             block_size: super::default_block_size(),
             precision: crate::util::precision::default_precision(),
+            target_tol: super::default_logdet_tol(),
+            max_probes: 64,
+            max_steps: 0,
         }
     }
 }
@@ -90,15 +111,21 @@ pub fn cheb_coeffs(f: impl Fn(f64) -> f64, m: usize) -> Vec<f64> {
 
 /// Per-block partial results, kept per-column for block-width-independent
 /// reduction.
+#[derive(Clone)]
 struct PerBlock {
     quads: Vec<f64>,
     grad_terms: Vec<Vec<f64>>,
+    /// Per column: the raw moments `z^T T_j(B) z`, j = 0..=degree.
+    moments: Vec<Vec<f64>>,
     mvms: usize,
     block_applies: usize,
 }
 
 /// Estimate `log|K̃|` (and optionally all derivatives) via stochastic
-/// Chebyshev moments.
+/// Chebyshev moments. With `opts.target_tol` unset this is the fixed
+/// budget, bit-identical to the pre-evidence estimator; with it set, the
+/// probe set grows incrementally until the confidence half-width clears
+/// the tolerance (never stopping before 2 probes).
 pub fn chebyshev_logdet(op: &dyn KernelOp, opts: &ChebOptions) -> Result<LogdetEstimate> {
     let n = op.n();
     let nh = op.num_hypers();
@@ -111,7 +138,64 @@ pub fn chebyshev_logdet(op: &dyn KernelOp, opts: &ChebOptions) -> Result<LogdetE
         }
     };
     assert!(b > a && a > 0.0, "invalid spectrum bracket [{a}, {b}]");
-    let coeffs = cheb_coeffs(|t| (0.5 * ((b - a) * t + (b + a))).ln(), opts.degree);
+    let degree = match (opts.target_tol, opts.max_steps) {
+        (Some(_), m) if m > 0 => opts.degree.min(m).max(1),
+        _ => opts.degree,
+    };
+    let coeffs = cheb_coeffs(|t| (0.5 * ((b - a) * t + (b + a))).ln(), degree);
+
+    match opts.target_tol {
+        None => {
+            let probes = ProbeSet::new(n, opts.probes, opts.kind, opts.seed);
+            let z = probes.as_mat();
+            let blocks =
+                run_blocks(op, opts, &z, 0, opts.probes, degree, &coeffs, (a, b), nh);
+            Ok(assemble(&blocks, opts, nh, opts.probes, &coeffs, (a, b)))
+        }
+        Some(tol) => {
+            // Same incremental schedule as the SLQ driver: the probe matrix
+            // is drawn once at max_probes width (ProbeSet column prefixes
+            // are width-independent), consumed in chunks of 2, then
+            // (done/2).clamp(1, block_size); never stops before 2 probes.
+            let max_probes = opts.max_probes.max(2);
+            let probes = ProbeSet::new(n, max_probes, opts.kind, opts.seed);
+            let z = probes.as_mat();
+            let mut blocks: Vec<PerBlock> = Vec::new();
+            let mut done = 0usize;
+            loop {
+                let chunk = if done == 0 {
+                    2.min(max_probes)
+                } else {
+                    (done / 2).clamp(1, opts.block_size.max(1)).min(max_probes - done)
+                };
+                blocks.extend(run_blocks(op, opts, &z, done, chunk, degree, &coeffs, (a, b), nh));
+                done += chunk;
+                let est = assemble(&blocks, opts, nh, done, &coeffs, (a, b));
+                if (done >= 2 && est.interval.half_width() <= tol) || done >= max_probes {
+                    return Ok(est);
+                }
+            }
+        }
+    }
+}
+
+/// Run the blocked Chebyshev recurrences over `count` probe columns of `z`
+/// starting at `base` — one `PerBlock` per partition block, in probe
+/// order; shared by the fixed and adaptive drivers.
+#[allow(clippy::too_many_arguments)]
+fn run_blocks(
+    op: &dyn KernelOp,
+    opts: &ChebOptions,
+    z: &Mat,
+    base: usize,
+    count: usize,
+    degree: usize,
+    coeffs: &[f64],
+    bracket: (f64, f64),
+    nh: usize,
+) -> Vec<PerBlock> {
+    let n = op.n();
+    let (a, b) = bracket;
     let scale = 2.0 / (b - a);
     let shift = (b + a) / (b - a);
 
@@ -125,13 +209,10 @@ pub fn chebyshev_logdet(op: &dyn KernelOp, opts: &ChebOptions) -> Result<LogdetE
         y
     };
 
-    let probes = ProbeSet::new(n, opts.probes, opts.kind, opts.seed);
-    let z = probes.as_mat();
-    let part = BlockPartition::new(opts.probes, opts.block_size);
-
-    let results: Vec<PerBlock> = parallel::par_map(part.nblocks, opts.threads, |bi| {
+    let part = BlockPartition::new(count, opts.block_size);
+    parallel::par_map(part.nblocks, opts.threads, |bi| {
         let (j0, wcols) = part.range(bi);
-        let zblk = z.sub_cols(j0, wcols);
+        let zblk = z.sub_cols(base + j0, wcols);
         let mut mvms = 0;
         let mut block_applies = 0;
         // w recurrence over the whole block.
@@ -156,17 +237,22 @@ pub fn chebyshev_logdet(op: &dyn KernelOp, opts: &ChebOptions) -> Result<LogdetE
 
         let mut quads = Vec::with_capacity(wcols);
         let mut grad_terms: Vec<Vec<f64>> = Vec::with_capacity(wcols);
+        let mut moments: Vec<Vec<f64>> = Vec::with_capacity(wcols);
         for c in 0..wcols {
-            quads.push(
-                coeffs[0] * zblk.col_dot_pair(&w_prev, c) + coeffs[1] * zblk.col_dot_pair(&w, c),
-            );
+            // The raw moments m_j = z^T T_j(B) z are retained verbatim as
+            // spectral evidence; the quadrature is the same coefficient-
+            // weighted sum as before (identical products, identical order).
+            let m0 = zblk.col_dot_pair(&w_prev, c);
+            let m1 = zblk.col_dot_pair(&w, c);
+            quads.push(coeffs[0] * m0 + coeffs[1] * m1);
+            moments.push(vec![m0, m1]);
             if opts.grads {
                 grad_terms
                     .push((0..nh).map(|i| coeffs[1] * zblk.col_dot_pair(&dw[i], c)).collect());
             }
         }
 
-        for j in 2..=opts.degree {
+        for j in 2..=degree {
             // w_{j} = 2 B w_{j-1} - w_{j-2}
             let bw = apply_b_mat(&w);
             mvms += wcols;
@@ -199,7 +285,9 @@ pub fn chebyshev_logdet(op: &dyn KernelOp, opts: &ChebOptions) -> Result<LogdetE
             }
             w_prev = std::mem::replace(&mut w, w_next);
             for c in 0..wcols {
-                quads[c] += coeffs[j] * zblk.col_dot_pair(&w, c);
+                let mj = zblk.col_dot_pair(&w, c);
+                quads[c] += coeffs[j] * mj;
+                moments[c].push(mj);
                 if opts.grads {
                     for i in 0..nh {
                         grad_terms[c][i] += coeffs[j] * zblk.col_dot_pair(&dw[i], c);
@@ -207,15 +295,29 @@ pub fn chebyshev_logdet(op: &dyn KernelOp, opts: &ChebOptions) -> Result<LogdetE
                 }
             }
         }
-        PerBlock { quads, grad_terms, mvms, block_applies }
-    });
+        PerBlock { quads, grad_terms, moments, mvms, block_applies }
+    })
+}
 
-    let mut per_probe = Vec::with_capacity(opts.probes);
+/// Cross-block reduction: accumulates per-probe values and gradient terms
+/// in probe order, attaches the retained moment evidence, and synthesizes
+/// the confidence interval. `probes_used` is the gradient divisor.
+fn assemble(
+    blocks: &[PerBlock],
+    opts: &ChebOptions,
+    nh: usize,
+    probes_used: usize,
+    coeffs: &[f64],
+    bracket: (f64, f64),
+) -> LogdetEstimate {
+    let mut per_probe = Vec::with_capacity(probes_used);
+    let mut moments = Vec::with_capacity(probes_used);
     let mut grad = vec![0.0; if opts.grads { nh } else { 0 }];
     let mut mvms = 0;
     let mut block_applies = 0;
-    for r in results {
-        per_probe.extend(r.quads);
+    for r in blocks {
+        per_probe.extend_from_slice(&r.quads);
+        moments.extend(r.moments.iter().cloned());
         for gt in &r.grad_terms {
             for (gi, t) in grad.iter_mut().zip(gt) {
                 *gi += t;
@@ -225,10 +327,27 @@ pub fn chebyshev_logdet(op: &dyn KernelOp, opts: &ChebOptions) -> Result<LogdetE
         block_applies += r.block_applies;
     }
     for gi in grad.iter_mut() {
-        *gi /= opts.probes as f64;
+        *gi /= probes_used as f64;
     }
     let (value, std_err) = combine(&per_probe);
-    Ok(LogdetEstimate { value, grad, std_err, per_probe, mvms, block_applies })
+    let steps_used =
+        moments.iter().map(|m| m.len().saturating_sub(1)).max().unwrap_or(0);
+    let evidence =
+        SpectralEvidence::Chebyshev { moments, coeffs: coeffs.to_vec(), bracket };
+    let interval =
+        confidence::interval_from_parts(value, &per_probe, &evidence, confidence::DEFAULT_LEVEL);
+    LogdetEstimate {
+        value,
+        grad,
+        std_err,
+        per_probe,
+        mvms,
+        block_applies,
+        evidence,
+        interval,
+        probes_used,
+        steps_used,
+    }
 }
 
 #[cfg(test)]
@@ -380,5 +499,116 @@ mod tests {
             }
             assert_eq!(base.mvms, blocked.mvms, "bs={bs} probe-column mvms");
         }
+    }
+
+    /// Inert adaptive knobs leave the fixed-budget path bit-identical.
+    #[test]
+    fn inert_adaptive_knobs_are_bitwise_noop() {
+        let o = op(60, 0.4, 13);
+        let base = chebyshev_logdet(
+            &o,
+            &ChebOptions { degree: 25, probes: 5, seed: 2, ..Default::default() },
+        )
+        .unwrap();
+        let knobs = chebyshev_logdet(
+            &o,
+            &ChebOptions {
+                degree: 25,
+                probes: 5,
+                seed: 2,
+                target_tol: None,
+                max_probes: 3,
+                max_steps: 7,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(base.value.to_bits(), knobs.value.to_bits());
+        assert_eq!(base.std_err.to_bits(), knobs.std_err.to_bits());
+        for (x, y) in base.per_probe.iter().zip(&knobs.per_probe) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in base.grad.iter().zip(&knobs.grad) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(base.mvms, knobs.mvms);
+        assert_eq!(base.block_applies, knobs.block_applies);
+    }
+
+    /// Adaptive mode stops with fewer probes than a generous fixed budget
+    /// when the tolerance is loose, and never stops before 2 probes.
+    #[test]
+    fn adaptive_stops_early_and_never_at_one_probe() {
+        let o = op(80, 0.5, 17);
+        let fixed = chebyshev_logdet(
+            &o,
+            &ChebOptions { degree: 40, probes: 16, grads: false, seed: 3, ..Default::default() },
+        )
+        .unwrap();
+        let tol = fixed.interval.half_width() * 2.0;
+        let adaptive = chebyshev_logdet(
+            &o,
+            &ChebOptions {
+                degree: 40,
+                probes: 16,
+                grads: false,
+                seed: 3,
+                target_tol: Some(tol),
+                max_probes: 64,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(
+            adaptive.probes_used >= 2 && adaptive.probes_used < 16,
+            "adaptive used {} probes",
+            adaptive.probes_used
+        );
+        assert!(adaptive.interval.half_width() <= tol);
+        // An absurdly loose tolerance still needs 2 probes.
+        let loose = chebyshev_logdet(
+            &o,
+            &ChebOptions {
+                degree: 40,
+                probes: 1,
+                grads: false,
+                seed: 3,
+                target_tol: Some(1e12),
+                max_probes: 64,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(loose.probes_used >= 2);
+    }
+
+    /// The retained moments reproduce the per-probe quadratures through
+    /// the retained coefficients, bit-for-bit.
+    #[test]
+    fn moment_evidence_reproduces_quadratures() {
+        let o = op(50, 0.3, 21);
+        let est = chebyshev_logdet(
+            &o,
+            &ChebOptions { degree: 20, probes: 4, grads: false, seed: 5, ..Default::default() },
+        )
+        .unwrap();
+        match &est.evidence {
+            SpectralEvidence::Chebyshev { moments, coeffs, bracket } => {
+                assert_eq!(moments.len(), est.per_probe.len());
+                assert!(bracket.1 > bracket.0);
+                for (m, q) in moments.iter().zip(&est.per_probe) {
+                    assert_eq!(m.len(), coeffs.len());
+                    // Same left-to-right accumulation as the estimator.
+                    let mut acc = coeffs[0] * m[0] + coeffs[1] * m[1];
+                    for j in 2..m.len() {
+                        acc += coeffs[j] * m[j];
+                    }
+                    assert_eq!(acc.to_bits(), q.to_bits());
+                }
+            }
+            other => panic!("expected Chebyshev evidence, got {other:?}"),
+        }
+        assert_eq!(est.steps_used, 20);
+        assert!(est.interval.contains(est.value));
     }
 }

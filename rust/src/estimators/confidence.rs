@@ -1,0 +1,345 @@
+//! Posterior confidence intervals over `log|K̃|` from retained spectral
+//! evidence — the panel behind adaptive probe budgets.
+//!
+//! Both Fitzsimons et al. lines of work (*Bayesian Inference of Log
+//! Determinants*: a GP posterior over the spectral measure conditioned on
+//! Chebyshev/Lanczos moments; *Entropic Trace Estimates*: max-ent spectral
+//! densities under the same moment constraints) observe that the quantities
+//! the stochastic estimators already compute — Lanczos tridiagonals and
+//! Chebyshev moment vectors — determine how uncertain the point estimate
+//! is, at no additional MVM cost. This module is the moment-matched
+//! version of that idea: the posterior over `log|K̃|` is summarized by a
+//! Gaussian/Student-t interval whose two variance components are read
+//! directly off the evidence:
+//!
+//! 1. **Monte-Carlo (cross-probe) term.** The per-probe quadratures
+//!    `q_i = z_iᵀ f(K̃) z_i` are i.i.d. unbiased samples of the trace, so
+//!    the sample mean's error is Student-t with `n_probes − 1` degrees of
+//!    freedom: half-width `t_{level, n−1} · std_err`. With one probe the
+//!    standard error is `+inf` ([`crate::util::stats::std_err`]), so a
+//!    1-probe interval is infinite *by construction* — no adaptive rule
+//!    can stop on it.
+//! 2. **Truncation (within-probe) term.** Each probe's quadrature is
+//!    itself truncated:
+//!    * Lanczos: an m-point Gauss quadrature. Its convergence is
+//!      measured post hoc by how much the estimate moved at the last
+//!      step, `|q^{(m)} − q^{(m−1)}|` on the retained tridiagonal prefix
+//!      (the same signal `lanczos::quadrature_steps_to_tol` uses) —
+//!      averaged across probes and added to the half-width.
+//!    * Chebyshev: a degree-d expansion. The coefficient tail is bounded
+//!      from the observed geometric decay of the last retained
+//!      coefficients: `|c_d| ρ/(1−ρ) · m_0` with `ρ` estimated from
+//!      `|c_{d−L}| → |c_d|` and `m_0 = zᵀz ≥ |zᵀT_j(B)z|` the moment
+//!      mass bound.
+//!
+//! The interval is deliberately *conservative* (terms add, tails are upper
+//! bounds): the calibration contract tested in `tests/proptests.rs` is
+//! that the 95% interval contains the exact log determinant at ≥ the
+//! advertised rate, so adaptive stopping never reports a tolerance it did
+//! not reach.
+
+use super::{LanczosProbe, LogdetEstimate, SpectralEvidence};
+use crate::linalg::tridiag::lanczos_quadrature;
+use crate::util::stats;
+
+/// A two-sided posterior interval `[lo, hi]` at confidence `level`
+/// (e.g. 0.95). Degenerate (`lo == hi`) for deterministic estimates;
+/// infinite when the evidence cannot bound the error (fewer than 2
+/// probes, or a quadrature eigen-solve failure).
+#[derive(Clone, Copy, Debug)]
+pub struct ConfidenceInterval {
+    pub lo: f64,
+    pub hi: f64,
+    pub level: f64,
+}
+
+/// The confidence level every estimator attaches by default.
+pub const DEFAULT_LEVEL: f64 = 0.95;
+
+impl ConfidenceInterval {
+    /// Degenerate zero-width interval for an exact value.
+    pub fn exact(value: f64) -> Self {
+        ConfidenceInterval { lo: value, hi: value, level: 1.0 }
+    }
+
+    /// Full width `hi − lo` (`+inf` for an unbounded interval).
+    pub fn width(&self) -> f64 {
+        self.hi - self.lo
+    }
+
+    /// Half width — what adaptive stopping compares against `target_tol`.
+    pub fn half_width(&self) -> f64 {
+        0.5 * (self.hi - self.lo)
+    }
+
+    /// Whether `x` lies inside the interval (closed on both ends).
+    pub fn contains(&self, x: f64) -> bool {
+        x >= self.lo && x <= self.hi
+    }
+}
+
+/// Synthesize the interval for an assembled estimate: Student-t
+/// Monte-Carlo term from `per_probe` plus the evidence's truncation term.
+/// Total over every [`SpectralEvidence`] variant.
+pub fn logdet_interval(est: &LogdetEstimate, level: f64) -> ConfidenceInterval {
+    interval_from_parts(est.value, &est.per_probe, &est.evidence, level)
+}
+
+/// Interval from raw parts (used while an adaptive run is still growing
+/// its probe set, before the final estimate exists).
+pub fn interval_from_parts(
+    value: f64,
+    per_probe: &[f64],
+    evidence: &SpectralEvidence,
+    level: f64,
+) -> ConfidenceInterval {
+    if matches!(evidence, SpectralEvidence::Exact) {
+        return ConfidenceInterval { lo: value, hi: value, level };
+    }
+    let n = per_probe.len();
+    // Monte-Carlo term: +inf below 2 probes (std_err's documented
+    // sentinel), Student-t scaled otherwise.
+    let mc = t_quantile(level, n.saturating_sub(1)) * stats::std_err(per_probe);
+    let trunc = match evidence {
+        SpectralEvidence::Exact => 0.0,
+        SpectralEvidence::Lanczos { probes, .. } => lanczos_truncation(probes),
+        SpectralEvidence::Chebyshev { moments, coeffs, .. } => {
+            chebyshev_truncation(moments, coeffs)
+        }
+    };
+    let hw = mc + trunc;
+    ConfidenceInterval { lo: value - hw, hi: value + hw, level }
+}
+
+/// Mean last-step quadrature movement across probes — the within-probe
+/// Gauss-quadrature truncation estimate. A probe whose tridiagonal eigen
+/// solve fails contributes `+inf` (the evidence cannot bound the error);
+/// a 1-step tridiagonal contributes 0 (Lanczos broke down at step 1, i.e.
+/// the probe's quadrature is exact on its Krylov space).
+fn lanczos_truncation(probes: &[LanczosProbe]) -> f64 {
+    if probes.is_empty() {
+        return f64::INFINITY;
+    }
+    let f = |lam: f64| lam.max(1e-300).ln();
+    let mut total = 0.0;
+    for p in probes {
+        let m = p.alphas.len();
+        if m < 2 {
+            continue;
+        }
+        let full = lanczos_quadrature(&p.alphas, &p.betas, p.znorm2, f);
+        let prev =
+            lanczos_quadrature(&p.alphas[..m - 1], &p.betas[..m - 2], p.znorm2, f);
+        match (full, prev) {
+            (Ok(a), Ok(b)) => total += (a - b).abs(),
+            _ => return f64::INFINITY,
+        }
+    }
+    total / probes.len() as f64
+}
+
+/// Coefficient-tail bound for a truncated Chebyshev expansion: estimate
+/// the geometric decay rate ρ from the last `L` retained coefficient
+/// magnitudes and bound `Σ_{j>d} |c_j| |zᵀT_j(B)z|` by
+/// `|c_d| ρ/(1−ρ) · mean(m_0)` (|T_j| ≤ 1 on the bracket, so every moment
+/// is bounded by the probe mass `m_0 = zᵀz`). Degrees too low to estimate
+/// a decay rate give an unbounded term.
+fn chebyshev_truncation(moments: &[Vec<f64>], coeffs: &[f64]) -> f64 {
+    if moments.is_empty() {
+        return f64::INFINITY;
+    }
+    let d = coeffs.len().saturating_sub(1);
+    if d < 3 {
+        return f64::INFINITY;
+    }
+    let lag = 5.min(d - 1);
+    let cd = coeffs[d].abs().max(1e-300);
+    let c0 = coeffs[d - lag].abs().max(1e-300);
+    // Clamp: a non-decaying (or growing) tail estimate saturates at a
+    // conservative ρ rather than exceeding 1.
+    let rho = (cd / c0).powf(1.0 / lag as f64).clamp(1e-6, 0.95);
+    let tail_coeff = cd * rho / (1.0 - rho);
+    let mean_mass: f64 =
+        moments.iter().map(|m| m[0].abs()).sum::<f64>() / moments.len() as f64;
+    tail_coeff * mean_mass
+}
+
+/// Two-sided Student-t quantile `t` with `P(|T_df| ≤ t) = level`.
+/// Exact for df ∈ {1, 2}, Cornish-Fisher expansion around the normal
+/// quantile for df ≥ 3 (relative error < 1% at the 95% level, on the
+/// conservative-enough side once the truncation term is added);
+/// `+inf` for df = 0 — the no-information case.
+pub fn t_quantile(level: f64, df: usize) -> f64 {
+    let level = level.clamp(0.0, 1.0 - 1e-12);
+    let p = 0.5 + 0.5 * level;
+    match df {
+        0 => f64::INFINITY,
+        1 => (std::f64::consts::PI * (p - 0.5)).tan(),
+        2 => {
+            let a = 2.0 * p - 1.0;
+            std::f64::consts::SQRT_2 * a / (1.0 - a * a).sqrt()
+        }
+        _ => {
+            let z = normal_quantile(p);
+            let v = df as f64;
+            let z2 = z * z;
+            z + (z * (z2 + 1.0)) / (4.0 * v)
+                + (z * (5.0 * z2 * z2 + 16.0 * z2 + 3.0)) / (96.0 * v * v)
+                + (z * (3.0 * z2 * z2 * z2 + 19.0 * z2 * z2 + 17.0 * z2 - 15.0))
+                    / (384.0 * v * v * v)
+        }
+    }
+}
+
+/// Standard normal quantile (Acklam's rational approximation, |ε| < 1e-9
+/// over (0, 1)).
+fn normal_quantile(p: f64) -> f64 {
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    assert!(p > 0.0 && p < 1.0, "normal_quantile needs p in (0, 1)");
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        -normal_quantile(1.0 - p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn t_quantile_matches_tables() {
+        // Two-sided 95% quantiles from standard t tables.
+        let cases = [
+            (1usize, 12.706),
+            (2, 4.303),
+            (3, 3.182),
+            (5, 2.571),
+            (10, 2.228),
+            (30, 2.042),
+            (1000, 1.962),
+        ];
+        for (df, want) in cases {
+            let got = t_quantile(0.95, df);
+            assert!(
+                (got - want).abs() < 0.03 * want,
+                "df={df}: {got} vs {want}"
+            );
+        }
+        assert!(t_quantile(0.95, 0).is_infinite());
+    }
+
+    #[test]
+    fn normal_quantile_symmetry_and_values() {
+        assert!((normal_quantile(0.975) - 1.959964).abs() < 1e-6);
+        assert!((normal_quantile(0.5)).abs() < 1e-12);
+        assert!((normal_quantile(0.025) + normal_quantile(0.975)).abs() < 1e-9);
+        assert!((normal_quantile(1e-6) + normal_quantile(1.0 - 1e-6)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn exact_interval_is_degenerate() {
+        let ci = ConfidenceInterval::exact(-12.5);
+        assert_eq!(ci.lo, ci.hi);
+        assert!(ci.contains(-12.5));
+        assert_eq!(ci.width(), 0.0);
+    }
+
+    #[test]
+    fn single_probe_interval_is_infinite() {
+        let ev = SpectralEvidence::Lanczos {
+            probes: vec![LanczosProbe {
+                alphas: vec![2.0, 2.1, 1.9],
+                betas: vec![0.3, 0.2],
+                znorm2: 10.0,
+            }],
+            offset: 0.0,
+        };
+        let ci = interval_from_parts(5.0, &[5.0], &ev, 0.95);
+        assert!(ci.lo.is_infinite() && ci.lo < 0.0, "{:?}", ci);
+        assert!(ci.hi.is_infinite() && ci.hi > 0.0, "{:?}", ci);
+        assert!(ci.half_width().is_infinite());
+    }
+
+    #[test]
+    fn lanczos_interval_shrinks_with_agreeing_probes() {
+        // Many probes with identical well-converged tridiagonals: tiny MC
+        // spread + tiny last-step movement -> finite, narrow interval.
+        let probe = LanczosProbe {
+            // A converged tridiagonal: last beta nearly 0, so the m-1 vs m
+            // quadratures agree closely.
+            alphas: vec![2.0, 3.0, 2.5, 2.5],
+            betas: vec![0.5, 0.1, 1e-9],
+            znorm2: 4.0,
+        };
+        let ev = SpectralEvidence::Lanczos {
+            probes: vec![probe.clone(), probe.clone(), probe.clone(), probe],
+            offset: 0.0,
+        };
+        let per_probe = [4.1, 4.1, 4.1, 4.1];
+        let ci = interval_from_parts(4.1, &per_probe, &ev, 0.95);
+        assert!(ci.half_width().is_finite());
+        assert!(ci.half_width() < 1e-6, "half width {}", ci.half_width());
+        assert!(ci.contains(4.1));
+    }
+
+    #[test]
+    fn chebyshev_tail_uses_coefficient_decay() {
+        // Geometrically decaying coefficients -> finite tail bound that
+        // shrinks as the decay steepens.
+        let moments = vec![vec![8.0; 21]; 4];
+        let slow: Vec<f64> = (0..21).map(|j| 0.5f64.powi(j)).collect();
+        let fast: Vec<f64> = (0..21).map(|j| 0.1f64.powi(j)).collect();
+        let per_probe = [1.0, 1.0, 1.0, 1.0];
+        let ev_slow = SpectralEvidence::Chebyshev {
+            moments: moments.clone(),
+            coeffs: slow,
+            bracket: (0.1, 10.0),
+        };
+        let ev_fast = SpectralEvidence::Chebyshev {
+            moments,
+            coeffs: fast,
+            bracket: (0.1, 10.0),
+        };
+        let hw_slow = interval_from_parts(1.0, &per_probe, &ev_slow, 0.95).half_width();
+        let hw_fast = interval_from_parts(1.0, &per_probe, &ev_fast, 0.95).half_width();
+        assert!(hw_slow.is_finite() && hw_fast.is_finite());
+        assert!(hw_fast < hw_slow, "{hw_fast} vs {hw_slow}");
+    }
+}

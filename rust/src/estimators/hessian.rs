@@ -93,6 +93,10 @@ fn apply_grad2_fd(
 pub struct HessianEstimate {
     pub mean: Vec<Vec<f64>>,
     pub std_err: Vec<Vec<f64>>,
+    /// Probe *pairs* consumed (each entry's sample count) — the budget
+    /// accounting the confidence refactor threads through every stochastic
+    /// estimator surface.
+    pub probes_used: usize,
 }
 
 /// Stochastic estimate of the Hessian of `log|K̃|` w.r.t. all hypers.
@@ -167,7 +171,7 @@ pub fn logdet_hessian(op: &mut dyn KernelOp, opts: &HessianOptions) -> Result<He
             std_err[j][i] = se;
         }
     }
-    Ok(HessianEstimate { mean, std_err })
+    Ok(HessianEstimate { mean, std_err, probes_used: opts.probes })
 }
 
 #[cfg(test)]

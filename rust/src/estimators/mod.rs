@@ -64,8 +64,41 @@
 //! The solver layer reports cost in the same two units
 //! (`solvers::BlockCgInfo::{mvms, block_applies}`) so solve and logdet
 //! budgets are directly comparable.
+//!
+//! # Spectral evidence and confidence
+//!
+//! Every stochastic estimate *retains* the per-probe spectral evidence it
+//! was computed from instead of discarding it ([`SpectralEvidence`] inside
+//! [`LogdetEstimate`]): SLQ keeps each probe's Lanczos tridiagonal
+//! `(alphas, betas, ||z||²)`, Chebyshev keeps each probe's moment vector
+//! `z^T T_j(B) z` together with the coefficient vector and spectrum
+//! bracket. The deterministic estimators (`exact`, `scaled_eig`,
+//! `surrogate`) return [`SpectralEvidence::Exact`] so the API is total.
+//!
+//! [`confidence`] turns the retained evidence into a moment-matched
+//! posterior interval over `log|K̃|` ([`confidence::ConfidenceInterval`],
+//! populated in `LogdetEstimate::interval`) at near-zero extra MVM cost:
+//! the cross-probe spread gives a Student-t Monte-Carlo term, and the
+//! evidence gives a quadrature/expansion truncation term (last-step Gauss
+//! quadrature movement for Lanczos, coefficient tail decay for Chebyshev).
+//! A single-probe estimate has an *infinite* interval by construction
+//! (`util::stats::std_err` of one sample is `+inf`), so no stopping rule
+//! can act on it.
+//!
+//! The interval drives **adaptive probe budgets**: when
+//! `SlqOptions::target_tol` / `ChebOptions::target_tol` is `Some(tol)`,
+//! the probe loop grows the probe set incrementally (probe `j` is the same
+//! vector at every budget, so earlier work is never redrawn) and stops as
+//! soon as the 95% interval half-width clears `tol` (never before 2
+//! probes, never past `max_probes`; `max_steps` caps the per-probe
+//! Lanczos-step/Chebyshev-degree budget). With `target_tol = None` the
+//! fixed-budget path is **bit-identical** to the pre-evidence estimators:
+//! same probe set, same block partition, same accumulation order — the
+//! evidence is recorded on the side and `probes_used`/`steps_used` simply
+//! report the fixed budget.
 
 pub mod chebyshev;
+pub mod confidence;
 pub mod exact;
 pub mod hessian;
 pub mod lanczos;
@@ -73,6 +106,8 @@ pub mod probes;
 pub mod scaled_eig;
 pub mod slq;
 pub mod surrogate;
+
+pub use confidence::ConfidenceInterval;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -92,10 +127,124 @@ pub fn default_block_size() -> usize {
     DEFAULT_BLOCK_SIZE.load(Ordering::Relaxed)
 }
 
+/// Process-wide default probe count (0 = unset: `SlqOptions`/`ChebOptions`
+/// fall back to their built-in default of 5). The CLI `--probes` flag
+/// threads through here.
+static DEFAULT_PROBES: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the process-wide default probe count (0 restores the built-in).
+pub fn set_default_probes(p: usize) {
+    DEFAULT_PROBES.store(p, Ordering::Relaxed);
+}
+
+/// Current process-wide default probe count (`None` = built-in default).
+pub fn default_probes() -> Option<usize> {
+    match DEFAULT_PROBES.load(Ordering::Relaxed) {
+        0 => None,
+        p => Some(p),
+    }
+}
+
+/// Process-wide default per-probe step budget (0 = unset: `SlqOptions`
+/// falls back to its built-in 25 Lanczos steps, `ChebOptions` to its
+/// built-in degree 100 — the CLI's `--steps` budget covers Lanczos steps
+/// and Chebyshev degree alike).
+static DEFAULT_STEPS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the process-wide default per-probe step budget (0 restores the
+/// built-ins).
+pub fn set_default_steps(s: usize) {
+    DEFAULT_STEPS.store(s, Ordering::Relaxed);
+}
+
+/// Current process-wide default per-probe step budget.
+pub fn default_steps() -> Option<usize> {
+    match DEFAULT_STEPS.load(Ordering::Relaxed) {
+        0 => None,
+        s => Some(s),
+    }
+}
+
+/// Process-wide default adaptive logdet tolerance, stored as f64 bits
+/// (0 bits = unset → fixed-budget estimation). The CLI `--logdet-tol`
+/// flag threads through here; `SlqOptions::default`/`ChebOptions::default`
+/// read it into `target_tol`.
+static DEFAULT_LOGDET_TOL_BITS: std::sync::atomic::AtomicU64 =
+    std::sync::atomic::AtomicU64::new(0);
+
+/// Set the process-wide default adaptive logdet tolerance (`None` or a
+/// non-positive value unsets it — estimators then run fixed budgets).
+pub fn set_default_logdet_tol(tol: Option<f64>) {
+    let bits = match tol {
+        Some(t) if t > 0.0 => t.to_bits(),
+        _ => 0,
+    };
+    DEFAULT_LOGDET_TOL_BITS.store(bits, Ordering::Relaxed);
+}
+
+/// Current process-wide default adaptive logdet tolerance.
+pub fn default_logdet_tol() -> Option<f64> {
+    match DEFAULT_LOGDET_TOL_BITS.load(Ordering::Relaxed) {
+        0 => None,
+        bits => Some(f64::from_bits(bits)),
+    }
+}
+
 /// Probe-column partitioning — shared with the block-CG solver so probe
 /// sets and right-hand-side sets slice identically
 /// ([`crate::util::blocks::BlockPartition`]).
 pub(crate) use crate::util::blocks::BlockPartition;
+
+/// One probe's retained Lanczos evidence: the tridiagonal the quadrature
+/// was read off, plus the probe's squared norm (the quadrature weight).
+/// `alphas.len()` is the number of Lanczos steps that actually ran for
+/// this probe (breakdown can stop a column early).
+#[derive(Clone, Debug)]
+pub struct LanczosProbe {
+    /// Tridiagonal diagonal (length = steps run).
+    pub alphas: Vec<f64>,
+    /// Tridiagonal off-diagonal (length = steps run − 1).
+    pub betas: Vec<f64>,
+    /// `||z||²` — the total quadrature mass of this probe.
+    pub znorm2: f64,
+}
+
+/// Per-probe spectral evidence retained by an estimator — the raw material
+/// the [`confidence`] module turns into posterior intervals, kept instead
+/// of being discarded after the point estimate is read off.
+#[derive(Clone, Debug)]
+pub enum SpectralEvidence {
+    /// Deterministic estimate (exact Cholesky, scaled-eig, surrogate):
+    /// no stochastic evidence exists; the interval is degenerate.
+    Exact,
+    /// Stochastic Lanczos quadrature: one tridiagonal per probe. `offset`
+    /// is the exact constant folded into every per-probe value (the
+    /// preconditioner's `log|P|` correction; 0 unpreconditioned).
+    Lanczos {
+        probes: Vec<LanczosProbe>,
+        offset: f64,
+    },
+    /// Stochastic Chebyshev expansion: one moment vector
+    /// `[z^T T_0(B) z, …, z^T T_d(B) z]` per probe, the shared coefficient
+    /// vector `c_j` of `f` on the bracket, and the spectrum bracket
+    /// `(a, b)` the operator was mapped to `[-1, 1]` from.
+    Chebyshev {
+        moments: Vec<Vec<f64>>,
+        coeffs: Vec<f64>,
+        bracket: (f64, f64),
+    },
+}
+
+impl SpectralEvidence {
+    /// Number of probes the evidence covers (0 for `Exact`).
+    pub fn probe_count(&self) -> usize {
+        match self {
+            SpectralEvidence::Exact => 0,
+            SpectralEvidence::Lanczos { probes, .. } => probes.len(),
+            SpectralEvidence::Chebyshev { moments, .. } => moments.len(),
+        }
+    }
+}
 
 /// A stochastic estimate of `log|K̃|` and its hyper-derivatives.
 #[derive(Clone, Debug)]
@@ -105,6 +254,8 @@ pub struct LogdetEstimate {
     /// d log|K̃| / d θ_i for every hyper (empty if gradients not requested).
     pub grad: Vec<f64>,
     /// A-posteriori standard error of `value` across probes (paper §4).
+    /// `+inf` when fewer than 2 probes ran (a single sample carries no
+    /// spread information — see `util::stats::std_err`).
     pub std_err: f64,
     /// Per-probe values of z^T log(K̃) z (for diagnostics/tests).
     pub per_probe: Vec<f64>,
@@ -115,6 +266,18 @@ pub struct LogdetEstimate {
     /// derivative pass (in-operator fusion across hypers not modeled).
     /// Equals `mvms` at `block_size = 1`.
     pub block_applies: usize,
+    /// Retained per-probe spectral evidence (see module docs).
+    pub evidence: SpectralEvidence,
+    /// Moment-matched 95% posterior interval over `value` synthesized from
+    /// the evidence ([`confidence::logdet_interval`]); degenerate
+    /// (zero-width) for deterministic estimators.
+    pub interval: ConfidenceInterval,
+    /// Probes actually consumed (== `per_probe.len()` on stochastic paths;
+    /// 0 for deterministic estimators).
+    pub probes_used: usize,
+    /// Per-probe budget actually used: the longest Lanczos tridiagonal /
+    /// the Chebyshev degree (0 for deterministic estimators).
+    pub steps_used: usize,
 }
 
 impl LogdetEstimate {
@@ -126,6 +289,10 @@ impl LogdetEstimate {
             per_probe: vec![value],
             mvms: 0,
             block_applies: 0,
+            evidence: SpectralEvidence::Exact,
+            interval: ConfidenceInterval::exact(value),
+            probes_used: 0,
+            steps_used: 0,
         }
     }
 }

@@ -16,10 +16,12 @@
 //! sizes; see the module docs of [`crate::estimators`] for the accounting
 //! convention (`mvms` vs `block_applies`).
 
+use super::confidence;
 use super::lanczos::{lanczos_block, lanczos_block_prec};
 use super::probes::{combine, ProbeKind, ProbeSet};
-use super::{BlockPartition, LogdetEstimate};
+use super::{BlockPartition, LanczosProbe, LogdetEstimate, SpectralEvidence};
 use crate::error::Result;
+use crate::linalg::dense::Mat;
 use crate::linalg::tridiag::lanczos_quadrature;
 use crate::operators::{KernelOp, LinOp};
 use crate::solvers::precond::{PreconditionedOp, Preconditioner};
@@ -30,7 +32,9 @@ use crate::util::parallel;
 pub struct SlqOptions {
     /// Lanczos steps m (paper uses 25–30 in the experiments).
     pub steps: usize,
-    /// Number of probe vectors (paper: 5–10).
+    /// Number of probe vectors (paper: 5–10). With `target_tol` set this
+    /// is only the *seed* of the adaptive schedule; the driver may stop
+    /// earlier (never before 2 probes) or grow up to `max_probes`.
     pub probes: usize,
     pub kind: ProbeKind,
     pub seed: u64,
@@ -52,29 +56,50 @@ pub struct SlqOptions {
     /// (`apply_grad_all_mat`) and preconditioner algebra always stay f64.
     /// Defaults to the process default (CLI `--precision`).
     pub precision: crate::util::precision::Precision,
+    /// Adaptive stopping tolerance: `Some(tol)` switches the probe loop to
+    /// an incremental-budget driver that grows the probe set until the
+    /// 95% confidence half-width ([`super::confidence`]) clears `tol` (or
+    /// `max_probes` is hit). `None` (the default, also CLI
+    /// `--logdet-tol`) runs the fixed budget — **bit-identical** to the
+    /// pre-evidence estimator: same probe set, same partition, same
+    /// accumulation order.
+    pub target_tol: Option<f64>,
+    /// Probe ceiling for adaptive mode (clamped to >= 2; ignored when
+    /// `target_tol` is `None`).
+    pub max_probes: usize,
+    /// Lanczos-step ceiling for adaptive mode: 0 = no extra cap (use
+    /// `steps`), otherwise the per-probe budget is `steps.min(max_steps)`.
+    /// Ignored when `target_tol` is `None`.
+    pub max_steps: usize,
 }
 
 impl Default for SlqOptions {
     fn default() -> Self {
         SlqOptions {
-            steps: 25,
-            probes: 5,
+            steps: super::default_steps().unwrap_or(25),
+            probes: super::default_probes().unwrap_or(5),
             kind: ProbeKind::Rademacher,
             seed: 0,
             grads: true,
             threads: parallel::default_threads(),
             block_size: super::default_block_size(),
             precision: crate::util::precision::default_precision(),
+            target_tol: super::default_logdet_tol(),
+            max_probes: 64,
+            max_steps: 0,
         }
     }
 }
 
 /// Per-block partial results (kept per-column so the cross-block reduction
 /// accumulates in probe order, independent of the block width).
+#[derive(Clone)]
 struct PerBlock {
     quads: Vec<f64>,
     /// Per column: one term per hyper.
     grad_terms: Vec<Vec<f64>>,
+    /// Per column: the retained Lanczos tridiagonal.
+    evidence: Vec<LanczosProbe>,
     mvms: usize,
     block_applies: usize,
 }
@@ -98,85 +123,178 @@ pub fn slq_logdet_pc(
     pc: Option<&dyn Preconditioner>,
     opts: &SlqOptions,
 ) -> Result<LogdetEstimate> {
+    match opts.target_tol {
+        None => slq_fixed(op, pc, opts),
+        Some(tol) => slq_adaptive(op, pc, opts, tol),
+    }
+}
+
+/// Fixed-budget path: one probe set of exactly `opts.probes` columns, one
+/// pass over the block partition — the accumulation order (and therefore
+/// every output bit) matches the pre-evidence estimator.
+fn slq_fixed(
+    op: &dyn KernelOp,
+    pc: Option<&dyn Preconditioner>,
+    opts: &SlqOptions,
+) -> Result<LogdetEstimate> {
     let n = op.n();
     let probes = ProbeSet::new(n, opts.probes, opts.kind, opts.seed);
     let z = probes.as_mat();
     let nh = op.num_hypers();
-    let part = BlockPartition::new(opts.probes, opts.block_size);
+    let results = run_blocks(op, pc, opts, &z, 0, opts.probes, opts.steps.min(n), nh);
+    let mut blocks = Vec::with_capacity(results.len());
+    for r in results {
+        blocks.push(r?);
+    }
+    Ok(assemble(&blocks, opts, nh, opts.probes, pc.map(|p| p.logdet()).unwrap_or(0.0)))
+}
+
+/// Incremental-budget path: the probe matrix is drawn once at `max_probes`
+/// width (`ProbeSet` draws column-by-column, so the first j columns are
+/// identical for any width >= j — growing the budget never redraws earlier
+/// probes), then consumed in chunks. After each chunk the moment-matched
+/// interval ([`super::confidence`]) is re-synthesized from all evidence so
+/// far; the loop stops once its half-width clears `tol` — never before 2
+/// probes, since a 1-probe interval is infinite by construction
+/// ([`crate::util::stats::std_err`]).
+///
+/// Chunk schedule: 2 probes first (the minimum that yields a finite
+/// interval), then `(done/2).clamp(1, block_size)` — geometric enough to
+/// amortize, never overshooting a just-cleared tolerance by more than one
+/// block width.
+fn slq_adaptive(
+    op: &dyn KernelOp,
+    pc: Option<&dyn Preconditioner>,
+    opts: &SlqOptions,
+    tol: f64,
+) -> Result<LogdetEstimate> {
+    let n = op.n();
+    let nh = op.num_hypers();
+    let max_probes = opts.max_probes.max(2);
+    let steps = match opts.max_steps {
+        0 => opts.steps,
+        m => opts.steps.min(m),
+    }
+    .min(n)
+    .max(1);
+    let probes = ProbeSet::new(n, max_probes, opts.kind, opts.seed);
+    let z = probes.as_mat();
+    let offset = pc.map(|p| p.logdet()).unwrap_or(0.0);
+    let mut blocks: Vec<PerBlock> = Vec::new();
+    let mut done = 0usize;
+    loop {
+        let chunk = if done == 0 {
+            2.min(max_probes)
+        } else {
+            (done / 2).clamp(1, opts.block_size.max(1)).min(max_probes - done)
+        };
+        for r in run_blocks(op, pc, opts, &z, done, chunk, steps, nh) {
+            blocks.push(r?);
+        }
+        done += chunk;
+        let est = assemble(&blocks, opts, nh, done, offset);
+        if (done >= 2 && est.interval.half_width() <= tol) || done >= max_probes {
+            return Ok(est);
+        }
+    }
+}
+
+/// Run the blocked Lanczos + quadrature (+ optional derivative) pass over
+/// `count` probe columns of `z` starting at `base`. One `PerBlock` per
+/// partition block, in probe order — shared by the fixed and adaptive
+/// drivers so their per-probe arithmetic is byte-for-byte the same code.
+fn run_blocks(
+    op: &dyn KernelOp,
+    pc: Option<&dyn Preconditioner>,
+    opts: &SlqOptions,
+    z: &Mat,
+    base: usize,
+    count: usize,
+    steps: usize,
+    nh: usize,
+) -> Vec<Result<PerBlock>> {
+    let part = BlockPartition::new(count, opts.block_size);
     let ld_p = pc.map(|p| p.logdet());
     let pop = pc.map(|p| PreconditionedOp::new(op, p));
-
-    let results: Vec<Result<PerBlock>> =
-        parallel::par_map(part.nblocks, opts.threads, |bi| {
-            let (j0, w) = part.range(bi);
-            let zblk = z.sub_cols(j0, w);
-            let res = match &pop {
-                Some(pop) => lanczos_block_prec(pop, &zblk, opts.steps.min(n), opts.precision),
-                None => lanczos_block_prec(op, &zblk, opts.steps.min(n), opts.precision),
-            };
-            let mut quads = Vec::with_capacity(w);
-            let mut mvms = 0;
-            let mut block_applies = 0;
-            for r in &res {
-                let q = lanczos_quadrature(&r.alphas, &r.betas, r.znorm * r.znorm, |lam| {
-                    lam.max(1e-300).ln()
-                })?;
-                // Each preconditioned per-probe value carries its share of
-                // the exact log|P| correction so the combine step needs no
-                // special casing.
-                quads.push(match ld_p {
-                    Some(ld) => q + ld,
-                    None => q,
-                });
-                mvms += r.mvms;
-                // The block loop runs as long as its longest column.
-                block_applies = block_applies.max(r.mvms);
-            }
-            let mut grad_terms = Vec::new();
-            if opts.grads {
-                // One blocked derivative pass per hyper covers all probes;
-                // preconditioned, the pass runs over V = P^{-1/2} Z.
-                let vblk;
-                let vref = match pc {
-                    Some(p) => {
-                        vblk = p.apply_inv_sqrt_mat(&zblk);
-                        &vblk
-                    }
-                    None => &zblk,
-                };
-                let dks = op.apply_grad_all_mat(vref);
-                mvms += nh * w;
-                block_applies += nh;
-                for (c, r) in res.iter().enumerate() {
-                    let g = r.solve_e1(); // ≈ M^{-1} z_c (K̃^{-1} z_c when pc is off)
-                    let u = match pc {
-                        Some(p) => p.apply_inv_sqrt_vec(&g),
-                        None => g,
-                    };
-                    grad_terms.push(dks.iter().map(|dk| dk.col_dot(c, &u)).collect());
+    parallel::par_map(part.nblocks, opts.threads, |bi| {
+        let (j0, w) = part.range(bi);
+        let zblk = z.sub_cols(base + j0, w);
+        let res = match &pop {
+            Some(pop) => lanczos_block_prec(pop, &zblk, steps, opts.precision),
+            None => lanczos_block_prec(op, &zblk, steps, opts.precision),
+        };
+        let mut quads = Vec::with_capacity(w);
+        let mut evidence = Vec::with_capacity(w);
+        let mut mvms = 0;
+        let mut block_applies = 0;
+        for r in &res {
+            let q = lanczos_quadrature(&r.alphas, &r.betas, r.znorm * r.znorm, |lam| {
+                lam.max(1e-300).ln()
+            })?;
+            // Each preconditioned per-probe value carries its share of
+            // the exact log|P| correction so the combine step needs no
+            // special casing.
+            quads.push(match ld_p {
+                Some(ld) => q + ld,
+                None => q,
+            });
+            evidence.push(LanczosProbe {
+                alphas: r.alphas.clone(),
+                betas: r.betas.clone(),
+                znorm2: r.znorm * r.znorm,
+            });
+            mvms += r.mvms;
+            // The block loop runs as long as its longest column.
+            block_applies = block_applies.max(r.mvms);
+        }
+        let mut grad_terms = Vec::new();
+        if opts.grads {
+            // One blocked derivative pass per hyper covers all probes;
+            // preconditioned, the pass runs over V = P^{-1/2} Z.
+            let vblk;
+            let vref = match pc {
+                Some(p) => {
+                    vblk = p.apply_inv_sqrt_mat(&zblk);
+                    &vblk
                 }
+                None => &zblk,
+            };
+            let dks = op.apply_grad_all_mat(vref);
+            mvms += nh * w;
+            block_applies += nh;
+            for (c, r) in res.iter().enumerate() {
+                let g = r.solve_e1(); // ≈ M^{-1} z_c (K̃^{-1} z_c when pc is off)
+                let u = match pc {
+                    Some(p) => p.apply_inv_sqrt_vec(&g),
+                    None => g,
+                };
+                grad_terms.push(dks.iter().map(|dk| dk.col_dot(c, &u)).collect());
             }
-            Ok(PerBlock { quads, grad_terms, mvms, block_applies })
-        });
-
-    reduce_blocks(results, opts, nh)
+        }
+        Ok(PerBlock { quads, grad_terms, evidence, mvms, block_applies })
+    })
 }
 
 /// Cross-block reduction of the SLQ driver: accumulates per-probe values
-/// and gradient terms in probe order (independent of block width) and
-/// assembles the estimate.
-fn reduce_blocks(
-    results: Vec<Result<PerBlock>>,
+/// and gradient terms in probe order (independent of block width),
+/// re-synthesizes the confidence interval from the retained evidence, and
+/// assembles the estimate. `probes_used` is the gradient divisor (== the
+/// number of probe columns the blocks cover).
+fn assemble(
+    blocks: &[PerBlock],
     opts: &SlqOptions,
     nh: usize,
-) -> Result<LogdetEstimate> {
-    let mut per_probe = Vec::with_capacity(opts.probes);
+    probes_used: usize,
+    offset: f64,
+) -> LogdetEstimate {
+    let mut per_probe = Vec::with_capacity(probes_used);
+    let mut probe_ev = Vec::with_capacity(probes_used);
     let mut grad = vec![0.0; if opts.grads { nh } else { 0 }];
     let mut mvms = 0;
     let mut block_applies = 0;
-    for r in results {
-        let r = r?;
-        per_probe.extend(r.quads);
+    for r in blocks {
+        per_probe.extend_from_slice(&r.quads);
+        probe_ev.extend(r.evidence.iter().cloned());
         for gt in &r.grad_terms {
             for (gi, t) in grad.iter_mut().zip(gt) {
                 *gi += t;
@@ -186,10 +304,25 @@ fn reduce_blocks(
         block_applies += r.block_applies;
     }
     for gi in grad.iter_mut() {
-        *gi /= opts.probes as f64;
+        *gi /= probes_used as f64;
     }
     let (value, std_err) = combine(&per_probe);
-    Ok(LogdetEstimate { value, grad, std_err, per_probe, mvms, block_applies })
+    let steps_used = probe_ev.iter().map(|p| p.alphas.len()).max().unwrap_or(0);
+    let evidence = SpectralEvidence::Lanczos { probes: probe_ev, offset };
+    let interval =
+        confidence::interval_from_parts(value, &per_probe, &evidence, confidence::DEFAULT_LEVEL);
+    LogdetEstimate {
+        value,
+        grad,
+        std_err,
+        per_probe,
+        mvms,
+        block_applies,
+        evidence,
+        interval,
+        probes_used,
+        steps_used,
+    }
 }
 
 /// Estimate `log|K̃|` (and optionally all derivatives) via SLQ.
@@ -197,9 +330,79 @@ pub fn slq_logdet(op: &dyn KernelOp, opts: &SlqOptions) -> Result<LogdetEstimate
     slq_logdet_pc(op, None, opts)
 }
 
-/// Generic SLQ trace estimate of `tr(f(A))` for any SPD [`LinOp`] — used by
-/// the Laplace approximation for `log|B|` where B has no hyper structure.
+/// Generic SLQ trace estimate of `tr(f(A))` for any SPD [`LinOp`] with the
+/// full evidence/interval surface — used by the Laplace approximation for
+/// `log|B|` where B has no hyper structure (the returned `grad` is empty).
 /// Probes are processed in [`super::default_block_size`]-wide blocks.
+///
+/// Note the interval's truncation term is derived from the retained
+/// tridiagonals under the *logdet* integrand; for `f` far from `ln` it is
+/// only a convergence heuristic (the Monte-Carlo term is exact either way).
+pub fn slq_trace_fn_ev<O: LinOp + ?Sized>(
+    op: &O,
+    f: impl Fn(f64) -> f64 + Sync,
+    steps: usize,
+    probes: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<LogdetEstimate> {
+    let n = op.n();
+    let ps = ProbeSet::new(n, probes, ProbeKind::Rademacher, seed);
+    let z = ps.as_mat();
+    let part = BlockPartition::new(probes, super::default_block_size());
+    let blocks: Vec<Result<(Vec<f64>, Vec<LanczosProbe>, usize, usize)>> =
+        parallel::par_map(part.nblocks, threads, |bi| {
+            let (j0, w) = part.range(bi);
+            let zblk = z.sub_cols(j0, w);
+            let res = lanczos_block(op, &zblk, steps.min(n));
+            let mut quads = Vec::with_capacity(w);
+            let mut ev = Vec::with_capacity(w);
+            let mut mvms = 0;
+            let mut applies = 0;
+            for r in &res {
+                quads.push(lanczos_quadrature(&r.alphas, &r.betas, r.znorm * r.znorm, &f)?);
+                ev.push(LanczosProbe {
+                    alphas: r.alphas.clone(),
+                    betas: r.betas.clone(),
+                    znorm2: r.znorm * r.znorm,
+                });
+                mvms += r.mvms;
+                applies = applies.max(r.mvms);
+            }
+            Ok((quads, ev, mvms, applies))
+        });
+    let mut per_probe = Vec::with_capacity(probes);
+    let mut probe_ev = Vec::with_capacity(probes);
+    let mut mvms = 0;
+    let mut block_applies = 0;
+    for blk in blocks {
+        let (quads, ev, m, a) = blk?;
+        per_probe.extend(quads);
+        probe_ev.extend(ev);
+        mvms += m;
+        block_applies += a;
+    }
+    let (value, std_err) = combine(&per_probe);
+    let steps_used = probe_ev.iter().map(|p| p.alphas.len()).max().unwrap_or(0);
+    let evidence = SpectralEvidence::Lanczos { probes: probe_ev, offset: 0.0 };
+    let interval =
+        confidence::interval_from_parts(value, &per_probe, &evidence, confidence::DEFAULT_LEVEL);
+    Ok(LogdetEstimate {
+        value,
+        grad: Vec::new(),
+        std_err,
+        per_probe,
+        mvms,
+        block_applies,
+        evidence,
+        interval,
+        probes_used: probes,
+        steps_used,
+    })
+}
+
+/// Generic SLQ trace estimate of `tr(f(A))` — `(value, std_err)` view of
+/// [`slq_trace_fn_ev`] (same probes, same arithmetic, same bits).
 pub fn slq_trace_fn<O: LinOp + ?Sized>(
     op: &O,
     f: impl Fn(f64) -> f64 + Sync,
@@ -208,23 +411,8 @@ pub fn slq_trace_fn<O: LinOp + ?Sized>(
     seed: u64,
     threads: usize,
 ) -> Result<(f64, f64)> {
-    let n = op.n();
-    let ps = ProbeSet::new(n, probes, ProbeKind::Rademacher, seed);
-    let z = ps.as_mat();
-    let part = BlockPartition::new(probes, super::default_block_size());
-    let blocks: Vec<Result<Vec<f64>>> = parallel::par_map(part.nblocks, threads, |bi| {
-        let (j0, w) = part.range(bi);
-        let zblk = z.sub_cols(j0, w);
-        lanczos_block(op, &zblk, steps.min(n))
-            .iter()
-            .map(|r| lanczos_quadrature(&r.alphas, &r.betas, r.znorm * r.znorm, &f))
-            .collect()
-    });
-    let mut vals = Vec::with_capacity(probes);
-    for blk in blocks {
-        vals.extend(blk?);
-    }
-    Ok(combine(&vals))
+    let est = slq_trace_fn_ev(op, f, steps, probes, seed, threads)?;
+    Ok((est.value, est.std_err))
 }
 
 /// Solve estimates `g_p ≈ K̃^{-1} z_p` for a probe set, re-using one Lanczos
@@ -465,6 +653,164 @@ mod tests {
             2 * pc_steps <= raw_steps,
             "preconditioning saved less than 2x Lanczos steps: {pc_steps} vs {raw_steps}"
         );
+    }
+
+    /// The inert adaptive knobs (`target_tol: None` with any
+    /// `max_probes`/`max_steps`) leave every output bit of the fixed-budget
+    /// path unchanged.
+    #[test]
+    fn inert_adaptive_knobs_are_bitwise_noop() {
+        let o = op(80, 23);
+        let base = slq_logdet(
+            &o,
+            &SlqOptions { steps: 20, probes: 6, seed: 4, ..Default::default() },
+        )
+        .unwrap();
+        let knobs = slq_logdet(
+            &o,
+            &SlqOptions {
+                steps: 20,
+                probes: 6,
+                seed: 4,
+                target_tol: None,
+                max_probes: 7,
+                max_steps: 3,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(base.value.to_bits(), knobs.value.to_bits());
+        assert_eq!(base.std_err.to_bits(), knobs.std_err.to_bits());
+        assert_eq!(base.per_probe.len(), knobs.per_probe.len());
+        for (a, b) in base.per_probe.iter().zip(&knobs.per_probe) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in base.grad.iter().zip(&knobs.grad) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(base.mvms, knobs.mvms);
+        assert_eq!(base.block_applies, knobs.block_applies);
+    }
+
+    /// Adaptive mode on an easy (large-noise) operator stops with strictly
+    /// fewer probes than the fixed default while clearing the tolerance.
+    #[test]
+    fn adaptive_uses_fewer_probes_when_easy() {
+        let o = op(120, 41);
+        let fixed = slq_logdet(
+            &o,
+            &SlqOptions { steps: 30, probes: 16, grads: false, seed: 2, ..Default::default() },
+        )
+        .unwrap();
+        // Pick a tolerance the fixed 16-probe run comfortably clears, so the
+        // adaptive driver can stop earlier.
+        let tol = fixed.interval.half_width() * 2.0;
+        let adaptive = slq_logdet(
+            &o,
+            &SlqOptions {
+                steps: 30,
+                probes: 16,
+                grads: false,
+                seed: 2,
+                target_tol: Some(tol),
+                max_probes: 64,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(
+            adaptive.probes_used < 16,
+            "adaptive used {} probes, fixed default 16",
+            adaptive.probes_used
+        );
+        assert!(adaptive.interval.half_width() <= tol);
+        assert_eq!(adaptive.per_probe.len(), adaptive.probes_used);
+    }
+
+    /// The adaptive driver never stops on a 1-probe interval, even with an
+    /// absurdly loose tolerance: a single probe carries no spread
+    /// information (its half-width is +inf by construction).
+    #[test]
+    fn adaptive_never_stops_at_one_probe() {
+        let o = op(60, 8);
+        let est = slq_logdet(
+            &o,
+            &SlqOptions {
+                steps: 15,
+                probes: 1,
+                grads: false,
+                seed: 6,
+                target_tol: Some(1e12),
+                max_probes: 64,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(est.probes_used >= 2, "stopped at {} probes", est.probes_used);
+        assert!(est.interval.half_width().is_finite());
+    }
+
+    /// Adaptive probe growth extends the same probe sequence: the first j
+    /// per-probe quadrature values match the fixed-budget run bit-for-bit.
+    #[test]
+    fn adaptive_probes_extend_fixed_sequence() {
+        let o = op(70, 9);
+        let adaptive = slq_logdet(
+            &o,
+            &SlqOptions {
+                steps: 20,
+                probes: 4,
+                grads: false,
+                seed: 11,
+                block_size: 1,
+                target_tol: Some(1e-9),
+                max_probes: 8,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let fixed = slq_logdet(
+            &o,
+            &SlqOptions {
+                steps: 20,
+                probes: adaptive.probes_used,
+                grads: false,
+                seed: 11,
+                block_size: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for (a, b) in adaptive.per_probe.iter().zip(&fixed.per_probe) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    /// Evidence retention: per-probe quadratures are recomputable from the
+    /// retained tridiagonals, and the interval brackets the estimate.
+    #[test]
+    fn evidence_reproduces_per_probe_quadratures() {
+        let o = op(50, 19);
+        let est = slq_logdet(
+            &o,
+            &SlqOptions { steps: 15, probes: 4, grads: false, seed: 3, ..Default::default() },
+        )
+        .unwrap();
+        match &est.evidence {
+            SpectralEvidence::Lanczos { probes, offset } => {
+                assert_eq!(probes.len(), est.per_probe.len());
+                for (p, q) in probes.iter().zip(&est.per_probe) {
+                    let r = lanczos_quadrature(&p.alphas, &p.betas, p.znorm2, |lam| {
+                        lam.max(1e-300).ln()
+                    })
+                    .unwrap();
+                    assert_eq!((r + offset).to_bits(), q.to_bits());
+                }
+            }
+            other => panic!("expected Lanczos evidence, got {other:?}"),
+        }
+        assert!(est.interval.contains(est.value));
+        assert!(est.steps_used <= 15 && est.steps_used > 0);
     }
 
     #[test]

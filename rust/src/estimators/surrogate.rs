@@ -101,6 +101,14 @@ pub struct LogdetSurrogate {
     pub bounds: Vec<(f64, f64)>,
     /// Total MVMs spent building it.
     pub build_mvms: usize,
+    /// Total probe vectors consumed across all design-point SLQ
+    /// evaluations (adaptive budgets make this data-dependent).
+    pub build_probes_used: usize,
+    /// Widest 95% confidence interval among the design-point evaluations —
+    /// an upper bound on the stochastic error baked into the interpolant's
+    /// training values (the surrogate itself is deterministic afterwards,
+    /// which is why its estimates report degenerate evidence).
+    pub build_max_interval_width: f64,
 }
 
 impl LogdetSurrogate {
@@ -128,6 +136,8 @@ impl LogdetSurrogate {
         let h0 = op.hypers();
         let mut vals = Vec::with_capacity(n_design);
         let mut build_mvms = 0;
+        let mut build_probes_used = 0;
+        let mut build_max_interval_width: f64 = 0.0;
         let mut opts = *slq;
         opts.grads = false;
         // The design loop mutates the operator's hyperparameters, so the
@@ -141,6 +151,9 @@ impl LogdetSurrogate {
                 Ok(est) => {
                     vals.push(est.value);
                     build_mvms += est.mvms;
+                    build_probes_used += est.probes_used;
+                    build_max_interval_width =
+                        build_max_interval_width.max(est.interval.width());
                 }
                 Err(e) => {
                     failure = Some(e);
@@ -156,6 +169,8 @@ impl LogdetSurrogate {
             surrogate: RbfSurrogate::fit(pts, &vals)?,
             bounds: bounds.to_vec(),
             build_mvms,
+            build_probes_used,
+            build_max_interval_width,
         })
     }
 
@@ -332,6 +347,8 @@ mod tests {
             surrogate: RbfSurrogate::fit(pts, &vals).unwrap(),
             bounds: vec![(0.0, 1.0), (0.0, 1.0)],
             build_mvms: 0,
+            build_probes_used: 0,
+            build_max_interval_width: 0.0,
         };
         let eps = 1e-6;
         // Above the box in dim 0, below it in dim 0, and interior.
@@ -374,6 +391,11 @@ mod tests {
             h0.iter().map(|&h| (h - 0.7, h + 0.7)).collect();
         let slq = SlqOptions { steps: 25, probes: 10, seed: 1, ..Default::default() };
         let sur = LogdetSurrogate::build(&mut op, &bounds, 50, &slq, 7).unwrap();
+        assert_eq!(sur.build_probes_used, 50 * 10, "fixed budget: 10 probes per design point");
+        assert!(
+            sur.build_max_interval_width.is_finite() && sur.build_max_interval_width > 0.0,
+            "design evaluations should carry finite nonzero interval widths"
+        );
         // Compare surrogate to fresh SLQ at interior points.
         for shift in [-0.3, 0.0, 0.25] {
             let theta: Vec<f64> = h0.iter().map(|&h| h + shift).collect();

@@ -11,6 +11,7 @@
 use crate::error::Result;
 use crate::estimators::probes::{ProbeKind, ProbeSet};
 use crate::estimators::slq::{slq_logdet_pc, SlqOptions};
+use crate::estimators::ConfidenceInterval;
 use crate::kernels::deep::Mlp;
 use crate::kernels::{IsoKernel, Kernel, Shape};
 use crate::linalg::dense::Mat;
@@ -41,6 +42,11 @@ pub struct DklEval {
     pub mll: f64,
     /// Gradient over [net params..., log_ell, log_sf, log_sigma].
     pub grad: Vec<f64>,
+    /// 95% confidence interval on the `log|K̃|` term inside `mll`.
+    pub logdet_interval: ConfidenceInterval,
+    /// Probes the SLQ logdet estimate consumed (adaptive runs may use
+    /// fewer than `slq.max_probes`).
+    pub logdet_probes_used: usize,
 }
 
 impl DeepKernelGp {
@@ -191,7 +197,12 @@ impl DeepKernelGp {
         let (dw, db) = self.net.backward(&tape, &dz);
         let mut grad = self.net.flatten_grads(&dw, &db);
         grad.extend_from_slice(&hyper_grad);
-        Ok(DklEval { mll, grad })
+        Ok(DklEval {
+            mll,
+            grad,
+            logdet_interval: ld.interval,
+            logdet_probes_used: ld.probes_used,
+        })
     }
 
     /// Pre-train the network (plus a temporary linear head) on plain MSE
@@ -342,6 +353,10 @@ mod tests {
         // Use exact-strength SLQ so the stochastic gradient is tight.
         gp.slq = SlqOptions { steps: 24, probes: 200, ..Default::default() };
         let ev = gp.mll_and_grad(7).unwrap();
+        // Fixed-budget run: accounting reports the full probe budget and a
+        // finite interval on the logdet term.
+        assert_eq!(ev.logdet_probes_used, 200);
+        assert!(ev.logdet_interval.width().is_finite() && ev.logdet_interval.width() > 0.0);
         let p0 = gp.params();
         let eps = 1e-4;
         // Check a few parameters incl. hypers (indices at the end).

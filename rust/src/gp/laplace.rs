@@ -12,7 +12,8 @@
 //!     has no exploitable eigenstructure.
 
 use crate::error::Result;
-use crate::estimators::slq::slq_trace_fn;
+use crate::estimators::slq::slq_trace_fn_ev;
+use crate::estimators::ConfidenceInterval;
 use crate::linalg::dense::Mat;
 use crate::linalg::pchol::pivoted_cholesky;
 use crate::operators::{KernelOp, LaplaceBOp};
@@ -67,6 +68,12 @@ pub struct LaplaceFit {
     pub log_marginal: f64,
     /// SLQ standard error of the log|B| term.
     pub logdet_std_err: f64,
+    /// 95% confidence interval on the log|B| term, synthesized from the
+    /// retained Lanczos evidence (shifted by the exact `log|P_B|`
+    /// correction when the fit ran preconditioned).
+    pub logdet_interval: ConfidenceInterval,
+    /// Probe vectors consumed by the log|B| estimate.
+    pub logdet_probes_used: usize,
     pub newton_iters: usize,
 }
 
@@ -183,31 +190,51 @@ impl<O: KernelOp> LaplaceGp<O> {
         let w: Vec<f64> = (0..n).map(|i| self.lik.neg_d2logp(self.y[i], f[i])).collect();
         let sqrt_w: Vec<f64> = w.iter().map(|v| v.max(0.0).sqrt()).collect();
         let bop = LaplaceBOp::new(&self.op, &w);
-        let (logdet_b, se) = match k_factor.as_ref().map(|l| precond_b(l, &sqrt_w)) {
-            Some(pc_b) => {
-                let pop = PreconditionedOp::new(&bop, &pc_b);
-                let (t, se) = slq_trace_fn(
-                    &pop,
-                    |lam| lam.max(1e-12).ln(),
-                    opts.slq_steps,
-                    opts.slq_probes,
-                    opts.seed,
-                    opts.threads,
-                )?;
-                (t + pc_b.logdet(), se)
-            }
-            None => slq_trace_fn(
-                &bop,
-                |lam| lam.max(1e-12).ln(),
-                opts.slq_steps,
-                opts.slq_probes,
-                opts.seed,
-                opts.threads,
-            )?,
-        };
+        let (logdet_b, se, interval, probes_used) =
+            match k_factor.as_ref().map(|l| precond_b(l, &sqrt_w)) {
+                Some(pc_b) => {
+                    let pop = PreconditionedOp::new(&bop, &pc_b);
+                    let est = slq_trace_fn_ev(
+                        &pop,
+                        |lam| lam.max(1e-12).ln(),
+                        opts.slq_steps,
+                        opts.slq_probes,
+                        opts.seed,
+                        opts.threads,
+                    )?;
+                    // The exact log|P_B| correction shifts value and
+                    // interval rigidly (zero extra uncertainty).
+                    let ld = pc_b.logdet();
+                    let shifted = ConfidenceInterval {
+                        lo: est.interval.lo + ld,
+                        hi: est.interval.hi + ld,
+                        level: est.interval.level,
+                    };
+                    (est.value + ld, est.std_err, shifted, est.probes_used)
+                }
+                None => {
+                    let est = slq_trace_fn_ev(
+                        &bop,
+                        |lam| lam.max(1e-12).ln(),
+                        opts.slq_steps,
+                        opts.slq_probes,
+                        opts.seed,
+                        opts.threads,
+                    )?;
+                    (est.value, est.std_err, est.interval, est.probes_used)
+                }
+            };
         let log_marginal =
             self.lik.logp_sum(&self.y, &f) - 0.5 * dot(&a, &f) - 0.5 * logdet_b;
-        Ok(LaplaceFit { f_hat: f, a, log_marginal, logdet_std_err: se, newton_iters: iters })
+        Ok(LaplaceFit {
+            f_hat: f,
+            a,
+            log_marginal,
+            logdet_std_err: se,
+            logdet_interval: interval,
+            logdet_probes_used: probes_used,
+            newton_iters: iters,
+        })
     }
 
     /// Predicted mean counts on the training grid (LGCP intensity).
@@ -346,6 +373,30 @@ mod tests {
             "{} vs {}",
             fit.log_marginal,
             want
+        );
+    }
+
+    /// The fit reports the log|B| confidence interval and probe count, and
+    /// the 95% interval brackets the dense-reference log|B|.
+    #[test]
+    fn fit_reports_calibrated_logdet_interval() {
+        let (op, y) = toy_lgcp(7);
+        let lik = Likelihood::Poisson { offset: 0.0 };
+        let mut gp = LaplaceGp::new(op, y.clone(), lik);
+        let fit = gp
+            .fit(&LaplaceOptions { slq_probes: 16, slq_steps: 40, ..Default::default() })
+            .unwrap();
+        assert_eq!(fit.logdet_probes_used, 16);
+        let w = fit.logdet_interval.width();
+        assert!(w.is_finite() && w > 0.0, "width {w}");
+        let k = gp.op.to_dense();
+        let (_, logdet_b) = dense_laplace(&k, &y, lik);
+        assert!(
+            fit.logdet_interval.contains(logdet_b),
+            "[{}, {}] misses {}",
+            fit.logdet_interval.lo,
+            fit.logdet_interval.hi,
+            logdet_b
         );
     }
 

@@ -98,6 +98,19 @@ pub struct GpRegression<O: PredictiveOp> {
     /// spans more than one `block_size`-wide group, so single-group solves
     /// stay bit-identical to cold ones.
     pub warm_start_predict_var: bool,
+    /// Keep the pivoted-Cholesky factor alive across `set_hypers` calls
+    /// (optimizer steps). Sound for correctness — the SLQ identity
+    /// `log|K̃| = log|P| + tr log(P^{-1/2} K̃ P^{-1/2})` and PCG both hold
+    /// for *any* fixed SPD `P` — but a stale factor preconditions less
+    /// well, so this trades factor rebuild time against solver/estimator
+    /// iterations. Off by default; the adaptive `--logdet-tol` path turns
+    /// it on implicitly so the grown rank seeds later steps.
+    pub reuse_precond_across_steps: bool,
+    /// The logdet estimate from the most recent [`GpRegression::mll`]
+    /// call — confidence interval, `probes_used`, and retained spectral
+    /// evidence included — so experiment tables and the CLI can report
+    /// uncertainty without re-estimating.
+    pub last_logdet: Option<LogdetEstimate>,
     alpha_cache: Option<Vec<f64>>,
     /// Preconditioner cache: the options it was built under, plus the
     /// factor (`None` when building was skipped or impossible).
@@ -114,6 +127,8 @@ impl<O: PredictiveOp> GpRegression<O> {
             mean,
             cg: CgOptions { tol: 1e-8, max_iters: 1000, ..Default::default() },
             warm_start_predict_var: true,
+            reuse_precond_across_steps: false,
+            last_logdet: None,
             alpha_cache: None,
             pc_cache: None,
         }
@@ -171,8 +186,46 @@ impl<O: PredictiveOp> GpRegression<O> {
     pub fn set_hypers(&mut self, h: &[f64]) {
         self.op.set_hypers(h);
         // keep alpha as warm start — K̃ changed only slightly per step.
-        // The preconditioner tracks K̃ exactly, so it must be rebuilt.
-        self.pc_cache = None;
+        // The preconditioner tracks K̃ exactly, so it is rebuilt unless the
+        // caller opted into cross-step reuse (any fixed SPD P stays valid
+        // for both PCG and the preconditioned-SLQ identity; a stale one is
+        // merely a weaker preconditioner).
+        if !self.reuse_precond_across_steps {
+            self.pc_cache = None;
+        }
+    }
+
+    /// Adaptive preconditioner rank (the `--logdet-tol` satellite of the
+    /// confidence refactor): with a tolerance requested and preconditioning
+    /// on, grow `cg.precond.rank` (doubling, capped at n) until the pivoted
+    /// Cholesky's exact residual trace `tr(K − L Lᵀ)` clears a tenth of the
+    /// tolerance — a cheap a-priori proxy for how much spectrum the factor
+    /// leaves to the stochastic part. The grown rank is written back into
+    /// `cg.precond` and `reuse_precond_across_steps` is switched on, so
+    /// later optimizer steps start from the grown factor instead of
+    /// re-growing from the seed rank.
+    fn grow_precond_rank(&mut self, tol: f64) {
+        if self.cg.precond.rank == 0 {
+            return;
+        }
+        let n = self.op.n();
+        let budget = 0.1 * tol;
+        self.reuse_precond_across_steps = true;
+        let mut rank = self.cg.precond.rank.min(n);
+        loop {
+            self.cg.precond.rank = rank;
+            self.refresh_precond();
+            let Some(pc) = self.pc_cache.as_ref().and_then(|(_, pc)| pc.as_ref()) else {
+                return; // structurally unavailable — nothing to grow
+            };
+            // Stop when the factor is good enough, fully grown, or the
+            // pivoted Cholesky terminated early on its own rel_tol (more
+            // rank would not change the factor).
+            if pc.trace_error() <= budget || rank >= n || pc.rank() < rank {
+                return;
+            }
+            rank = (rank * 2).min(n);
+        }
     }
 
     /// Log-determinant estimate under the chosen estimator. SLQ runs
@@ -184,6 +237,9 @@ impl<O: PredictiveOp> GpRegression<O> {
             Estimator::Slq(o) => {
                 let mut o = *o;
                 o.grads = grads;
+                if let Some(tol) = o.target_tol {
+                    self.grow_precond_rank(tol);
+                }
                 self.refresh_precond();
                 crate::estimators::slq::slq_logdet_pc(&self.op, self.precond(), &o)
             }
@@ -253,6 +309,7 @@ impl<O: PredictiveOp> GpRegression<O> {
                 grad[i] = -0.5 * (ld.grad[i] - quad);
             }
         }
+        self.last_logdet = Some(ld);
         Ok((value, grad))
     }
 
@@ -714,6 +771,93 @@ mod tests {
         assert!(!info.all_converged());
         assert!(info.cols.iter().any(|c| !c.converged));
         assert!(info.worst_residual() > 1e-12);
+    }
+
+    /// The acceptance case of the confidence refactor: small-sigma RBF,
+    /// preconditioner on — adaptive mode reaches the same tolerance the
+    /// fixed 16-probe budget delivers with strictly fewer probes, and the
+    /// interval machinery is threaded through `mll` via `last_logdet`.
+    #[test]
+    fn adaptive_slq_uses_fewer_probes_at_small_sigma() {
+        let mut gp = setup(100, 21);
+        gp.set_hypers(&[(0.5f64).ln(), 0.0, (0.05f64).ln()]);
+        gp.cg.precond = crate::solvers::PrecondOptions::rank(8);
+        let fixed_opts =
+            SlqOptions { steps: 30, probes: 16, grads: false, seed: 7, ..Default::default() };
+        let fixed = gp.logdet(&Estimator::Slq(fixed_opts), false).unwrap();
+        assert_eq!(fixed.probes_used, 16);
+        let tol = fixed.interval.half_width() * 2.0;
+        let adaptive = gp
+            .logdet(
+                &Estimator::Slq(SlqOptions {
+                    target_tol: Some(tol),
+                    max_probes: 64,
+                    ..fixed_opts
+                }),
+                false,
+            )
+            .unwrap();
+        assert!(
+            adaptive.probes_used < 16,
+            "adaptive used {} probes vs fixed 16",
+            adaptive.probes_used
+        );
+        assert!(adaptive.interval.half_width() <= tol);
+        assert!(gp.reuse_precond_across_steps, "adaptive path should arm factor reuse");
+        // mll threads the estimate (with interval) through last_logdet.
+        let (_, _) = gp
+            .mll(
+                &Estimator::Slq(SlqOptions {
+                    target_tol: Some(tol),
+                    max_probes: 64,
+                    ..fixed_opts
+                }),
+                false,
+            )
+            .unwrap();
+        let last = gp.last_logdet.as_ref().expect("mll records last_logdet");
+        assert!(last.probes_used >= 2);
+        assert!(last.interval.half_width() <= tol);
+    }
+
+    /// A tight tolerance forces the preconditioner rank to grow until the
+    /// pivoted-Cholesky trace error clears a tenth of it, and the grown
+    /// factor survives the next hyper step (cross-step reuse).
+    #[test]
+    fn tight_tolerance_grows_precond_rank_and_reuses_factor() {
+        let mut gp = setup(80, 22);
+        gp.set_hypers(&[(0.5f64).ln(), 0.0, (0.05f64).ln()]);
+        gp.cg.precond = crate::solvers::PrecondOptions { rank: 4, rel_tol: 0.0 };
+        let _ = gp
+            .logdet(
+                &Estimator::Slq(SlqOptions {
+                    steps: 30,
+                    probes: 4,
+                    grads: false,
+                    seed: 3,
+                    target_tol: Some(1e-3),
+                    max_probes: 8,
+                    ..Default::default()
+                }),
+                false,
+            )
+            .unwrap();
+        assert!(gp.cg.precond.rank > 4, "rank stayed {}", gp.cg.precond.rank);
+        let grown = gp.cg.precond.rank;
+        let err = gp
+            .pc_cache
+            .as_ref()
+            .and_then(|(_, pc)| pc.as_ref())
+            .map(|p| p.trace_error())
+            .unwrap();
+        assert!(
+            err <= 1e-4 || grown == 80,
+            "growth stopped at rank {grown} with trace error {err}"
+        );
+        // The factor now survives a hyper step instead of being rebuilt.
+        gp.set_hypers(&[(0.4f64).ln(), 0.0, (0.06f64).ln()]);
+        assert!(gp.pc_cache.is_some(), "reuse flag should keep the factor");
+        assert_eq!(gp.cg.precond.rank, grown);
     }
 
     #[test]

@@ -118,6 +118,10 @@ pub struct PivCholPrecond {
     w_inv: Vec<f64>,
     /// Weights `1/√(s²+σ²) − 1/σ` for `P^{-1/2}`.
     w_sqrt: Vec<f64>,
+    /// Exact residual trace `tr(K − L Lᵀ)` of the pivoted Cholesky this
+    /// factor was built from (0 when constructed directly from a factor).
+    /// The adaptive rank-growth loop reads this as its error signal.
+    trace_error: f64,
 }
 
 impl PivCholPrecond {
@@ -159,12 +163,21 @@ impl PivCholPrecond {
         let w_sqrt: Vec<f64> =
             s2.iter().map(|&s| 1.0 / (s + sigma2).sqrt() - 1.0 / sig).collect();
         let ut = u.transpose();
-        PivCholPrecond { n, sigma2, u, ut, s2, w_inv, w_sqrt }
+        PivCholPrecond { n, sigma2, u, ut, s2, w_inv, w_sqrt, trace_error: 0.0 }
     }
 
     /// Rank actually kept (numerically positive modes of `L Lᵀ`).
     pub fn rank(&self) -> usize {
         self.s2.len()
+    }
+
+    /// Exact residual trace `tr(K − L Lᵀ)` of the factor this
+    /// preconditioner was built from (0 for hand-built factors). Growing
+    /// the build rank drives this toward 0; the adaptive `--logdet-tol`
+    /// path grows `--precond-rank` until it clears a fraction of the
+    /// requested tolerance.
+    pub fn trace_error(&self) -> f64 {
+        self.trace_error
     }
 
     /// Shared low-rank apply: `y = c0 x + U diag(w) Uᵀ x`.
@@ -242,7 +255,9 @@ pub fn build_preconditioner(
         );
         return None;
     };
-    Some(PivCholPrecond::new(&pchol.l, s2))
+    let mut pc = PivCholPrecond::new(&pchol.l, s2);
+    pc.trace_error = pchol.trace_error;
+    Some(pc)
 }
 
 /// The symmetric split `P^{-1/2} K̃ P^{-1/2}` as a [`LinOp`] — what the

@@ -24,9 +24,16 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 
 /// Standard error of the mean — the paper's a-posteriori stochastic error
 /// estimate across probe vectors (§4).
+///
+/// Fewer than two samples carry no spread information, so the standard
+/// error is `+inf` (documented sentinel), NOT 0: a 1-probe estimate used
+/// to report a zero standard error, which an adaptive stopping rule would
+/// read as "converged after one probe". Deterministic estimates that
+/// genuinely have zero error (`LogdetEstimate::exact`) set their
+/// `std_err: 0.0` explicitly rather than deriving it from one sample.
 pub fn std_err(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
-        return 0.0;
+        return f64::INFINITY;
     }
     std_dev(xs) / (xs.len() as f64).sqrt()
 }
@@ -172,6 +179,17 @@ mod tests {
         assert_eq!(mse(&[], &[]), 0.0);
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(median(&[]), 0.0);
+    }
+
+    /// Bugfix regression: a 0- or 1-sample standard error is +inf (no
+    /// spread information), never a misleading 0 that a stopping rule
+    /// could act on.
+    #[test]
+    fn std_err_degenerate_is_infinite() {
+        assert!(std_err(&[]).is_infinite());
+        assert!(std_err(&[3.25]).is_infinite());
+        assert!(std_err(&[1.0, 1.0]).is_finite());
+        assert_eq!(std_err(&[1.0, 1.0]), 0.0);
     }
 
     #[test]

@@ -1395,6 +1395,320 @@ fn prop_precision_refinement_meets_f64_tol() {
     }
 }
 
+/// Compare every output of two logdet estimates bitwise (the fixed-budget
+/// preservation contract of the evidence refactor).
+fn assert_estimates_bit_identical(
+    name: &str,
+    a: &gpsld::estimators::LogdetEstimate,
+    b: &gpsld::estimators::LogdetEstimate,
+) {
+    assert_eq!(a.value.to_bits(), b.value.to_bits(), "{name} value: {} vs {}", a.value, b.value);
+    assert_eq!(a.std_err.to_bits(), b.std_err.to_bits(), "{name} std_err");
+    assert_eq!(a.grad.len(), b.grad.len(), "{name} grad len");
+    for (x, y) in a.grad.iter().zip(&b.grad) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{name} grad");
+    }
+    assert_eq!(a.per_probe.len(), b.per_probe.len(), "{name} per_probe len");
+    for (x, y) in a.per_probe.iter().zip(&b.per_probe) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{name} per_probe");
+    }
+    assert_eq!(a.mvms, b.mvms, "{name} mvms");
+    assert_eq!(a.block_applies, b.block_applies, "{name} block_applies");
+    assert_eq!(a.probes_used, b.probes_used, "{name} probes_used");
+    assert_eq!(a.steps_used, b.steps_used, "{name} steps_used");
+}
+
+/// Property (evidence refactor, fixed-budget preservation): with
+/// `target_tol` unset, the adaptive knobs (`max_probes` / `max_steps`)
+/// are bitwise inert — every estimator output (value, grad, std_err,
+/// per_probe, mvms, block_applies, probes/steps accounting) matches the
+/// plain fixed-budget options — for dense and SKI operators, at block
+/// sizes {1, 3, 8}, thread counts {1, 4}, and both MVM precisions.
+#[test]
+fn prop_adaptive_knobs_inert_when_tol_unset() {
+    use gpsld::estimators::chebyshev::{chebyshev_logdet, ChebOptions};
+    use gpsld::estimators::slq::{slq_logdet, SlqOptions};
+    let mut rng = Rng::new(2500);
+    let n = 60;
+    let pts: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform_in(0.0, 3.0)]).collect();
+    let grid = Grid::covering(&pts, &[32], 0.1);
+    let ski = SkiOp::new(
+        &pts,
+        grid,
+        SeparableKernel::iso(Shape::Rbf, 1, 0.3, 1.0),
+        0.2,
+        InterpOrder::Cubic,
+        false,
+    );
+    let dense = DenseKernelOp::new(
+        pts.clone(),
+        Box::new(IsoKernel::new(Shape::Rbf, 1, 0.3, 1.0)),
+        0.2,
+    );
+    for (name, op) in [("dense", &dense as &dyn KernelOp), ("ski", &ski)] {
+        for bs in [1usize, 3, 8] {
+            for threads in [1usize, 4] {
+                for prec in [Precision::F64, Precision::F32F64] {
+                    let slq_fixed = SlqOptions {
+                        steps: 15,
+                        probes: 8,
+                        seed: 11,
+                        block_size: bs,
+                        threads,
+                        precision: prec,
+                        target_tol: None,
+                        ..Default::default()
+                    };
+                    let slq_knobs = SlqOptions {
+                        max_probes: 3, // below the fixed budget — must not truncate it
+                        max_steps: 2,  // below the fixed steps — must not cap them
+                        ..slq_fixed
+                    };
+                    let a = slq_logdet(op, &slq_fixed).unwrap();
+                    let b = slq_logdet(op, &slq_knobs).unwrap();
+                    assert_estimates_bit_identical(
+                        &format!("{name} slq bs={bs} t={threads} {:?}", prec),
+                        &a,
+                        &b,
+                    );
+                    let cheb_fixed = ChebOptions {
+                        degree: 25,
+                        probes: 8,
+                        seed: 11,
+                        lambda_bounds: Some((0.02, 40.0)),
+                        block_size: bs,
+                        threads,
+                        precision: prec,
+                        target_tol: None,
+                        ..Default::default()
+                    };
+                    let cheb_knobs =
+                        ChebOptions { max_probes: 3, max_steps: 2, ..cheb_fixed };
+                    let a = chebyshev_logdet(op, &cheb_fixed).unwrap();
+                    let b = chebyshev_logdet(op, &cheb_knobs).unwrap();
+                    assert_estimates_bit_identical(
+                        &format!("{name} cheb bs={bs} t={threads} {:?}", prec),
+                        &a,
+                        &b,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Property (interval calibration): the 95% posterior interval contains
+/// the exact log determinant at >= the advertised rate across randomized
+/// kernels, sizes, and seeds — for SLQ (plain and preconditioned) and
+/// Chebyshev. The interval is deliberately conservative (truncation terms
+/// are upper bounds), so near-total coverage is expected; the gate at 90%
+/// leaves room for a genuine 5% tail event without flaking.
+#[test]
+fn prop_interval_calibration_against_exact_logdet() {
+    use gpsld::estimators::chebyshev::{chebyshev_logdet, ChebOptions};
+    use gpsld::estimators::exact;
+    use gpsld::estimators::slq::{slq_logdet, slq_logdet_pc, SlqOptions};
+    use gpsld::solvers::{build_preconditioner, PrecondOptions, Preconditioner};
+    let mut rng = Rng::new(2600);
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    for case in 0..10u64 {
+        let n = 50 + rng.below(60);
+        let sigma = 0.1 + 0.3 * rng.uniform();
+        let pts: Vec<Vec<f64>> =
+            (0..n).map(|_| vec![rng.uniform_in(0.0, 3.0)]).collect();
+        let op = DenseKernelOp::new(
+            pts,
+            Box::new(IsoKernel::new(rand_shape(&mut rng), 1, 0.4, 1.0)),
+            sigma,
+        );
+        let truth = exact::exact_logdet(&op).unwrap();
+        let slq = slq_logdet(
+            &op,
+            &SlqOptions {
+                steps: 30,
+                probes: 8,
+                grads: false,
+                seed: 3000 + case,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(slq.interval.half_width().is_finite(), "case {case}: slq interval unbounded");
+        hits += slq.interval.contains(truth) as usize;
+        total += 1;
+        let cheb = chebyshev_logdet(
+            &op,
+            &ChebOptions {
+                degree: 70,
+                probes: 8,
+                grads: false,
+                seed: 3000 + case,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        hits += cheb.interval.contains(truth) as usize;
+        total += 1;
+        // Preconditioned SLQ: the exact log|P| offset shifts the interval
+        // rigidly, so calibration must survive preconditioning.
+        let pc = build_preconditioner(&op, PrecondOptions::rank(12)).unwrap();
+        let pslq = slq_logdet_pc(
+            &op,
+            Some(&pc as &dyn Preconditioner),
+            &SlqOptions {
+                steps: 30,
+                probes: 8,
+                grads: false,
+                seed: 4000 + case,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        hits += pslq.interval.contains(truth) as usize;
+        total += 1;
+    }
+    assert!(
+        hits * 100 >= total * 90,
+        "interval coverage {hits}/{total} below the 95% contract's 90% gate"
+    );
+}
+
+/// Property (evidence retention invariance): the retained spectral
+/// evidence — Lanczos tridiagonals / Chebyshev moment vectors — and the
+/// interval synthesized from it are bit-identical across thread counts
+/// and block sizes (evidence is per-probe data; fan-out must not touch
+/// it).
+#[test]
+fn prop_evidence_invariant_across_threads_and_blocks() {
+    use gpsld::estimators::chebyshev::{chebyshev_logdet, ChebOptions};
+    use gpsld::estimators::slq::{slq_logdet, SlqOptions};
+    use gpsld::estimators::SpectralEvidence;
+    let mut rng = Rng::new(2700);
+    let n = 70;
+    let pts: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform_in(0.0, 3.0)]).collect();
+    let op = DenseKernelOp::new(
+        pts,
+        Box::new(IsoKernel::new(Shape::Matern32, 1, 0.4, 1.0)),
+        0.25,
+    );
+    let base_slq = slq_logdet(
+        &op,
+        &SlqOptions {
+            steps: 18,
+            probes: 8,
+            seed: 13,
+            block_size: 1,
+            threads: 1,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let base_cheb = chebyshev_logdet(
+        &op,
+        &ChebOptions {
+            degree: 30,
+            probes: 8,
+            seed: 13,
+            lambda_bounds: Some((0.02, 40.0)),
+            block_size: 1,
+            threads: 1,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    for bs in [2usize, 3, 8] {
+        for threads in [1usize, 4] {
+            let s = slq_logdet(
+                &op,
+                &SlqOptions {
+                    steps: 18,
+                    probes: 8,
+                    seed: 13,
+                    block_size: bs,
+                    threads,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            match (&base_slq.evidence, &s.evidence) {
+                (
+                    SpectralEvidence::Lanczos { probes: pa, offset: oa },
+                    SpectralEvidence::Lanczos { probes: pb, offset: ob },
+                ) => {
+                    assert_eq!(oa.to_bits(), ob.to_bits(), "slq offset bs={bs} t={threads}");
+                    assert_eq!(pa.len(), pb.len(), "slq probe count bs={bs} t={threads}");
+                    for (x, y) in pa.iter().zip(pb) {
+                        assert_eq!(x.znorm2.to_bits(), y.znorm2.to_bits(), "slq znorm2");
+                        assert_eq!(x.alphas.len(), y.alphas.len(), "slq alphas len");
+                        for (a, c) in x.alphas.iter().zip(&y.alphas) {
+                            assert_eq!(a.to_bits(), c.to_bits(), "slq alphas bs={bs} t={threads}");
+                        }
+                        for (a, c) in x.betas.iter().zip(&y.betas) {
+                            assert_eq!(a.to_bits(), c.to_bits(), "slq betas bs={bs} t={threads}");
+                        }
+                    }
+                }
+                other => panic!("slq evidence variant changed: {other:?}"),
+            }
+            assert_eq!(
+                base_slq.interval.lo.to_bits(),
+                s.interval.lo.to_bits(),
+                "slq interval lo bs={bs} t={threads}"
+            );
+            assert_eq!(
+                base_slq.interval.hi.to_bits(),
+                s.interval.hi.to_bits(),
+                "slq interval hi bs={bs} t={threads}"
+            );
+            let c = chebyshev_logdet(
+                &op,
+                &ChebOptions {
+                    degree: 30,
+                    probes: 8,
+                    seed: 13,
+                    lambda_bounds: Some((0.02, 40.0)),
+                    block_size: bs,
+                    threads,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            match (&base_cheb.evidence, &c.evidence) {
+                (
+                    SpectralEvidence::Chebyshev { moments: ma, coeffs: ca, bracket: ba },
+                    SpectralEvidence::Chebyshev { moments: mb, coeffs: cb, bracket: bb },
+                ) => {
+                    assert_eq!(ba.0.to_bits(), bb.0.to_bits(), "cheb bracket lo");
+                    assert_eq!(ba.1.to_bits(), bb.1.to_bits(), "cheb bracket hi");
+                    assert_eq!(ca.len(), cb.len(), "cheb coeff len");
+                    for (a, c2) in ca.iter().zip(cb) {
+                        assert_eq!(a.to_bits(), c2.to_bits(), "cheb coeffs");
+                    }
+                    assert_eq!(ma.len(), mb.len(), "cheb moment count bs={bs} t={threads}");
+                    for (x, y) in ma.iter().zip(mb) {
+                        assert_eq!(x.len(), y.len(), "cheb moment len");
+                        for (a, c2) in x.iter().zip(y) {
+                            assert_eq!(a.to_bits(), c2.to_bits(), "cheb moments bs={bs} t={threads}");
+                        }
+                    }
+                }
+                other => panic!("cheb evidence variant changed: {other:?}"),
+            }
+            assert_eq!(
+                base_cheb.interval.lo.to_bits(),
+                c.interval.lo.to_bits(),
+                "cheb interval lo bs={bs} t={threads}"
+            );
+            assert_eq!(
+                base_cheb.interval.hi.to_bits(),
+                c.interval.hi.to_bits(),
+                "cheb interval hi bs={bs} t={threads}"
+            );
+        }
+    }
+}
+
 /// Property: derivative MVMs match finite differences for random SKI
 /// configurations (routing/batching/state invariance of the operator).
 #[test]

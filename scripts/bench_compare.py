@@ -5,10 +5,11 @@ Usage: bench_compare.py PREV.json CURRENT.json [--threshold 0.20] [--min-ns 50]
        bench_compare.py --self-test
 
 Rows are JSON objects; the identity of a row is every non-metric field
-(op, n, b, rhs, block, threads, precision, sigma, rank, ...), and the
-compared metrics are the timing fields (ns_per_apply / ns_per_solve_col —
-lower is better) plus the work counters (mvms / block_applies / cg_iters /
-lanczos_steps — lower is better, and far less noisy than wall time). In
+(op, n, b, rhs, block, threads, precision, sigma, rank, tol, ...), and
+the compared metrics are the timing fields (ns_per_apply /
+ns_per_solve_col / ns_per_estimate — lower is better) plus the work
+counters (mvms / block_applies / cg_iters / lanczos_steps / probes_used /
+steps_used — lower is better, and far less noisy than wall time). In
 particular `threads` and `precision` are identity fields, NOT metrics:
 the single- and multi-thread rows of the 1-vs-N sweep (and the f64 vs
 f32f64 rows of the precision sweep) are gated separately, so a speedup on
@@ -37,16 +38,34 @@ import json
 import sys
 
 # Lower-is-better metrics. Timing is noisy; counters are exact.
-TIMING_METRICS = ("ns_per_apply", "ns_per_solve_col")
-COUNTER_METRICS = ("mvms", "block_applies", "cg_iters", "lanczos_steps")
+TIMING_METRICS = ("ns_per_apply", "ns_per_solve_col", "ns_per_estimate")
+COUNTER_METRICS = (
+    "mvms",
+    "block_applies",
+    "cg_iters",
+    "lanczos_steps",
+    "probes_used",
+    "steps_used",
+)
 # Higher-is-better, exact: ANY drop is a regression (a solve that stops
 # converging often also gets *faster*, so the timing gate alone would
-# count the breakage as an improvement).
-HIGHER_BETTER = ("converged",)
+# count the breakage as an improvement; an adaptive logdet that stops
+# being calibrated also uses *fewer* probes, so probes_used alone would
+# count the miscalibration as an improvement).
+HIGHER_BETTER = ("converged", "calibrated")
 # Fields that are measurements rather than identity, but not compared.
-# Everything else — including `threads` — is identity: a (op, n, block,
-# threads=1) row only ever compares against its threads=1 baseline.
-NON_IDENTITY = set(TIMING_METRICS) | set(COUNTER_METRICS) | set(HIGHER_BETTER) | {"gbps"}
+# Everything else — including `threads` and `tol` — is identity: a
+# (op, n, block, threads=1) row only ever compares against its threads=1
+# baseline, and a tol=0.25 adaptive row never against the fixed-budget
+# tol=0 row. interval_width is informational: it tracks the requested tol
+# by construction on adaptive rows, so gating it would double-count the
+# calibrated/probes_used signals.
+NON_IDENTITY = (
+    set(TIMING_METRICS)
+    | set(COUNTER_METRICS)
+    | set(HIGHER_BETTER)
+    | {"gbps", "interval_width"}
+)
 
 
 def row_key(row):
@@ -286,6 +305,31 @@ def self_test():
         50.0,
     )
     assert len(reg) == 1, reg
+    checks += 1
+
+    # calibrated (BENCH_conf) is higher-better and exact: an interval that
+    # stops covering the exact logdet fires even though the run also got
+    # cheaper (fewer probes, faster wall time).
+    conf = {"op": "dense_rbf", "n": 300, "sigma": 0.1, "tol": 0.25}
+    reg, _, _ = compare(
+        rows(dict(conf, calibrated=1, probes_used=12, ns_per_estimate=5e6)),
+        rows(dict(conf, calibrated=0, probes_used=6, ns_per_estimate=3e6)),
+        0.20,
+        50.0,
+    )
+    assert len(reg) == 1 and "calibrated" in reg[0], reg
+    checks += 1
+
+    # probes_used is an exact lower-is-better counter: an adaptive run
+    # needing 25% more probes fires; interval_width is informational and
+    # never gated (and never splits row identity).
+    reg, _, matched = compare(
+        rows(dict(conf, probes_used=8, interval_width=0.40)),
+        rows(dict(conf, probes_used=10, interval_width=0.10)),
+        0.20,
+        50.0,
+    )
+    assert matched == 1 and len(reg) == 1 and "probes_used" in reg[0], reg
     checks += 1
 
     # Zero baseline: a counter rising from exactly 0 fires; a timing

@@ -5,10 +5,13 @@
 # {1, 4} — the 1-vs-N thread sweep; multi-thread rows should sit strictly
 # below their single-thread twins on the multi-group configurations), and
 # the pivoted-Cholesky preconditioning sweep (rank x sigma x threads on an
-# ill-conditioned dense RBF), emitting BENCH_mvm.json, BENCH_cg.json, and
-# BENCH_precond.json at the repo root so successive PRs have a throughput
-# trajectory — MVMs, solves, thread scaling, and preconditioned iteration
-# counts — to compare against.
+# ill-conditioned dense RBF), and the confidence/adaptive-budget sweep
+# (tolerance x sigma on the same kernel: probes used, interval widths,
+# and calibration against the exact logdet), emitting BENCH_mvm.json,
+# BENCH_cg.json, BENCH_precond.json, and BENCH_conf.json at the repo root
+# so successive PRs have a throughput trajectory — MVMs, solves, thread
+# scaling, preconditioned iteration counts, and adaptive probe budgets —
+# to compare against.
 #
 # When a previous BENCH_*.json exists it is rotated to BENCH_*.prev.json
 # and diffed against the fresh run with scripts/bench_compare.py, which
@@ -29,13 +32,14 @@
 # run before anything is benched: a broken gate must fail the smoke run,
 # not wave a regression through.
 #
-# Usage: scripts/bench_smoke.sh [mvm_output.json] [cg_output.json] [precond_output.json]
+# Usage: scripts/bench_smoke.sh [mvm_output.json] [cg_output.json] [precond_output.json] [conf_output.json]
 set -euo pipefail
 
 repo_root="$(cd "$(dirname "$0")/.." && pwd)"
 out_mvm="${1:-$repo_root/BENCH_mvm.json}"
 out_cg="${2:-$repo_root/BENCH_cg.json}"
 out_precond="${3:-$repo_root/BENCH_precond.json}"
+out_conf="${4:-$repo_root/BENCH_conf.json}"
 
 # Prove the gate itself works before trusting it with real rows.
 python3 "$repo_root/scripts/bench_compare.py" --self-test
@@ -46,7 +50,8 @@ python3 "$repo_root/scripts/bench_compare.py" --self-test
 # would compare the regression against itself and print OK).
 cd "$repo_root/rust"
 cargo bench --bench bench_perf_mvm -- --smoke \
-    --json "$out_mvm.new" --json-cg "$out_cg.new" --json-precond "$out_precond.new"
+    --json "$out_mvm.new" --json-cg "$out_cg.new" --json-precond "$out_precond.new" \
+    --json-conf "$out_conf.new"
 
 echo "BENCH_mvm rows:"
 cat "$out_mvm.new"
@@ -54,6 +59,8 @@ echo "BENCH_cg rows:"
 cat "$out_cg.new"
 echo "BENCH_precond rows:"
 cat "$out_precond.new"
+echo "BENCH_conf rows:"
+cat "$out_conf.new"
 
 # True when the gate is suppressed for this output file: "1" skips all,
 # otherwise BENCH_SKIP_COMPARE is a list of file stems to skip.
@@ -76,7 +83,7 @@ skip_compare() {
 }
 
 fail=0
-for out in "$out_mvm" "$out_cg" "$out_precond"; do
+for out in "$out_mvm" "$out_cg" "$out_precond" "$out_conf"; do
     if [[ -f "$out" ]] && ! skip_compare "$out"; then
         python3 "$repo_root/scripts/bench_compare.py" "$out" "$out.new" || fail=1
     fi
@@ -87,7 +94,7 @@ if [[ "$fail" != "0" ]]; then
     exit 2
 fi
 
-for out in "$out_mvm" "$out_cg" "$out_precond"; do
+for out in "$out_mvm" "$out_cg" "$out_precond" "$out_conf"; do
     if [[ -f "$out" ]]; then
         mv "$out" "${out%.json}.prev.json"
     fi
