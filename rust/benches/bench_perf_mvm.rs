@@ -50,11 +50,27 @@
 //! (lower-is-better in the gate), and `calibrated` is 1 iff the 95%
 //! interval contains the exact log determinant (a calibration regression
 //! fails the gate loudly).
+//!
+//! `--json-service` runs the streaming-service request-replay sweep
+//! (`requests` single-column predictive-variance requests coalesced into
+//! one fused cold block solve per drain; the sweep itself asserts the
+//! fused answers bitwise-equal the solo per-request baseline) and writes
+//! `{model, n, requests, threads, precision, coalesced_cols, solves,
+//! block_applies, converged, p50_ns, p99_ns}` per case — `solves` and
+//! `block_applies` are the coalesced cost (gated lower-is-better: losing
+//! the amortization fails loudly), `converged` counts converged responses
+//! (higher-is-better: fewer applies from giving up must not read as a
+//! win), and `p50_ns`/`p99_ns` are per-request latency quantiles
+//! (timing-gated with the usual noise floor). The solo-baseline counters
+//! are deliberately *not* in the row: they are asserted inside
+//! `service_sweep`, and keeping them out of the JSON means future solver
+//! improvements don't churn row identity.
 
 use std::time::Instant;
 
 use gpsld::coordinator::figures::{
-    conf_sweep, precond_sweep, ConfSweepRow, PrecondSweepRow, SWEEP_THREADS,
+    conf_sweep, precond_sweep, service_sweep, ConfSweepRow, PrecondSweepRow, ServiceSweepRow,
+    SWEEP_THREADS,
 };
 use gpsld::coordinator::{cli, Scale};
 use gpsld::data;
@@ -390,6 +406,26 @@ fn write_conf_json(rows: &[ConfSweepRow], path: &str) {
     write_rows_json(path, &formatted);
 }
 
+/// Serialize the shared service sweep rows (see
+/// `gpsld::coordinator::figures::service_sweep` — the metric definitions
+/// and the bitwise fused-vs-solo assertions live there, next to the CLI
+/// perf table that prints the same sweep). The solo baseline counters
+/// stay out of the JSON on purpose: they'd be identity fields to the
+/// gate, so solver improvements would orphan every row.
+fn write_service_json(rows: &[ServiceSweepRow], path: &str) {
+    let formatted: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"model\": \"{}\", \"n\": {}, \"requests\": {}, \"threads\": {}, \"precision\": \"{}\", \"coalesced_cols\": {}, \"solves\": {}, \"block_applies\": {}, \"converged\": {}, \"p50_ns\": {:.1}, \"p99_ns\": {:.1}}}",
+                r.model, r.n, r.requests, r.threads, r.precision, r.coalesced_cols,
+                r.solves, r.block_applies, r.converged, r.p50_ns, r.p99_ns
+            )
+        })
+        .collect();
+    write_rows_json(path, &formatted);
+}
+
 fn write_cg_json(rows: &[CgSweepRow], path: &str) {
     let formatted: Vec<String> = rows
         .iter()
@@ -421,6 +457,7 @@ fn run_smoke(
     json_cg_path: Option<&str>,
     json_precond_path: Option<&str>,
     json_conf_path: Option<&str>,
+    json_service_path: Option<&str>,
 ) {
     let rows = block_sweep(&[1000, 4000], &[1, 8, 32]);
     println!(
@@ -492,6 +529,28 @@ fn run_smoke(
             write_conf_json(&conf_rows, path);
         }
     }
+    if json_service_path.is_some() {
+        // Coalesced request replay: one drain of `requests` single-column
+        // variance requests vs. the solo baseline (asserted bitwise-equal
+        // inside the sweep). threads is a fixed 1-vs-N identity like the
+        // CG sweep.
+        let svc_rows = service_sweep(&[512], &[8, 32], &[1, SWEEP_THREADS]);
+        println!(
+            "{:<10} {:>6} {:>4} {:>3} {:>8} {:>5} {:>7} {:>8} {:>5} {:>12} {:>12}",
+            "model", "n", "req", "t", "prec", "cols", "solves", "applies", "conv",
+            "p50_ns", "p99_ns"
+        );
+        for r in &svc_rows {
+            println!(
+                "{:<10} {:>6} {:>4} {:>3} {:>8} {:>5} {:>7} {:>8} {:>5} {:>12.1} {:>12.1}",
+                r.model, r.n, r.requests, r.threads, r.precision, r.coalesced_cols,
+                r.solves, r.block_applies, r.converged, r.p50_ns, r.p99_ns
+            );
+        }
+        if let Some(path) = json_service_path {
+            write_service_json(&svc_rows, path);
+        }
+    }
 }
 
 fn main() {
@@ -513,11 +572,13 @@ fn main() {
         let json_cg_path = path_after("--json-cg");
         let json_precond_path = path_after("--json-precond");
         let json_conf_path = path_after("--json-conf");
+        let json_service_path = path_after("--json-service");
         run_smoke(
             json_path.as_deref(),
             json_cg_path.as_deref(),
             json_precond_path.as_deref(),
             json_conf_path.as_deref(),
+            json_service_path.as_deref(),
         );
         return;
     }

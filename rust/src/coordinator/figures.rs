@@ -516,6 +516,41 @@ pub fn perf_mvm(scale: Scale) -> ExpResult {
         }
     }
 
+    // §Service — the shared streaming-serving request-replay sweep (see
+    // [`service_sweep`]; `bench_perf_mvm --json-service` emits the same
+    // rows machine-readably). The sweep itself asserts the coalescing
+    // contract (bitwise-equal answers, strictly fewer solves/applies than
+    // solo) in release builds; the table reports the amortization.
+    {
+        let n = match scale {
+            Scale::Small => 256,
+            Scale::Paper => 1024,
+        };
+        for r in service_sweep(&[n], &[8, 32], &[1, SWEEP_THREADS]) {
+            let case = format!("service_n{}_req{}_t{}", r.n, r.requests, r.threads);
+            rows.push(vec![
+                format!("{case}_solves_vs_solo"),
+                format!("{}/{}", r.solves, r.solo_solves),
+            ]);
+            rows.push(vec![
+                format!("{case}_applies_vs_solo"),
+                format!("{}/{}", r.block_applies, r.solo_block_applies),
+            ]);
+            rows.push(vec![
+                format!("{case}_converged"),
+                format!("{}", r.converged),
+            ]);
+            rows.push(vec![
+                format!("{case}_p50_ms"),
+                format!("{:.3}", r.p50_ns / 1e6),
+            ]);
+            rows.push(vec![
+                format!("{case}_p99_ms"),
+                format!("{:.3}", r.p99_ns / 1e6),
+            ]);
+        }
+    }
+
     // End-to-end SLQ (25 steps, 5 probes, with grads) on SKI m=4000, plus
     // the SKI block sweep.
     {
@@ -673,6 +708,192 @@ pub fn conf_sweep(ns: &[usize], sigmas: &[f64], tols: &[f64]) -> Vec<ConfSweepRo
                     interval_width: est.interval.width(),
                     calibrated: est.interval.contains(truth) as usize,
                     ns_per_estimate: t0.elapsed().as_secs_f64() / reps as f64 * 1e9,
+                });
+            }
+        }
+    }
+    rows
+}
+
+/// One case of the streaming-service request-replay sweep.
+pub struct ServiceSweepRow {
+    pub model: &'static str,
+    pub n: usize,
+    /// Single-column predictive-variance requests replayed through the
+    /// coalescing dispatcher (all pending in one drain).
+    pub requests: usize,
+    /// Total worker budget of the timed dispatch (process default pinned).
+    pub threads: usize,
+    /// Precision identity of the model's solves (the sweep pins f64 so
+    /// rows stay comparable when the process default changes).
+    pub precision: &'static str,
+    /// Columns fused into dispatched solves (== `requests` here: one
+    /// drain, one model).
+    pub coalesced_cols: usize,
+    /// Block solves the coalescing dispatcher executed (1 per drain).
+    /// Gated lower-is-better: coalescing regressing into per-request
+    /// solves must fail loudly.
+    pub solves: usize,
+    /// Blocked operator applies of the dispatched solves — the amortized
+    /// cost the coalescing headline is about.
+    pub block_applies: usize,
+    /// Baseline: solves when each request is dispatched alone (== requests).
+    pub solo_solves: usize,
+    /// Baseline: blocked applies summed over the solo dispatches.
+    pub solo_block_applies: usize,
+    /// Responses whose solve column converged (of `requests`). Emitted so
+    /// the bench gate's higher-is-better rule catches a service that
+    /// stops converging (fewer applies would otherwise read as a win).
+    pub converged: usize,
+    /// Per-request latency quantiles over the timed replay reps
+    /// (submit → response, fixed-bucket log-spaced histogram).
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+/// The request-replay sweep of the streaming serving layer — the one
+/// definition shared by the CLI perf table and `bench_perf_mvm
+/// --json-service` (`BENCH_service.json`), so the two surfaces report
+/// identically-defined numbers. Each case replays `requests`
+/// single-column predictive-variance requests through the coalescing
+/// dispatcher (one fused cold block solve) and through the solo
+/// per-request baseline, asserting along the way that the fused answers
+/// are bitwise equal to the solo ones at equal convergence and that
+/// coalescing did strictly fewer solves and blocked applies — the
+/// acceptance invariant runs in release builds, not just under test.
+pub fn service_sweep(
+    ns: &[usize],
+    request_counts: &[usize],
+    threads: &[usize],
+) -> Vec<ServiceSweepRow> {
+    use super::service::{dispatch, Metrics, ModelRegistry, RequestKind, RequestQueue};
+    use crate::solvers::{CgOptions, PrecondOptions};
+    use crate::util::bench::black_box;
+    let mut rows = Vec::new();
+    let mut rng = Rng::new(53);
+    for &n in ns {
+        let pts: Vec<Vec<f64>> =
+            (0..n).map(|_| vec![rng.uniform_in(0.0, 3.0)]).collect();
+        let y: Vec<f64> = pts
+            .iter()
+            .map(|p| (1.4 * p[0]).sin() + 0.1 * rng.gaussian())
+            .collect();
+        let make_model = |t: usize| {
+            let op = DenseKernelOp::new(
+                pts.clone(),
+                Box::new(IsoKernel::new(Shape::Rbf, 1, 0.5, 1.0)),
+                0.1,
+            );
+            let mut gp = GpRegression::new(op, y.clone());
+            gp.cg = CgOptions {
+                tol: 1e-8,
+                max_iters: 5000,
+                block_size: 16,
+                threads: t,
+                precond: PrecondOptions::rank(16),
+                precision: crate::util::precision::Precision::F64,
+            };
+            gp
+        };
+        for &requests in request_counts {
+            let test_pts: Vec<Vec<f64>> = {
+                let mut prng = Rng::new(59);
+                (0..requests).map(|_| vec![prng.uniform_in(0.0, 3.0)]).collect()
+            };
+            for &t in threads {
+                crate::util::parallel::with_default_threads(t, || {
+                    // Registry with cached factors: alpha + pivoted
+                    // Cholesky are solved/built once here and reused by
+                    // every replay below.
+                    let mut reg = ModelRegistry::new();
+                    let id = reg.insert(make_model(t));
+                    reg.warm(id);
+                    // Accounting replay (deterministic): one coalesced
+                    // drain of all requests.
+                    let acct = Metrics::default();
+                    let queue = RequestQueue::bounded(requests.max(1) * 2);
+                    for x in &test_pts {
+                        queue
+                            .submit(id, RequestKind::Var, x.clone())
+                            .expect("service sweep: queue sized for the replay");
+                    }
+                    let fused = dispatch(&mut reg, &queue, &acct);
+                    let (solves, block_applies, coalesced_cols, _) =
+                        acct.serving_snapshot();
+                    // Solo baseline on an identical fresh model: one
+                    // dispatch per request.
+                    let mut solo_reg = ModelRegistry::new();
+                    let solo_id = solo_reg.insert(make_model(t));
+                    solo_reg.warm(solo_id);
+                    let solo_acct = Metrics::default();
+                    let mut solo = Vec::new();
+                    for x in &test_pts {
+                        let q = RequestQueue::bounded(2);
+                        q.submit(solo_id, RequestKind::Var, x.clone())
+                            .expect("service sweep: solo submit");
+                        solo.extend(dispatch(&mut solo_reg, &q, &solo_acct));
+                    }
+                    let (solo_solves, solo_block_applies, _, _) =
+                        solo_acct.serving_snapshot();
+                    // The coalescing contract, asserted in release builds:
+                    // bitwise-equal answers at equal convergence, strictly
+                    // fewer solves AND blocked applies.
+                    for (i, (f, s)) in fused.iter().zip(&solo).enumerate() {
+                        assert_eq!(
+                            f.value.to_bits(),
+                            s.value.to_bits(),
+                            "service sweep n={n} requests={requests} t={t} req {i}: \
+                             fused {} != solo {}",
+                            f.value,
+                            s.value
+                        );
+                        assert_eq!(
+                            f.converged, s.converged,
+                            "service sweep n={n} requests={requests} t={t} req {i}"
+                        );
+                    }
+                    if requests > 1 {
+                        assert!(
+                            solves < solo_solves && block_applies < solo_block_applies,
+                            "service sweep n={n} requests={requests} t={t}: coalescing \
+                             must amortize ({solves} vs {solo_solves} solves, \
+                             {block_applies} vs {solo_block_applies} applies)"
+                        );
+                    }
+                    // Timed replay: repeat the coalesced drain; latencies
+                    // from every rep accumulate in one histogram so the
+                    // p50/p99 readout has rep × requests samples.
+                    let timed = Metrics::default();
+                    let t0 = Instant::now();
+                    let mut reps = 0usize;
+                    loop {
+                        let q = RequestQueue::bounded(requests.max(1) * 2);
+                        for x in &test_pts {
+                            q.submit(id, RequestKind::Var, x.clone())
+                                .expect("service sweep: timed submit");
+                        }
+                        let resp = dispatch(&mut reg, &q, &timed);
+                        black_box(resp.last().map_or(0.0, |r| r.value));
+                        reps += 1;
+                        if reps >= 5 || t0.elapsed().as_secs_f64() > 0.4 {
+                            break;
+                        }
+                    }
+                    rows.push(ServiceSweepRow {
+                        model: "dense_rbf",
+                        n,
+                        requests,
+                        threads: t,
+                        precision: "f64",
+                        coalesced_cols,
+                        solves,
+                        block_applies,
+                        solo_solves,
+                        solo_block_applies,
+                        converged: fused.iter().filter(|r| r.converged).count(),
+                        p50_ns: timed.latency_quantile_ns(0.5),
+                        p99_ns: timed.latency_quantile_ns(0.99),
+                    });
                 });
             }
         }

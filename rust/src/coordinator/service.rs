@@ -1,14 +1,69 @@
-//! Batch evaluation service: a worker pool that fans a queue of
-//! hyperparameter vectors out to per-thread evaluators (each worker builds
-//! its own operator once, then streams evaluations). Used for surrogate
-//! design-point evaluation and ablation sweeps, where evaluations are
-//! embarrassingly parallel but the evaluator itself is stateful (`&mut`).
+//! Streaming GP inference service: a cached-factor model registry, an
+//! MPSC request queue with bounded depth, and a dispatcher that coalesces
+//! concurrent predictive requests into one block solve.
+//!
+//! # Registry / coalescing / back-pressure contract
+//!
+//! * **Model registry.** [`ModelRegistry`] holds long-lived
+//!   [`GpRegression`] models keyed by insertion index. The expensive
+//!   per-model artifacts live *inside* each model and persist across
+//!   requests: the pivoted-Cholesky preconditioner (`pc_cache`, rebuilt
+//!   only when hypers or options change) and the training solve `alpha`
+//!   (`alpha_cache`, solved once and reused by every mean request).
+//!   [`ModelRegistry::warm`] pre-solves both so the first live request
+//!   doesn't pay the cold-start cost.
+//! * **Request coalescing.** [`dispatch`] drains *all* pending requests
+//!   from the queue, groups them by model id, and fuses every
+//!   `predict_var` request for the same model into **one** cold
+//!   [`pcg_block`](crate::solvers::pcg_block) solve: each request's
+//!   `k(X, x*)` column becomes one column of the fused right-hand-side
+//!   block, and the per-request answers are sliced back out by column
+//!   index. By the block-solve lockstep invariant (column `j` of a block
+//!   solve is bitwise identical to the scalar solve of column `j`), the
+//!   coalesced answers are **bit-identical to solo per-request solves** —
+//!   coalescing changes cost, never results. The dispatcher forces the
+//!   *cold* solve path (`warm_start_predict_var = false` for the fused
+//!   solve): the group-sequential warm-start path seeds groups from
+//!   neighbors and is deliberately not bitwise-reproducible against solo
+//!   answers. Mean requests share the model's cached `alpha` and cost one
+//!   cross-kernel apply each — no solve at all after the first.
+//! * **Back-pressure.** The queue has a bounded depth
+//!   ([`RequestQueue::bounded`]); [`RequestQueue::submit`] fails with
+//!   [`QueueFull`] instead of growing without bound, and the rejection is
+//!   counted in [`Metrics::rejected`]. Callers decide whether to retry,
+//!   shed, or block — the service never silently drops an accepted
+//!   request.
+//! * **Metrics.** [`Metrics`] extends the original evaluation counters
+//!   with the serving-layer accounting: block solves dispatched
+//!   (`solves`), fused columns per batch (`coalesced_cols`), the solver's
+//!   `mvms`/`block_applies`, back-pressure rejections, and per-request
+//!   latency recorded in a fixed-bucket log-spaced
+//!   [`Histogram`](crate::util::stats::Histogram) (p50/p99 readout, no
+//!   deps). The amortization headline is `solves`/`block_applies` vs. the
+//!   solo baseline: N coalesced single-column requests cost one fused
+//!   solve whose applies are bounded by the *worst* column, not the sum.
+//!
+//! The original hyper-batch helper ([`map_hyper_batch`]) stays: it fans a
+//! queue of hyperparameter vectors out to per-thread evaluators (each
+//! worker builds its own operator once, then streams evaluations), used
+//! for surrogate design-point evaluation and ablation sweeps.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::gp::{GpRegression, PredictiveOp};
+use crate::util::stats::Histogram;
 
 /// Evaluate `f_builder()(h)` for every hyper vector, in parallel, preserving
 /// order. Each worker thread builds exactly one evaluator.
+///
+/// Workers pull indices from a shared atomic queue (ragged evaluation
+/// costs don't strand threads) and buffer their `(index, value)` results
+/// privately; buffers are merged into the ordered output after the scope
+/// joins, so the hot path takes no locks (the previous implementation
+/// paid one `Mutex<Option<T>>` lock + heap slot per evaluation).
 pub fn map_hyper_batch<B, E, T>(builder: B, hypers: &[Vec<f64>], threads: usize) -> Vec<T>
 where
     B: Fn() -> E + Sync,
@@ -22,36 +77,210 @@ where
         return hypers.iter().map(|h| eval(h)).collect();
     }
     let next = AtomicUsize::new(0);
-    let out: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            let next = &next;
-            let out = &out;
-            let builder = &builder;
-            scope.spawn(move || {
-                crate::util::parallel::mark_pool_worker();
-                let mut eval = builder();
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
+    let buffers: Vec<Vec<(usize, T)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let next = &next;
+                let builder = &builder;
+                scope.spawn(move || {
+                    crate::util::parallel::mark_pool_worker();
+                    let mut eval = builder();
+                    let mut buf: Vec<(usize, T)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        buf.push((i, eval(&hypers[i])));
                     }
-                    let v = eval(&hypers[i]);
-                    *out[i].lock().unwrap() = Some(v);
-                }
-            });
-        }
+                    buf
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("batch worker panicked")).collect()
     });
-    out.into_iter()
-        .map(|m| m.into_inner().unwrap().expect("service slot"))
-        .collect()
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for buf in buffers {
+        for (i, v) in buf {
+            out[i] = Some(v);
+        }
+    }
+    out.into_iter().map(|o| o.expect("service slot")).collect()
 }
 
-/// Simple progress/throughput counters for long experiment runs.
-#[derive(Default)]
+// ---------------- request queue ----------------
+
+/// What a request asks of its model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestKind {
+    /// Predictive mean `μ + k_*ᵀ α` — served from the cached `alpha`.
+    Mean,
+    /// Predictive variance `k(x*,x*) + σ² − k_*ᵀ K̃^{-1} k_*` — one column
+    /// of the model's fused block solve.
+    Var,
+}
+
+/// One pending inference request.
+#[derive(Debug)]
+pub struct Request {
+    pub model: usize,
+    pub kind: RequestKind,
+    pub x: Vec<f64>,
+    /// Submission timestamp for the latency histogram.
+    submitted: Instant,
+}
+
+/// One answered request, in the order requests were drained.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub model: usize,
+    pub kind: RequestKind,
+    pub value: f64,
+    /// For `Var`: this request's column of the fused solve converged (the
+    /// f64 true-residual criterion). For `Mean`: the cached alpha solve
+    /// converged.
+    pub converged: bool,
+}
+
+/// Back-pressure signal: the queue is at its bounded depth.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QueueFull;
+
+/// MPSC request queue with bounded depth. Producers [`submit`] from any
+/// thread; the dispatcher drains everything pending in one sweep.
+///
+/// [`submit`]: RequestQueue::submit
+pub struct RequestQueue {
+    inner: Mutex<Vec<Request>>,
+    cap: usize,
+}
+
+impl RequestQueue {
+    /// A queue rejecting submissions beyond `cap` pending requests.
+    pub fn bounded(cap: usize) -> Self {
+        RequestQueue { inner: Mutex::new(Vec::new()), cap: cap.max(1) }
+    }
+
+    /// Enqueue a request; `Err(QueueFull)` applies back-pressure instead
+    /// of unbounded growth. The submission time is recorded here, so
+    /// queueing delay counts toward the request's latency.
+    pub fn submit(&self, model: usize, kind: RequestKind, x: Vec<f64>) -> Result<(), QueueFull> {
+        let mut q = self.inner.lock().unwrap();
+        if q.len() >= self.cap {
+            return Err(QueueFull);
+        }
+        q.push(Request { model, kind, x, submitted: Instant::now() });
+        Ok(())
+    }
+
+    /// Number of pending requests.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    /// True when nothing is pending.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Take every pending request, preserving submission order.
+    fn drain(&self) -> Vec<Request> {
+        std::mem::take(&mut *self.inner.lock().unwrap())
+    }
+}
+
+// ---------------- model registry ----------------
+
+/// Long-lived registry of trained models. The cached artifacts (pivoted
+/// Cholesky factor, `alpha`) live inside each [`GpRegression`] and
+/// survive across dispatch batches; model ids are insertion indices.
+pub struct ModelRegistry<O: PredictiveOp> {
+    models: Vec<GpRegression<O>>,
+}
+
+impl<O: PredictiveOp> Default for ModelRegistry<O> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<O: PredictiveOp> ModelRegistry<O> {
+    pub fn new() -> Self {
+        ModelRegistry { models: Vec::new() }
+    }
+
+    /// Register a model; returns its id.
+    pub fn insert(&mut self, gp: GpRegression<O>) -> usize {
+        self.models.push(gp);
+        self.models.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    pub fn get_mut(&mut self, id: usize) -> Option<&mut GpRegression<O>> {
+        self.models.get_mut(id)
+    }
+
+    /// Pre-solve the cached artifacts for model `id` (the `alpha` solve,
+    /// which also builds the preconditioner when the model's `cg.precond`
+    /// knob asks for one), so the first live request is served from warm
+    /// caches.
+    pub fn warm(&mut self, id: usize) {
+        if let Some(gp) = self.models.get_mut(id) {
+            let _ = gp.alpha();
+        }
+    }
+}
+
+// ---------------- metrics ----------------
+
+/// Service counters: the original evaluation/mvm counters plus the
+/// serving-layer accounting (solves dispatched, fused columns,
+/// back-pressure rejections) and a per-request latency histogram.
 pub struct Metrics {
     pub evaluations: AtomicUsize,
     pub mvms: AtomicUsize,
+    /// Block solves dispatched (one per fused predict-var batch).
+    pub solves: AtomicUsize,
+    /// Blocked operator applies executed by dispatched solves.
+    pub block_applies: AtomicUsize,
+    /// Total columns fused across all dispatched solves — divide by
+    /// `solves` for the mean coalesced batch width.
+    pub coalesced_cols: AtomicUsize,
+    /// Submissions rejected by queue back-pressure.
+    pub rejected: AtomicUsize,
+    /// Per-request latency in nanoseconds (submit → response).
+    latency_ns: Mutex<Histogram>,
+}
+
+/// Latency histogram range: 100 ns .. 100 s, 90 log-spaced buckets
+/// (≈ 26% bucket ratio, so quantiles over-read by at most that factor).
+const LATENCY_LO_NS: f64 = 1e2;
+const LATENCY_HI_NS: f64 = 1e11;
+const LATENCY_BUCKETS: usize = 90;
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            evaluations: AtomicUsize::new(0),
+            mvms: AtomicUsize::new(0),
+            solves: AtomicUsize::new(0),
+            block_applies: AtomicUsize::new(0),
+            coalesced_cols: AtomicUsize::new(0),
+            rejected: AtomicUsize::new(0),
+            latency_ns: Mutex::new(Histogram::log_spaced(
+                LATENCY_LO_NS,
+                LATENCY_HI_NS,
+                LATENCY_BUCKETS,
+            )),
+        }
+    }
 }
 
 impl Metrics {
@@ -61,17 +290,149 @@ impl Metrics {
     pub fn add_mvms(&self, k: usize) {
         self.mvms.fetch_add(k, Ordering::Relaxed);
     }
+    pub fn add_solve(&self) {
+        self.solves.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add_block_applies(&self, k: usize) {
+        self.block_applies.fetch_add(k, Ordering::Relaxed);
+    }
+    pub fn add_coalesced(&self, cols: usize) {
+        self.coalesced_cols.fetch_add(cols, Ordering::Relaxed);
+    }
+    pub fn add_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+    /// Record one request's latency (nanoseconds).
+    pub fn record_latency_ns(&self, ns: f64) {
+        self.latency_ns.lock().unwrap().record(ns);
+    }
+    /// Latency quantile in nanoseconds (NaN when nothing recorded).
+    pub fn latency_quantile_ns(&self, q: f64) -> f64 {
+        self.latency_ns.lock().unwrap().quantile(q)
+    }
+    /// `(evaluations, mvms)` — the original throughput snapshot.
     pub fn snapshot(&self) -> (usize, usize) {
         (
             self.evaluations.load(Ordering::Relaxed),
             self.mvms.load(Ordering::Relaxed),
         )
     }
+    /// `(solves, block_applies, coalesced_cols, rejected)` — the
+    /// serving-layer accounting snapshot.
+    pub fn serving_snapshot(&self) -> (usize, usize, usize, usize) {
+        (
+            self.solves.load(Ordering::Relaxed),
+            self.block_applies.load(Ordering::Relaxed),
+            self.coalesced_cols.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+        )
+    }
+}
+
+// ---------------- dispatcher ----------------
+
+/// Drain every pending request and answer them, coalescing per model.
+///
+/// Grouping is by model id (ascending) and, within a model, by submission
+/// order; the returned responses are in the original submission order.
+/// All `Var` requests of one model share **one** cold fused
+/// [`pcg_block`](crate::solvers::pcg_block) solve (answers sliced out by
+/// column — bit-identical to solo solves, see the module docs); `Mean`
+/// requests share the model's cached `alpha`. Per-request latency is
+/// recorded into `metrics` as each response is produced.
+pub fn dispatch<O: PredictiveOp>(
+    reg: &mut ModelRegistry<O>,
+    queue: &RequestQueue,
+    metrics: &Metrics,
+) -> Vec<Response> {
+    let requests = queue.drain();
+    let mut out: Vec<Option<Response>> = (0..requests.len()).map(|_| None).collect();
+    // Deterministic model order; within a model, submission order.
+    let mut by_model: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (i, r) in requests.iter().enumerate() {
+        by_model.entry(r.model).or_default().push(i);
+    }
+    for (&model, idxs) in &by_model {
+        let Some(gp) = reg.get_mut(model) else {
+            // Unknown model: answer NaN, unconverged — the replay driver
+            // validates ids up front, so this is a programming error
+            // surfaced loudly rather than a panic in the serving loop.
+            for &i in idxs {
+                let r = &requests[i];
+                out[i] = Some(Response {
+                    model,
+                    kind: r.kind,
+                    value: f64::NAN,
+                    converged: false,
+                });
+            }
+            continue;
+        };
+        let mean_idx: Vec<usize> =
+            idxs.iter().copied().filter(|&i| requests[i].kind == RequestKind::Mean).collect();
+        let var_idx: Vec<usize> =
+            idxs.iter().copied().filter(|&i| requests[i].kind == RequestKind::Var).collect();
+        if !mean_idx.is_empty() {
+            // One cached-alpha solve serves every mean request; after the
+            // first batch this hits the cache and costs only the
+            // cross-kernel applies.
+            let (_, ainfo) = gp.alpha();
+            metrics.add_mvms(ainfo.mvms);
+            let xs: Vec<Vec<f64>> = mean_idx.iter().map(|&i| requests[i].x.clone()).collect();
+            let values = gp.predict_mean(&xs);
+            for (&i, v) in mean_idx.iter().zip(&values) {
+                out[i] = Some(Response {
+                    model,
+                    kind: RequestKind::Mean,
+                    value: *v,
+                    converged: ainfo.converged,
+                });
+            }
+        }
+        if !var_idx.is_empty() {
+            // Fuse every pending variance request into ONE cold block
+            // solve. The cold path is forced (and restored) because the
+            // group-sequential warm-start path is not bitwise-reproducible
+            // against solo per-request answers.
+            let saved_warm = gp.warm_start_predict_var;
+            gp.warm_start_predict_var = false;
+            let xs: Vec<Vec<f64>> = var_idx.iter().map(|&i| requests[i].x.clone()).collect();
+            let (vars, info) = gp.predict_var_info(&xs);
+            gp.warm_start_predict_var = saved_warm;
+            metrics.add_solve();
+            metrics.add_coalesced(xs.len());
+            metrics.add_mvms(info.mvms);
+            metrics.add_block_applies(info.block_applies);
+            for ((&i, v), cinfo) in var_idx.iter().zip(&vars).zip(&info.cols) {
+                out[i] = Some(Response {
+                    model,
+                    kind: RequestKind::Var,
+                    value: *v,
+                    converged: cinfo.converged,
+                });
+            }
+        }
+    }
+    // Stamp latency + evaluation count in submission order.
+    let responses: Vec<Response> = requests
+        .iter()
+        .zip(out)
+        .map(|(r, resp)| {
+            metrics.add_eval();
+            metrics.record_latency_ns(r.submitted.elapsed().as_nanos() as f64);
+            resp.expect("every drained request answered")
+        })
+        .collect();
+    responses
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::{IsoKernel, Shape};
+    use crate::operators::DenseKernelOp;
+    use crate::solvers::{CgOptions, PrecondOptions};
+    use crate::util::rng::Rng;
 
     #[test]
     fn map_matches_serial_and_counts_builders() {
@@ -104,5 +465,191 @@ mod tests {
         m.add_mvms(10);
         m.add_mvms(5);
         assert_eq!(m.snapshot(), (1, 15));
+        m.add_solve();
+        m.add_block_applies(7);
+        m.add_coalesced(4);
+        m.add_rejected();
+        assert_eq!(m.serving_snapshot(), (1, 7, 4, 1));
+        assert!(m.latency_quantile_ns(0.5).is_nan()); // nothing recorded
+        m.record_latency_ns(1e4);
+        assert!(m.latency_quantile_ns(0.5).is_finite());
+    }
+
+    /// A model with explicit (process-default-independent) solver options
+    /// so the coalescing tests are immune to other tests mutating the
+    /// global cg-block / precond defaults.
+    fn demo_model(n: usize, seed: u64, rank: usize) -> GpRegression<DenseKernelOp> {
+        let mut rng = Rng::new(seed);
+        let pts: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform_in(0.0, 4.0)]).collect();
+        let y: Vec<f64> =
+            pts.iter().map(|p| (1.3 * p[0]).sin() + 0.1 * rng.gaussian()).collect();
+        let op = DenseKernelOp::new(
+            pts,
+            Box::new(IsoKernel::new(Shape::Rbf, 1, 0.5, 1.0)),
+            0.05, // small noise: solves take real iterations
+        );
+        let mut gp = GpRegression::new(op, y);
+        gp.cg = CgOptions {
+            tol: 1e-10,
+            max_iters: 400,
+            block_size: 16,
+            threads: 1,
+            precond: PrecondOptions::rank(rank), // rank 0 = off
+            ..gp.cg
+        };
+        gp
+    }
+
+    fn test_points(k: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Rng::new(seed);
+        (0..k).map(|_| vec![rng.uniform_in(0.0, 4.0)]).collect()
+    }
+
+    /// The coalescing contract: N single-point variance requests fused
+    /// into one solve answer bitwise identically to N solo dispatches,
+    /// while doing strictly fewer solves AND strictly fewer block applies
+    /// at equal convergence.
+    #[test]
+    fn coalesced_var_matches_solo_bitwise_with_fewer_applies() {
+        for rank in [0usize, 8] {
+            let xs = test_points(7, 99);
+
+            // Coalesced: all 7 requests pending in one drain.
+            let mut reg = ModelRegistry::new();
+            let id = reg.insert(demo_model(64, 7, rank));
+            let queue = RequestQueue::bounded(64);
+            let metrics = Metrics::default();
+            for x in &xs {
+                queue.submit(id, RequestKind::Var, x.clone()).unwrap();
+            }
+            let fused = dispatch(&mut reg, &queue, &metrics);
+            let (fused_solves, fused_applies, fused_cols, _) = metrics.serving_snapshot();
+            assert_eq!(fused_cols, 7);
+            assert_eq!(fused_solves, 1);
+
+            // Solo: identical model, one dispatch per request.
+            let mut reg_solo = ModelRegistry::new();
+            let id_solo = reg_solo.insert(demo_model(64, 7, rank));
+            let solo_metrics = Metrics::default();
+            let mut solo: Vec<Response> = Vec::new();
+            for x in &xs {
+                let q = RequestQueue::bounded(64);
+                q.submit(id_solo, RequestKind::Var, x.clone()).unwrap();
+                solo.extend(dispatch(&mut reg_solo, &q, &solo_metrics));
+            }
+            let (solo_solves, solo_applies, _, _) = solo_metrics.serving_snapshot();
+
+            for (f, s) in fused.iter().zip(&solo) {
+                assert_eq!(f.value.to_bits(), s.value.to_bits(), "rank={rank}");
+                assert_eq!(f.converged, s.converged, "rank={rank}");
+                assert!(f.converged, "rank={rank}: solves must converge");
+            }
+            assert!(
+                fused_solves < solo_solves,
+                "rank={rank}: {fused_solves} !< {solo_solves}"
+            );
+            assert!(
+                fused_applies < solo_applies,
+                "rank={rank}: {fused_applies} !< {solo_applies}"
+            );
+        }
+    }
+
+    /// Mean requests ride the cached alpha: the first batch pays the
+    /// training solve, later batches add no block solves and answer
+    /// exactly like `predict_mean`.
+    #[test]
+    fn mean_requests_use_cached_alpha() {
+        let xs = test_points(5, 17);
+        let mut reg = ModelRegistry::new();
+        let id = reg.insert(demo_model(48, 3, 0));
+        reg.warm(id);
+        let metrics = Metrics::default();
+        let queue = RequestQueue::bounded(16);
+        for x in &xs {
+            queue.submit(id, RequestKind::Mean, x.clone()).unwrap();
+        }
+        let got = dispatch(&mut reg, &queue, &metrics);
+        let want = {
+            let mut gp = demo_model(48, 3, 0);
+            gp.predict_mean(&xs)
+        };
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.value.to_bits(), w.to_bits());
+            assert!(g.converged);
+        }
+        // Mean traffic dispatched zero block solves.
+        assert_eq!(metrics.serving_snapshot().0, 0);
+        assert_eq!(metrics.snapshot().0, 5);
+    }
+
+    /// Mixed kinds and models in one drain: responses come back in
+    /// submission order with the right kind, and per-model var traffic is
+    /// coalesced (one solve per model, not per request).
+    #[test]
+    fn mixed_batch_keeps_submission_order_and_coalesces_per_model() {
+        let mut reg = ModelRegistry::new();
+        let a = reg.insert(demo_model(40, 11, 0));
+        let b = reg.insert(demo_model(40, 13, 0));
+        let metrics = Metrics::default();
+        let queue = RequestQueue::bounded(16);
+        let pts = test_points(6, 5);
+        let plan = [
+            (b, RequestKind::Var),
+            (a, RequestKind::Mean),
+            (a, RequestKind::Var),
+            (b, RequestKind::Var),
+            (a, RequestKind::Var),
+            (b, RequestKind::Mean),
+        ];
+        for ((m, k), x) in plan.iter().zip(&pts) {
+            queue.submit(*m, *k, x.clone()).unwrap();
+        }
+        let got = dispatch(&mut reg, &queue, &metrics);
+        assert_eq!(got.len(), 6);
+        for (r, (m, k)) in got.iter().zip(&plan) {
+            assert_eq!((r.model, r.kind), (*m, *k));
+            assert!(r.value.is_finite());
+        }
+        // Two models with var traffic -> exactly two fused solves, and
+        // 4 var columns coalesced in total.
+        let (solves, _, cols, _) = metrics.serving_snapshot();
+        assert_eq!(solves, 2);
+        assert_eq!(cols, 4);
+        // p50/p99 are readable after a batch.
+        assert!(metrics.latency_quantile_ns(0.5).is_finite());
+        assert!(metrics.latency_quantile_ns(0.99).is_finite());
+    }
+
+    #[test]
+    fn queue_backpressure_rejects_when_full() {
+        let queue = RequestQueue::bounded(2);
+        let metrics = Metrics::default();
+        assert!(queue.submit(0, RequestKind::Mean, vec![0.0]).is_ok());
+        assert!(queue.submit(0, RequestKind::Mean, vec![1.0]).is_ok());
+        let r = queue.submit(0, RequestKind::Mean, vec![2.0]);
+        assert_eq!(r, Err(QueueFull));
+        metrics.add_rejected();
+        assert_eq!(queue.len(), 2);
+        assert_eq!(metrics.serving_snapshot().3, 1);
+        // Draining frees capacity.
+        let mut reg: ModelRegistry<DenseKernelOp> = ModelRegistry::new();
+        let _ = dispatch(&mut reg, &queue, &metrics); // unknown model -> NaN
+        assert!(queue.is_empty());
+        assert!(queue.submit(0, RequestKind::Mean, vec![3.0]).is_ok());
+    }
+
+    /// Unknown model ids answer NaN/unconverged instead of panicking the
+    /// serving loop.
+    #[test]
+    fn unknown_model_answers_nan() {
+        let mut reg: ModelRegistry<DenseKernelOp> = ModelRegistry::new();
+        let queue = RequestQueue::bounded(4);
+        let metrics = Metrics::default();
+        queue.submit(5, RequestKind::Var, vec![1.0]).unwrap();
+        let got = dispatch(&mut reg, &queue, &metrics);
+        assert_eq!(got.len(), 1);
+        assert!(got[0].value.is_nan());
+        assert!(!got[0].converged);
     }
 }

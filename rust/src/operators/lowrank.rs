@@ -7,7 +7,8 @@
 use super::{KernelOp, LinOp};
 use crate::kernels::Kernel;
 use crate::linalg::chol::Cholesky;
-use crate::linalg::dense::Mat;
+use crate::linalg::dense::{Mat, MatF32};
+use crate::util::precision::Precision;
 
 /// `K̃ = K_xu K_uu^{-1} K_ux + D` where `D = σ² I` (SoR) or
 /// `D = diag(k(x,x) - q(x,x)) + σ² I` (FITC).
@@ -23,6 +24,14 @@ pub struct FitcOp {
     kuu_chol: Cholesky,
     /// Full diagonal D (noise included).
     dvec: Vec<f64>,
+    /// Lazily built f32 storage panels of the cross factor for
+    /// `Precision::F32F64` applies: `K_xu` (n x m) and its transpose
+    /// `K_ux` (m x n), so both factor contractions of the blocked apply
+    /// stream half the memory traffic. Invalidated by `refresh()` (and
+    /// therefore by `set_hypers`), mirroring the dense-kernel panel
+    /// contract.
+    kxu32: std::sync::OnceLock<MatF32>,
+    kux32: std::sync::OnceLock<MatF32>,
 }
 
 impl FitcOp {
@@ -42,6 +51,8 @@ impl FitcOp {
             kxu: Mat::zeros(0, 0),
             kuu_chol: Cholesky { l: Mat::eye(1) },
             dvec: Vec::new(),
+            kxu32: std::sync::OnceLock::new(),
+            kux32: std::sync::OnceLock::new(),
         };
         op.refresh()?;
         Ok(op)
@@ -52,6 +63,9 @@ impl FitcOp {
     }
 
     fn refresh(&mut self) -> crate::error::Result<()> {
+        // Hypers changed: the f32 mirrors of the cross factor are stale.
+        self.kxu32 = std::sync::OnceLock::new();
+        self.kux32 = std::sync::OnceLock::new();
         let (n, m) = (self.points.len(), self.inducing.len());
         let kuu = Mat::from_fn(m, m, |i, j| {
             self.kernel.eval(&self.inducing[i], &self.inducing[j])
@@ -270,6 +284,45 @@ impl LinOp for FitcOp {
         }
         out
     }
+    /// Mixed mode streams both factor contractions (`K_ux X` and
+    /// `K_xu ·`) through lazily cached f32 panels with f64-accumulating
+    /// GEMMs — half the memory traffic of the n×m factor both ways. The
+    /// m×m Cholesky solve and the diagonal `D ∘ X` stay exact f64, and
+    /// F64 mode is `apply_mat` itself (bitwise).
+    fn apply_mat_prec(&self, x: &Mat, prec: Precision) -> Mat {
+        match prec {
+            Precision::F64 => self.apply_mat(x),
+            Precision::F32F64 => {
+                let (n, m) = (self.points.len(), self.m());
+                assert_eq!(x.rows, n);
+                let b = x.cols;
+                if b == 0 || n == 0 {
+                    return Mat::zeros(n, b);
+                }
+                let kux = self.kux32.get_or_init(|| MatF32::from_mat(&self.kxu.transpose()));
+                let kxu = self.kxu32.get_or_init(|| MatF32::from_mat(&self.kxu));
+                // ~4 n m b flops across the two panels; same spawn-worthiness
+                // gate style as the dense panel (flop count unchanged vs f64).
+                let threads = if 2 * n * m * b >= 4_000_000 {
+                    crate::util::parallel::default_threads()
+                } else {
+                    1
+                };
+                let mut t = Mat::zeros(m, b);
+                kux.matmul_into_threads(x, &mut t, threads);
+                let tsol = self.kuu_chol.solve_mat(&t);
+                let mut out = Mat::zeros(n, b);
+                kxu.matmul_into_threads(&tsol, &mut out, threads);
+                for i in 0..n {
+                    let di = self.dvec[i];
+                    for (o, xi) in out.row_mut(i).iter_mut().zip(x.row(i)) {
+                        *o += di * xi;
+                    }
+                }
+                out
+            }
+        }
+    }
 }
 
 impl KernelOp for FitcOp {
@@ -419,6 +472,60 @@ mod tests {
         let eig = crate::linalg::eigh::eigh(&dense).unwrap();
         let nonzero = eig.eigvals.iter().filter(|&&v| v.abs() > 1e-8).count();
         assert!(nonzero <= 4, "rank {nonzero}");
+    }
+
+    /// F64 mode is bitwise `apply_mat`; mixed mode equals the f64 pipeline
+    /// run on the *rounded* cross factor (bitwise, via the MatF32 GEMM
+    /// contract) with the Cholesky solve and diagonal exact; `set_hypers`
+    /// drops the stale panels so they track the new factor.
+    #[test]
+    fn apply_mat_prec_contract_and_refresh() {
+        for fitc in [false, true] {
+            let mut op = setup(22, 6, fitc);
+            let mut rng = Rng::new(12);
+            let x = Mat::from_fn(22, 3, |_, _| rng.gaussian());
+            let f64_path = op.apply_mat_prec(&x, Precision::F64);
+            let plain = op.apply_mat(&x);
+            for (a, b) in f64_path.data.iter().zip(&plain.data) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            let check_mixed = |op: &FitcOp, x: &Mat| {
+                let mixed = op.apply_mat_prec(x, Precision::F32F64);
+                // Reference: the same pipeline on the rounded K_xu, all-f64.
+                let rounded = Mat {
+                    rows: op.kxu.rows,
+                    cols: op.kxu.cols,
+                    data: op.kxu.data.iter().map(|&v| f64::from(v as f32)).collect(),
+                };
+                let t = rounded.transpose().matmul(x);
+                let tsol = op.kuu_chol.solve_mat(&t);
+                let mut want = rounded.matmul(&tsol);
+                for i in 0..op.n() {
+                    let di = op.dvec[i];
+                    for (o, xi) in want.row_mut(i).iter_mut().zip(x.row(i)) {
+                        *o += di * xi;
+                    }
+                }
+                for (a, b) in mixed.data.iter().zip(&want.data) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                // The knob reaches storage: rounding the factor must move
+                // *something* at f32 scale.
+                let diff = mixed
+                    .data
+                    .iter()
+                    .zip(&op.apply_mat(x).data)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f64, f64::max);
+                assert!(diff > 0.0, "fitc={fitc}: panel apply identical to f64");
+            };
+            check_mixed(&op, &x);
+            // Changing hypers rebuilds the factor; panels must follow.
+            let mut h = op.hypers();
+            h[0] += 0.2;
+            op.set_hypers(&h);
+            check_mixed(&op, &x);
+        }
     }
 
     #[test]

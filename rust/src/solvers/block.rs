@@ -146,11 +146,14 @@ pub fn cg_block<O: LinOp + ?Sized>(
             BlockCgInfo { cols: infos, mvms: 0, block_applies: 0, warm_saved_iters: 0 },
         );
     }
-    // One worker per RHS group: the groups are fully independent (each
-    // keeps its own lockstep state and owns a disjoint column range), so
-    // fanning them across threads changes scheduling only — never results.
+    // Work-stealing over RHS groups: the groups are fully independent
+    // (each keeps its own lockstep state and owns a disjoint column
+    // range), so which worker solves a group — and in what steal order —
+    // changes scheduling only, never results. Stealing matters because
+    // group convergence is ragged: a worker whose group deflates early
+    // pulls the next unsolved group instead of idling.
     let part = BlockPartition::new(b.cols, opts.block_size);
-    let groups = parallel::par_map(part.nblocks, opts.threads, |bi| {
+    let groups = parallel::par_map_steal(part.nblocks, opts.threads, |bi| {
         let (j0, w) = part.range(bi);
         solve_lockstep(op, b, x0, j0, w, opts)
     });
@@ -190,10 +193,10 @@ pub fn pcg_block<O: LinOp + ?Sized>(
             BlockCgInfo { cols: infos, mvms: 0, block_applies: 0, warm_saved_iters: 0 },
         );
     }
-    // Same worker-per-group fan-out as [`cg_block`]; the blocked `P⁻¹`
+    // Same work-stealing group fan-out as [`cg_block`]; the blocked `P⁻¹`
     // applies are column-independent, so groups stay data-independent.
     let part = BlockPartition::new(b.cols, opts.block_size);
-    let groups = parallel::par_map(part.nblocks, opts.threads, |bi| {
+    let groups = parallel::par_map_steal(part.nblocks, opts.threads, |bi| {
         let (j0, w) = part.range(bi);
         solve_lockstep_pc(op, pc, b, x0, j0, w, opts)
     });

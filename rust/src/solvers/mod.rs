@@ -30,14 +30,21 @@
 //!   executes; one per `apply_mat` call). Per-group counts are merged back
 //!   by global column index, so the merged report is identical to the
 //!   serial engine's.
-//! * **RHS-group parallelism.** A multi-group solve fans its
-//!   `block_size`-wide groups across `CgOptions::threads` workers
-//!   ([`crate::util::parallel`] owns the pool; the CLI `--threads` flag
-//!   sets the process default). Groups are data-independent — each worker
-//!   runs one complete lockstep solve with its own deflation and
-//!   true-residual state and writes a disjoint column range — so results
-//!   are **bit-identical for every thread count** (proptest-enforced
-//!   across `threads ∈ {1, 2, 8}`). The nested thread-*budget* guard
+//! * **RHS-group parallelism (work-stealing).** A multi-group solve fans
+//!   its `block_size`-wide groups across `CgOptions::threads` workers
+//!   pulling from a shared atomic group queue
+//!   ([`crate::util::parallel::par_map_steal`] owns the pool; the CLI
+//!   `--threads` flag sets the process default). Groups are
+//!   data-independent — each worker runs one complete lockstep solve with
+//!   its own deflation and true-residual state and writes a disjoint
+//!   column range — so results are **bit-identical for every thread count
+//!   and every steal order** (proptest-enforced across
+//!   `threads ∈ {1, 2, 8}`, and against the static-partition reference):
+//!   which worker solves a group is unobservable in the solutions,
+//!   per-column `CgInfo`, `mvms`, and `block_applies`. Stealing exists
+//!   because group convergence is ragged — a worker whose group deflates
+//!   in a few iterations pulls the next unsolved group instead of idling
+//!   behind the hardest group. The nested thread-*budget* guard
 //!   keeps operator-level threading from multiplying under the group
 //!   workers: each worker's nested fan-out is capped by its share of the
 //!   requested threads (serial when there are as many groups as threads;

@@ -33,6 +33,21 @@
 //! threads the budget is 1 and nested calls run serially, which is the
 //! classic guard.
 //!
+//! # Work stealing ([`par_map_steal`])
+//!
+//! Static partitioning strands workers when per-item cost is ragged: a
+//! worker whose RHS groups all converge in a handful of CG iterations
+//! idles while another grinds through the hard groups it was dealt.
+//! [`par_map_steal`] replaces the static chunk assignment with a shared
+//! atomic index queue — every worker pulls the next unclaimed item when
+//! its current one finishes, so raggedness costs at most one item of
+//! imbalance. The bit-identity contract is unchanged **for every steal
+//! order**: items are data-independent, each `f(i)` computes exactly what
+//! it would under static partitioning, and results land in an
+//! index-addressed slot — which worker ran item `i`, and in what order,
+//! is unobservable in the output. Budgets compose exactly as in
+//! [`par_map`]: `requested / workers`, remainder to the first workers.
+//!
 //! The process-wide default worker count is settable
 //! ([`set_default_threads`], CLI `--threads`); 0 (the initial state) means
 //! "auto": `available_parallelism`, capped at 16.
@@ -175,6 +190,67 @@ where
     out.into_iter().map(|o| o.expect("par_map slot filled")).collect()
 }
 
+/// Work-stealing indexed map: computes `f(i)` for `i in 0..n`, preserving
+/// order, with workers pulling items from a shared atomic queue instead
+/// of a static partition.
+///
+/// Use this when per-item cost is ragged (e.g. RHS groups whose CG
+/// convergence varies wildly): a worker that finishes early steals the
+/// next unclaimed index instead of idling. Results are **bit-identical to
+/// [`par_map`] and to the serial loop for every thread count and steal
+/// order** — items are data-independent, each result lands in the slot of
+/// its index, and no worker-local state leaks between items. Each worker
+/// buffers its `(index, value)` results privately and the buffers are
+/// merged after the scope joins, so the hot path takes no locks.
+///
+/// Worker budgets compose exactly as in [`par_map`]: the requested thread
+/// count is divided over the spawned workers (`requested / workers`,
+/// remainder to the first workers, at least 1), so nested fan-out from
+/// inside `f` never oversubscribes the outermost request.
+pub fn par_map_steal<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let requested = effective_threads(threads);
+    let workers = requested.min(n.max(1));
+    if workers == 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let (base_budget, extra) = (requested / workers, requested % workers);
+    let mut buffers: Vec<Vec<(usize, T)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let f = &f;
+                let next = &next;
+                let budget = (base_budget + usize::from(w < extra)).max(1);
+                scope.spawn(move || {
+                    set_worker_budget(budget);
+                    let mut buf: Vec<(usize, T)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        buf.push((i, f(i)));
+                    }
+                    buf
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("steal worker panicked")).collect()
+    });
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for buf in buffers.drain(..) {
+        for (i, v) in buf {
+            debug_assert!(out[i].is_none(), "index {i} claimed twice");
+            out[i] = Some(v);
+        }
+    }
+    out.into_iter().map(|o| o.expect("par_map_steal slot filled")).collect()
+}
+
 /// Parallel for over mutable chunks of a slice: `f(chunk_index, chunk)`.
 ///
 /// At most `threads` workers are spawned; chunks are partitioned into
@@ -229,6 +305,58 @@ mod tests {
     fn par_map_single_item() {
         assert_eq!(par_map(1, 8, |i| i + 1), vec![1]);
         assert_eq!(par_map(0, 8, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn par_map_steal_matches_serial() {
+        let serial: Vec<u64> = (0..257).map(|i| (i * i) as u64).collect();
+        for threads in [1usize, 2, 3, 8, 64] {
+            assert_eq!(par_map_steal(257, threads, |i| (i * i) as u64), serial);
+        }
+        assert_eq!(par_map_steal(1, 8, |i| i + 1), vec![1]);
+        assert_eq!(par_map_steal(0, 8, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn par_map_steal_ragged_items_land_by_index() {
+        // Items with wildly different costs: order of completion varies,
+        // but every result must land in its own slot.
+        for _ in 0..8 {
+            let got = par_map_steal(40, 8, |i| {
+                if i % 7 == 0 {
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+                i * 3
+            });
+            assert_eq!(got, (0..40).map(|i| i * 3).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn par_map_steal_budgets_match_par_map() {
+        // Same budget composition as the static fan-out: 2 workers on an
+        // 8-thread request inherit 4 threads each, remainder to the first.
+        assert_eq!(par_map_steal(2, 8, |_| default_threads()), vec![4, 4]);
+        // 3 workers on 8 threads get budgets {3, 3, 2}; which worker runs
+        // which item depends on the steal order, so assert the range only.
+        let budgets = par_map_steal(3, 8, |_| default_threads());
+        assert!(budgets.iter().all(|&b| b == 2 || b == 3), "{budgets:?}");
+        assert_eq!(par_map_steal(8, 8, |_| default_threads()), vec![1; 8]);
+        // Workers are pool-marked, so nested fan-out stays budgeted.
+        let nested = par_map_steal(4, 4, |_| par_map(3, 16, |_| in_pool_worker()));
+        assert!(nested.iter().flatten().all(|&w| w));
+    }
+
+    #[test]
+    fn par_map_steal_caps_spawned_workers() {
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+        let ids: Mutex<HashSet<std::thread::ThreadId>> = Mutex::new(HashSet::new());
+        par_map_steal(50, 4, |i| {
+            ids.lock().unwrap().insert(std::thread::current().id());
+            i
+        });
+        assert!(ids.lock().unwrap().len() <= 4, "spawned {}", ids.lock().unwrap().len());
     }
 
     #[test]

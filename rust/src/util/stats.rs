@@ -132,6 +132,103 @@ pub fn scal(alpha: f64, y: &mut [f64]) {
     }
 }
 
+/// Fixed-bucket histogram with log-spaced bucket edges — the serving
+/// layer's latency recorder (p50/p99 readout with no dependencies and
+/// O(buckets) memory, regardless of request count).
+///
+/// Buckets are log-spaced over `[lo, hi)`: bucket `k` covers
+/// `[lo·r^k, lo·r^(k+1))` with `r = (hi/lo)^(1/buckets)`. Values below
+/// `lo` land in bucket 0; values at or above `hi` **saturate into the top
+/// bucket** (they are counted, not dropped — a quantile that falls there
+/// reports the top bucket's upper edge, i.e. `hi`, as a floor-biased
+/// answer rather than pretending the tail was observed). Quantiles are
+/// read out as the *upper edge* of the bucket holding the q-th sample, so
+/// the readout over-estimates by at most one bucket width (a ratio of `r`
+/// for log-spaced buckets).
+///
+/// NaN inputs follow the PR 4 propagation convention of [`median`]: a
+/// recorded NaN is remembered and poisons every subsequent
+/// [`Histogram::quantile`] readout (NaN out, never a silently shifted
+/// order statistic). An empty histogram reads NaN too — "no data" must
+/// not look like a zero-latency service.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    /// Per-bucket sample counts; `counts.len()` is the bucket count.
+    counts: Vec<u64>,
+    total: u64,
+    saw_nan: bool,
+}
+
+impl Histogram {
+    /// Log-spaced histogram over `[lo, hi)` with `buckets` buckets.
+    /// Requires `0 < lo < hi` and `buckets >= 1`.
+    pub fn log_spaced(lo: f64, hi: f64, buckets: usize) -> Self {
+        assert!(lo > 0.0 && lo < hi, "need 0 < lo < hi, got [{lo}, {hi})");
+        assert!(buckets >= 1, "need at least one bucket");
+        Histogram { lo, hi, counts: vec![0; buckets], total: 0, saw_nan: false }
+    }
+
+    /// Record one sample. Below-range clamps to bucket 0, at-or-above-range
+    /// saturates into the top bucket, NaN poisons future quantile readouts.
+    pub fn record(&mut self, v: f64) {
+        if v.is_nan() {
+            self.saw_nan = true;
+            self.total += 1;
+            return;
+        }
+        let nb = self.counts.len();
+        let k = if v < self.lo {
+            0
+        } else if v >= self.hi {
+            nb - 1
+        } else {
+            // log-spaced index: k = floor(nb * ln(v/lo) / ln(hi/lo)),
+            // clamped against edge-of-range rounding.
+            let frac = (v / self.lo).ln() / (self.hi / self.lo).ln();
+            ((frac * nb as f64) as usize).min(nb - 1)
+        };
+        self.counts[k] += 1;
+        self.total += 1;
+    }
+
+    /// Number of recorded samples (NaNs included).
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Quantile readout, `q` in `[0, 1]`: the upper edge of the bucket
+    /// holding the ceil(q·total)-th sample. NaN when empty or when any
+    /// recorded sample was NaN (propagation, matching [`median`]).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 || self.saw_nan || q.is_nan() {
+            return f64::NAN;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (k, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return self.upper_edge(k);
+            }
+        }
+        self.upper_edge(self.counts.len() - 1)
+    }
+
+    /// Upper edge of bucket `k`: `lo · (hi/lo)^((k+1)/buckets)`; the top
+    /// bucket's edge is exactly `hi` (saturated samples read back as the
+    /// range ceiling).
+    fn upper_edge(&self, k: usize) -> f64 {
+        let nb = self.counts.len();
+        if k + 1 >= nb {
+            return self.hi;
+        }
+        self.lo * (self.hi / self.lo).powf((k + 1) as f64 / nb as f64)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -204,6 +301,79 @@ mod tests {
         let t = [1.0, -2.0, 3.5];
         assert_eq!(mse(&t, &t), 0.0);
         assert_eq!(rmse(&t, &t), 0.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_land_on_bucket_edges() {
+        // 3 log-spaced buckets over [1, 1000): [1,10), [10,100), [100,1000).
+        let mut h = Histogram::log_spaced(1.0, 1000.0, 3);
+        for v in [2.0, 3.0, 50.0, 200.0, 5000.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        // rank(0.5) = 3rd sample -> second bucket -> upper edge 100.
+        assert!((h.quantile(0.5) - 100.0).abs() < 1e-9);
+        // rank(0.99) = 5th sample -> top bucket; 5000 saturated, edge = hi.
+        assert_eq!(h.quantile(0.99), 1000.0);
+        // rank(0.0) clamps to the first sample's bucket -> edge 10.
+        assert!((h.quantile(0.0) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_out_of_range_clamps_and_saturates() {
+        let mut h = Histogram::log_spaced(10.0, 100.0, 4);
+        h.record(0.001); // below lo -> bucket 0
+        h.record(1e12); // above hi -> top bucket, counted not dropped
+        assert_eq!(h.count(), 2);
+        // First sample: bucket 0's upper edge 10 * 10^(1/4).
+        let edge0 = 10.0 * 10f64.powf(0.25);
+        assert!((h.quantile(0.25) - edge0).abs() < 1e-9);
+        // Second sample saturated: reads back the range ceiling.
+        assert_eq!(h.quantile(1.0), 100.0);
+    }
+
+    /// NaN convention matches [`median`]: a recorded NaN propagates to
+    /// every quantile readout instead of skewing which bucket the rank
+    /// selects; an empty histogram reads NaN, never a fake zero latency.
+    #[test]
+    fn histogram_nan_propagates_and_empty_is_nan() {
+        let h = Histogram::log_spaced(1.0, 100.0, 8);
+        assert!(h.quantile(0.5).is_nan());
+        let mut h = Histogram::log_spaced(1.0, 100.0, 8);
+        h.record(5.0);
+        assert!(h.quantile(0.5).is_finite());
+        h.record(f64::NAN);
+        assert!(h.quantile(0.5).is_nan());
+        assert!(h.quantile(0.99).is_nan());
+        assert_eq!(h.count(), 2);
+        // NaN q is NaN out, even on a clean histogram.
+        let mut clean = Histogram::log_spaced(1.0, 100.0, 8);
+        clean.record(5.0);
+        assert!(clean.quantile(f64::NAN).is_nan());
+    }
+
+    /// The readout over-estimates the exact quantile by at most one
+    /// bucket ratio r = (hi/lo)^(1/buckets) — checked against the exact
+    /// order statistic on a deterministic sample set.
+    #[test]
+    fn histogram_quantile_within_one_bucket_of_exact() {
+        let mut h = Histogram::log_spaced(1.0, 1e6, 60);
+        let r = (1e6f64).powf(1.0 / 60.0);
+        let mut xs: Vec<f64> = Vec::new();
+        let mut v = 1.3;
+        for _ in 0..500 {
+            v = (v * 1.37) % 9000.0 + 1.0; // deterministic, in-range spread
+            xs.push(v);
+            h.record(v);
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_by(f64::total_cmp);
+        for q in [0.5, 0.9, 0.99] {
+            let exact = sorted[((q * 500.0).ceil() as usize - 1).min(499)];
+            let est = h.quantile(q);
+            assert!(est >= exact, "q={q}: est {est} < exact {exact}");
+            assert!(est <= exact * r * (1.0 + 1e-12), "q={q}: est {est} > {exact}*r");
+        }
     }
 
     #[test]

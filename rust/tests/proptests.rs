@@ -1297,7 +1297,15 @@ fn prop_precision_mixed_apply_error_bound() {
                     );
                 }
             }
-            if bcols == 8 && (name == "dense_kernel" || name == "dense_mat") {
+            // Ops with an f32 panel must actually move at f32 scale: the
+            // dense panels round the full matrix, the FITC/SoR panels
+            // round the low-rank cross factor both ways.
+            if bcols == 8
+                && (name == "dense_kernel"
+                    || name == "dense_mat"
+                    || name == "fitc"
+                    || name == "sor")
+            {
                 assert!(max_diff > 0.0, "{name}: mixed apply identical to f64 — knob inert");
             }
         }
@@ -1755,5 +1763,196 @@ fn prop_ski_grad_fd_random_configs() {
                 );
             }
         }
+    }
+}
+
+/// Property (work-stealing scheduler): `cg_block` / `pcg_block` results
+/// are bit-identical — solutions, per-column `CgInfo`, `mvms`,
+/// `block_applies` — to the serial (static, in-order) engine for every
+/// thread count in {1, 2, 8}, block size in {1, 3, 8}, cold and warm,
+/// on a problem built for *maximally ragged* group convergence: a third
+/// of the RHS columns are zero (their groups deflate at iteration 0 and
+/// the worker immediately steals the next group) while the rest take the
+/// full CG iteration count. Each multi-threaded configuration runs
+/// several times so different steal interleavings are sampled; every run
+/// must be bitwise identical, proving the steal order is unobservable.
+#[test]
+fn prop_work_stealing_bit_identical_across_steal_orders() {
+    use gpsld::solvers::{
+        build_preconditioner, pcg_block, CgOptions, PrecondOptions, Preconditioner,
+    };
+    let mut rng = Rng::new(3100);
+    let n = 32;
+    let k = 9;
+    let pts: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform_in(0.0, 2.0)]).collect();
+    let op = DenseKernelOp::new(
+        pts,
+        Box::new(IsoKernel::new(Shape::Rbf, 1, 0.6, 1.0)),
+        0.05, // small noise: non-trivial iteration counts for hard columns
+    );
+    // Ragged RHS: columns j % 3 == 0 are zero (instant convergence, the
+    // stealing worker moves on immediately); the rest are random.
+    let b = Mat::from_fn(n, k, |i, j| {
+        if j % 3 == 0 {
+            0.0
+        } else {
+            ((i * 31 + j * 7) as f64 * 0.7311).sin()
+        }
+    });
+    let x0 = Mat::from_fn(n, k, |_, _| 0.3 * rng.gaussian());
+    let pc = build_preconditioner(&op, PrecondOptions::rank(8)).unwrap();
+    for pc in [None, Some(&pc as &dyn Preconditioner)] {
+        for warm in [None, Some(&x0)] {
+            for bs in [1usize, 3, 8] {
+                let serial = CgOptions {
+                    tol: 1e-10,
+                    max_iters: 400,
+                    block_size: bs,
+                    threads: 1,
+                    ..Default::default()
+                };
+                let (xref, iref) = pcg_block(&op, &b, warm, pc, &serial);
+                // The zero columns really do converge instantly — the
+                // raggedness this property depends on is present.
+                if warm.is_none() {
+                    assert_eq!(iref.cols[0].iters, 0, "bs={bs}: zero column not instant");
+                    assert!(
+                        iref.cols[1].iters > 4,
+                        "bs={bs}: hard column converged too fast for raggedness"
+                    );
+                }
+                for threads in [2usize, 8] {
+                    for round in 0..4 {
+                        let opts = CgOptions { threads, ..serial };
+                        let (xt, it) = pcg_block(&op, &b, warm, pc, &opts);
+                        let tag = format!(
+                            "pc={} warm={} bs={bs} threads={threads} round={round}",
+                            pc.is_some(),
+                            warm.is_some()
+                        );
+                        for (a, c) in xref.data.iter().zip(&xt.data) {
+                            assert_eq!(a.to_bits(), c.to_bits(), "{tag}: {a} vs {c}");
+                        }
+                        assert_eq!(iref.mvms, it.mvms, "{tag} mvms");
+                        assert_eq!(iref.block_applies, it.block_applies, "{tag} applies");
+                        for (j, (a, c)) in iref.cols.iter().zip(&it.cols).enumerate() {
+                            assert_eq!(a.iters, c.iters, "{tag} col {j} iters");
+                            assert_eq!(a.converged, c.converged, "{tag} col {j} converged");
+                            assert_eq!(a.mvms, c.mvms, "{tag} col {j} mvms");
+                            assert_eq!(
+                                a.residual.to_bits(),
+                                c.residual.to_bits(),
+                                "{tag} col {j} residual"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Property (request coalescing): fusing N pending predictive-variance
+/// requests into one dispatched block solve answers every request
+/// bitwise identically to N solo dispatches — across request counts,
+/// preconditioned and not, with mean requests mixed into the batch — and
+/// the fused path reports strictly fewer solves AND strictly fewer
+/// block applies at equal convergence.
+#[test]
+fn prop_coalesced_dispatch_bitwise_matches_solo() {
+    use gpsld::coordinator::service::{
+        dispatch, Metrics, ModelRegistry, RequestKind, RequestQueue,
+    };
+    use gpsld::gp::GpRegression;
+    use gpsld::solvers::{CgOptions, PrecondOptions};
+
+    let make_model = |seed: u64, rank: usize| {
+        let mut rng = Rng::new(seed);
+        let n = 56;
+        let pts: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform_in(0.0, 4.0)]).collect();
+        let y: Vec<f64> =
+            pts.iter().map(|p| (1.1 * p[0]).sin() + 0.1 * rng.gaussian()).collect();
+        let op = DenseKernelOp::new(
+            pts,
+            Box::new(IsoKernel::new(Shape::Rbf, 1, 0.5, 1.0)),
+            0.05,
+        );
+        let mut gp = GpRegression::new(op, y);
+        gp.cg = CgOptions {
+            tol: 1e-10,
+            max_iters: 400,
+            block_size: 16,
+            threads: 1,
+            precond: PrecondOptions::rank(rank),
+            ..gp.cg
+        };
+        gp
+    };
+
+    let mut rng = Rng::new(3200);
+    for case in 0..6 {
+        let rank = if case % 2 == 0 { 0 } else { 8 };
+        let n_var = 2 + rng.below(9);
+        let n_mean = rng.below(4);
+        let var_xs: Vec<Vec<f64>> =
+            (0..n_var).map(|_| vec![rng.uniform_in(0.0, 4.0)]).collect();
+        let mean_xs: Vec<Vec<f64>> =
+            (0..n_mean).map(|_| vec![rng.uniform_in(0.0, 4.0)]).collect();
+
+        // Coalesced: everything pending in one drain.
+        let mut reg = ModelRegistry::new();
+        let id = reg.insert(make_model(40 + case as u64, rank));
+        let queue = RequestQueue::bounded(64);
+        let metrics = Metrics::default();
+        for x in &mean_xs {
+            queue.submit(id, RequestKind::Mean, x.clone()).unwrap();
+        }
+        for x in &var_xs {
+            queue.submit(id, RequestKind::Var, x.clone()).unwrap();
+        }
+        let fused = dispatch(&mut reg, &queue, &metrics);
+        let (fused_solves, fused_applies, fused_cols, _) = metrics.serving_snapshot();
+        assert_eq!(fused_cols, n_var, "case {case}");
+        assert_eq!(fused_solves, 1, "case {case}");
+
+        // Solo: identical model, one dispatch per request.
+        let mut reg2 = ModelRegistry::new();
+        let id2 = reg2.insert(make_model(40 + case as u64, rank));
+        let solo_metrics = Metrics::default();
+        let mut solo = Vec::new();
+        for x in &mean_xs {
+            let q = RequestQueue::bounded(8);
+            q.submit(id2, RequestKind::Mean, x.clone()).unwrap();
+            solo.extend(dispatch(&mut reg2, &q, &solo_metrics));
+        }
+        for x in &var_xs {
+            let q = RequestQueue::bounded(8);
+            q.submit(id2, RequestKind::Var, x.clone()).unwrap();
+            solo.extend(dispatch(&mut reg2, &q, &solo_metrics));
+        }
+        let (solo_solves, solo_applies, _, _) = solo_metrics.serving_snapshot();
+
+        assert_eq!(fused.len(), solo.len(), "case {case}");
+        for (i, (f, s)) in fused.iter().zip(&solo).enumerate() {
+            assert_eq!(f.kind, s.kind, "case {case} req {i}");
+            assert_eq!(
+                f.value.to_bits(),
+                s.value.to_bits(),
+                "case {case} req {i} ({:?}): {} vs {}",
+                f.kind,
+                f.value,
+                s.value
+            );
+            assert_eq!(f.converged, s.converged, "case {case} req {i}");
+            assert!(f.converged, "case {case} req {i}: must converge");
+        }
+        assert!(
+            fused_solves < solo_solves,
+            "case {case}: solves {fused_solves} !< {solo_solves}"
+        );
+        assert!(
+            fused_applies < solo_applies,
+            "case {case}: applies {fused_applies} !< {solo_applies}"
+        );
     }
 }

@@ -38,7 +38,9 @@ import json
 import sys
 
 # Lower-is-better metrics. Timing is noisy; counters are exact.
-TIMING_METRICS = ("ns_per_apply", "ns_per_solve_col", "ns_per_estimate")
+# p50_ns/p99_ns are the serving layer's per-request latency quantiles
+# (BENCH_service): timing-class, so they honor the ns floor.
+TIMING_METRICS = ("ns_per_apply", "ns_per_solve_col", "ns_per_estimate", "p50_ns", "p99_ns")
 COUNTER_METRICS = (
     "mvms",
     "block_applies",
@@ -46,6 +48,9 @@ COUNTER_METRICS = (
     "lanczos_steps",
     "probes_used",
     "steps_used",
+    # Block solves dispatched by the coalescing service (BENCH_service):
+    # coalescing regressing into per-request solves fires here exactly.
+    "solves",
 )
 # Higher-is-better, exact: ANY drop is a regression (a solve that stops
 # converging often also gets *faster*, so the timing gate alone would
@@ -348,6 +353,52 @@ def self_test():
         50.0,
     )
     assert reg == [], reg
+    checks += 1
+
+    # BENCH_service: `solves` is an exact lower-is-better counter — the
+    # coalescing layer regressing from 1 fused solve into per-request
+    # solves fires even though each solo solve is individually fast.
+    svc = {
+        "model": "dense_rbf",
+        "n": 512,
+        "requests": 32,
+        "threads": 1,
+        "precision": "f64",
+        "coalesced_cols": 32,
+    }
+    reg, _, matched = compare(
+        rows(dict(svc, solves=1, converged=32)),
+        rows(dict(svc, solves=32, converged=32)),
+        0.20,
+        50.0,
+    )
+    assert matched == 1 and len(reg) == 1 and "solves" in reg[0], reg
+    checks += 1
+
+    # Service latency quantiles are timing-class: a large relative rise
+    # under the ns floor stays quiet, a real p99 blowup fires, and a
+    # converged drop fires even when the latencies improve.
+    reg, _, _ = compare(
+        rows(dict(svc, p50_ns=30.0, p99_ns=40.0)),
+        rows(dict(svc, p50_ns=45.0, p99_ns=60.0)),
+        0.20,
+        50.0,
+    )
+    assert reg == [], reg
+    reg, _, _ = compare(
+        rows(dict(svc, p50_ns=2e5, p99_ns=1e6)),
+        rows(dict(svc, p50_ns=2e5, p99_ns=2e6)),
+        0.20,
+        50.0,
+    )
+    assert len(reg) == 1 and "p99_ns" in reg[0], reg
+    reg, _, _ = compare(
+        rows(dict(svc, converged=32, p50_ns=2e5, p99_ns=1e6)),
+        rows(dict(svc, converged=30, p50_ns=1e5, p99_ns=5e5)),
+        0.20,
+        50.0,
+    )
+    assert len(reg) == 1 and "converged" in reg[0], reg
     checks += 1
 
     # Schema change (new identity field on every row) -> matched == 0,

@@ -7,11 +7,15 @@
 # the pivoted-Cholesky preconditioning sweep (rank x sigma x threads on an
 # ill-conditioned dense RBF), and the confidence/adaptive-budget sweep
 # (tolerance x sigma on the same kernel: probes used, interval widths,
-# and calibration against the exact logdet), emitting BENCH_mvm.json,
-# BENCH_cg.json, BENCH_precond.json, and BENCH_conf.json at the repo root
-# so successive PRs have a throughput trajectory — MVMs, solves, thread
-# scaling, preconditioned iteration counts, and adaptive probe budgets —
-# to compare against.
+# and calibration against the exact logdet), and the streaming-service
+# request-replay sweep (coalesced variance requests: fused solves, blocked
+# applies, convergence, p50/p99 request latency — the sweep itself asserts
+# the fused answers bitwise-equal the solo baseline), emitting
+# BENCH_mvm.json, BENCH_cg.json, BENCH_precond.json, BENCH_conf.json, and
+# BENCH_service.json at the repo root so successive PRs have a throughput
+# trajectory — MVMs, solves, thread scaling, preconditioned iteration
+# counts, adaptive probe budgets, and serving amortization — to compare
+# against.
 #
 # When a previous BENCH_*.json exists it is rotated to BENCH_*.prev.json
 # and diffed against the fresh run with scripts/bench_compare.py, which
@@ -32,7 +36,7 @@
 # run before anything is benched: a broken gate must fail the smoke run,
 # not wave a regression through.
 #
-# Usage: scripts/bench_smoke.sh [mvm_output.json] [cg_output.json] [precond_output.json] [conf_output.json]
+# Usage: scripts/bench_smoke.sh [mvm_output.json] [cg_output.json] [precond_output.json] [conf_output.json] [service_output.json]
 set -euo pipefail
 
 repo_root="$(cd "$(dirname "$0")/.." && pwd)"
@@ -40,6 +44,7 @@ out_mvm="${1:-$repo_root/BENCH_mvm.json}"
 out_cg="${2:-$repo_root/BENCH_cg.json}"
 out_precond="${3:-$repo_root/BENCH_precond.json}"
 out_conf="${4:-$repo_root/BENCH_conf.json}"
+out_service="${5:-$repo_root/BENCH_service.json}"
 
 # Prove the gate itself works before trusting it with real rows.
 python3 "$repo_root/scripts/bench_compare.py" --self-test
@@ -51,7 +56,7 @@ python3 "$repo_root/scripts/bench_compare.py" --self-test
 cd "$repo_root/rust"
 cargo bench --bench bench_perf_mvm -- --smoke \
     --json "$out_mvm.new" --json-cg "$out_cg.new" --json-precond "$out_precond.new" \
-    --json-conf "$out_conf.new"
+    --json-conf "$out_conf.new" --json-service "$out_service.new"
 
 echo "BENCH_mvm rows:"
 cat "$out_mvm.new"
@@ -61,6 +66,8 @@ echo "BENCH_precond rows:"
 cat "$out_precond.new"
 echo "BENCH_conf rows:"
 cat "$out_conf.new"
+echo "BENCH_service rows:"
+cat "$out_service.new"
 
 # True when the gate is suppressed for this output file: "1" skips all,
 # otherwise BENCH_SKIP_COMPARE is a list of file stems to skip.
@@ -83,7 +90,7 @@ skip_compare() {
 }
 
 fail=0
-for out in "$out_mvm" "$out_cg" "$out_precond" "$out_conf"; do
+for out in "$out_mvm" "$out_cg" "$out_precond" "$out_conf" "$out_service"; do
     if [[ -f "$out" ]] && ! skip_compare "$out"; then
         python3 "$repo_root/scripts/bench_compare.py" "$out" "$out.new" || fail=1
     fi
@@ -94,7 +101,7 @@ if [[ "$fail" != "0" ]]; then
     exit 2
 fi
 
-for out in "$out_mvm" "$out_cg" "$out_precond" "$out_conf"; do
+for out in "$out_mvm" "$out_cg" "$out_precond" "$out_conf" "$out_service"; do
     if [[ -f "$out" ]]; then
         mv "$out" "${out%.json}.prev.json"
     fi
