@@ -44,17 +44,23 @@
 //!
 //! `--json-conf` runs the confidence/adaptive-budget sweep (tolerance × σ
 //! on the same ill-conditioned dense RBF kernel) and writes `{op, n,
-//! sigma, tol, probes_used, steps_used, interval_width, calibrated,
-//! ns_per_estimate}` per case — tol 0 is the fixed-budget baseline,
-//! `probes_used` of an adaptive row must stay at or below it
-//! (lower-is-better in the gate), and `calibrated` is 1 iff the 95%
-//! interval contains the exact log determinant (a calibration regression
-//! fails the gate loudly).
+//! sigma, tol, probes_used, steps_used, mvms, interval_width, calibrated,
+//! ns_per_estimate}` per case — tol 0 is the fixed-budget baseline;
+//! adaptive rows come from the two-axis driver, so on the small-σ cases
+//! `steps_used` grows past the 10-step seed budget while the easy cases
+//! stop on probes alone, and `mvms` (gated lower-is-better, like
+//! `probes_used`) is the total cost the axis choice is about — the sweep
+//! itself asserts in release builds that deepening beat the probes-only
+//! driver (see `conf_sweep`). `calibrated` is 1 iff the 95% interval
+//! contains the exact log determinant (a calibration regression fails
+//! the gate loudly).
 //!
 //! `--json-service` runs the streaming-service request-replay sweep
 //! (`requests` single-column predictive-variance requests coalesced into
 //! one fused cold block solve per drain; the sweep itself asserts the
-//! fused answers bitwise-equal the solo per-request baseline) and writes
+//! fused answers bitwise-equal the solo per-request baseline, and runs
+//! every case at both solve precisions — `precision` is an identity
+//! field, so the `f32f64` rows gate against their own history) and writes
 //! `{model, n, requests, threads, precision, coalesced_cols, solves,
 //! block_applies, converged, p50_ns, p99_ns}` per case — `solves` and
 //! `block_applies` are the coalesced cost (gated lower-is-better: losing
@@ -398,8 +404,8 @@ fn write_conf_json(rows: &[ConfSweepRow], path: &str) {
         .iter()
         .map(|r| {
             format!(
-                "{{\"op\": \"{}\", \"n\": {}, \"sigma\": {}, \"tol\": {}, \"probes_used\": {}, \"steps_used\": {}, \"interval_width\": {:.6}, \"calibrated\": {}, \"ns_per_estimate\": {:.1}}}",
-                r.op, r.n, r.sigma, r.tol, r.probes_used, r.steps_used, r.interval_width, r.calibrated, r.ns_per_estimate
+                "{{\"op\": \"{}\", \"n\": {}, \"sigma\": {}, \"tol\": {}, \"probes_used\": {}, \"steps_used\": {}, \"mvms\": {}, \"interval_width\": {:.6}, \"calibrated\": {}, \"ns_per_estimate\": {:.1}}}",
+                r.op, r.n, r.sigma, r.tol, r.probes_used, r.steps_used, r.mvms, r.interval_width, r.calibrated, r.ns_per_estimate
             )
         })
         .collect();
@@ -513,16 +519,17 @@ fn run_smoke(
         }
     }
     if json_conf_path.is_some() {
-        let conf_rows = conf_sweep(&[300], &[0.1, 0.01], &[0.0, 1.0, 0.25]);
+        let conf_rows = conf_sweep(&[300], &[0.1, 0.01], &[0.0, 60.0, 40.0]);
         println!(
-            "{:<10} {:>6} {:>7} {:>6} {:>7} {:>6} {:>10} {:>5} {:>16}",
-            "op", "n", "sigma", "tol", "probes", "steps", "ci_width", "cal", "ns/estimate"
+            "{:<10} {:>6} {:>7} {:>6} {:>7} {:>6} {:>6} {:>10} {:>5} {:>16}",
+            "op", "n", "sigma", "tol", "probes", "steps", "mvms", "ci_width", "cal",
+            "ns/estimate"
         );
         for r in &conf_rows {
             println!(
-                "{:<10} {:>6} {:>7} {:>6} {:>7} {:>6} {:>10.4} {:>5} {:>16.1}",
-                r.op, r.n, r.sigma, r.tol, r.probes_used, r.steps_used, r.interval_width,
-                r.calibrated, r.ns_per_estimate
+                "{:<10} {:>6} {:>7} {:>6} {:>7} {:>6} {:>6} {:>10.4} {:>5} {:>16.1}",
+                r.op, r.n, r.sigma, r.tol, r.probes_used, r.steps_used, r.mvms,
+                r.interval_width, r.calibrated, r.ns_per_estimate
             );
         }
         if let Some(path) = json_conf_path {

@@ -1,9 +1,9 @@
 //! Hand-rolled CLI (clap is not in the offline registry).
 //!
 //! ```text
-//! gpsld exp <id> [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>] [--threads <t>] [--precision f64|f32f64]
-//! gpsld exp all  [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>] [--threads <t>] [--precision f64|f32f64]
-//! gpsld serve --requests <file> [--threads <t>] [--n <train>] [--queue-cap <c>]
+//! gpsld exp <id> [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>] [--threads <t>] [--precision f64|f32f64] [--logdet-tol <t>] [--max-steps <s>]
+//! gpsld exp all  [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>] [--threads <t>] [--precision f64|f32f64] [--logdet-tol <t>] [--max-steps <s>]
+//! gpsld serve --requests <file> [--threads <t>] [--n <train>] [--queue-cap <c>] [--precision f64|f32f64]
 //! gpsld artifacts                                      list/verify PJRT artifacts
 //! gpsld info                                           version + feature summary
 //! ```
@@ -26,12 +26,19 @@
 //! process-default probe count and per-probe step budget (Lanczos steps
 //! and Chebyshev degree alike) for every stochastic estimator
 //! (`estimators::set_default_probes`/`set_default_steps`);
-//! `--logdet-tol <t>` turns every SLQ/Chebyshev logdet into an adaptive
-//! run that grows the probe budget until the 95% confidence interval's
-//! half-width clears `t` (`estimators::set_default_logdet_tol`; unset,
-//! the default, keeps fixed budgets bit-identical to not passing the
-//! flag — see the `estimators` module docs for the evidence/confidence
-//! contract).
+//! `--logdet-tol <t>` turns every SLQ/Chebyshev logdet into a two-axis
+//! adaptive run: the driver splits the 95% confidence interval's
+//! half-width into its Monte-Carlo and truncation parts and grows
+//! whichever axis dominates — new probes, or deeper retained
+//! Lanczos/Chebyshev sessions — until the half-width clears `t`
+//! (`estimators::set_default_logdet_tol`; unset, the default, keeps
+//! fixed budgets bit-identical to not passing the flag — see the
+//! `estimators` module docs for the session/two-axis contract);
+//! `--max-steps <s>` caps the adaptive step/degree axis at `s`
+//! (`estimators::set_default_max_steps`; unset the axis may grow to
+//! `2 × steps`, and `--max-steps` equal to `--steps` pins the step axis,
+//! restoring the probes-only adaptive driver — fixed-budget runs ignore
+//! the flag entirely).
 //!
 //! `serve` is the offline request-replay driver for the streaming service
 //! layer (`coordinator::service`): it reads one request per line
@@ -39,7 +46,14 @@
 //! builds one trained demo model per referenced id, replays the batch
 //! through the coalescing dispatcher AND the solo per-request baseline,
 //! and prints the amortization report (solves / block applies vs. solo,
-//! convergence, bitwise-equality check, p50/p99 latency). Garbage —
+//! convergence, bitwise-equality check, p50/p99 latency). Variance
+//! answers print `value ± bound`, the deterministic solve-error bound
+//! from the column's exit residual (`service::Response::half_width`);
+//! a non-converged column prints an explicit `UNCONVERGED` marker
+//! instead of a bound. `--precision f32f64` runs the replay's block
+//! solves in mixed precision (convergence is still confirmed against
+//! the f64 true residual, so answers remain bitwise-equal between the
+//! coalesced and solo paths). Garbage —
 //! unknown flags, malformed lines, out-of-range model ids, unreadable
 //! files — exits 2 before any replay runs; queue back-pressure drops are
 //! reported, not fatal.
@@ -54,7 +68,7 @@ const EXP_IDS: &[&str] = &[
 pub fn usage() -> String {
     format!(
         "gpsld {} — Scalable Log Determinants for GP Kernel Learning (NIPS 2017 repro)\n\n\
-         USAGE:\n  gpsld exp <id|all> [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>] [--threads <t>] [--precision f64|f32f64] [--probes <p>] [--steps <m>] [--logdet-tol <t>] [--md <file>]\n  gpsld serve --requests <file> [--threads <t>] [--n <train>] [--queue-cap <c>]\n  gpsld artifacts\n  gpsld info\n\n\
+         USAGE:\n  gpsld exp <id|all> [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>] [--threads <t>] [--precision f64|f32f64] [--probes <p>] [--steps <m>] [--logdet-tol <t>] [--max-steps <s>] [--md <file>]\n  gpsld serve --requests <file> [--threads <t>] [--n <train>] [--queue-cap <c>] [--precision f64|f32f64]\n  gpsld artifacts\n  gpsld info\n\n\
          `--block <b>` sets the default probe-block width for blocked MVMs.\n\
          `--cg-block <b>` sets the default RHS block width for block-CG solves.\n\
          `--precond-rank <k>` sets the pivoted-Cholesky preconditioner rank (0 = off).\n\
@@ -62,11 +76,16 @@ pub fn usage() -> String {
          `--precision f64|f32f64` sets the default MVM precision (f32 storage / f64 accumulation; solves still confirm in f64).\n\
          `--probes <p>` sets the default probe count for stochastic estimators.\n\
          `--steps <m>` sets the default per-probe step budget (Lanczos steps / Chebyshev degree).\n\
-         `--logdet-tol <t>` makes logdet estimates adaptive: grow probes until the 95% CI half-width <= t.\n\n\
+         `--logdet-tol <t>` makes logdet estimates adaptive on two axes: grow probes or deepen the\n\
+         retained Lanczos/Chebyshev sessions (whichever CI term dominates) until the 95% half-width <= t.\n\
+         `--max-steps <s>` caps the adaptive step/degree axis (unset: up to 2x --steps; equal to --steps:\n\
+         probes-only growth). Fixed-budget runs ignore it.\n\n\
          `serve` replays a request file (one `<model> <mean|var> <x>` per line; blank/# lines skipped)\n\
-         through the coalescing dispatcher and the solo baseline, and prints the amortization report.\n\
+         through the coalescing dispatcher and the solo baseline, and prints the amortization report;\n\
+         var answers print `value ± bound` (solve-error bound) or an UNCONVERGED marker.\n\
          `--n <train>` sets the demo models' training-set size (default 96); `--queue-cap <c>` the\n\
-         bounded queue depth (default 1024; overflow is counted as back-pressure, not an error).\n\n\
+         bounded queue depth (default 1024; overflow is counted as back-pressure, not an error);\n\
+         `--precision f32f64` replays the block solves in mixed precision (f64-confirmed).\n\n\
          EXPERIMENTS: {}\n",
         crate::version(),
         EXP_IDS.join(", ")
@@ -206,6 +225,21 @@ pub fn main_with_args(args: &[String]) -> i32 {
                         }
                         i += 2;
                     }
+                    "--max-steps" => {
+                        // 0 is the internal "auto" sentinel; the CLI keeps
+                        // the flag convention (a cap you pass must be a
+                        // positive integer — omit the flag for auto).
+                        match args.get(i + 1).and_then(|s| s.parse::<usize>().ok()) {
+                            Some(s) if s >= 1 => {
+                                crate::estimators::set_default_max_steps(s)
+                            }
+                            _ => {
+                                eprintln!("--max-steps needs a positive integer");
+                                return 2;
+                            }
+                        }
+                        i += 2;
+                    }
                     "--precond-rank" => {
                         // 0 is legal: it means "preconditioning off".
                         match args.get(i + 1).and_then(|s| s.parse::<usize>().ok()) {
@@ -275,7 +309,9 @@ pub fn main_with_args(args: &[String]) -> i32 {
             println!("estimators: lanczos(slq), chebyshev, surrogate, scaled_eig, exact");
             println!(
                 "confidence: per-probe spectral evidence + 95% intervals on every \
-                 logdet; adaptive probe budgets (--probes, --steps, --logdet-tol)"
+                 logdet; two-axis adaptive budgets over resumable sessions — \
+                 probes vs. Lanczos steps / Chebyshev degree \
+                 (--probes, --steps, --logdet-tol, --max-steps)"
             );
             println!(
                 "solvers: cg/block-cg with pivoted-Cholesky PCG (--precond-rank), \
@@ -361,6 +397,7 @@ fn run_serve(args: &[String]) -> i32 {
     let mut threads: Option<usize> = None;
     let mut n_train = 96usize;
     let mut queue_cap = 1024usize;
+    let mut precision = crate::util::precision::Precision::F64;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -368,6 +405,16 @@ fn run_serve(args: &[String]) -> i32 {
                 Some(p) => req_path = Some(p.clone()),
                 None => {
                     eprintln!("--requests needs a file path");
+                    return 2;
+                }
+            },
+            "--precision" => match args
+                .get(i + 1)
+                .and_then(|s| crate::util::precision::Precision::parse(s))
+            {
+                Some(p) => precision = p,
+                None => {
+                    eprintln!("--precision needs 'f64' or 'f32f64'");
                     return 2;
                 }
             },
@@ -423,9 +470,9 @@ fn run_serve(args: &[String]) -> i32 {
     }
     match threads {
         Some(t) => crate::util::parallel::with_default_threads(t, || {
-            serve_replay(&reqs, n_train, queue_cap)
+            serve_replay(&reqs, n_train, queue_cap, precision)
         }),
-        None => serve_replay(&reqs, n_train, queue_cap),
+        None => serve_replay(&reqs, n_train, queue_cap, precision),
     }
 }
 
@@ -437,6 +484,7 @@ fn serve_replay(
     reqs: &[(usize, super::service::RequestKind, f64)],
     n_train: usize,
     queue_cap: usize,
+    precision: crate::util::precision::Precision,
 ) -> i32 {
     use super::service::{dispatch, Metrics, ModelRegistry, RequestKind, RequestQueue};
     use crate::gp::GpRegression;
@@ -450,8 +498,10 @@ fn serve_replay(
     let make_model = |id: usize| {
         // One trained demo model per id: a dense RBF posterior with
         // explicit solver options, so replays are independent of the other
-        // process-wide defaults (threads is the only knob the CLI
-        // forwards — results are bit-identical across thread counts).
+        // process-wide defaults (threads and precision are the only knobs
+        // the CLI forwards — results are bit-identical across thread
+        // counts, and mixed precision still confirms against the f64 true
+        // residual).
         let mut rng = Rng::new(100 + id as u64);
         let pts: Vec<Vec<f64>> =
             (0..n_train).map(|_| vec![rng.uniform_in(0.0, 3.0)]).collect();
@@ -469,7 +519,7 @@ fn serve_replay(
             block_size: 16,
             threads,
             precond: PrecondOptions::rank(16),
-            precision: crate::util::precision::Precision::F64,
+            precision,
         };
         gp
     };
@@ -517,24 +567,35 @@ fn serve_replay(
     for ((&i, f), s) in accepted.iter().zip(&fused).zip(&solo) {
         let (m, k, x) = reqs[i];
         let kind = if k == RequestKind::Var { "var" } else { "mean" };
-        println!(
-            "#{i} model={m} {kind} x={x:.6} -> {:.12e} ({})",
-            f.value,
-            if f.converged { "converged" } else { "UNCONVERGED" }
-        );
+        // Var answers carry the deterministic solve-error bound; a
+        // non-converged column gets an explicit marker instead of a
+        // bound that its residual no longer backs.
+        match f.half_width.filter(|_| f.converged) {
+            Some(hw) => println!(
+                "#{i} model={m} {kind} x={x:.6} -> {:.12e} ± {hw:.3e} (converged)",
+                f.value
+            ),
+            None => println!(
+                "#{i} model={m} {kind} x={x:.6} -> {:.12e} ({})",
+                f.value,
+                if f.converged { "converged" } else { "UNCONVERGED" }
+            ),
+        }
         bitwise &= f.value.to_bits() == s.value.to_bits() && f.converged == s.converged;
     }
     let n_var =
         accepted.iter().filter(|&&i| reqs[i].1 == RequestKind::Var).count();
     let n_conv = fused.iter().filter(|r| r.converged).count();
     println!(
-        "serve: {} requests ({} var, {} mean) across {} model(s), n={}, threads={}, rejected={}",
+        "serve: {} requests ({} var, {} mean) across {} model(s), n={}, threads={}, \
+         precision={}, rejected={}",
         fused.len(),
         n_var,
         fused.len() - n_var,
         n_models,
         n_train,
         threads,
+        precision.name(),
         rejected,
     );
     println!(
@@ -770,6 +831,42 @@ mod tests {
     }
 
     #[test]
+    fn max_steps_flag_sets_default_and_rejects_garbage() {
+        // A valid cap lands in the process-wide adaptive ceiling; 0 (the
+        // internal auto sentinel), negatives, and garbage are rejected
+        // (exit 2) before any experiment runs. Restored to auto afterwards
+        // so other tests see the built-in.
+        assert_eq!(
+            main_with_args(&[
+                "exp".into(),
+                "nope".into(),
+                "--max-steps".into(),
+                "48".into()
+            ]),
+            2 // unknown experiment, but the flag itself parsed fine
+        );
+        assert_eq!(crate::estimators::default_max_steps(), 48);
+        crate::estimators::set_default_max_steps(0);
+        for bad in ["0", "-1", "nan", "x"] {
+            assert_eq!(
+                main_with_args(&[
+                    "exp".into(),
+                    "fig1".into(),
+                    "--max-steps".into(),
+                    bad.into()
+                ]),
+                2,
+                "--max-steps {bad} must be rejected"
+            );
+        }
+        assert_eq!(
+            main_with_args(&["exp".into(), "fig1".into(), "--max-steps".into()]),
+            2
+        );
+        assert_eq!(crate::estimators::default_max_steps(), 0);
+    }
+
+    #[test]
     fn serve_flag_validation_rejects_garbage() {
         // Missing --requests, missing operand, unreadable file, unknown
         // flags, and bad numeric operands all exit 2 before any replay
@@ -785,9 +882,13 @@ mod tests {
             2
         );
         assert_eq!(main_with_args(&["serve".into(), "--bogus".into(), "1".into()]), 2);
-        for (flag, bad) in
-            [("--threads", "0"), ("--threads", "x"), ("--n", "4"), ("--queue-cap", "0")]
-        {
+        for (flag, bad) in [
+            ("--threads", "0"),
+            ("--threads", "x"),
+            ("--n", "4"),
+            ("--queue-cap", "0"),
+            ("--precision", "f16"),
+        ] {
             assert_eq!(
                 main_with_args(&["serve".into(), flag.into(), bad.into()]),
                 2,
@@ -837,8 +938,21 @@ mod tests {
             "--n".into(),
             "24".into(),
         ]);
+        // Mixed precision replays the same file cleanly too (the solves
+        // confirm against the f64 true residual, so the driver's
+        // bitwise fused-vs-solo check still holds).
+        let code_mixed = main_with_args(&[
+            "serve".into(),
+            "--requests".into(),
+            path.to_string_lossy().into_owned(),
+            "--n".into(),
+            "24".into(),
+            "--precision".into(),
+            "f32f64".into(),
+        ]);
         std::fs::remove_file(&path).ok();
         assert_eq!(code, 0);
+        assert_eq!(code_mixed, 0);
     }
 
     #[test]

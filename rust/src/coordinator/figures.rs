@@ -491,7 +491,7 @@ pub fn perf_mvm(scale: Scale) -> ExpResult {
             Scale::Small => 300,
             Scale::Paper => 800,
         };
-        for r in conf_sweep(&[n], &[0.1, 0.01], &[0.0, 1.0, 0.25]) {
+        for r in conf_sweep(&[n], &[0.1, 0.01], &[0.0, 60.0, 40.0]) {
             let case = format!("conf_n{}_sig{}_tol{}", r.n, r.sigma, r.tol);
             rows.push(vec![
                 format!("{case}_probes_used"),
@@ -501,6 +501,7 @@ pub fn perf_mvm(scale: Scale) -> ExpResult {
                 format!("{case}_steps_used"),
                 format!("{}", r.steps_used),
             ]);
+            rows.push(vec![format!("{case}_mvms"), format!("{}", r.mvms)]);
             rows.push(vec![
                 format!("{case}_ci_width"),
                 format!("{:.3}", r.interval_width),
@@ -527,7 +528,13 @@ pub fn perf_mvm(scale: Scale) -> ExpResult {
             Scale::Paper => 1024,
         };
         for r in service_sweep(&[n], &[8, 32], &[1, SWEEP_THREADS]) {
-            let case = format!("service_n{}_req{}_t{}", r.n, r.requests, r.threads);
+            // f64 rows keep their historical case names; the mixed-precision
+            // rows are new identities and carry the precision suffix.
+            let mut case =
+                format!("service_n{}_req{}_t{}", r.n, r.requests, r.threads);
+            if r.precision != "f64" {
+                case = format!("{case}_{}", r.precision);
+            }
             rows.push(vec![
                 format!("{case}_solves_vs_solo"),
                 format!("{}/{}", r.solves, r.solo_solves),
@@ -638,8 +645,13 @@ pub struct ConfSweepRow {
     /// Probes the estimate actually consumed (== the fixed budget for
     /// `tol = 0`; the adaptive stopping point otherwise).
     pub probes_used: usize,
-    /// Longest per-probe Lanczos tridiagonal of the run.
+    /// Longest per-probe Lanczos tridiagonal of the run. Fixed for
+    /// `tol = 0`; grown past the seed budget by the two-axis driver when
+    /// the truncation term dominates (the small-σ rows).
     pub steps_used: usize,
+    /// Total operator MVMs of the estimate — the cost the two-axis
+    /// driver's axis choice is about. Gated lower-is-better.
+    pub mvms: usize,
     /// Full width of the 95% posterior interval.
     pub interval_width: f64,
     /// 1 when the interval contains the exact log determinant, else 0.
@@ -655,9 +667,20 @@ pub struct ConfSweepRow {
 /// RBF kernel — the one definition shared by the CLI perf table and
 /// `bench_perf_mvm --json-conf` (`BENCH_conf.json`), so the two surfaces
 /// report identically-defined numbers. `tol = 0` is the fixed-budget
-/// baseline every adaptive row is compared against: adaptive runs must
-/// reach their target with no more probes than the generous fixed
-/// reference while staying calibrated against `exact::exact_logdet`.
+/// baseline; adaptive rows must stay calibrated against
+/// `exact::exact_logdet`.
+///
+/// The seed step budget is deliberately short (10): at σ = 0.1 the
+/// truncation term is already negligible there and the driver only adds
+/// probes, while at σ = 0.01 truncation dominates and the two-axis
+/// driver must deepen its sessions to reach the same tolerance. Each
+/// adaptive case also runs a probes-only reference (`max_steps == steps`
+/// pins the step axis) and asserts the two-axis contract in release
+/// builds: when the driver deepened, it reached the target with strictly
+/// fewer MVMs than the probes-only driver spends — unless the target is
+/// beyond the probes-only driver's reach entirely, in which case
+/// exhausting it is already the loss being demonstrated; when it did not
+/// deepen, the two drivers are one and the same run, bit for bit.
 pub fn conf_sweep(ns: &[usize], sigmas: &[f64], tols: &[f64]) -> Vec<ConfSweepRow> {
     use crate::util::bench::black_box;
     let mut rows = Vec::new();
@@ -675,7 +698,7 @@ pub fn conf_sweep(ns: &[usize], sigmas: &[f64], tols: &[f64]) -> Vec<ConfSweepRo
                 .expect("conf sweep: exact logdet failed");
             for &tol in tols {
                 let opts = SlqOptions {
-                    steps: 40,
+                    steps: 10,
                     probes: 16,
                     grads: false,
                     seed: 43,
@@ -688,6 +711,36 @@ pub fn conf_sweep(ns: &[usize], sigmas: &[f64], tols: &[f64]) -> Vec<ConfSweepRo
                 // gate.
                 let est = slq_logdet(&op, &opts)
                     .expect("conf sweep: slq failed");
+                if tol > 0.0 {
+                    let flat = slq_logdet(
+                        &op,
+                        &SlqOptions { max_steps: opts.steps, ..opts },
+                    )
+                    .expect("conf sweep: slq failed");
+                    if est.steps_used > opts.steps {
+                        assert!(
+                            est.mvms < flat.mvms
+                                || flat.interval.half_width() > tol,
+                            "conf sweep n={n} sigma={sigma} tol={tol}: \
+                             two-axis driver deepened to {} steps yet spent \
+                             {} MVMs where probes-only reached the target \
+                             in {}",
+                            est.steps_used,
+                            est.mvms,
+                            flat.mvms,
+                        );
+                    } else {
+                        // Step axis never engaged: pinning it must be a
+                        // no-op, not merely close.
+                        assert_eq!(
+                            (est.mvms, est.value.to_bits()),
+                            (flat.mvms, flat.value.to_bits()),
+                            "conf sweep n={n} sigma={sigma} tol={tol}: \
+                             pinned step axis diverged from the two-axis \
+                             run that never grew steps",
+                        );
+                    }
+                }
                 let t0 = Instant::now();
                 let mut reps = 0usize;
                 loop {
@@ -705,6 +758,7 @@ pub fn conf_sweep(ns: &[usize], sigmas: &[f64], tols: &[f64]) -> Vec<ConfSweepRo
                     tol,
                     probes_used: est.probes_used,
                     steps_used: est.steps_used,
+                    mvms: est.mvms,
                     interval_width: est.interval.width(),
                     calibrated: est.interval.contains(truth) as usize,
                     ns_per_estimate: t0.elapsed().as_secs_f64() / reps as f64 * 1e9,
@@ -724,8 +778,9 @@ pub struct ServiceSweepRow {
     pub requests: usize,
     /// Total worker budget of the timed dispatch (process default pinned).
     pub threads: usize,
-    /// Precision identity of the model's solves (the sweep pins f64 so
-    /// rows stay comparable when the process default changes).
+    /// Precision identity of the model's solves. The sweep pins each row
+    /// explicitly (`f64` and `f32f64` rows per case) so rows stay
+    /// comparable when the process default changes.
     pub precision: &'static str,
     /// Columns fused into dispatched solves (== `requests` here: one
     /// drain, one model).
@@ -761,6 +816,11 @@ pub struct ServiceSweepRow {
 /// are bitwise equal to the solo ones at equal convergence and that
 /// coalescing did strictly fewer solves and blocked applies — the
 /// acceptance invariant runs in release builds, not just under test.
+/// Every case runs at both solve precisions (`f64` and `f32f64`, the
+/// serve driver's `--precision` axis): the contract is
+/// precision-independent because fused and solo columns share one
+/// refinement path, and the rows let the bench surface the mixed
+/// pipeline's latency side by side with the reference.
 pub fn service_sweep(
     ns: &[usize],
     request_counts: &[usize],
@@ -778,7 +838,7 @@ pub fn service_sweep(
             .iter()
             .map(|p| (1.4 * p[0]).sin() + 0.1 * rng.gaussian())
             .collect();
-        let make_model = |t: usize| {
+        let make_model = |t: usize, prec: crate::util::precision::Precision| {
             let op = DenseKernelOp::new(
                 pts.clone(),
                 Box::new(IsoKernel::new(Shape::Rbf, 1, 0.5, 1.0)),
@@ -791,7 +851,7 @@ pub fn service_sweep(
                 block_size: 16,
                 threads: t,
                 precond: PrecondOptions::rank(16),
-                precision: crate::util::precision::Precision::F64,
+                precision: prec,
             };
             gp
         };
@@ -801,100 +861,108 @@ pub fn service_sweep(
                 (0..requests).map(|_| vec![prng.uniform_in(0.0, 3.0)]).collect()
             };
             for &t in threads {
-                crate::util::parallel::with_default_threads(t, || {
-                    // Registry with cached factors: alpha + pivoted
-                    // Cholesky are solved/built once here and reused by
-                    // every replay below.
-                    let mut reg = ModelRegistry::new();
-                    let id = reg.insert(make_model(t));
-                    reg.warm(id);
-                    // Accounting replay (deterministic): one coalesced
-                    // drain of all requests.
-                    let acct = Metrics::default();
-                    let queue = RequestQueue::bounded(requests.max(1) * 2);
-                    for x in &test_pts {
-                        queue
-                            .submit(id, RequestKind::Var, x.clone())
-                            .expect("service sweep: queue sized for the replay");
-                    }
-                    let fused = dispatch(&mut reg, &queue, &acct);
-                    let (solves, block_applies, coalesced_cols, _) =
-                        acct.serving_snapshot();
-                    // Solo baseline on an identical fresh model: one
-                    // dispatch per request.
-                    let mut solo_reg = ModelRegistry::new();
-                    let solo_id = solo_reg.insert(make_model(t));
-                    solo_reg.warm(solo_id);
-                    let solo_acct = Metrics::default();
-                    let mut solo = Vec::new();
-                    for x in &test_pts {
-                        let q = RequestQueue::bounded(2);
-                        q.submit(solo_id, RequestKind::Var, x.clone())
-                            .expect("service sweep: solo submit");
-                        solo.extend(dispatch(&mut solo_reg, &q, &solo_acct));
-                    }
-                    let (solo_solves, solo_block_applies, _, _) =
-                        solo_acct.serving_snapshot();
-                    // The coalescing contract, asserted in release builds:
-                    // bitwise-equal answers at equal convergence, strictly
-                    // fewer solves AND blocked applies.
-                    for (i, (f, s)) in fused.iter().zip(&solo).enumerate() {
-                        assert_eq!(
-                            f.value.to_bits(),
-                            s.value.to_bits(),
-                            "service sweep n={n} requests={requests} t={t} req {i}: \
-                             fused {} != solo {}",
-                            f.value,
-                            s.value
-                        );
-                        assert_eq!(
-                            f.converged, s.converged,
-                            "service sweep n={n} requests={requests} t={t} req {i}"
-                        );
-                    }
-                    if requests > 1 {
-                        assert!(
-                            solves < solo_solves && block_applies < solo_block_applies,
-                            "service sweep n={n} requests={requests} t={t}: coalescing \
-                             must amortize ({solves} vs {solo_solves} solves, \
-                             {block_applies} vs {solo_block_applies} applies)"
-                        );
-                    }
-                    // Timed replay: repeat the coalesced drain; latencies
-                    // from every rep accumulate in one histogram so the
-                    // p50/p99 readout has rep × requests samples.
-                    let timed = Metrics::default();
-                    let t0 = Instant::now();
-                    let mut reps = 0usize;
-                    loop {
-                        let q = RequestQueue::bounded(requests.max(1) * 2);
+                for prec in [
+                    crate::util::precision::Precision::F64,
+                    crate::util::precision::Precision::F32F64,
+                ] {
+                    crate::util::parallel::with_default_threads(t, || {
+                        // Registry with cached factors: alpha + pivoted
+                        // Cholesky are solved/built once here and reused by
+                        // every replay below.
+                        let mut reg = ModelRegistry::new();
+                        let id = reg.insert(make_model(t, prec));
+                        reg.warm(id);
+                        // Accounting replay (deterministic): one coalesced
+                        // drain of all requests.
+                        let acct = Metrics::default();
+                        let queue = RequestQueue::bounded(requests.max(1) * 2);
                         for x in &test_pts {
-                            q.submit(id, RequestKind::Var, x.clone())
-                                .expect("service sweep: timed submit");
+                            queue
+                                .submit(id, RequestKind::Var, x.clone())
+                                .expect("service sweep: queue sized for the replay");
                         }
-                        let resp = dispatch(&mut reg, &q, &timed);
-                        black_box(resp.last().map_or(0.0, |r| r.value));
-                        reps += 1;
-                        if reps >= 5 || t0.elapsed().as_secs_f64() > 0.4 {
-                            break;
+                        let fused = dispatch(&mut reg, &queue, &acct);
+                        let (solves, block_applies, coalesced_cols, _) =
+                            acct.serving_snapshot();
+                        // Solo baseline on an identical fresh model: one
+                        // dispatch per request.
+                        let mut solo_reg = ModelRegistry::new();
+                        let solo_id = solo_reg.insert(make_model(t, prec));
+                        solo_reg.warm(solo_id);
+                        let solo_acct = Metrics::default();
+                        let mut solo = Vec::new();
+                        for x in &test_pts {
+                            let q = RequestQueue::bounded(2);
+                            q.submit(solo_id, RequestKind::Var, x.clone())
+                                .expect("service sweep: solo submit");
+                            solo.extend(dispatch(&mut solo_reg, &q, &solo_acct));
                         }
-                    }
-                    rows.push(ServiceSweepRow {
-                        model: "dense_rbf",
-                        n,
-                        requests,
-                        threads: t,
-                        precision: "f64",
-                        coalesced_cols,
-                        solves,
-                        block_applies,
-                        solo_solves,
-                        solo_block_applies,
-                        converged: fused.iter().filter(|r| r.converged).count(),
-                        p50_ns: timed.latency_quantile_ns(0.5),
-                        p99_ns: timed.latency_quantile_ns(0.99),
+                        let (solo_solves, solo_block_applies, _, _) =
+                            solo_acct.serving_snapshot();
+                        // The coalescing contract, asserted in release builds:
+                        // bitwise-equal answers at equal convergence, strictly
+                        // fewer solves AND blocked applies.
+                        let pname = prec.name();
+                        for (i, (f, s)) in fused.iter().zip(&solo).enumerate() {
+                            assert_eq!(
+                                f.value.to_bits(),
+                                s.value.to_bits(),
+                                "service sweep n={n} requests={requests} t={t} \
+                                 prec={pname} req {i}: fused {} != solo {}",
+                                f.value,
+                                s.value
+                            );
+                            assert_eq!(
+                                f.converged, s.converged,
+                                "service sweep n={n} requests={requests} t={t} \
+                                 prec={pname} req {i}"
+                            );
+                        }
+                        if requests > 1 {
+                            assert!(
+                                solves < solo_solves && block_applies < solo_block_applies,
+                                "service sweep n={n} requests={requests} t={t} \
+                                 prec={pname}: coalescing must amortize \
+                                 ({solves} vs {solo_solves} solves, \
+                                 {block_applies} vs {solo_block_applies} applies)"
+                            );
+                        }
+                        // Timed replay: repeat the coalesced drain; latencies
+                        // from every rep accumulate in one histogram so the
+                        // p50/p99 readout has rep × requests samples.
+                        let timed = Metrics::default();
+                        let t0 = Instant::now();
+                        let mut reps = 0usize;
+                        loop {
+                            let q = RequestQueue::bounded(requests.max(1) * 2);
+                            for x in &test_pts {
+                                q.submit(id, RequestKind::Var, x.clone())
+                                    .expect("service sweep: timed submit");
+                            }
+                            let resp = dispatch(&mut reg, &q, &timed);
+                            black_box(resp.last().map_or(0.0, |r| r.value));
+                            reps += 1;
+                            if reps >= 5 || t0.elapsed().as_secs_f64() > 0.4 {
+                                break;
+                            }
+                        }
+                        rows.push(ServiceSweepRow {
+                            model: "dense_rbf",
+                            n,
+                            requests,
+                            threads: t,
+                            precision: pname,
+                            coalesced_cols,
+                            solves,
+                            block_applies,
+                            solo_solves,
+                            solo_block_applies,
+                            converged: fused.iter().filter(|r| r.converged).count(),
+                            p50_ns: timed.latency_quantile_ns(0.5),
+                            p99_ns: timed.latency_quantile_ns(0.99),
+                        });
                     });
-                });
+                }
             }
         }
     }

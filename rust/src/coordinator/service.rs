@@ -140,6 +140,16 @@ pub struct Response {
     /// f64 true-residual criterion). For `Mean`: the cached alpha solve
     /// converged.
     pub converged: bool,
+    /// For `Var`: a deterministic upper bound on the solve-induced error
+    /// of the answer. With `r = k_* − K̃u` the returned variance is off by
+    /// `rᵀ K̃^{-1} k_*`, and `‖K̃^{-1}‖ ≤ 1/σ²` bounds that by
+    /// `‖r‖ · ‖k_*‖ / σ²` — computed from the column's exit residual, so
+    /// it is tight exactly when the solve converged and column `j` of the
+    /// fused solve gives the same bound as a solo solve of column `j`.
+    /// `None` for `Mean` requests (served from the cached alpha, no
+    /// per-request solve) and when the bound is not finite (σ² = 0 or an
+    /// unknown model).
+    pub half_width: Option<f64>,
 }
 
 /// Back-pressure signal: the queue is at its bounded depth.
@@ -364,6 +374,7 @@ pub fn dispatch<O: PredictiveOp>(
                     kind: r.kind,
                     value: f64::NAN,
                     converged: false,
+                    half_width: None,
                 });
             }
             continue;
@@ -386,6 +397,7 @@ pub fn dispatch<O: PredictiveOp>(
                     kind: RequestKind::Mean,
                     value: *v,
                     converged: ainfo.converged,
+                    half_width: None,
                 });
             }
         }
@@ -403,12 +415,22 @@ pub fn dispatch<O: PredictiveOp>(
             metrics.add_coalesced(xs.len());
             metrics.add_mvms(info.mvms);
             metrics.add_block_applies(info.block_applies);
+            let s2 = gp.op.noise_var();
             for ((&i, v), cinfo) in var_idx.iter().zip(&vars).zip(&info.cols) {
+                // Per-request error bound (see `Response::half_width`):
+                // the column's exit residual is scaled (relative to
+                // `‖k_*‖`, absolute for near-zero columns), so undo the
+                // scale before applying `‖r‖ · ‖k_*‖ / σ²`.
+                let knorm = crate::util::stats::norm2(&gp.op.cross_col(&requests[i].x));
+                let hw = cinfo.residual * crate::solvers::cg::residual_scale(knorm)
+                    * knorm
+                    / s2;
                 out[i] = Some(Response {
                     model,
                     kind: RequestKind::Var,
                     value: *v,
                     converged: cinfo.converged,
+                    half_width: hw.is_finite().then_some(hw),
                 });
             }
         }
@@ -543,6 +565,12 @@ mod tests {
                 assert_eq!(f.value.to_bits(), s.value.to_bits(), "rank={rank}");
                 assert_eq!(f.converged, s.converged, "rank={rank}");
                 assert!(f.converged, "rank={rank}: solves must converge");
+                // The per-request error bound is present on var answers
+                // and identical fused vs. solo (same column residual).
+                let fh = f.half_width.expect("var answers carry a bound");
+                let sh = s.half_width.expect("var answers carry a bound");
+                assert_eq!(fh.to_bits(), sh.to_bits(), "rank={rank}");
+                assert!(fh.is_finite() && fh >= 0.0, "rank={rank}: bound {fh}");
             }
             assert!(
                 fused_solves < solo_solves,
@@ -577,6 +605,7 @@ mod tests {
         for (g, w) in got.iter().zip(&want) {
             assert_eq!(g.value.to_bits(), w.to_bits());
             assert!(g.converged);
+            assert!(g.half_width.is_none(), "mean answers carry no solve bound");
         }
         // Mean traffic dispatched zero block solves.
         assert_eq!(metrics.serving_snapshot().0, 0);

@@ -63,9 +63,12 @@ pub struct ChebOptions {
     pub target_tol: Option<f64>,
     /// Probe ceiling for adaptive mode (clamped to >= 2).
     pub max_probes: usize,
-    /// Degree ceiling for adaptive mode: 0 = no extra cap, otherwise the
-    /// degree is `degree.min(max_steps)`. Ignored when `target_tol` is
-    /// `None`.
+    /// Degree ceiling for the adaptive driver's **degree axis** (the
+    /// Chebyshev analogue of [`super::slq::SlqOptions::max_steps`]): the
+    /// driver starts at `degree` and may extend the retained sessions up
+    /// to this ceiling when the truncation term dominates. `0` (default)
+    /// = auto (`2 × degree`); `max_steps == degree` disables growth.
+    /// Ignored when `target_tol` is `None`.
     pub max_steps: usize,
 }
 
@@ -83,7 +86,7 @@ impl Default for ChebOptions {
             precision: crate::util::precision::default_precision(),
             target_tol: super::default_logdet_tol(),
             max_probes: 64,
-            max_steps: 0,
+            max_steps: super::default_max_steps(),
         }
     }
 }
@@ -121,11 +124,257 @@ struct PerBlock {
     block_applies: usize,
 }
 
+/// Resumable Chebyshev moment + coupled-derivative state for one probe
+/// block. Retains the last two iterates of both recurrences plus the
+/// **raw** per-column moments `m_j = z^T T_j(B) z` and derivative dots
+/// `d_{j,i} = z^T ∂w_j/∂θ_i` — never the coefficient-weighted sums,
+/// because `cheb_coeffs` interpolates at degree-dependent nodes (every
+/// coefficient changes when the degree grows). Weighting is deferred to
+/// [`quads`](Self::quads)/[`grad_terms`](Self::grad_terms), which apply
+/// the same left-to-right accumulation the run-to-completion driver
+/// used, so a session extended to degree d is **bitwise identical** to a
+/// from-scratch degree-d run. The spectrum bracket is fixed at `new` and
+/// reused by every `extend` (the session's whole point: the recurrence
+/// is on `B`, which must not move).
+pub struct ChebSession {
+    zblk: Mat,
+    w_prev: Mat,
+    w: Mat,
+    dw_prev: Vec<Mat>,
+    dw: Vec<Mat>,
+    grads: bool,
+    precision: crate::util::precision::Precision,
+    scale: f64,
+    shift: f64,
+    degree: usize,
+    /// Per column: raw moments, j = 0..=degree.
+    moments: Vec<Vec<f64>>,
+    /// Per column, per hyper: raw derivative dots, j = 1..=degree.
+    grad_dots: Vec<Vec<Vec<f64>>>,
+    mvms: usize,
+    block_applies: usize,
+}
+
+impl std::fmt::Debug for ChebSession {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ChebSession")
+            .field("cols", &self.zblk.cols)
+            .field("degree", &self.degree)
+            .finish()
+    }
+}
+
+impl ChebSession {
+    /// Start a session on a probe block: runs the j = 0, 1 initialization
+    /// (one block MVM, plus the derivative seeding when `grads`), so
+    /// `degree()` is 1 afterwards.
+    pub fn new(
+        op: &dyn KernelOp,
+        zblk: Mat,
+        bracket: (f64, f64),
+        grads: bool,
+        precision: crate::util::precision::Precision,
+    ) -> Self {
+        let n = op.n();
+        let nh = op.num_hypers();
+        let (a, b) = bracket;
+        let scale = 2.0 / (b - a);
+        let shift = (b + a) / (b - a);
+        let wcols = zblk.cols;
+        let mut mvms = 0;
+        let mut block_applies = 0;
+        // w recurrence over the whole block.
+        let w_prev = zblk.clone(); // w_0 = z
+        let w = apply_b_mat(op, &zblk, scale, shift, precision); // w_1 = B z
+        mvms += wcols;
+        block_applies += 1;
+        // dw recurrences per hyper.
+        let mut dw_prev: Vec<Mat> = Vec::new();
+        let mut dw: Vec<Mat> = Vec::new();
+        if grads {
+            dw_prev = vec![Mat::zeros(n, wcols); nh];
+            dw = op.apply_grad_all_mat(&zblk);
+            mvms += nh * wcols;
+            block_applies += nh;
+            for m in dw.iter_mut() {
+                for v in m.data.iter_mut() {
+                    *v *= scale;
+                }
+            }
+        }
+        let mut moments: Vec<Vec<f64>> = Vec::with_capacity(wcols);
+        let mut grad_dots: Vec<Vec<Vec<f64>>> = Vec::with_capacity(wcols);
+        for c in 0..wcols {
+            let m0 = zblk.col_dot_pair(&w_prev, c);
+            let m1 = zblk.col_dot_pair(&w, c);
+            moments.push(vec![m0, m1]);
+            if grads {
+                grad_dots.push(
+                    (0..nh).map(|i| vec![zblk.col_dot_pair(&dw[i], c)]).collect(),
+                );
+            }
+        }
+        ChebSession {
+            zblk,
+            w_prev,
+            w,
+            dw_prev,
+            dw,
+            grads,
+            precision,
+            scale,
+            shift,
+            degree: 1,
+            moments,
+            grad_dots,
+            mvms,
+            block_applies,
+        }
+    }
+
+    /// Number of probe columns.
+    pub fn num_cols(&self) -> usize {
+        self.zblk.cols
+    }
+
+    /// Current expansion degree (1 after `new`).
+    pub fn degree(&self) -> usize {
+        self.degree
+    }
+
+    /// Raw per-column moments `z^T T_j(B) z`, j = 0..=degree.
+    pub fn moments(&self) -> &[Vec<f64>] {
+        &self.moments
+    }
+
+    /// MVMs consumed (probe-column units, block-size independent).
+    pub fn mvms(&self) -> usize {
+        self.mvms
+    }
+
+    /// Block-amortized operator applications consumed.
+    pub fn block_applies(&self) -> usize {
+        self.block_applies
+    }
+
+    /// Continue both recurrences to `degree` (no-op at or below the
+    /// current degree). Must be driven by the same operator the session
+    /// was opened on; the bracket stays fixed.
+    pub fn extend(&mut self, op: &dyn KernelOp, degree: usize) {
+        let n = op.n();
+        let nh = self.dw.len();
+        let wcols = self.zblk.cols;
+        for _ in self.degree + 1..=degree {
+            // w_{j} = 2 B w_{j-1} - w_{j-2}
+            let bw = apply_b_mat(op, &self.w, self.scale, self.shift, self.precision);
+            self.mvms += wcols;
+            self.block_applies += 1;
+            let mut w_next = Mat::zeros(n, wcols);
+            for ((o, bwt), wp) in
+                w_next.data.iter_mut().zip(&bw.data).zip(&self.w_prev.data)
+            {
+                *o = 2.0 * bwt - wp;
+            }
+            if self.grads {
+                // dw_{j} = 2 (dB w_{j-1} + B dw_{j-1}) - dw_{j-2}
+                let dk_w = op.apply_grad_all_mat(&self.w);
+                self.mvms += nh * wcols;
+                self.block_applies += nh;
+                for i in 0..nh {
+                    let b_dw =
+                        apply_b_mat(op, &self.dw[i], self.scale, self.shift, self.precision);
+                    self.mvms += wcols;
+                    self.block_applies += 1;
+                    let mut next = Mat::zeros(n, wcols);
+                    for (((o, dk), bd), dp) in next
+                        .data
+                        .iter_mut()
+                        .zip(&dk_w[i].data)
+                        .zip(&b_dw.data)
+                        .zip(&self.dw_prev[i].data)
+                    {
+                        *o = 2.0 * (self.scale * dk + bd) - dp;
+                    }
+                    self.dw_prev[i] = std::mem::replace(&mut self.dw[i], next);
+                }
+            }
+            self.w_prev = std::mem::replace(&mut self.w, w_next);
+            for c in 0..wcols {
+                self.moments[c].push(self.zblk.col_dot_pair(&self.w, c));
+                if self.grads {
+                    for i in 0..nh {
+                        self.grad_dots[c][i].push(self.zblk.col_dot_pair(&self.dw[i], c));
+                    }
+                }
+            }
+            self.degree += 1;
+        }
+    }
+
+    /// Coefficient-weighted per-column quadratures at the current degree:
+    /// `Σ_j c_j m_j`, accumulated left-to-right exactly like the
+    /// run-to-completion driver (pinned by the evidence-reproduction
+    /// test). `coeffs.len()` must be `degree + 1`.
+    pub fn quads(&self, coeffs: &[f64]) -> Vec<f64> {
+        assert_eq!(coeffs.len(), self.degree + 1, "coeffs/degree mismatch");
+        self.moments
+            .iter()
+            .map(|m| {
+                let mut acc = coeffs[0] * m[0] + coeffs[1] * m[1];
+                for j in 2..m.len() {
+                    acc += coeffs[j] * m[j];
+                }
+                acc
+            })
+            .collect()
+    }
+
+    /// Coefficient-weighted per-column derivative terms (one per hyper),
+    /// same deferred accumulation as [`quads`](Self::quads). Empty when
+    /// the session was opened without gradients.
+    pub fn grad_terms(&self, coeffs: &[f64]) -> Vec<Vec<f64>> {
+        self.grad_dots
+            .iter()
+            .map(|per_hyper| {
+                per_hyper
+                    .iter()
+                    .map(|dots| {
+                        let mut acc = coeffs[1] * dots[0];
+                        for (j, d) in dots.iter().enumerate().skip(1) {
+                            acc += coeffs[j + 1] * d;
+                        }
+                        acc
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+/// `B X = scale * K̃ X - shift * X`. The `K̃` MVM honors `precision`; the
+/// affine map stays f64.
+fn apply_b_mat(
+    op: &dyn KernelOp,
+    x: &Mat,
+    scale: f64,
+    shift: f64,
+    precision: crate::util::precision::Precision,
+) -> Mat {
+    let mut y = op.apply_mat_prec(x, precision);
+    for (yi, xi) in y.data.iter_mut().zip(&x.data) {
+        *yi = scale * *yi - shift * *xi;
+    }
+    y
+}
+
 /// Estimate `log|K̃|` (and optionally all derivatives) via stochastic
 /// Chebyshev moments. With `opts.target_tol` unset this is the fixed
 /// budget, bit-identical to the pre-evidence estimator; with it set, the
-/// probe set grows incrementally until the confidence half-width clears
-/// the tolerance (never stopping before 2 probes).
+/// two-axis adaptive driver grows probes or degree — whichever component
+/// of the interval half-width dominates — until the tolerance clears
+/// (never stopping before 2 probes). See [`super::slq`] for the shared
+/// axis mechanics; the degree axis is capped at `max_steps` when set,
+/// `2 × degree` when 0, and closed entirely when `max_steps == degree`.
 pub fn chebyshev_logdet(op: &dyn KernelOp, opts: &ChebOptions) -> Result<LogdetEstimate> {
     let n = op.n();
     let nh = op.num_hypers();
@@ -138,50 +387,166 @@ pub fn chebyshev_logdet(op: &dyn KernelOp, opts: &ChebOptions) -> Result<LogdetE
         }
     };
     assert!(b > a && a > 0.0, "invalid spectrum bracket [{a}, {b}]");
-    let degree = match (opts.target_tol, opts.max_steps) {
-        (Some(_), m) if m > 0 => opts.degree.min(m).max(1),
-        _ => opts.degree,
-    };
-    let coeffs = cheb_coeffs(|t| (0.5 * ((b - a) * t + (b + a))).ln(), degree);
+    let f = |t: f64| (0.5 * ((b - a) * t + (b + a))).ln();
 
     match opts.target_tol {
         None => {
+            let degree = opts.degree;
+            let coeffs = cheb_coeffs(f, degree);
             let probes = ProbeSet::new(n, opts.probes, opts.kind, opts.seed);
             let z = probes.as_mat();
-            let blocks =
-                run_blocks(op, opts, &z, 0, opts.probes, degree, &coeffs, (a, b), nh);
+            let blocks = run_blocks(op, opts, &z, 0, opts.probes, degree, &coeffs, (a, b));
             Ok(assemble(&blocks, opts, nh, opts.probes, &coeffs, (a, b)))
         }
-        Some(tol) => {
-            // Same incremental schedule as the SLQ driver: the probe matrix
-            // is drawn once at max_probes width (ProbeSet column prefixes
-            // are width-independent), consumed in chunks of 2, then
-            // (done/2).clamp(1, block_size); never stops before 2 probes.
-            let max_probes = opts.max_probes.max(2);
-            let probes = ProbeSet::new(n, max_probes, opts.kind, opts.seed);
-            let z = probes.as_mat();
-            let mut blocks: Vec<PerBlock> = Vec::new();
-            let mut done = 0usize;
-            loop {
-                let chunk = if done == 0 {
-                    2.min(max_probes)
-                } else {
-                    (done / 2).clamp(1, opts.block_size.max(1)).min(max_probes - done)
-                };
-                blocks.extend(run_blocks(op, opts, &z, done, chunk, degree, &coeffs, (a, b), nh));
-                done += chunk;
-                let est = assemble(&blocks, opts, nh, done, &coeffs, (a, b));
-                if (done >= 2 && est.interval.half_width() <= tol) || done >= max_probes {
-                    return Ok(est);
-                }
+        Some(tol) => cheb_adaptive(op, opts, tol, (a, b), &f, nh),
+    }
+}
+
+/// Two-axis adaptive Chebyshev driver — the same shape as
+/// `slq::slq_adaptive`: probe chunks (2 first, then
+/// `(done/2).clamp(1, block_size)`, the probe matrix drawn once at
+/// `max_probes` width so prefixes never redraw) retained as live
+/// [`ChebSession`]s; after each budget change the half-width splits into
+/// Monte-Carlo vs truncation ([`confidence::half_width_parts`]) and the
+/// dominant axis grows. Degree growth recomputes the coefficient vector
+/// at the new degree (interpolation nodes move) but reuses every raw
+/// moment — only plain re-weighting, no MVMs. Unlike Lanczos there is no
+/// breakdown: the degree axis closes only at its cap.
+fn cheb_adaptive(
+    op: &dyn KernelOp,
+    opts: &ChebOptions,
+    tol: f64,
+    bracket: (f64, f64),
+    f: &(dyn Fn(f64) -> f64),
+    nh: usize,
+) -> Result<LogdetEstimate> {
+    use super::slq::{next_step_budget, step_axis_cap};
+    let n = op.n();
+    let max_probes = opts.max_probes.max(2);
+    let start_degree = opts.degree.max(1);
+    let cap = step_axis_cap(start_degree, opts.max_steps, usize::MAX);
+    let probes = ProbeSet::new(n, max_probes, opts.kind, opts.seed);
+    let z = probes.as_mat();
+    let mut blocks: Vec<ChebSession> = Vec::new();
+    let mut done = 0usize;
+    let mut degree = start_degree;
+    let mut coeffs = cheb_coeffs(f, degree);
+    let mut degree_axis_open = cap > degree;
+    loop {
+        let chunk = if done == 0 {
+            2.min(max_probes)
+        } else {
+            (done / 2).clamp(1, opts.block_size.max(1)).min(max_probes - done)
+        };
+        let part = BlockPartition::new(chunk, opts.block_size);
+        let cur_degree = degree;
+        blocks.extend(parallel::par_map(part.nblocks, opts.threads, |bi| {
+            let (j0, wcols) = part.range(bi);
+            let zblk = z.sub_cols(done + j0, wcols);
+            let mut s = ChebSession::new(op, zblk, bracket, opts.grads, opts.precision);
+            s.extend(op, cur_degree);
+            s
+        }));
+        done += chunk;
+        loop {
+            let per_probe: Vec<f64> =
+                blocks.iter().flat_map(|s| s.quads(&coeffs)).collect();
+            let moments: Vec<Vec<f64>> =
+                blocks.iter().flat_map(|s| s.moments().iter().cloned()).collect();
+            let probe_view = SpectralEvidence::Chebyshev {
+                moments,
+                coeffs: coeffs.clone(),
+                bracket,
+                resume: None,
+            };
+            let (mc, trunc) = confidence::half_width_parts(
+                &per_probe,
+                &probe_view,
+                confidence::DEFAULT_LEVEL,
+            );
+            let probe_room = done < max_probes;
+            if (done >= 2 && mc + trunc <= tol) || (!probe_room && !degree_axis_open) {
+                return Ok(assemble_sessions(opts, nh, blocks, per_probe, &coeffs, bracket));
+            }
+            if degree_axis_open && (trunc > mc || !probe_room) {
+                let target = next_step_budget(degree, cap);
+                let slots: Vec<std::sync::Mutex<&mut ChebSession>> =
+                    blocks.iter_mut().map(std::sync::Mutex::new).collect();
+                parallel::par_map(slots.len(), opts.threads, |i| {
+                    let mut slot = slots[i].lock().expect("session slot");
+                    slot.extend(op, target);
+                });
+                degree = target;
+                coeffs = cheb_coeffs(f, degree);
+                degree_axis_open = degree < cap;
+                continue;
+            }
+            break;
+        }
+    }
+}
+
+/// Final assembly of the adaptive Chebyshev driver: probe-order gradient
+/// accumulation from the retained raw dots (bitwise the fixed path's
+/// arithmetic at the final degree), MVM accounting off the sessions, and
+/// evidence carrying resume handles.
+fn assemble_sessions(
+    opts: &ChebOptions,
+    nh: usize,
+    blocks: Vec<ChebSession>,
+    per_probe: Vec<f64>,
+    coeffs: &[f64],
+    bracket: (f64, f64),
+) -> LogdetEstimate {
+    let probes_used = per_probe.len();
+    let mut grad = vec![0.0; if opts.grads { nh } else { 0 }];
+    let mut mvms = 0;
+    let mut block_applies = 0;
+    let mut moments = Vec::with_capacity(probes_used);
+    for s in &blocks {
+        moments.extend(s.moments().iter().cloned());
+        for gt in s.grad_terms(coeffs) {
+            for (gi, t) in grad.iter_mut().zip(&gt) {
+                *gi += t;
             }
         }
+        mvms += s.mvms();
+        block_applies += s.block_applies();
+    }
+    for gi in grad.iter_mut() {
+        *gi /= probes_used as f64;
+    }
+    let (value, std_err) = combine(&per_probe);
+    let steps_used =
+        moments.iter().map(|m| m.len().saturating_sub(1)).max().unwrap_or(0);
+    let resume = Some(std::sync::Arc::new(blocks));
+    let evidence = SpectralEvidence::Chebyshev {
+        moments,
+        coeffs: coeffs.to_vec(),
+        bracket,
+        resume,
+    };
+    let interval =
+        confidence::interval_from_parts(value, &per_probe, &evidence, confidence::DEFAULT_LEVEL);
+    LogdetEstimate {
+        value,
+        grad,
+        std_err,
+        per_probe,
+        mvms,
+        block_applies,
+        evidence,
+        interval,
+        probes_used,
+        steps_used,
     }
 }
 
 /// Run the blocked Chebyshev recurrences over `count` probe columns of `z`
 /// starting at `base` — one `PerBlock` per partition block, in probe
-/// order; shared by the fixed and adaptive drivers.
+/// order. Since the session refactor this is a driver over
+/// [`ChebSession`] (`new` + `extend(degree)` + deferred weighting), which
+/// is bitwise identical to the historical run-to-completion recurrence.
 #[allow(clippy::too_many_arguments)]
 fn run_blocks(
     op: &dyn KernelOp,
@@ -192,110 +557,20 @@ fn run_blocks(
     degree: usize,
     coeffs: &[f64],
     bracket: (f64, f64),
-    nh: usize,
 ) -> Vec<PerBlock> {
-    let n = op.n();
-    let (a, b) = bracket;
-    let scale = 2.0 / (b - a);
-    let shift = (b + a) / (b - a);
-
-    // B X = scale * K̃ X - shift * X; dB/dθ X = scale * dK̃ X. The K̃ MVM
-    // honors `opts.precision`; the affine map stays f64.
-    let apply_b_mat = |x: &Mat| -> Mat {
-        let mut y = op.apply_mat_prec(x, opts.precision);
-        for (yi, xi) in y.data.iter_mut().zip(&x.data) {
-            *yi = scale * *yi - shift * *xi;
-        }
-        y
-    };
-
     let part = BlockPartition::new(count, opts.block_size);
     parallel::par_map(part.nblocks, opts.threads, |bi| {
         let (j0, wcols) = part.range(bi);
         let zblk = z.sub_cols(base + j0, wcols);
-        let mut mvms = 0;
-        let mut block_applies = 0;
-        // w recurrence over the whole block.
-        let mut w_prev = zblk.clone(); // w_0 = z
-        let mut w = apply_b_mat(&zblk); // w_1 = B z
-        mvms += wcols;
-        block_applies += 1;
-        // dw recurrences per hyper.
-        let mut dw_prev: Vec<Mat> = Vec::new();
-        let mut dw: Vec<Mat> = Vec::new();
-        if opts.grads {
-            dw_prev = vec![Mat::zeros(n, wcols); nh];
-            dw = op.apply_grad_all_mat(&zblk);
-            mvms += nh * wcols;
-            block_applies += nh;
-            for m in dw.iter_mut() {
-                for v in m.data.iter_mut() {
-                    *v *= scale;
-                }
-            }
+        let mut sess = ChebSession::new(op, zblk, bracket, opts.grads, opts.precision);
+        sess.extend(op, degree);
+        PerBlock {
+            quads: sess.quads(coeffs),
+            grad_terms: sess.grad_terms(coeffs),
+            moments: sess.moments.clone(),
+            mvms: sess.mvms,
+            block_applies: sess.block_applies,
         }
-
-        let mut quads = Vec::with_capacity(wcols);
-        let mut grad_terms: Vec<Vec<f64>> = Vec::with_capacity(wcols);
-        let mut moments: Vec<Vec<f64>> = Vec::with_capacity(wcols);
-        for c in 0..wcols {
-            // The raw moments m_j = z^T T_j(B) z are retained verbatim as
-            // spectral evidence; the quadrature is the same coefficient-
-            // weighted sum as before (identical products, identical order).
-            let m0 = zblk.col_dot_pair(&w_prev, c);
-            let m1 = zblk.col_dot_pair(&w, c);
-            quads.push(coeffs[0] * m0 + coeffs[1] * m1);
-            moments.push(vec![m0, m1]);
-            if opts.grads {
-                grad_terms
-                    .push((0..nh).map(|i| coeffs[1] * zblk.col_dot_pair(&dw[i], c)).collect());
-            }
-        }
-
-        for j in 2..=degree {
-            // w_{j} = 2 B w_{j-1} - w_{j-2}
-            let bw = apply_b_mat(&w);
-            mvms += wcols;
-            block_applies += 1;
-            let mut w_next = Mat::zeros(n, wcols);
-            for ((o, bwt), wp) in w_next.data.iter_mut().zip(&bw.data).zip(&w_prev.data) {
-                *o = 2.0 * bwt - wp;
-            }
-            if opts.grads {
-                // dw_{j} = 2 (dB w_{j-1} + B dw_{j-1}) - dw_{j-2}
-                let dk_w = op.apply_grad_all_mat(&w);
-                mvms += nh * wcols;
-                block_applies += nh;
-                for i in 0..nh {
-                    let b_dw = apply_b_mat(&dw[i]);
-                    mvms += wcols;
-                    block_applies += 1;
-                    let mut next = Mat::zeros(n, wcols);
-                    for (((o, dk), bd), dp) in next
-                        .data
-                        .iter_mut()
-                        .zip(&dk_w[i].data)
-                        .zip(&b_dw.data)
-                        .zip(&dw_prev[i].data)
-                    {
-                        *o = 2.0 * (scale * dk + bd) - dp;
-                    }
-                    dw_prev[i] = std::mem::replace(&mut dw[i], next);
-                }
-            }
-            w_prev = std::mem::replace(&mut w, w_next);
-            for c in 0..wcols {
-                let mj = zblk.col_dot_pair(&w, c);
-                quads[c] += coeffs[j] * mj;
-                moments[c].push(mj);
-                if opts.grads {
-                    for i in 0..nh {
-                        grad_terms[c][i] += coeffs[j] * zblk.col_dot_pair(&dw[i], c);
-                    }
-                }
-            }
-        }
-        PerBlock { quads, grad_terms, moments, mvms, block_applies }
     })
 }
 
@@ -332,8 +607,12 @@ fn assemble(
     let (value, std_err) = combine(&per_probe);
     let steps_used =
         moments.iter().map(|m| m.len().saturating_sub(1)).max().unwrap_or(0);
-    let evidence =
-        SpectralEvidence::Chebyshev { moments, coeffs: coeffs.to_vec(), bracket };
+    let evidence = SpectralEvidence::Chebyshev {
+        moments,
+        coeffs: coeffs.to_vec(),
+        bracket,
+        resume: None,
+    };
     let interval =
         confidence::interval_from_parts(value, &per_probe, &evidence, confidence::DEFAULT_LEVEL);
     LogdetEstimate {
@@ -593,7 +872,7 @@ mod tests {
         )
         .unwrap();
         match &est.evidence {
-            SpectralEvidence::Chebyshev { moments, coeffs, bracket } => {
+            SpectralEvidence::Chebyshev { moments, coeffs, bracket, .. } => {
                 assert_eq!(moments.len(), est.per_probe.len());
                 assert!(bracket.1 > bracket.0);
                 for (m, q) in moments.iter().zip(&est.per_probe) {
@@ -610,5 +889,122 @@ mod tests {
         }
         assert_eq!(est.steps_used, 20);
         assert!(est.interval.contains(est.value));
+    }
+
+    /// A session extended in stages is bitwise identical to a from-scratch
+    /// run at the final degree: raw moments, derivative dots (via the
+    /// weighted terms), and MVM counts all match, in both precisions.
+    #[test]
+    fn session_extend_matches_from_scratch_bitwise() {
+        use crate::util::precision::Precision;
+        let o = op(40, 0.3, 23);
+        let bracket = (0.05, 30.0);
+        let probes = ProbeSet::new(40, 3, ProbeKind::Rademacher, 7);
+        let z = probes.as_mat();
+        for prec in [Precision::F64, Precision::F32F64] {
+            let mut staged = ChebSession::new(&o, z.clone(), bracket, true, prec);
+            staged.extend(&o, 5);
+            staged.extend(&o, 11);
+            staged.extend(&o, 18);
+            let mut scratch = ChebSession::new(&o, z.clone(), bracket, true, prec);
+            scratch.extend(&o, 18);
+            assert_eq!(staged.degree(), 18);
+            assert_eq!(staged.mvms(), scratch.mvms(), "{prec:?}");
+            assert_eq!(staged.block_applies(), scratch.block_applies(), "{prec:?}");
+            for (ms, mf) in staged.moments().iter().zip(scratch.moments()) {
+                assert_eq!(ms.len(), 19);
+                for (a, b) in ms.iter().zip(mf) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{prec:?} moment");
+                }
+            }
+            let coeffs = cheb_coeffs(|t| (2.0 + t).ln(), 18);
+            for (qs, qf) in staged.quads(&coeffs).iter().zip(&scratch.quads(&coeffs)) {
+                assert_eq!(qs.to_bits(), qf.to_bits(), "{prec:?} quad");
+            }
+            for (gs, gf) in
+                staged.grad_terms(&coeffs).iter().zip(&scratch.grad_terms(&coeffs))
+            {
+                for (a, b) in gs.iter().zip(gf) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{prec:?} grad term");
+                }
+            }
+            // Extending to the current degree or below is a free no-op.
+            let before = staged.mvms();
+            staged.extend(&o, 18);
+            staged.extend(&o, 4);
+            assert_eq!(staged.mvms(), before);
+            assert_eq!(staged.degree(), 18);
+        }
+    }
+
+    /// The adaptive final estimate is bitwise a fixed from-scratch run at
+    /// `(probes_used, steps_used)` — the master pin — and on a tight
+    /// tolerance the degree axis actually grows past the seed degree while
+    /// the evidence carries resume handles.
+    #[test]
+    fn two_axis_driver_grows_degree_and_pins_to_fixed_budget() {
+        let o = op(70, 0.15, 27);
+        let adaptive = chebyshev_logdet(
+            &o,
+            &ChebOptions {
+                degree: 8,
+                probes: 4,
+                seed: 9,
+                target_tol: Some(1e-9),
+                max_probes: 8,
+                max_steps: 0,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(
+            adaptive.steps_used > 8 && adaptive.steps_used <= 16,
+            "degree axis should grow within the auto cap, got {}",
+            adaptive.steps_used
+        );
+        match &adaptive.evidence {
+            SpectralEvidence::Chebyshev { resume: Some(s), .. } => {
+                let cols: usize = s.iter().map(|b| b.num_cols()).sum();
+                assert_eq!(cols, adaptive.probes_used);
+                let mvms: usize = s.iter().map(|b| b.mvms()).sum();
+                assert_eq!(mvms, adaptive.mvms);
+            }
+            other => panic!("expected resume handles, got {other:?}"),
+        }
+        let fixed = chebyshev_logdet(
+            &o,
+            &ChebOptions {
+                degree: adaptive.steps_used,
+                probes: adaptive.probes_used,
+                seed: 9,
+                target_tol: None,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(adaptive.value.to_bits(), fixed.value.to_bits());
+        for (a, b) in adaptive.per_probe.iter().zip(&fixed.per_probe) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in adaptive.grad.iter().zip(&fixed.grad) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(adaptive.mvms, fixed.mvms);
+        // `max_steps == degree` is the probes-only escape hatch.
+        let flat = chebyshev_logdet(
+            &o,
+            &ChebOptions {
+                degree: 8,
+                probes: 4,
+                seed: 9,
+                grads: false,
+                target_tol: Some(1e-9),
+                max_probes: 8,
+                max_steps: 8,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(flat.steps_used, 8, "closed degree axis must stay at the seed");
     }
 }

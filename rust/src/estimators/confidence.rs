@@ -96,6 +96,25 @@ pub fn interval_from_parts(
     if matches!(evidence, SpectralEvidence::Exact) {
         return ConfidenceInterval { lo: value, hi: value, level };
     }
+    let (mc, trunc) = half_width_parts(per_probe, evidence, level);
+    let hw = mc + trunc;
+    ConfidenceInterval { lo: value - hw, hi: value + hw, level }
+}
+
+/// The half-width split into its `(monte_carlo, truncation)` components —
+/// the two-axis adaptive drivers grow the probe axis when the first
+/// dominates and the step/degree axis when the second does. The interval
+/// built by [`interval_from_parts`] is exactly `value ± (mc + trunc)`,
+/// same floating-point operations, so acting on the split is acting on
+/// the interval itself. `Exact` evidence returns `(0, 0)`.
+pub fn half_width_parts(
+    per_probe: &[f64],
+    evidence: &SpectralEvidence,
+    level: f64,
+) -> (f64, f64) {
+    if matches!(evidence, SpectralEvidence::Exact) {
+        return (0.0, 0.0);
+    }
     let n = per_probe.len();
     // Monte-Carlo term: +inf below 2 probes (std_err's documented
     // sentinel), Student-t scaled otherwise.
@@ -107,8 +126,7 @@ pub fn interval_from_parts(
             chebyshev_truncation(moments, coeffs)
         }
     };
-    let hw = mc + trunc;
-    ConfidenceInterval { lo: value - hw, hi: value + hw, level }
+    (mc, trunc)
 }
 
 /// Mean last-step quadrature movement across probes — the within-probe
@@ -290,6 +308,7 @@ mod tests {
                 znorm2: 10.0,
             }],
             offset: 0.0,
+            resume: None,
         };
         let ci = interval_from_parts(5.0, &[5.0], &ev, 0.95);
         assert!(ci.lo.is_infinite() && ci.lo < 0.0, "{:?}", ci);
@@ -311,6 +330,7 @@ mod tests {
         let ev = SpectralEvidence::Lanczos {
             probes: vec![probe.clone(), probe.clone(), probe.clone(), probe],
             offset: 0.0,
+            resume: None,
         };
         let per_probe = [4.1, 4.1, 4.1, 4.1];
         let ci = interval_from_parts(4.1, &per_probe, &ev, 0.95);
@@ -331,11 +351,13 @@ mod tests {
             moments: moments.clone(),
             coeffs: slow,
             bracket: (0.1, 10.0),
+            resume: None,
         };
         let ev_fast = SpectralEvidence::Chebyshev {
             moments,
             coeffs: fast,
             bracket: (0.1, 10.0),
+            resume: None,
         };
         let hw_slow = interval_from_parts(1.0, &per_probe, &ev_slow, 0.95).half_width();
         let hw_fast = interval_from_parts(1.0, &per_probe, &ev_fast, 0.95).half_width();

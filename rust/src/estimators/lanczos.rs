@@ -29,14 +29,23 @@ impl LanczosResult {
     /// Solve `T t = e_1 ||z||` and map back: `g = Q t ≈ K̃^{-1} z` — the
     /// derivative estimator's solve, free given the decomposition (§3.2).
     pub fn solve_e1(&self) -> Vec<f64> {
-        let n = self.q[0].len();
-        let t = thomas_solve_e1(&self.alphas, &self.betas, self.znorm);
-        let mut g = vec![0.0; n];
-        for (k, qk) in self.q.iter().enumerate() {
-            axpy(t[k], qk, &mut g);
-        }
-        g
+        solve_e1_parts(&self.alphas, &self.betas, self.znorm, &self.q)
     }
+}
+
+/// Shared `T t = e_1 ||z||` solve + basis map-back for [`LanczosResult`]
+/// and [`SessionCol`] (one code path, so results and live sessions cannot
+/// drift). Iterates over `t`, so a basis holding one extra vector (a
+/// session column mid-extension) is handled the same as an exact-length
+/// one.
+fn solve_e1_parts(alphas: &[f64], betas: &[f64], znorm: f64, q: &[Vec<f64>]) -> Vec<f64> {
+    let n = q[0].len();
+    let t = thomas_solve_e1(alphas, betas, znorm);
+    let mut g = vec![0.0; n];
+    for (k, tk) in t.iter().enumerate() {
+        axpy(*tk, &q[k], &mut g);
+    }
+    g
 }
 
 /// Thomas solve of the SPD tridiagonal system `T t = e_1 * rhs0`
@@ -67,14 +76,246 @@ pub fn lanczos<O: LinOp + ?Sized>(op: &O, z: &[f64], m: usize) -> LanczosResult 
     lanczos_block(op, &Mat::from_col(z), m).pop().expect("one column in, one result out")
 }
 
-/// Per-column Lanczos state inside the block driver.
-struct ColState {
+/// Per-column state of a [`LanczosSession`]: the tridiagonal prefix, the
+/// orthonormal basis built so far (full reorthogonalization needs all of
+/// it), and — the piece that makes resumption exact — the post-
+/// reorthogonalization residual `w` that a budget-stopped run would
+/// otherwise discard. Consuming `pending` on the next [`LanczosSession::
+/// extend`] replays precisely the tail of a from-scratch step whose
+/// budget had not yet run out: β-check, breakdown test, normalization.
+pub struct SessionCol {
     q: Vec<Vec<f64>>,
     alphas: Vec<f64>,
     betas: Vec<f64>,
     znorm: f64,
     mvms: usize,
-    active: bool,
+    pending: Option<Vec<f64>>,
+}
+
+impl SessionCol {
+    /// Diagonal of T (length = steps taken so far).
+    pub fn alphas(&self) -> &[f64] {
+        &self.alphas
+    }
+
+    /// Off-diagonal of T.
+    pub fn betas(&self) -> &[f64] {
+        &self.betas
+    }
+
+    /// ||z|| of the start vector.
+    pub fn znorm(&self) -> f64 {
+        self.znorm
+    }
+
+    /// MVMs this column has consumed.
+    pub fn mvms(&self) -> usize {
+        self.mvms
+    }
+
+    /// Whether the column found an invariant subspace — terminal: no
+    /// budget increase can advance it, T is exact at its current size.
+    pub fn broken_down(&self) -> bool {
+        self.pending.is_none() && self.q.len() == self.alphas.len()
+    }
+
+    /// `T t = e_1 ||z||` solve mapped back through the basis (same code
+    /// path as [`LanczosResult::solve_e1`]).
+    pub fn solve_e1(&self) -> Vec<f64> {
+        solve_e1_parts(&self.alphas, &self.betas, self.znorm, &self.q)
+    }
+}
+
+/// Resumable block-Lanczos state: one [`SessionCol`] per probe column.
+///
+/// The invariant that makes sessions safe to thread everywhere:
+/// `new(z)` + `extend(op, m1, prec)` + `extend(op, m2, prec)` is
+/// **bitwise identical** (tridiagonals, basis, MVM counts) to
+/// `new(z)` + `extend(op, m2, prec)` — and both equal the historical
+/// from-scratch `lanczos_block_prec(op, z, m2, prec)`, which is now a
+/// thin wrapper over this type. The recurrence body is unchanged; the
+/// only new state is the per-column `pending` residual captured at the
+/// budget stop, exactly where the old driver dropped it.
+pub struct LanczosSession {
+    n: usize,
+    cols: Vec<SessionCol>,
+}
+
+impl std::fmt::Debug for LanczosSession {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LanczosSession")
+            .field("cols", &self.cols.len())
+            .field("steps", &self.steps())
+            .finish()
+    }
+}
+
+impl LanczosSession {
+    /// Start a session on the columns of `z` (an `n x b` probe block).
+    /// No MVMs are spent until [`extend`](Self::extend).
+    pub fn new(z: &Mat) -> Self {
+        let n = z.rows;
+        let cols = (0..z.cols)
+            .map(|c| {
+                let zc = z.col(c);
+                let znorm = norm2(&zc);
+                assert!(znorm > 0.0, "zero start vector");
+                SessionCol {
+                    q: vec![zc.iter().map(|v| v / znorm).collect()],
+                    alphas: Vec::new(),
+                    betas: Vec::new(),
+                    znorm,
+                    mvms: 0,
+                    pending: None,
+                }
+            })
+            .collect();
+        LanczosSession { n, cols }
+    }
+
+    /// Number of probe columns.
+    pub fn num_cols(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Per-column state.
+    pub fn col(&self, c: usize) -> &SessionCol {
+        &self.cols[c]
+    }
+
+    /// Steps taken so far (max over columns — breakdown columns lag).
+    pub fn steps(&self) -> usize {
+        self.cols.iter().map(|c| c.alphas.len()).max().unwrap_or(0)
+    }
+
+    /// Total steps summed over columns — a monotone progress counter the
+    /// adaptive driver uses to detect that every column has terminally
+    /// broken down (an `extend` that moves this not at all).
+    pub fn total_steps(&self) -> usize {
+        self.cols.iter().map(|c| c.alphas.len()).sum()
+    }
+
+    /// MVMs consumed, summed over columns (block-size independent).
+    pub fn mvms(&self) -> usize {
+        self.cols.iter().map(|c| c.mvms).sum()
+    }
+
+    /// Batched operator applications charged to this block: the per-step
+    /// block MVM serves every active column at once, so the count is the
+    /// deepest column's MVM count.
+    pub fn block_applies(&self) -> usize {
+        self.cols.iter().map(|c| c.mvms).max().unwrap_or(0)
+    }
+
+    /// Advance every column to `m` steps (columns at or past `m`, and
+    /// broken-down columns, are untouched). Each iteration batches the
+    /// still-active columns' MVMs into one [`LinOp::apply_mat_prec`]
+    /// call, exactly like the historical block driver.
+    pub fn extend<O: LinOp + ?Sized>(&mut self, op: &O, m: usize, prec: Precision) {
+        let n = self.n;
+        assert_eq!(op.n(), n);
+        // Phase 1: consume budget-stop residuals — the tail of a
+        // from-scratch step whose budget had not yet run out: β, breakdown
+        // test, normalization into the next basis vector.
+        for st in self.cols.iter_mut() {
+            if st.alphas.len() >= m {
+                continue;
+            }
+            if let Some(w) = st.pending.take() {
+                let beta = norm2(&w);
+                if beta < 1e-12 * st.znorm {
+                    // Invariant subspace found: T is exact at this size.
+                    continue;
+                }
+                st.betas.push(beta);
+                st.q.push(w.iter().map(|v| v / beta).collect());
+            }
+        }
+        // Phase 2: the three-term recurrence, lockstep over the active
+        // columns (all active columns share a step index by construction).
+        let mut w = vec![0.0; n];
+        loop {
+            let act: Vec<usize> = (0..self.cols.len())
+                .filter(|&c| {
+                    let st = &self.cols[c];
+                    st.alphas.len() < m && st.q.len() == st.alphas.len() + 1
+                })
+                .collect();
+            if act.is_empty() {
+                break;
+            }
+            let j = self.cols[act[0]].alphas.len();
+            debug_assert!(act.iter().all(|&c| self.cols[c].alphas.len() == j));
+            // One block MVM for every active column's current basis vector.
+            let mut xb = Mat::zeros(n, act.len());
+            for (k, &c) in act.iter().enumerate() {
+                for i in 0..n {
+                    xb[(i, k)] = self.cols[c].q[j][i];
+                }
+            }
+            let wb = op.apply_mat_prec(&xb, prec);
+            for (k, &c) in act.iter().enumerate() {
+                let st = &mut self.cols[c];
+                st.mvms += 1;
+                wb.col_into(k, &mut w);
+                let alpha = dot(&st.q[j], &w);
+                st.alphas.push(alpha);
+                axpy(-alpha, &st.q[j], &mut w);
+                if j > 0 {
+                    let bprev: f64 = st.betas[j - 1];
+                    axpy(-bprev, &st.q[j - 1], &mut w);
+                }
+                // Full reorthogonalization. One modified-Gram-Schmidt pass,
+                // with a second pass only when the first removed a large
+                // component ("twice is enough" — Parlett — but the second pass
+                // is usually a no-op and costs O(n m) per step; §Perf opt 2).
+                let before = norm2(&w);
+                let mut removed = 0.0f64;
+                for qk in st.q.iter() {
+                    let p = dot(qk, &w);
+                    if p != 0.0 {
+                        axpy(-p, qk, &mut w);
+                        removed = removed.max(p.abs());
+                    }
+                }
+                if removed > 0.5 * before {
+                    for qk in st.q.iter() {
+                        let p = dot(qk, &w);
+                        if p != 0.0 {
+                            axpy(-p, qk, &mut w);
+                        }
+                    }
+                }
+                if j + 1 == m {
+                    // Budget stop: retain the residual so a later extend
+                    // continues bit-identically to a from-scratch run.
+                    st.pending = Some(w.clone());
+                    continue;
+                }
+                let beta = norm2(&w);
+                if beta < 1e-12 * st.znorm {
+                    // Invariant subspace found: T is exact at this size.
+                    continue;
+                }
+                st.betas.push(beta);
+                st.q.push(w.iter().map(|v| v / beta).collect());
+            }
+        }
+    }
+
+    /// Freeze into per-column [`LanczosResult`]s (drops resume state).
+    pub fn into_results(self) -> Vec<LanczosResult> {
+        self.cols
+            .into_iter()
+            .map(|st| LanczosResult {
+                alphas: st.alphas,
+                betas: st.betas,
+                q: st.q,
+                znorm: st.znorm,
+                mvms: st.mvms,
+            })
+            .collect()
+    }
 }
 
 /// Run `m` Lanczos steps on **each column** of `z` (an `n x b` probe
@@ -101,101 +342,19 @@ pub fn lanczos_block<O: LinOp + ?Sized>(op: &O, z: &Mat, m: usize) -> Vec<Lanczo
 /// rounded operator — the quadrature values it feeds move by the
 /// operator's storage-rounding perturbation, which the SLQ estimator's
 /// own Monte-Carlo noise dominates at the paper's probe counts.
+///
+/// Since the session refactor this is a driver over [`LanczosSession`]:
+/// one `new` + `extend(m)`, frozen into results.
 pub fn lanczos_block_prec<O: LinOp + ?Sized>(
     op: &O,
     z: &Mat,
     m: usize,
     prec: Precision,
 ) -> Vec<LanczosResult> {
-    let n = op.n();
-    assert_eq!(z.rows, n);
-    let b = z.cols;
-    let mut cols: Vec<ColState> = (0..b)
-        .map(|c| {
-            let zc = z.col(c);
-            let znorm = norm2(&zc);
-            assert!(znorm > 0.0, "zero start vector");
-            ColState {
-                q: vec![zc.iter().map(|v| v / znorm).collect()],
-                alphas: Vec::with_capacity(m),
-                betas: Vec::with_capacity(m.saturating_sub(1)),
-                znorm,
-                mvms: 0,
-                active: m > 0,
-            }
-        })
-        .collect();
-
-    let mut w = vec![0.0; n];
-    for j in 0..m {
-        let act: Vec<usize> = (0..b).filter(|&c| cols[c].active).collect();
-        if act.is_empty() {
-            break;
-        }
-        // One block MVM for every active column's current basis vector.
-        let mut xb = Mat::zeros(n, act.len());
-        for (k, &c) in act.iter().enumerate() {
-            for i in 0..n {
-                xb[(i, k)] = cols[c].q[j][i];
-            }
-        }
-        let wb = op.apply_mat_prec(&xb, prec);
-        for (k, &c) in act.iter().enumerate() {
-            let st = &mut cols[c];
-            st.mvms += 1;
-            wb.col_into(k, &mut w);
-            let alpha = dot(&st.q[j], &w);
-            st.alphas.push(alpha);
-            axpy(-alpha, &st.q[j], &mut w);
-            if j > 0 {
-                let bprev: f64 = st.betas[j - 1];
-                axpy(-bprev, &st.q[j - 1], &mut w);
-            }
-            // Full reorthogonalization. One modified-Gram-Schmidt pass,
-            // with a second pass only when the first removed a large
-            // component ("twice is enough" — Parlett — but the second pass
-            // is usually a no-op and costs O(n m) per step; §Perf opt 2).
-            let before = norm2(&w);
-            let mut removed = 0.0f64;
-            for qk in st.q.iter() {
-                let p = dot(qk, &w);
-                if p != 0.0 {
-                    axpy(-p, qk, &mut w);
-                    removed = removed.max(p.abs());
-                }
-            }
-            if removed > 0.5 * before {
-                for qk in st.q.iter() {
-                    let p = dot(qk, &w);
-                    if p != 0.0 {
-                        axpy(-p, qk, &mut w);
-                    }
-                }
-            }
-            if j + 1 == m {
-                st.active = false;
-                continue;
-            }
-            let beta = norm2(&w);
-            if beta < 1e-12 * st.znorm {
-                // Invariant subspace found: T is exact at this size.
-                st.active = false;
-                continue;
-            }
-            st.betas.push(beta);
-            st.q.push(w.iter().map(|v| v / beta).collect());
-        }
-    }
-
-    cols.into_iter()
-        .map(|st| LanczosResult {
-            alphas: st.alphas,
-            betas: st.betas,
-            q: st.q,
-            znorm: st.znorm,
-            mvms: st.mvms,
-        })
-        .collect()
+    assert_eq!(z.rows, op.n());
+    let mut session = LanczosSession::new(z);
+    session.extend(op, m, prec);
+    session.into_results()
 }
 
 /// Smallest Lanczos step count at which the Gauss quadrature estimate of
@@ -401,6 +560,75 @@ mod tests {
             }
             for (a, b) in mixed[j].betas.iter().zip(&want[j].betas) {
                 assert_eq!(a.to_bits(), b.to_bits(), "mixed col {j} beta");
+            }
+        }
+    }
+
+    /// The session invariant in its rawest form: chained `extend` calls
+    /// are bitwise identical — basis vectors included — to one
+    /// from-scratch run at the final step count, and the MVM accounting
+    /// matches too.
+    #[test]
+    fn session_extend_matches_from_scratch_bitwise() {
+        let op = spd_op(24, 31);
+        let mut rng = Rng::new(32);
+        let z = Mat::from_fn(24, 4, |_, _| rng.gaussian());
+        for &prec in &[Precision::F64, Precision::F32F64] {
+            let mut sess = LanczosSession::new(&z);
+            sess.extend(&op, 3, prec);
+            sess.extend(&op, 7, prec);
+            sess.extend(&op, 12, prec);
+            let scratch = lanczos_block_prec(&op, &z, 12, prec);
+            let resumed = sess.into_results();
+            for (c, (a, b)) in resumed.iter().zip(&scratch).enumerate() {
+                assert_eq!(a.alphas.len(), b.alphas.len(), "col {c}");
+                assert_eq!(a.mvms, b.mvms, "col {c} mvms");
+                for (x, y) in a.alphas.iter().zip(&b.alphas) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "col {c} alpha");
+                }
+                for (x, y) in a.betas.iter().zip(&b.betas) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "col {c} beta");
+                }
+                assert_eq!(a.q.len(), b.q.len(), "col {c} basis");
+                for (qa, qb) in a.q.iter().zip(&b.q) {
+                    for (x, y) in qa.iter().zip(qb) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "col {c} q");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Breakdown columns are terminal: extending past the invariant
+    /// subspace is a no-op, bitwise equal to a from-scratch run with the
+    /// larger budget (which also stops at the subspace).
+    #[test]
+    fn session_extend_past_breakdown_is_noop() {
+        let n = 15;
+        let u: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).sin()).collect();
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] = u[i] * u[j];
+            }
+            a[(i, i)] += 1.0;
+        }
+        let op = DenseMatOp::new(a);
+        let mut rng = Rng::new(33);
+        let z = Mat::from_fn(n, 2, |_, _| rng.gaussian());
+        let mut sess = LanczosSession::new(&z);
+        sess.extend(&op, 2, Precision::F64);
+        sess.extend(&op, 10, Precision::F64);
+        assert!(sess.cols.iter().all(|c| c.broken_down()), "rank-2 spectrum must break down");
+        let mvms_at_10 = sess.mvms();
+        sess.extend(&op, 14, Precision::F64);
+        assert_eq!(sess.mvms(), mvms_at_10, "terminal columns must not spend MVMs");
+        let scratch = lanczos_block(&op, &z, 14);
+        for (a, b) in sess.into_results().iter().zip(&scratch) {
+            assert_eq!(a.alphas.len(), b.alphas.len());
+            assert_eq!(a.mvms, b.mvms);
+            for (x, y) in a.alphas.iter().zip(&b.alphas) {
+                assert_eq!(x.to_bits(), y.to_bits());
             }
         }
     }

@@ -85,17 +85,41 @@
 //! (`util::stats::std_err` of one sample is `+inf`), so no stopping rule
 //! can act on it.
 //!
-//! The interval drives **adaptive probe budgets**: when
+//! # Resumable sessions and two-axis adaptive budgets
+//!
+//! The recurrences themselves are **resumable**: [`lanczos::LanczosSession`]
+//! retains, per probe column, the tridiagonal prefix, the orthonormal basis,
+//! and the budget-stop residual, so `extend(steps)` continues the three-term
+//! recurrence *bit-identically* to a from-scratch run at the larger step
+//! count; [`chebyshev::ChebSession`] retains the last two Chebyshev iterates
+//! plus the raw (unweighted) moments and derivative dots, so
+//! `extend(degree)` continues the expansion on the fixed bracket and the
+//! coefficient weighting is deferred to assembly. `lanczos_block[_prec]`
+//! and the fixed Chebyshev path are thin drivers over these sessions —
+//! one `new` + `extend(budget)` — so the invariant holds everywhere by
+//! construction and is proptest-pinned across operators, block sizes,
+//! thread counts, and precisions.
+//!
+//! The interval drives **two-axis adaptive budgets**: when
 //! `SlqOptions::target_tol` / `ChebOptions::target_tol` is `Some(tol)`,
-//! the probe loop grows the probe set incrementally (probe `j` is the same
-//! vector at every budget, so earlier work is never redrawn) and stops as
-//! soon as the 95% interval half-width clears `tol` (never before 2
-//! probes, never past `max_probes`; `max_steps` caps the per-probe
-//! Lanczos-step/Chebyshev-degree budget). With `target_tol = None` the
-//! fixed-budget path is **bit-identical** to the pre-evidence estimators:
-//! same probe set, same block partition, same accumulation order — the
-//! evidence is recorded on the side and `probes_used`/`steps_used` simply
-//! report the fixed budget.
+//! the driver grows the probe set incrementally (probe `j` is the same
+//! vector at every budget, so earlier work is never redrawn) *and* deepens
+//! the retained sessions. After each chunk it splits the interval
+//! half-width into its Monte-Carlo and truncation components
+//! ([`confidence::half_width_parts`]) and grows whichever axis dominates:
+//! new probes when the Student-t term does, `extend()` on every retained
+//! session when the truncation term does. It stops as soon as the 95%
+//! half-width clears `tol` (never before 2 probes, never past
+//! `max_probes`; the step axis is capped at `max_steps` when set, at
+//! `2 × steps` when `max_steps = 0`, and `max_steps == steps` disables
+//! step growth — the probes-only driver of PR 6). The final estimate is
+//! bit-identical to a fixed-budget run at `(probes_used, steps_used)`,
+//! and its evidence carries **resume handles** (the live sessions) so a
+//! caller can keep extending where the driver stopped. With
+//! `target_tol = None` the fixed-budget path is **bit-identical** to the
+//! pre-evidence estimators: same probe set, same block partition, same
+//! accumulation order — the evidence is recorded on the side and
+//! `probes_used`/`steps_used` simply report the fixed budget.
 
 pub mod chebyshev;
 pub mod confidence;
@@ -190,6 +214,23 @@ pub fn default_logdet_tol() -> Option<f64> {
     }
 }
 
+/// Process-wide ceiling for the adaptive drivers' step/degree axis
+/// (0 = auto: the axis may grow to `2 × steps`). The CLI `--max-steps`
+/// flag threads through here; `SlqOptions::default`/`ChebOptions::default`
+/// read it into `max_steps`. Fixed-budget runs (`target_tol = None`)
+/// ignore it entirely.
+static DEFAULT_MAX_STEPS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the process-wide adaptive step/degree ceiling (0 restores auto).
+pub fn set_default_max_steps(s: usize) {
+    DEFAULT_MAX_STEPS.store(s, Ordering::Relaxed);
+}
+
+/// Current process-wide adaptive step/degree ceiling (0 = auto).
+pub fn default_max_steps() -> usize {
+    DEFAULT_MAX_STEPS.load(Ordering::Relaxed)
+}
+
 /// Probe-column partitioning — shared with the block-CG solver so probe
 /// sets and right-hand-side sets slice identically
 /// ([`crate::util::blocks::BlockPartition`]).
@@ -223,6 +264,11 @@ pub enum SpectralEvidence {
     Lanczos {
         probes: Vec<LanczosProbe>,
         offset: f64,
+        /// Resume handles: the live [`lanczos::LanczosSession`]s of an
+        /// adaptive run, one per probe block in probe order — `extend`
+        /// them to keep deepening where the driver stopped. `None` on
+        /// fixed-budget paths (nothing to resume; keeps them lean).
+        resume: Option<std::sync::Arc<Vec<lanczos::LanczosSession>>>,
     },
     /// Stochastic Chebyshev expansion: one moment vector
     /// `[z^T T_0(B) z, …, z^T T_d(B) z]` per probe, the shared coefficient
@@ -232,6 +278,10 @@ pub enum SpectralEvidence {
         moments: Vec<Vec<f64>>,
         coeffs: Vec<f64>,
         bracket: (f64, f64),
+        /// Resume handles: the live [`chebyshev::ChebSession`]s of an
+        /// adaptive run, one per probe block in probe order. `None` on
+        /// fixed-budget paths.
+        resume: Option<std::sync::Arc<Vec<chebyshev::ChebSession>>>,
     },
 }
 

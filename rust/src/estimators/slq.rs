@@ -17,7 +17,7 @@
 //! convention (`mvms` vs `block_applies`).
 
 use super::confidence;
-use super::lanczos::{lanczos_block, lanczos_block_prec};
+use super::lanczos::{lanczos_block, lanczos_block_prec, LanczosSession};
 use super::probes::{combine, ProbeKind, ProbeSet};
 use super::{BlockPartition, LanczosProbe, LogdetEstimate, SpectralEvidence};
 use crate::error::Result;
@@ -67,9 +67,12 @@ pub struct SlqOptions {
     /// Probe ceiling for adaptive mode (clamped to >= 2; ignored when
     /// `target_tol` is `None`).
     pub max_probes: usize,
-    /// Lanczos-step ceiling for adaptive mode: 0 = no extra cap (use
-    /// `steps`), otherwise the per-probe budget is `steps.min(max_steps)`.
-    /// Ignored when `target_tol` is `None`.
+    /// Lanczos-step ceiling for the adaptive driver's **step axis**:
+    /// the two-axis driver starts every probe at `steps` and may extend
+    /// the retained sessions up to this ceiling when the truncation term
+    /// dominates the interval. `0` (the default) means *auto*: the axis
+    /// may grow to `2 × steps`. `max_steps == steps` disables step growth
+    /// (the probes-only driver). Ignored when `target_tol` is `None`.
     pub max_steps: usize,
 }
 
@@ -86,7 +89,7 @@ impl Default for SlqOptions {
             precision: crate::util::precision::default_precision(),
             target_tol: super::default_logdet_tol(),
             max_probes: 64,
-            max_steps: 0,
+            max_steps: super::default_max_steps(),
         }
     }
 }
@@ -149,19 +152,55 @@ fn slq_fixed(
     Ok(assemble(&blocks, opts, nh, opts.probes, pc.map(|p| p.logdet()).unwrap_or(0.0)))
 }
 
-/// Incremental-budget path: the probe matrix is drawn once at `max_probes`
-/// width (`ProbeSet` draws column-by-column, so the first j columns are
-/// identical for any width >= j — growing the budget never redraws earlier
-/// probes), then consumed in chunks. After each chunk the moment-matched
-/// interval ([`super::confidence`]) is re-synthesized from all evidence so
-/// far; the loop stops once its half-width clears `tol` — never before 2
-/// probes, since a 1-probe interval is infinite by construction
-/// ([`crate::util::stats::std_err`]).
+/// One retained probe block of the two-axis adaptive driver: the live
+/// Lanczos session plus the original probe columns (kept verbatim for the
+/// deferred derivative pass — reconstructing them from the normalized
+/// basis would not be bitwise faithful).
+struct SessionBlock {
+    zblk: Mat,
+    session: LanczosSession,
+}
+
+/// Ceiling of the adaptive step/degree axis: `max_steps` when set
+/// (clamped to `[start, hi]`), else auto — `2 × start` (still capped at
+/// `hi`, which is `n` for Lanczos). `cap == start` means the axis is
+/// closed from the outset (the probes-only driver).
+pub(super) fn step_axis_cap(start: usize, max_steps: usize, hi: usize) -> usize {
+    match max_steps {
+        0 => (2 * start).min(hi),
+        m => m.clamp(start, hi),
+    }
+}
+
+/// Next step budget on the step axis: 1.5× growth, at least +1, capped.
+pub(super) fn next_step_budget(cur: usize, cap: usize) -> usize {
+    (cur + (cur / 2).max(1)).min(cap)
+}
+
+/// Two-axis incremental-budget path. The probe matrix is drawn once at
+/// `max_probes` width (`ProbeSet` draws column-by-column, so the first j
+/// columns are identical for any width >= j — growing the budget never
+/// redraws earlier probes) and consumed in chunks, each chunk's blocks
+/// retained as live [`LanczosSession`]s. After each budget change the
+/// interval half-width is split into its Monte-Carlo and truncation
+/// components ([`confidence::half_width_parts`]) and the dominant axis
+/// grows: **probes** when the Student-t term dominates (chunk schedule:
+/// 2 first — the minimum yielding a finite interval — then
+/// `(done/2).clamp(1, block_size)`), **steps** when the truncation term
+/// does (`extend()` on every retained session, 1.5× growth up to
+/// [`step_axis_cap`]). The loop stops once the half-width clears `tol` —
+/// never before 2 probes — or both axes are exhausted. An extension that
+/// advances no column (every column terminally broke down) closes the
+/// step axis.
 ///
-/// Chunk schedule: 2 probes first (the minimum that yields a finite
-/// interval), then `(done/2).clamp(1, block_size)` — geometric enough to
-/// amortize, never overshooting a just-cleared tolerance by more than one
-/// block width.
+/// Because `extend` is bit-identical to a from-scratch run at the final
+/// step count and probe chunks never redraw, the returned estimate
+/// (value, per-probe quadratures, gradients, `mvms`, budgets — not
+/// `block_applies`, whose amortization depends on the chunk partition)
+/// is **bitwise equal** to a fixed-budget run at
+/// `(probes: probes_used, steps: steps_used)`. Gradients are deferred to
+/// one pass per retained block at the final budget, accumulated in probe
+/// order exactly like the fixed path.
 fn slq_adaptive(
     op: &dyn KernelOp,
     pc: Option<&dyn Preconditioner>,
@@ -171,32 +210,205 @@ fn slq_adaptive(
     let n = op.n();
     let nh = op.num_hypers();
     let max_probes = opts.max_probes.max(2);
-    let steps = match opts.max_steps {
-        0 => opts.steps,
-        m => opts.steps.min(m),
-    }
-    .min(n)
-    .max(1);
+    let start_steps = opts.steps.min(n).max(1);
+    let step_cap = step_axis_cap(start_steps, opts.max_steps, n);
     let probes = ProbeSet::new(n, max_probes, opts.kind, opts.seed);
     let z = probes.as_mat();
-    let offset = pc.map(|p| p.logdet()).unwrap_or(0.0);
-    let mut blocks: Vec<PerBlock> = Vec::new();
+    let ld_p = pc.map(|p| p.logdet());
+    let offset = ld_p.unwrap_or(0.0);
+    let pop = pc.map(|p| PreconditionedOp::new(op, p));
+    let mut blocks: Vec<SessionBlock> = Vec::new();
     let mut done = 0usize;
+    let mut steps = start_steps;
+    let mut step_axis_open = step_cap > steps;
     loop {
+        // Grow the probe axis (also the entry path: the 2-probe seed).
         let chunk = if done == 0 {
             2.min(max_probes)
         } else {
             (done / 2).clamp(1, opts.block_size.max(1)).min(max_probes - done)
         };
-        for r in run_blocks(op, pc, opts, &z, done, chunk, steps, nh) {
-            blocks.push(r?);
-        }
+        let part = BlockPartition::new(chunk, opts.block_size);
+        let cur_steps = steps;
+        blocks.extend(parallel::par_map(part.nblocks, opts.threads, |bi| {
+            let (j0, w) = part.range(bi);
+            let zblk = z.sub_cols(done + j0, w);
+            let mut session = LanczosSession::new(&zblk);
+            match &pop {
+                Some(pop) => session.extend(pop, cur_steps, opts.precision),
+                None => session.extend(op, cur_steps, opts.precision),
+            }
+            SessionBlock { zblk, session }
+        }));
         done += chunk;
-        let est = assemble(&blocks, opts, nh, done, offset);
-        if (done >= 2 && est.interval.half_width() <= tol) || done >= max_probes {
-            return Ok(est);
+        // Deepen the step axis while the truncation term dominates; fall
+        // through to grow probes once the Monte-Carlo term does.
+        loop {
+            let (per_probe, probe_ev) = eval_sessions(&blocks, ld_p)?;
+            let probe_view =
+                SpectralEvidence::Lanczos { probes: probe_ev, offset, resume: None };
+            let (mc, trunc) = confidence::half_width_parts(
+                &per_probe,
+                &probe_view,
+                confidence::DEFAULT_LEVEL,
+            );
+            let probe_room = done < max_probes;
+            if (done >= 2 && mc + trunc <= tol) || (!probe_room && !step_axis_open) {
+                let probe_ev = match probe_view {
+                    SpectralEvidence::Lanczos { probes, .. } => probes,
+                    _ => unreachable!(),
+                };
+                return assemble_sessions(op, pc, opts, nh, blocks, per_probe, probe_ev, offset);
+            }
+            if step_axis_open && (trunc > mc || !probe_room) {
+                let target = next_step_budget(steps, step_cap);
+                let before: usize = blocks.iter().map(|b| b.session.total_steps()).sum();
+                extend_blocks(&mut blocks, op, &pop, target, opts);
+                let after: usize = blocks.iter().map(|b| b.session.total_steps()).sum();
+                if after == before {
+                    // Every column terminally broke down: the axis is dead.
+                    step_axis_open = false;
+                } else {
+                    steps = target;
+                    step_axis_open = steps < step_cap;
+                }
+                continue;
+            }
+            break;
         }
     }
+}
+
+/// Extend every retained session to `target` steps, fanned across the
+/// worker pool (sessions are independent, so the schedule cannot change
+/// any bit of any column).
+fn extend_blocks(
+    blocks: &mut [SessionBlock],
+    op: &dyn KernelOp,
+    pop: &Option<PreconditionedOp>,
+    target: usize,
+    opts: &SlqOptions,
+) {
+    let slots: Vec<std::sync::Mutex<&mut SessionBlock>> =
+        blocks.iter_mut().map(std::sync::Mutex::new).collect();
+    parallel::par_map(slots.len(), opts.threads, |i| {
+        let mut slot = slots[i].lock().expect("session slot");
+        match pop {
+            Some(pop) => slot.session.extend(pop, target, opts.precision),
+            None => slot.session.extend(op, target, opts.precision),
+        }
+    });
+}
+
+/// Read per-probe quadratures + evidence off the retained sessions, in
+/// probe order — the same arithmetic `run_blocks` applies to frozen
+/// results, so re-evaluating after an `extend` stays bitwise faithful to
+/// a from-scratch run at the current budget.
+fn eval_sessions(
+    blocks: &[SessionBlock],
+    ld_p: Option<f64>,
+) -> Result<(Vec<f64>, Vec<LanczosProbe>)> {
+    let mut per_probe = Vec::new();
+    let mut probe_ev = Vec::new();
+    for b in blocks {
+        for c in 0..b.session.num_cols() {
+            let col = b.session.col(c);
+            let znorm2 = col.znorm() * col.znorm();
+            let q = lanczos_quadrature(col.alphas(), col.betas(), znorm2, |lam| {
+                lam.max(1e-300).ln()
+            })?;
+            per_probe.push(match ld_p {
+                Some(ld) => q + ld,
+                None => q,
+            });
+            probe_ev.push(LanczosProbe {
+                alphas: col.alphas().to_vec(),
+                betas: col.betas().to_vec(),
+                znorm2,
+            });
+        }
+    }
+    Ok((per_probe, probe_ev))
+}
+
+/// Final assembly of the two-axis driver: deferred derivative pass (one
+/// per retained block, probe-order accumulation — bitwise the fixed
+/// path's arithmetic), MVM accounting off the sessions, and the evidence
+/// carrying **resume handles** so a caller can keep extending where the
+/// driver stopped.
+#[allow(clippy::too_many_arguments)]
+fn assemble_sessions(
+    op: &dyn KernelOp,
+    pc: Option<&dyn Preconditioner>,
+    opts: &SlqOptions,
+    nh: usize,
+    blocks: Vec<SessionBlock>,
+    per_probe: Vec<f64>,
+    probe_ev: Vec<LanczosProbe>,
+    offset: f64,
+) -> Result<LogdetEstimate> {
+    let probes_used = per_probe.len();
+    let mut grad = vec![0.0; if opts.grads { nh } else { 0 }];
+    let mut mvms: usize = blocks.iter().map(|b| b.session.mvms()).sum();
+    let mut block_applies: usize =
+        blocks.iter().map(|b| b.session.block_applies()).sum();
+    if opts.grads {
+        let terms: Vec<Vec<Vec<f64>>> =
+            parallel::par_map(blocks.len(), opts.threads, |bi| {
+                let b = &blocks[bi];
+                let vblk;
+                let vref = match pc {
+                    Some(p) => {
+                        vblk = p.apply_inv_sqrt_mat(&b.zblk);
+                        &vblk
+                    }
+                    None => &b.zblk,
+                };
+                let dks = op.apply_grad_all_mat(vref);
+                (0..b.session.num_cols())
+                    .map(|c| {
+                        let g = b.session.col(c).solve_e1();
+                        let u = match pc {
+                            Some(p) => p.apply_inv_sqrt_vec(&g),
+                            None => g,
+                        };
+                        dks.iter().map(|dk| dk.col_dot(c, &u)).collect()
+                    })
+                    .collect()
+            });
+        for (b, block_terms) in blocks.iter().zip(&terms) {
+            mvms += nh * b.session.num_cols();
+            block_applies += nh;
+            for gt in block_terms {
+                for (gi, t) in grad.iter_mut().zip(gt) {
+                    *gi += t;
+                }
+            }
+        }
+        for gi in grad.iter_mut() {
+            *gi /= probes_used as f64;
+        }
+    }
+    let (value, std_err) = combine(&per_probe);
+    let steps_used = probe_ev.iter().map(|p| p.alphas.len()).max().unwrap_or(0);
+    let resume = Some(std::sync::Arc::new(
+        blocks.into_iter().map(|b| b.session).collect::<Vec<_>>(),
+    ));
+    let evidence = SpectralEvidence::Lanczos { probes: probe_ev, offset, resume };
+    let interval =
+        confidence::interval_from_parts(value, &per_probe, &evidence, confidence::DEFAULT_LEVEL);
+    Ok(LogdetEstimate {
+        value,
+        grad,
+        std_err,
+        per_probe,
+        mvms,
+        block_applies,
+        evidence,
+        interval,
+        probes_used,
+        steps_used,
+    })
 }
 
 /// Run the blocked Lanczos + quadrature (+ optional derivative) pass over
@@ -308,7 +520,7 @@ fn assemble(
     }
     let (value, std_err) = combine(&per_probe);
     let steps_used = probe_ev.iter().map(|p| p.alphas.len()).max().unwrap_or(0);
-    let evidence = SpectralEvidence::Lanczos { probes: probe_ev, offset };
+    let evidence = SpectralEvidence::Lanczos { probes: probe_ev, offset, resume: None };
     let interval =
         confidence::interval_from_parts(value, &per_probe, &evidence, confidence::DEFAULT_LEVEL);
     LogdetEstimate {
@@ -384,7 +596,7 @@ pub fn slq_trace_fn_ev<O: LinOp + ?Sized>(
     }
     let (value, std_err) = combine(&per_probe);
     let steps_used = probe_ev.iter().map(|p| p.alphas.len()).max().unwrap_or(0);
-    let evidence = SpectralEvidence::Lanczos { probes: probe_ev, offset: 0.0 };
+    let evidence = SpectralEvidence::Lanczos { probes: probe_ev, offset: 0.0, resume: None };
     let interval =
         confidence::interval_from_parts(value, &per_probe, &evidence, confidence::DEFAULT_LEVEL);
     Ok(LogdetEstimate {
@@ -750,8 +962,11 @@ mod tests {
         assert!(est.interval.half_width().is_finite());
     }
 
-    /// Adaptive probe growth extends the same probe sequence: the first j
-    /// per-probe quadrature values match the fixed-budget run bit-for-bit.
+    /// The two-axis driver's master invariant: whatever budgets it lands
+    /// on, the final estimate is bitwise equal to a fixed-budget run at
+    /// `(probes: probes_used, steps: steps_used)` — probe growth extends
+    /// the same probe sequence and session extension is bit-identical to
+    /// from-scratch Lanczos, so the adaptive path cannot drift.
     #[test]
     fn adaptive_probes_extend_fixed_sequence() {
         let o = op(70, 9);
@@ -760,7 +975,7 @@ mod tests {
             &SlqOptions {
                 steps: 20,
                 probes: 4,
-                grads: false,
+                grads: true,
                 seed: 11,
                 block_size: 1,
                 target_tol: Some(1e-9),
@@ -772,18 +987,81 @@ mod tests {
         let fixed = slq_logdet(
             &o,
             &SlqOptions {
-                steps: 20,
+                steps: adaptive.steps_used,
                 probes: adaptive.probes_used,
-                grads: false,
+                grads: true,
                 seed: 11,
                 block_size: 1,
                 ..Default::default()
             },
         )
         .unwrap();
+        assert_eq!(adaptive.per_probe.len(), fixed.per_probe.len());
         for (a, b) in adaptive.per_probe.iter().zip(&fixed.per_probe) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+        assert_eq!(adaptive.value.to_bits(), fixed.value.to_bits());
+        for (a, b) in adaptive.grad.iter().zip(&fixed.grad) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(adaptive.mvms, fixed.mvms);
+        assert_eq!(adaptive.steps_used, fixed.steps_used);
+    }
+
+    /// With a tight tolerance the step axis actually engages: the driver
+    /// extends the retained sessions past the starting budget (up to the
+    /// auto cap of 2x steps), and the final estimate carries resume
+    /// handles that can be extended further.
+    #[test]
+    fn two_axis_driver_grows_steps_and_carries_resume_handles() {
+        let o = op(80, 45);
+        let est = slq_logdet(
+            &o,
+            &SlqOptions {
+                steps: 6,
+                probes: 4,
+                grads: false,
+                seed: 13,
+                target_tol: Some(1e-9),
+                max_probes: 8,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // Truncation at 6 steps dwarfs 1e-9, so the axis must have grown.
+        assert!(
+            est.steps_used > 6,
+            "step axis never engaged: steps_used = {}",
+            est.steps_used
+        );
+        assert!(est.steps_used <= 12, "auto cap 2x: {}", est.steps_used);
+        let sessions = match &est.evidence {
+            SpectralEvidence::Lanczos { resume: Some(s), .. } => s,
+            other => panic!("adaptive estimate must carry resume handles, got {other:?}"),
+        };
+        let total_cols: usize = sessions.iter().map(|s| s.num_cols()).sum();
+        assert_eq!(total_cols, est.probes_used);
+        assert_eq!(
+            sessions.iter().map(|s| s.mvms()).sum::<usize>(),
+            est.mvms,
+            "session MVM accounting must match the estimate"
+        );
+        // max_steps == steps is the probes-only escape hatch: no growth.
+        let flat = slq_logdet(
+            &o,
+            &SlqOptions {
+                steps: 6,
+                probes: 4,
+                grads: false,
+                seed: 13,
+                target_tol: Some(1e-9),
+                max_probes: 8,
+                max_steps: 6,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(flat.steps_used, 6);
     }
 
     /// Evidence retention: per-probe quadratures are recomputable from the
@@ -797,7 +1075,7 @@ mod tests {
         )
         .unwrap();
         match &est.evidence {
-            SpectralEvidence::Lanczos { probes, offset } => {
+            SpectralEvidence::Lanczos { probes, offset, .. } => {
                 assert_eq!(probes.len(), est.per_probe.len());
                 for (p, q) in probes.iter().zip(&est.per_probe) {
                     let r = lanczos_quadrature(&p.alphas, &p.betas, p.znorm2, |lam| {

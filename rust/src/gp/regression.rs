@@ -18,8 +18,9 @@ use crate::opt::lbfgs::{lbfgs, LbfgsOptions};
 use crate::opt::OptResult;
 use crate::operators::{KernelOp, LinOp};
 use crate::linalg::dense::Mat;
+use crate::linalg::pchol::{pivoted_cholesky, PivotedCholesky};
 use crate::solvers::{
-    build_preconditioner, pcg_block, pcg_with_guess, BlockCgInfo, CgInfo, CgOptions,
+    pcg_block, pcg_with_guess, precond_from_factor, BlockCgInfo, CgInfo, CgOptions,
     PivCholPrecond, PrecondOptions, Preconditioner,
 };
 use crate::util::blocks::BlockPartition;
@@ -115,6 +116,13 @@ pub struct GpRegression<O: PredictiveOp> {
     /// Preconditioner cache: the options it was built under, plus the
     /// factor (`None` when building was skipped or impossible).
     pc_cache: Option<(PrecondOptions, Option<PivCholPrecond>)>,
+    /// The pivoted-Cholesky factor behind `pc_cache`, retained together
+    /// with the `rel_tol` it was grown under, so a later rank bump (the
+    /// adaptive `--logdet-tol` growth loop) appends pivots — one kernel
+    /// MVM each — instead of refactorizing from scratch. Invalidated on
+    /// every hyper change: appending new-kernel columns to an old-kernel
+    /// factor would silently mix factorizations.
+    pchol_cache: Option<(f64, PivotedCholesky)>,
 }
 
 impl<O: PredictiveOp> GpRegression<O> {
@@ -131,6 +139,7 @@ impl<O: PredictiveOp> GpRegression<O> {
             last_logdet: None,
             alpha_cache: None,
             pc_cache: None,
+            pchol_cache: None,
         }
     }
 
@@ -143,20 +152,57 @@ impl<O: PredictiveOp> GpRegression<O> {
     }
 
     /// (Re)build the pivoted-Cholesky preconditioner if the knob asks for
-    /// one and the cache is stale (hypers or options changed).
+    /// one and the cache is stale (hypers or options changed). When the
+    /// retained factor sits at or below the requested rank (and was grown
+    /// under the same `rel_tol`), new pivots are **appended** to it —
+    /// bitwise the factor a from-scratch run at the new rank would
+    /// produce, at the incremental MVM cost only; otherwise the factor is
+    /// rebuilt. Only the cheap k×k eigendecomposition is redone either
+    /// way.
     fn refresh_precond(&mut self) {
         let popts = self.cg.precond;
         if popts.rank == 0 {
             self.pc_cache = None;
+            self.pchol_cache = None;
             return;
         }
         let stale = match &self.pc_cache {
             Some((cached, _)) => *cached != popts,
             None => true,
         };
-        if stale {
-            self.pc_cache = Some((popts, build_preconditioner(&self.op, popts)));
+        if !stale {
+            return;
         }
+        let s2 = self.op.noise_var();
+        let pc = if !(s2 > 0.0) {
+            self.pchol_cache = None;
+            eprintln!(
+                "precond: operator has no positive noise floor; solves run unpreconditioned"
+            );
+            None
+        } else {
+            let factor = match self.pchol_cache.take() {
+                Some((tol, mut f)) if tol == popts.rel_tol && f.rank() <= popts.rank => {
+                    f.grow(&self.op, popts.rank, popts.rel_tol);
+                    Some(f)
+                }
+                _ => pivoted_cholesky(&self.op, popts.rank, popts.rel_tol),
+            };
+            match factor {
+                Some(f) => {
+                    let pc = precond_from_factor(&f, s2);
+                    self.pchol_cache = Some((popts.rel_tol, f));
+                    Some(pc)
+                }
+                None => {
+                    eprintln!(
+                        "precond: operator does not expose diag(); solves run unpreconditioned"
+                    );
+                    None
+                }
+            }
+        };
+        self.pc_cache = Some((popts, pc));
     }
 
     /// The cached preconditioner as a trait object (None when off).
@@ -193,6 +239,10 @@ impl<O: PredictiveOp> GpRegression<O> {
         if !self.reuse_precond_across_steps {
             self.pc_cache = None;
         }
+        // The growth frontier is tied to the current kernel regardless:
+        // a later rank bump must refactorize under the new hypers, never
+        // append new-kernel pivots to an old-kernel factor.
+        self.pchol_cache = None;
     }
 
     /// Adaptive preconditioner rank (the `--logdet-tol` satellite of the
@@ -854,10 +904,56 @@ mod tests {
             err <= 1e-4 || grown == 80,
             "growth stopped at rank {grown} with trace error {err}"
         );
-        // The factor now survives a hyper step instead of being rebuilt.
+        // The doubling loop appended pivots to one retained factor instead
+        // of refactorizing at every bump, and the grown factor matches a
+        // from-scratch factorization at the final rank bitwise.
+        let (_, factor) = gp.pchol_cache.as_ref().expect("growth retains the factor");
+        let scratch = pivoted_cholesky(&gp.op, factor.rank(), 0.0).unwrap();
+        assert_eq!(factor.pivots, scratch.pivots);
+        for (a, b) in factor.l.data.iter().zip(&scratch.l.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // The preconditioner now survives a hyper step instead of being
+        // rebuilt — but the growth frontier does not (new kernel).
         gp.set_hypers(&[(0.4f64).ln(), 0.0, (0.06f64).ln()]);
-        assert!(gp.pc_cache.is_some(), "reuse flag should keep the factor");
+        assert!(gp.pc_cache.is_some(), "reuse flag should keep the preconditioner");
+        assert!(gp.pchol_cache.is_none(), "hyper change must drop the frontier");
         assert_eq!(gp.cg.precond.rank, grown);
+    }
+
+    /// White-box: a rank bump appends to the retained factor rather than
+    /// refactorizing. The factor's cumulative MVM counter is inflated by
+    /// hand before the bump — a rebuild would reset it, an append carries
+    /// it forward — and the appended factor still matches a from-scratch
+    /// run bitwise. Lowering the rank (or changing `rel_tol`) falls back
+    /// to a fresh factorization.
+    #[test]
+    fn refresh_precond_appends_to_retained_factor() {
+        let mut gp = setup(60, 23);
+        gp.cg.precond = crate::solvers::PrecondOptions { rank: 5, rel_tol: 0.0 };
+        gp.refresh_precond();
+        let before_pivots = gp.pchol_cache.as_ref().unwrap().1.pivots.clone();
+        assert_eq!(before_pivots.len(), 5);
+        gp.pchol_cache.as_mut().unwrap().1.mvms += 1000;
+        gp.cg.precond.rank = 12;
+        gp.refresh_precond();
+        {
+            let (_, f) = gp.pchol_cache.as_ref().unwrap();
+            assert!(f.mvms >= 1000, "factor was rebuilt, not grown");
+            assert_eq!(f.rank(), 12);
+            assert_eq!(&f.pivots[..5], &before_pivots[..]);
+            let scratch = pivoted_cholesky(&gp.op, 12, 0.0).unwrap();
+            assert_eq!(f.pivots, scratch.pivots);
+            for (a, b) in f.l.data.iter().zip(&scratch.l.data) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        // Shrinking the rank cannot truncate a grown factor — it rebuilds.
+        gp.cg.precond.rank = 3;
+        gp.refresh_precond();
+        let (_, f) = gp.pchol_cache.as_ref().unwrap();
+        assert!(f.mvms < 1000, "shrink must refactorize from scratch");
+        assert_eq!(f.rank(), 3);
     }
 
     #[test]

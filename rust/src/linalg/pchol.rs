@@ -18,7 +18,12 @@ use super::dense::Mat;
 use crate::operators::KernelOp;
 use crate::util::stats::axpy;
 
-/// Result of a rank-k pivoted Cholesky run.
+/// Result of a rank-k pivoted Cholesky run. Retains its Schur-complement
+/// frontier, so [`grow`](Self::grow) can append further pivots later
+/// without re-running (or re-paying the MVMs of) the ones already taken —
+/// the trajectory is bitwise the same factorization a from-scratch run at
+/// the larger rank would produce, because greedy pivot selection only
+/// reads the current Schur diagonal.
 pub struct PivotedCholesky {
     /// The `n x k` factor: `K ≈ L Lᵀ` (noise-free part of the operator).
     pub l: Mat,
@@ -29,84 +34,119 @@ pub struct PivotedCholesky {
     /// Remaining `tr(K − L Lᵀ)` when the run stopped (the a-posteriori
     /// approximation-error bound in the trace norm).
     pub trace_error: f64,
-    /// Operator MVMs consumed (one per pivot).
+    /// Operator MVMs consumed (one per pivot, cumulative across grows).
     pub mvms: usize,
+    /// Factor columns in pivot order (the rows of `l`, kept separately so
+    /// `grow` appends without reshaping the public matrix mid-run).
+    cols: Vec<Vec<f64>>,
+    /// Remaining Schur-complement diagonal — the growth frontier. The
+    /// sequential per-pivot downdate-and-clamp is order-sensitive, so this
+    /// is retained verbatim rather than reconstructed from `l`.
+    schur_diag: Vec<f64>,
+    /// Below this pivot size the Schur complement is numerically exhausted
+    /// and further columns would amplify rounding noise.
+    pivot_floor: f64,
+}
+
+impl PivotedCholesky {
+    /// Rank-0 state: the Schur diagonal is the (noise-free) kernel
+    /// diagonal and no pivots are taken. `None` when the operator cannot
+    /// supply its diagonal.
+    fn empty(op: &dyn KernelOp) -> Option<Self> {
+        let s2 = op.noise_var();
+        let d: Vec<f64> = op.diag()?.iter().map(|&v| (v - s2).max(0.0)).collect();
+        let initial_trace: f64 = d.iter().sum();
+        let pivot_floor = f64::EPSILON * d.iter().fold(0.0f64, |a, &b| a.max(b));
+        Some(PivotedCholesky {
+            l: Mat::zeros(op.n(), 0),
+            pivots: Vec::new(),
+            initial_trace,
+            trace_error: initial_trace,
+            mvms: 0,
+            cols: Vec::new(),
+            schur_diag: d,
+            pivot_floor,
+        })
+    }
+
+    /// Current rank (number of pivot columns taken).
+    pub fn rank(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Append greedy pivots until the **total** rank reaches `max_rank`,
+    /// the remaining trace drops below `rel_tol * initial_trace`, or the
+    /// Schur complement is numerically exhausted. One MVM per appended
+    /// pivot; a call at or below the current rank (or after exhaustion)
+    /// spends nothing. Growing `r1 → r2` is bitwise identical to a fresh
+    /// factorization at rank `r2` with the same stopping tolerance.
+    pub fn grow(&mut self, op: &dyn KernelOp, max_rank: usize, rel_tol: f64) {
+        let n = op.n();
+        let s2 = op.noise_var();
+        let mut e = vec![0.0; n];
+        let floor = rel_tol.max(0.0) * self.initial_trace;
+        while self.cols.len() < max_rank.min(n) {
+            if self.trace_error <= floor {
+                break;
+            }
+            // Greedy pivot: largest remaining Schur diagonal.
+            let (p, &dp) = self
+                .schur_diag
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                .expect("n > 0");
+            if dp <= self.pivot_floor || !dp.is_finite() {
+                break;
+            }
+            // Column K e_p via one MVM on K̃ (only entry p carries the noise).
+            e[p] = 1.0;
+            let mut c = op.apply_vec(&e);
+            e[p] = 0.0;
+            c[p] -= s2;
+            // Schur update against the columns already taken.
+            for lj in &self.cols {
+                axpy(-lj[p], lj, &mut c);
+            }
+            let scale = 1.0 / dp.sqrt();
+            for v in c.iter_mut() {
+                *v *= scale;
+            }
+            // Diagonal downdate; clamp tiny negatives from cancellation.
+            for (di, ci) in self.schur_diag.iter_mut().zip(&c) {
+                *di = (*di - ci * ci).max(0.0);
+            }
+            self.schur_diag[p] = 0.0;
+            self.trace_error = self.schur_diag.iter().sum();
+            self.cols.push(c);
+            self.pivots.push(p);
+            self.mvms += 1;
+        }
+        let k = self.cols.len();
+        let mut l = Mat::zeros(n, k);
+        for (j, c) in self.cols.iter().enumerate() {
+            l.set_col(j, c);
+        }
+        self.l = l;
+    }
 }
 
 /// Greedy pivoted Cholesky of the noise-free kernel part of `op`, stopping
 /// at `max_rank` columns or when the remaining trace drops below
 /// `rel_tol * initial_trace`. Returns `None` when the operator cannot
 /// supply its diagonal ([`KernelOp::diag`] is `None`) — the caller should
-/// fall back to unpreconditioned solves.
+/// fall back to unpreconditioned solves. Implemented as a rank-0 state
+/// plus one [`PivotedCholesky::grow`]; callers that may need a larger
+/// rank later should keep the returned value and `grow` it instead of
+/// refactorizing.
 pub fn pivoted_cholesky(
     op: &dyn KernelOp,
     max_rank: usize,
     rel_tol: f64,
 ) -> Option<PivotedCholesky> {
-    let n = op.n();
-    let s2 = op.noise_var();
-    // Schur-complement diagonal of the noise-free part, updated in place.
-    let mut d: Vec<f64> = op
-        .diag()?
-        .iter()
-        .map(|&v| (v - s2).max(0.0))
-        .collect();
-    let initial_trace: f64 = d.iter().sum();
-    let mut cols: Vec<Vec<f64>> = Vec::new();
-    let mut pivots: Vec<usize> = Vec::new();
-    let mut e = vec![0.0; n];
-    let mut trace = initial_trace;
-    let floor = rel_tol.max(0.0) * initial_trace;
-    // Below this pivot size the Schur complement is numerically exhausted
-    // and further columns would amplify rounding noise.
-    let pivot_floor = f64::EPSILON * d.iter().fold(0.0f64, |a, &b| a.max(b));
-    for _ in 0..max_rank.min(n) {
-        if trace <= floor {
-            break;
-        }
-        // Greedy pivot: largest remaining Schur diagonal.
-        let (p, &dp) = d
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
-            .expect("n > 0");
-        if dp <= pivot_floor || !dp.is_finite() {
-            break;
-        }
-        // Column K e_p via one MVM on K̃ (only entry p carries the noise).
-        e[p] = 1.0;
-        let mut c = op.apply_vec(&e);
-        e[p] = 0.0;
-        c[p] -= s2;
-        // Schur update against the columns already taken.
-        for lj in &cols {
-            axpy(-lj[p], lj, &mut c);
-        }
-        let scale = 1.0 / dp.sqrt();
-        for v in c.iter_mut() {
-            *v *= scale;
-        }
-        // Diagonal downdate; clamp tiny negatives from cancellation.
-        for (di, ci) in d.iter_mut().zip(&c) {
-            *di = (*di - ci * ci).max(0.0);
-        }
-        d[p] = 0.0;
-        trace = d.iter().sum();
-        cols.push(c);
-        pivots.push(p);
-    }
-    let k = cols.len();
-    let mut l = Mat::zeros(n, k);
-    for (j, c) in cols.iter().enumerate() {
-        l.set_col(j, c);
-    }
-    Some(PivotedCholesky {
-        l,
-        pivots,
-        initial_trace,
-        trace_error: trace,
-        mvms: k,
-    })
+    let mut pc = PivotedCholesky::empty(op)?;
+    pc.grow(op, max_rank, rel_tol);
+    Some(pc)
 }
 
 #[cfg(test)]
@@ -173,6 +213,35 @@ mod tests {
         let pc = pivoted_cholesky(&op, 60, 1e-2).unwrap();
         assert!(pc.l.cols < 30, "took {} columns", pc.l.cols);
         assert!(pc.trace_error <= 1e-2 * pc.initial_trace + 1e-12);
+    }
+
+    /// Growing a retained factor `r1 → r2` is bitwise identical to a
+    /// from-scratch factorization at rank `r2`: same pivots, same factor
+    /// entries, same trace bound — and the appended run pays only the
+    /// incremental MVMs while its cumulative count matches.
+    #[test]
+    fn grow_matches_from_scratch_bitwise() {
+        let op = rbf_op(50, 0.2, 6);
+        let mut grown = pivoted_cholesky(&op, 4, 0.0).unwrap();
+        assert_eq!(grown.rank(), 4);
+        assert_eq!(grown.mvms, 4);
+        grown.grow(&op, 9, 0.0);
+        grown.grow(&op, 16, 0.0);
+        let scratch = pivoted_cholesky(&op, 16, 0.0).unwrap();
+        assert_eq!(grown.rank(), scratch.rank());
+        assert_eq!(grown.pivots, scratch.pivots);
+        assert_eq!(grown.mvms, scratch.mvms);
+        assert_eq!(grown.trace_error.to_bits(), scratch.trace_error.to_bits());
+        assert_eq!((grown.l.rows, grown.l.cols), (scratch.l.rows, scratch.l.cols));
+        for (a, b) in grown.l.data.iter().zip(&scratch.l.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Growing to the current rank or below appends nothing.
+        let before = grown.mvms;
+        grown.grow(&op, 16, 0.0);
+        grown.grow(&op, 3, 0.0);
+        assert_eq!(grown.mvms, before);
+        assert_eq!(grown.rank(), 16);
     }
 
     /// Pivots are distinct and greedy: the first pivot has the largest

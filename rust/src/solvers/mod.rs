@@ -117,7 +117,8 @@ pub mod precond;
 pub use block::{cg_batch, cg_block, pcg_block, BlockCgInfo};
 pub use cg::{cg, cg_with_guess, pcg, pcg_with_guess, CgInfo, CgOptions};
 pub use precond::{
-    build_preconditioner, PivCholPrecond, PrecondOptions, PreconditionedOp, Preconditioner,
+    build_preconditioner, precond_from_factor, PivCholPrecond, PrecondOptions,
+    PreconditionedOp, Preconditioner,
 };
 
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -36,7 +36,7 @@
 
 use crate::linalg::dense::Mat;
 use crate::linalg::eigh::eigh;
-use crate::linalg::pchol::pivoted_cholesky;
+use crate::linalg::pchol::{pivoted_cholesky, PivotedCholesky};
 use crate::operators::{KernelOp, LinOp};
 
 /// Configuration knob for building a pivoted-Cholesky preconditioner —
@@ -255,9 +255,19 @@ pub fn build_preconditioner(
         );
         return None;
     };
-    let mut pc = PivCholPrecond::new(&pchol.l, s2);
+    Some(precond_from_factor(&pchol, s2))
+}
+
+/// Build a preconditioner directly from a retained pivoted-Cholesky
+/// factor, carrying its trace-error bound. This is the incremental
+/// rank-growth entry point: callers keep the [`PivotedCholesky`], call
+/// [`PivotedCholesky::grow`] to append pivots (one kernel MVM each), and
+/// rebuild only the cheap k×k eigendecomposition here — instead of
+/// refactorizing from scratch at every rank bump.
+pub fn precond_from_factor(pchol: &PivotedCholesky, sigma2: f64) -> PivCholPrecond {
+    let mut pc = PivCholPrecond::new(&pchol.l, sigma2);
     pc.trace_error = pchol.trace_error;
-    Some(pc)
+    pc
 }
 
 /// The symmetric split `P^{-1/2} K̃ P^{-1/2}` as a [`LinOp`] — what the

@@ -1479,6 +1479,16 @@ fn prop_adaptive_knobs_inert_when_tol_unset() {
                         &a,
                         &b,
                     );
+                    // Fixed-budget paths never carry session resume
+                    // handles — only the two-axis adaptive driver does.
+                    for est in [&a, &b] {
+                        match &est.evidence {
+                            gpsld::estimators::SpectralEvidence::Lanczos {
+                                resume, ..
+                            } => assert!(resume.is_none(), "{name} fixed slq resume"),
+                            other => panic!("slq evidence variant: {other:?}"),
+                        }
+                    }
                     let cheb_fixed = ChebOptions {
                         degree: 25,
                         probes: 8,
@@ -1499,6 +1509,14 @@ fn prop_adaptive_knobs_inert_when_tol_unset() {
                         &a,
                         &b,
                     );
+                    for est in [&a, &b] {
+                        match &est.evidence {
+                            gpsld::estimators::SpectralEvidence::Chebyshev {
+                                resume, ..
+                            } => assert!(resume.is_none(), "{name} fixed cheb resume"),
+                            other => panic!("cheb evidence variant: {other:?}"),
+                        }
+                    }
                 }
             }
         }
@@ -1641,8 +1659,8 @@ fn prop_evidence_invariant_across_threads_and_blocks() {
             .unwrap();
             match (&base_slq.evidence, &s.evidence) {
                 (
-                    SpectralEvidence::Lanczos { probes: pa, offset: oa },
-                    SpectralEvidence::Lanczos { probes: pb, offset: ob },
+                    SpectralEvidence::Lanczos { probes: pa, offset: oa, .. },
+                    SpectralEvidence::Lanczos { probes: pb, offset: ob, .. },
                 ) => {
                     assert_eq!(oa.to_bits(), ob.to_bits(), "slq offset bs={bs} t={threads}");
                     assert_eq!(pa.len(), pb.len(), "slq probe count bs={bs} t={threads}");
@@ -1684,8 +1702,8 @@ fn prop_evidence_invariant_across_threads_and_blocks() {
             .unwrap();
             match (&base_cheb.evidence, &c.evidence) {
                 (
-                    SpectralEvidence::Chebyshev { moments: ma, coeffs: ca, bracket: ba },
-                    SpectralEvidence::Chebyshev { moments: mb, coeffs: cb, bracket: bb },
+                    SpectralEvidence::Chebyshev { moments: ma, coeffs: ca, bracket: ba, .. },
+                    SpectralEvidence::Chebyshev { moments: mb, coeffs: cb, bracket: bb, .. },
                 ) => {
                     assert_eq!(ba.0.to_bits(), bb.0.to_bits(), "cheb bracket lo");
                     assert_eq!(ba.1.to_bits(), bb.1.to_bits(), "cheb bracket hi");
@@ -1954,5 +1972,264 @@ fn prop_coalesced_dispatch_bitwise_matches_solo() {
             fused_applies < solo_applies,
             "case {case}: applies {fused_applies} !< {solo_applies}"
         );
+    }
+}
+
+/// Property (resumable sessions): extending a retained Lanczos session in
+/// stages is bitwise identical — tridiagonals, norms, e1 solves, MVM
+/// accounting — to a from-scratch run at the final step count, for every
+/// operator type (including the preconditioned split operator), block
+/// widths {1, 3, 8}, and both MVM precisions. Chebyshev sessions carry
+/// the same invariant on their raw moments and weighted quadratures.
+#[test]
+fn prop_session_resume_bitwise_across_ops() {
+    use gpsld::estimators::chebyshev::{cheb_coeffs, ChebSession};
+    use gpsld::estimators::lanczos::LanczosSession;
+    use gpsld::estimators::probes::{ProbeKind, ProbeSet};
+
+    for_each_precision_op(&mut |name, op| {
+        let n = op.n();
+        for cols in [1usize, 3, 8] {
+            let z = ProbeSet::new(n, cols, ProbeKind::Rademacher, 900 + cols as u64).as_mat();
+            for prec in [Precision::F64, Precision::F32F64] {
+                let m = 11.min(n);
+                let mut staged = LanczosSession::new(&z);
+                staged.extend(op, 3.min(m), prec);
+                staged.extend(op, 7.min(m), prec);
+                staged.extend(op, m, prec);
+                let mut scratch = LanczosSession::new(&z);
+                scratch.extend(op, m, prec);
+                let tag = format!("{name} cols={cols} {prec:?}");
+                assert_eq!(staged.mvms(), scratch.mvms(), "{tag} mvms");
+                assert_eq!(staged.block_applies(), scratch.block_applies(), "{tag} applies");
+                for c in 0..cols {
+                    let (sc, fc) = (staged.col(c), scratch.col(c));
+                    assert_eq!(sc.znorm().to_bits(), fc.znorm().to_bits(), "{tag} znorm");
+                    assert_eq!(sc.alphas().len(), fc.alphas().len(), "{tag} col {c} len");
+                    for (a, b) in sc.alphas().iter().zip(fc.alphas()) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{tag} col {c} alpha");
+                    }
+                    for (a, b) in sc.betas().iter().zip(fc.betas()) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{tag} col {c} beta");
+                    }
+                    assert_eq!(sc.mvms(), fc.mvms(), "{tag} col {c} mvms");
+                    for (a, b) in sc.solve_e1().iter().zip(&fc.solve_e1()) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{tag} col {c} e1 solve");
+                    }
+                }
+            }
+        }
+    });
+
+    // Chebyshev sessions need a KernelOp (coupled derivative recurrences);
+    // dense + SKI cover both a dedicated-f32-panel op and a staged one.
+    let mut rng = Rng::new(910);
+    let n = 30;
+    let pts: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform_in(0.0, 3.0)]).collect();
+    let grid = Grid::covering(&pts, &[24], 0.1);
+    let ski = SkiOp::new(
+        &pts,
+        grid,
+        SeparableKernel::iso(Shape::Rbf, 1, 0.3, 1.0),
+        0.2,
+        InterpOrder::Cubic,
+        false,
+    );
+    let dense = DenseKernelOp::new(
+        pts.clone(),
+        Box::new(IsoKernel::new(Shape::Matern32, 1, 0.4, 1.0)),
+        0.25,
+    );
+    let bracket = (0.05, 40.0);
+    let coeffs = cheb_coeffs(|t| (2.5 + t).ln(), 14);
+    for (name, op) in [("dense", &dense as &dyn KernelOp), ("ski", &ski)] {
+        for cols in [1usize, 3] {
+            let z = ProbeSet::new(n, cols, ProbeKind::Rademacher, 920).as_mat();
+            for prec in [Precision::F64, Precision::F32F64] {
+                let mut staged = ChebSession::new(op, z.clone(), bracket, true, prec);
+                staged.extend(op, 5);
+                staged.extend(op, 14);
+                let mut scratch = ChebSession::new(op, z.clone(), bracket, true, prec);
+                scratch.extend(op, 14);
+                let tag = format!("{name} cheb cols={cols} {prec:?}");
+                assert_eq!(staged.mvms(), scratch.mvms(), "{tag} mvms");
+                for (ms, mf) in staged.moments().iter().zip(scratch.moments()) {
+                    for (a, b) in ms.iter().zip(mf) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{tag} moment");
+                    }
+                }
+                for (a, b) in staged.quads(&coeffs).iter().zip(&scratch.quads(&coeffs)) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{tag} quad");
+                }
+                for (gs, gf) in
+                    staged.grad_terms(&coeffs).iter().zip(&scratch.grad_terms(&coeffs))
+                {
+                    for (a, b) in gs.iter().zip(gf) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{tag} grad term");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Compare the two-axis adaptive estimate against a fixed from-scratch
+/// run at its final `(probes_used, steps_used)` budget — everything must
+/// match bitwise except `block_applies`, whose amortization depends on
+/// the adaptive chunk partition.
+fn assert_adaptive_pins_to_fixed(
+    name: &str,
+    adaptive: &gpsld::estimators::LogdetEstimate,
+    fixed: &gpsld::estimators::LogdetEstimate,
+) {
+    assert_eq!(adaptive.value.to_bits(), fixed.value.to_bits(), "{name} value");
+    assert_eq!(adaptive.std_err.to_bits(), fixed.std_err.to_bits(), "{name} std_err");
+    assert_eq!(adaptive.per_probe.len(), fixed.per_probe.len(), "{name} per_probe len");
+    for (a, b) in adaptive.per_probe.iter().zip(&fixed.per_probe) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{name} per_probe");
+    }
+    assert_eq!(adaptive.grad.len(), fixed.grad.len(), "{name} grad len");
+    for (a, b) in adaptive.grad.iter().zip(&fixed.grad) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{name} grad");
+    }
+    assert_eq!(adaptive.mvms, fixed.mvms, "{name} mvms");
+    assert_eq!(adaptive.probes_used, fixed.probes_used, "{name} probes_used");
+    assert_eq!(adaptive.steps_used, fixed.steps_used, "{name} steps_used");
+    assert_eq!(
+        adaptive.interval.lo.to_bits(),
+        fixed.interval.lo.to_bits(),
+        "{name} interval lo"
+    );
+    assert_eq!(
+        adaptive.interval.hi.to_bits(),
+        fixed.interval.hi.to_bits(),
+        "{name} interval hi"
+    );
+}
+
+/// Property (two-axis master pin): whatever `(probes_used, steps_used)`
+/// the two-axis adaptive driver lands on, a fixed-budget from-scratch run
+/// at exactly that budget reproduces the estimate bitwise — for dense and
+/// SKI operators, block sizes {1, 3, 8}, threads {1, 4}, both precisions,
+/// both estimators, and the preconditioned SLQ split. Growing budgets by
+/// extending retained sessions must be indistinguishable from having
+/// known the final budget all along.
+#[test]
+fn prop_two_axis_adaptive_pins_to_fixed_budget() {
+    use gpsld::estimators::chebyshev::{chebyshev_logdet, ChebOptions};
+    use gpsld::estimators::slq::{slq_logdet, slq_logdet_pc, SlqOptions};
+    use gpsld::solvers::{build_preconditioner, PrecondOptions, Preconditioner};
+    let mut rng = Rng::new(2800);
+    let n = 60;
+    let pts: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform_in(0.0, 3.0)]).collect();
+    let grid = Grid::covering(&pts, &[32], 0.1);
+    let ski = SkiOp::new(
+        &pts,
+        grid,
+        SeparableKernel::iso(Shape::Rbf, 1, 0.3, 1.0),
+        0.2,
+        InterpOrder::Cubic,
+        false,
+    );
+    let dense = DenseKernelOp::new(
+        pts.clone(),
+        Box::new(IsoKernel::new(Shape::Rbf, 1, 0.3, 1.0)),
+        0.2,
+    );
+    for (name, op) in [("dense", &dense as &dyn KernelOp), ("ski", &ski)] {
+        for bs in [1usize, 3, 8] {
+            for threads in [1usize, 4] {
+                for prec in [Precision::F64, Precision::F32F64] {
+                    let adaptive_opts = SlqOptions {
+                        steps: 6,
+                        probes: 3,
+                        seed: 17,
+                        block_size: bs,
+                        threads,
+                        precision: prec,
+                        target_tol: Some(1e-9), // unreachable: exhausts both axes
+                        max_probes: 7,
+                        max_steps: 0,
+                        ..Default::default()
+                    };
+                    let adaptive = slq_logdet(op, &adaptive_opts).unwrap();
+                    let fixed = slq_logdet(
+                        op,
+                        &SlqOptions {
+                            steps: adaptive.steps_used,
+                            probes: adaptive.probes_used,
+                            target_tol: None,
+                            ..adaptive_opts
+                        },
+                    )
+                    .unwrap();
+                    assert_adaptive_pins_to_fixed(
+                        &format!("{name} slq bs={bs} t={threads} {prec:?}"),
+                        &adaptive,
+                        &fixed,
+                    );
+                    let cheb_opts = ChebOptions {
+                        degree: 6,
+                        probes: 3,
+                        seed: 17,
+                        lambda_bounds: Some((0.02, 40.0)),
+                        block_size: bs,
+                        threads,
+                        precision: prec,
+                        target_tol: Some(1e-9),
+                        max_probes: 7,
+                        max_steps: 0,
+                        ..Default::default()
+                    };
+                    let cadaptive = chebyshev_logdet(op, &cheb_opts).unwrap();
+                    let cfixed = chebyshev_logdet(
+                        op,
+                        &ChebOptions {
+                            degree: cadaptive.steps_used,
+                            probes: cadaptive.probes_used,
+                            target_tol: None,
+                            ..cheb_opts
+                        },
+                    )
+                    .unwrap();
+                    assert_adaptive_pins_to_fixed(
+                        &format!("{name} cheb bs={bs} t={threads} {prec:?}"),
+                        &cadaptive,
+                        &cfixed,
+                    );
+                }
+            }
+        }
+    }
+
+    // Preconditioned split: sessions run on the flattened operator, the
+    // exact log|P| offset rides through both axes unchanged.
+    let pc = build_preconditioner(&dense, PrecondOptions::rank(8)).unwrap();
+    for bs in [1usize, 3] {
+        let adaptive_opts = SlqOptions {
+            steps: 6,
+            probes: 3,
+            seed: 19,
+            block_size: bs,
+            grads: true,
+            target_tol: Some(1e-9),
+            max_probes: 7,
+            max_steps: 0,
+            ..Default::default()
+        };
+        let adaptive =
+            slq_logdet_pc(&dense, Some(&pc as &dyn Preconditioner), &adaptive_opts).unwrap();
+        let fixed = slq_logdet_pc(
+            &dense,
+            Some(&pc as &dyn Preconditioner),
+            &SlqOptions {
+                steps: adaptive.steps_used,
+                probes: adaptive.probes_used,
+                target_tol: None,
+                ..adaptive_opts
+            },
+        )
+        .unwrap();
+        assert_adaptive_pins_to_fixed(&format!("pc slq bs={bs}"), &adaptive, &fixed);
     }
 }

@@ -337,6 +337,48 @@ def self_test():
     assert matched == 1 and len(reg) == 1 and "probes_used" in reg[0], reg
     checks += 1
 
+    # steps_used is likewise exact lower-is-better: the two-axis driver
+    # deepening its Lanczos sessions 25% past the baseline fires even when
+    # the probe count is unchanged (a probes-only gate would miss the
+    # second budget axis entirely).
+    reg, _, _ = compare(
+        rows(dict(conf, probes_used=8, steps_used=12)),
+        rows(dict(conf, probes_used=8, steps_used=15)),
+        0.20,
+        50.0,
+    )
+    assert len(reg) == 1 and "steps_used" in reg[0], reg
+    checks += 1
+
+    # mvms is the two-axis driver's total-cost counter (BENCH_conf, also
+    # BENCH_cg): it gates exactly like the other exact counters, so a
+    # driver that reaches its tolerance by burning more operator applies
+    # fires even when probes_used and steps_used both look fine.
+    reg, _, _ = compare(
+        rows(dict(conf, mvms=100)),
+        rows(dict(conf, mvms=130)),
+        0.20,
+        50.0,
+    )
+    assert len(reg) == 1 and "mvms" in reg[0], reg
+    checks += 1
+
+    # tol is identity, not a metric: an adaptive row (tol != 0) never
+    # compares against the fixed-budget tol=0 row — "adaptive must not
+    # out-spend the fixed reference" is asserted inside the sweep itself,
+    # not synthesized by the bench diff. Changing the sweep's tolerance
+    # grid therefore orphans the adaptive rows (matched == 0 when no row
+    # survives), which main() turns into the explicit re-baseline error
+    # instead of a vacuously green run.
+    _, _, matched = compare(
+        rows(dict(conf, tol=0, probes_used=16)),
+        rows(dict(conf, probes_used=64)),
+        0.20,
+        50.0,
+    )
+    assert matched == 0
+    checks += 1
+
     # Zero baseline: a counter rising from exactly 0 fires; a timing
     # metric rising from 0 to under the floor stays quiet.
     reg, _, _ = compare(
