@@ -71,6 +71,21 @@
 //! are deliberately *not* in the row: they are asserted inside
 //! `service_sweep`, and keeping them out of the JSON means future solver
 //! improvements don't churn row identity.
+//!
+//! `--json-trace` runs a fixed traced workload (pivoted-Cholesky build +
+//! SLQ logdet + preconditioned block solve on a dense RBF kernel) under
+//! the `util::obs` span registry and writes one row per *layer* — the
+//! flat by-span-name self-time rollup — `{layer, n, calls,
+//! self_ns_per_run, self_share, mvms, block_applies}`: `self_ns_per_run`
+//! is timing-class (gated with the usual ns floor), `calls` / `mvms` /
+//! `block_applies` are exact counters (the workload is deterministic, so
+//! a count change is a real cost change, not noise), and `self_share` is
+//! informational (shares shuffle whenever any layer speeds up; gating
+//! them would double-count the timing signal). One extra
+//! `layer="tracing_overhead"` row times the SAME workload with tracing
+//! enabled vs disabled and reports the difference per run (clamped at 0,
+//! timing-floored) — the disabled-mode cost of the instrumentation is a
+//! few relaxed atomic loads per site, and this row keeps it that way.
 
 use std::time::Instant;
 
@@ -362,6 +377,129 @@ fn cg_sweep(blocks: &[usize], threads: &[usize]) -> Vec<CgSweepRow> {
     rows
 }
 
+/// One per-layer trace row for the JSON report (see the `--json-trace`
+/// section of the module docs).
+struct TraceRow {
+    layer: String,
+    n: usize,
+    calls: u64,
+    self_ns_per_run: f64,
+    self_share: f64,
+    mvms: u64,
+    block_applies: u64,
+}
+
+/// Fixed traced workload for the trace sweep: preconditioner build + SLQ
+/// logdet + preconditioned block solve, all on one dense RBF kernel —
+/// together they exercise every instrumented layer (apply sites, Lanczos
+/// sessions, probe chunks, `pchol_grow`, `pcg_block`). Deterministic, so
+/// the counter columns are exact across machines and runs.
+const TRACE_N: usize = 400;
+
+fn trace_workload(op: &DenseKernelOp, b: &Mat) -> f64 {
+    use gpsld::solvers::{build_preconditioner, pcg_block, Preconditioner, PrecondOptions};
+    let pc = build_preconditioner(op, PrecondOptions::rank(8));
+    let est = slq_logdet(
+        op,
+        &SlqOptions { steps: 15, probes: 8, seed: 5, block_size: 4, ..Default::default() },
+    )
+    .expect("trace workload slq");
+    let opts = CgOptions { tol: 1e-8, max_iters: 200, block_size: 4, ..Default::default() };
+    let (x, _info) =
+        pcg_block(op, b, None, pc.as_ref().map(|p| p as &dyn Preconditioner), &opts);
+    est.value + x.data[0]
+}
+
+/// Per-layer self-time shares of the traced workload plus the
+/// disabled-mode overhead row. Tracing is observation-only, so running it
+/// here cannot perturb the other sweeps' numbers; the registry is reset
+/// around the capture and left disabled afterwards.
+fn trace_sweep() -> Vec<TraceRow> {
+    use gpsld::util::obs;
+    let mut rng = Rng::new(23);
+    let pts: Vec<Vec<f64>> =
+        (0..TRACE_N).map(|_| vec![rng.gaussian(), rng.gaussian()]).collect();
+    let op = DenseKernelOp::new(
+        pts,
+        Box::new(IsoKernel::new(Shape::Rbf, 2, 0.5, 1.0)),
+        0.3,
+    );
+    let b = Mat::from_fn(TRACE_N, 4, |_, _| rng.gaussian());
+
+    // Capture run: one traced execution; the flat by-name rollup of the
+    // span snapshot is the per-layer report.
+    obs::set_enabled(true);
+    obs::reset();
+    black_box(trace_workload(&op, &b));
+    let stats = obs::snapshot();
+    obs::set_enabled(false);
+    let mut flat: std::collections::BTreeMap<String, (u64, u64, u64, u64)> =
+        std::collections::BTreeMap::new();
+    for st in stats.iter().skip(1) {
+        let e = flat.entry(st.name.clone()).or_insert((0, 0, 0, 0));
+        e.0 += st.calls;
+        e.1 += st.self_ns;
+        e.2 += st.ctrs[gpsld::util::obs::Counter::Mvms as usize];
+        e.3 += st.ctrs[gpsld::util::obs::Counter::BlockApplies as usize];
+    }
+    let total_self: u64 = flat.values().map(|e| e.1).sum();
+    let mut rows: Vec<TraceRow> = flat
+        .into_iter()
+        .map(|(layer, (calls, self_ns, mvms, block_applies))| TraceRow {
+            layer,
+            n: TRACE_N,
+            calls,
+            self_ns_per_run: self_ns as f64,
+            self_share: if total_self > 0 {
+                self_ns as f64 / total_self as f64
+            } else {
+                0.0
+            },
+            mvms,
+            block_applies,
+        })
+        .collect();
+    rows.sort_by(|a, b| {
+        b.self_ns_per_run
+            .partial_cmp(&a.self_ns_per_run)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.layer.cmp(&b.layer))
+    });
+
+    // Overhead row: the same workload timed with tracing enabled vs
+    // disabled. Clamped at zero — the gate cares about the enabled cost
+    // creeping up, not about jitter making "enabled" finish first.
+    let dis_secs = time_adaptive(8, 3, 0.3, || trace_workload(&op, &b));
+    obs::set_enabled(true);
+    obs::reset();
+    let en_secs = time_adaptive(8, 3, 0.3, || trace_workload(&op, &b));
+    obs::set_enabled(false);
+    let overhead_ns = ((en_secs - dis_secs) * 1e9).max(0.0);
+    rows.push(TraceRow {
+        layer: String::from("tracing_overhead"),
+        n: TRACE_N,
+        calls: 0,
+        self_ns_per_run: overhead_ns,
+        self_share: if dis_secs > 0.0 { overhead_ns / (dis_secs * 1e9) } else { 0.0 },
+        mvms: 0,
+        block_applies: 0,
+    });
+    rows
+}
+
+fn write_trace_json(rows: &[TraceRow], path: &str) {
+    let formatted: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"layer\": \"{}\", \"n\": {}, \"calls\": {}, \"self_ns_per_run\": {:.1}, \"self_share\": {:.4}, \"mvms\": {}, \"block_applies\": {}}}",
+                r.layer, r.n, r.calls, r.self_ns_per_run, r.self_share, r.mvms, r.block_applies
+            )
+        })
+        .collect();
+    write_rows_json(path, &formatted);
+}
+
 /// Shared JSON-array writer: each entry is one pre-formatted row object.
 fn write_rows_json(path: &str, rows: &[String]) {
     let mut out = String::from("[\n");
@@ -464,6 +602,7 @@ fn run_smoke(
     json_precond_path: Option<&str>,
     json_conf_path: Option<&str>,
     json_service_path: Option<&str>,
+    json_trace_path: Option<&str>,
 ) {
     let rows = block_sweep(&[1000, 4000], &[1, 8, 32]);
     println!(
@@ -558,6 +697,25 @@ fn run_smoke(
             write_service_json(&svc_rows, path);
         }
     }
+    if json_trace_path.is_some() {
+        // Per-layer self-time shares of the fixed traced workload, plus
+        // the disabled-mode tracing-overhead row (see the module docs).
+        let trace_rows = trace_sweep();
+        println!(
+            "{:<28} {:>6} {:>8} {:>14} {:>8} {:>8} {:>8}",
+            "layer", "n", "calls", "self_ns/run", "share", "mvms", "applies"
+        );
+        for r in &trace_rows {
+            println!(
+                "{:<28} {:>6} {:>8} {:>14.1} {:>8.4} {:>8} {:>8}",
+                r.layer, r.n, r.calls, r.self_ns_per_run, r.self_share, r.mvms,
+                r.block_applies
+            );
+        }
+        if let Some(path) = json_trace_path {
+            write_trace_json(&trace_rows, path);
+        }
+    }
 }
 
 fn main() {
@@ -580,12 +738,14 @@ fn main() {
         let json_precond_path = path_after("--json-precond");
         let json_conf_path = path_after("--json-conf");
         let json_service_path = path_after("--json-service");
+        let json_trace_path = path_after("--json-trace");
         run_smoke(
             json_path.as_deref(),
             json_cg_path.as_deref(),
             json_precond_path.as_deref(),
             json_conf_path.as_deref(),
             json_service_path.as_deref(),
+            json_trace_path.as_deref(),
         );
         return;
     }

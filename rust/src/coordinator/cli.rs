@@ -1,9 +1,9 @@
 //! Hand-rolled CLI (clap is not in the offline registry).
 //!
 //! ```text
-//! gpsld exp <id> [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>] [--threads <t>] [--precision f64|f32f64] [--logdet-tol <t>] [--max-steps <s>]
-//! gpsld exp all  [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>] [--threads <t>] [--precision f64|f32f64] [--logdet-tol <t>] [--max-steps <s>]
-//! gpsld serve --requests <file> [--threads <t>] [--n <train>] [--queue-cap <c>] [--precision f64|f32f64]
+//! gpsld exp <id> [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>] [--threads <t>] [--precision f64|f32f64] [--logdet-tol <t>] [--max-steps <s>] [--trace] [--trace-json <file>]
+//! gpsld exp all  [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>] [--threads <t>] [--precision f64|f32f64] [--logdet-tol <t>] [--max-steps <s>] [--trace] [--trace-json <file>]
+//! gpsld serve --requests <file> [--threads <t>] [--n <train>] [--queue-cap <c>] [--precision f64|f32f64] [--trace] [--trace-json <file>]
 //! gpsld artifacts                                      list/verify PJRT artifacts
 //! gpsld info                                           version + feature summary
 //! ```
@@ -38,7 +38,13 @@
 //! (`estimators::set_default_max_steps`; unset the axis may grow to
 //! `2 × steps`, and `--max-steps` equal to `--steps` pins the step axis,
 //! restoring the probes-only adaptive driver — fixed-budget runs ignore
-//! the flag entirely).
+//! the flag entirely); `--trace` enables the `util::obs` span/counter
+//! registry for the run and prints the flat + tree profile afterwards;
+//! `--trace-json <file>` writes the same profile as a stable JSON
+//! document (schema `gpsld-trace-v1`). Both flags work on `exp` and
+//! `serve`, may be combined, and are observation-only: tracing on or off,
+//! every numeric result is bit-identical (pinned by the tracing-inert
+//! proptests).
 //!
 //! `serve` is the offline request-replay driver for the streaming service
 //! layer (`coordinator::service`): it reads one request per line
@@ -68,7 +74,7 @@ const EXP_IDS: &[&str] = &[
 pub fn usage() -> String {
     format!(
         "gpsld {} — Scalable Log Determinants for GP Kernel Learning (NIPS 2017 repro)\n\n\
-         USAGE:\n  gpsld exp <id|all> [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>] [--threads <t>] [--precision f64|f32f64] [--probes <p>] [--steps <m>] [--logdet-tol <t>] [--max-steps <s>] [--md <file>]\n  gpsld serve --requests <file> [--threads <t>] [--n <train>] [--queue-cap <c>] [--precision f64|f32f64]\n  gpsld artifacts\n  gpsld info\n\n\
+         USAGE:\n  gpsld exp <id|all> [--scale small|paper] [--block <b>] [--cg-block <b>] [--precond-rank <k>] [--threads <t>] [--precision f64|f32f64] [--probes <p>] [--steps <m>] [--logdet-tol <t>] [--max-steps <s>] [--md <file>] [--trace] [--trace-json <file>]\n  gpsld serve --requests <file> [--threads <t>] [--n <train>] [--queue-cap <c>] [--precision f64|f32f64] [--trace] [--trace-json <file>]\n  gpsld artifacts\n  gpsld info\n\n\
          `--block <b>` sets the default probe-block width for blocked MVMs.\n\
          `--cg-block <b>` sets the default RHS block width for block-CG solves.\n\
          `--precond-rank <k>` sets the pivoted-Cholesky preconditioner rank (0 = off).\n\
@@ -79,13 +85,18 @@ pub fn usage() -> String {
          `--logdet-tol <t>` makes logdet estimates adaptive on two axes: grow probes or deepen the\n\
          retained Lanczos/Chebyshev sessions (whichever CI term dominates) until the 95% half-width <= t.\n\
          `--max-steps <s>` caps the adaptive step/degree axis (unset: up to 2x --steps; equal to --steps:\n\
-         probes-only growth). Fixed-budget runs ignore it.\n\n\
+         probes-only growth). Fixed-budget runs ignore it.\n\
+         `--trace` prints the hierarchical span profile (timings + mvm/apply/probe counters) after the run;\n\
+         `--trace-json <file>` writes the same profile as a stable JSON document (schema gpsld-trace-v1).\n\
+         Tracing is observation-only: every numeric result is bit-identical with it on or off.\n\n\
          `serve` replays a request file (one `<model> <mean|var> <x>` per line; blank/# lines skipped)\n\
          through the coalescing dispatcher and the solo baseline, and prints the amortization report;\n\
          var answers print `value ± bound` (solve-error bound) or an UNCONVERGED marker.\n\
          `--n <train>` sets the demo models' training-set size (default 96); `--queue-cap <c>` the\n\
          bounded queue depth (default 1024; overflow is counted as back-pressure, not an error);\n\
-         `--precision f32f64` replays the block solves in mixed precision (f64-confirmed).\n\n\
+         `--precision f32f64` replays the block solves in mixed precision (f64-confirmed).\n\
+         The replay report includes a per-model metrics snapshot: request mix, fused-column totals,\n\
+         solver spend, and alpha/preconditioner cache hit rates; `--trace`/`--trace-json` work here too.\n\n\
          EXPERIMENTS: {}\n",
         crate::version(),
         EXP_IDS.join(", ")
@@ -120,6 +131,8 @@ pub fn main_with_args(args: &[String]) -> i32 {
             };
             let mut scale = Scale::Small;
             let mut md_out: Option<String> = None;
+            let mut trace = false;
+            let mut trace_json: Option<String> = None;
             let mut i = 2;
             while i < args.len() {
                 match args[i].as_str() {
@@ -251,11 +264,33 @@ pub fn main_with_args(args: &[String]) -> i32 {
                         }
                         i += 2;
                     }
+                    "--trace" => {
+                        trace = true;
+                        i += 1;
+                    }
+                    "--trace-json" => {
+                        match args.get(i + 1) {
+                            Some(p) => trace_json = Some(p.clone()),
+                            None => {
+                                eprintln!("--trace-json needs an output path");
+                                return 2;
+                            }
+                        }
+                        i += 2;
+                    }
                     other => {
                         eprintln!("unknown flag {other}");
                         return 2;
                     }
                 }
+            }
+            // Tracing is observation-only (bit-inert on every numeric
+            // result — see `util::obs`), so enabling it here cannot change
+            // what the experiments compute, only what gets reported.
+            let tracing = trace || trace_json.is_some();
+            if tracing {
+                crate::util::obs::set_enabled(true);
+                crate::util::obs::reset();
             }
             let ids: Vec<&str> = if id == "all" {
                 EXP_IDS.to_vec()
@@ -280,9 +315,15 @@ pub fn main_with_args(args: &[String]) -> i32 {
             if let Some(path) = md_out {
                 if let Err(e) = std::fs::write(&path, md) {
                     eprintln!("failed to write {path}: {e}");
+                    if tracing {
+                        crate::util::obs::set_enabled(false);
+                    }
                     return 1;
                 }
                 println!("wrote {path}");
+            }
+            if let Some(code) = finish_trace(trace, trace_json, tracing) {
+                return code;
             }
             0
         }
@@ -331,6 +372,30 @@ pub fn main_with_args(args: &[String]) -> i32 {
             2
         }
     }
+}
+
+/// Emit the requested trace surfaces after a traced `exp`/`serve` run and
+/// restore the disabled default: `--trace` prints the flat + tree profile
+/// to stdout, `--trace-json` writes the stable `gpsld-trace-v1` document.
+/// Returns `Some(exit_code)` when writing the JSON file fails, `None`
+/// otherwise (including the untraced case, which touches nothing).
+fn finish_trace(trace: bool, trace_json: Option<String>, tracing: bool) -> Option<i32> {
+    use crate::util::obs;
+    if trace {
+        print!("{}", obs::report_text());
+    }
+    if let Some(path) = trace_json {
+        if let Err(e) = std::fs::write(&path, obs::report_json()) {
+            eprintln!("failed to write {path}: {e}");
+            obs::set_enabled(false);
+            return Some(1);
+        }
+        println!("wrote {path}");
+    }
+    if tracing {
+        obs::set_enabled(false);
+    }
+    None
 }
 
 /// Demo-registry size cap for `serve`: the replay driver builds one
@@ -398,9 +463,25 @@ fn run_serve(args: &[String]) -> i32 {
     let mut n_train = 96usize;
     let mut queue_cap = 1024usize;
     let mut precision = crate::util::precision::Precision::F64;
+    let mut trace = false;
+    let mut trace_json: Option<String> = None;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
+            // The only flag with no operand: advance by one and skip the
+            // loop's uniform two-token step.
+            "--trace" => {
+                trace = true;
+                i += 1;
+                continue;
+            }
+            "--trace-json" => match args.get(i + 1) {
+                Some(p) => trace_json = Some(p.clone()),
+                None => {
+                    eprintln!("--trace-json needs an output path");
+                    return 2;
+                }
+            },
             "--requests" => match args.get(i + 1) {
                 Some(p) => req_path = Some(p.clone()),
                 None => {
@@ -468,12 +549,24 @@ fn run_serve(args: &[String]) -> i32 {
         eprintln!("{path}: no requests (blank lines and `#` comments are skipped)");
         return 2;
     }
-    match threads {
+    // Tracing is observation-only (bit-inert on every answer the replay
+    // produces — see `util::obs`), so enabling it cannot perturb the
+    // fused-vs-solo bitwise comparison the report prints.
+    let tracing = trace || trace_json.is_some();
+    if tracing {
+        crate::util::obs::set_enabled(true);
+        crate::util::obs::reset();
+    }
+    let code = match threads {
         Some(t) => crate::util::parallel::with_default_threads(t, || {
             serve_replay(&reqs, n_train, queue_cap, precision)
         }),
         None => serve_replay(&reqs, n_train, queue_cap, precision),
+    };
+    if let Some(err) = finish_trace(trace, trace_json, tracing) {
+        return err;
     }
+    code
 }
 
 /// Replay the parsed requests through the coalescing dispatcher and the
@@ -609,6 +702,36 @@ fn serve_replay(
         metrics.latency_quantile_ns(0.5) / 1e6,
         metrics.latency_quantile_ns(0.99) / 1e6,
     );
+    let (lat_n, lat_mean, lat_min, lat_max) = metrics.latency_exact_ns();
+    println!(
+        "  latency exact: n={lat_n}  mean {:.3} ms  min {:.3} ms  max {:.3} ms  \
+         queue-full rejections {rejected}",
+        lat_mean / 1e6,
+        lat_min / 1e6,
+        lat_max / 1e6,
+    );
+    // Per-model metrics snapshot: request mix, coalescing totals, solver
+    // spend, and the model-cache hit rates (alpha = training solve,
+    // precond = pivoted-Cholesky factor). Only the coalesced replay's
+    // registry is inspected — the solo baseline exists for comparison.
+    println!("  per-model:");
+    for (id, m) in metrics.per_model_snapshot() {
+        let cs = reg.get_mut(id).map(|gp| gp.cache_stats).unwrap_or_default();
+        println!(
+            "    model {id}: {} mean + {} var requests | {} solves, {} fused cols, \
+             {} mvms, {} block applies | alpha cache {}/{} hits, precond cache {}/{} hits",
+            m.mean_requests,
+            m.var_requests,
+            m.solves,
+            m.coalesced_cols,
+            m.mvms,
+            m.block_applies,
+            cs.alpha_hits,
+            cs.alpha_hits + cs.alpha_misses,
+            cs.pc_hits,
+            cs.pc_hits + cs.pc_misses,
+        );
+    }
     0
 }
 
@@ -953,6 +1076,52 @@ mod tests {
         std::fs::remove_file(&path).ok();
         assert_eq!(code, 0);
         assert_eq!(code_mixed, 0);
+    }
+
+    #[test]
+    fn trace_json_flag_needs_operand() {
+        // Both subcommands reject a bare --trace-json before running
+        // anything (and before tracing is enabled).
+        assert_eq!(
+            main_with_args(&["exp".into(), "fig1".into(), "--trace-json".into()]),
+            2
+        );
+        assert_eq!(
+            main_with_args(&["serve".into(), "--trace-json".into()]),
+            2
+        );
+    }
+
+    #[test]
+    fn serve_trace_flags_print_profile_and_write_json() {
+        // A traced replay exits 0, restores the disabled default, and the
+        // JSON document carries the stable schema marker. The obs test
+        // lock serializes against other tests toggling the global
+        // registry.
+        let _guard = crate::util::obs::test_lock()
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let dir = std::env::temp_dir();
+        let req = dir.join(format!("gpsld_trace_req_{}.txt", std::process::id()));
+        let out = dir.join(format!("gpsld_trace_out_{}.json", std::process::id()));
+        std::fs::write(&req, "0 var 0.4\n0 mean 1.0\n0 var 2.1\n").unwrap();
+        let code = main_with_args(&[
+            "serve".into(),
+            "--requests".into(),
+            req.to_string_lossy().into_owned(),
+            "--n".into(),
+            "24".into(),
+            "--trace".into(),
+            "--trace-json".into(),
+            out.to_string_lossy().into_owned(),
+        ]);
+        let doc = std::fs::read_to_string(&out).unwrap_or_default();
+        std::fs::remove_file(&req).ok();
+        std::fs::remove_file(&out).ok();
+        assert_eq!(code, 0);
+        assert!(!crate::util::obs::enabled(), "trace run must restore disabled");
+        assert!(doc.contains("gpsld-trace-v1"), "schema marker missing: {doc}");
+        assert!(doc.contains("dispatch"), "dispatch span missing from trace");
     }
 
     #[test]

@@ -43,6 +43,21 @@
 //!   solo baseline: N coalesced single-column requests cost one fused
 //!   solve whose applies are bounded by the *worst* column, not the sum.
 //!
+//! # Trace span / counter sites (`util::obs`)
+//!
+//! * `dispatch` — one span per [`dispatch`] sweep; `dispatch_model` nests
+//!   under it, one per model with traffic in the batch (the fused solve's
+//!   `pcg_block`/`cg_block` spans nest under `dispatch_model`).
+//! * [`Counter::QueueFull`](crate::util::obs::Counter::QueueFull) — bumped
+//!   by [`RequestQueue::submit`] on each back-pressure rejection.
+//! * [`Counter::QueueWaitNs`](crate::util::obs::Counter::QueueWaitNs) —
+//!   summed submit→response latency per batch, measured as differences of
+//!   [`obs::now_ns`] readings (submit stamps, one dispatch-side batch
+//!   read) so both ends share a single monotonic clock.
+//! * Cache hits/misses come from [`GpRegression`] itself (alpha +
+//!   preconditioner caches), surfaced per model via
+//!   [`GpRegression::cache_stats`].
+//!
 //! The original hyper-batch helper ([`map_hyper_batch`]) stays: it fans a
 //! queue of hyperparameter vectors out to per-thread evaluators (each
 //! worker builds its own operator once, then streams evaluations), used
@@ -51,9 +66,9 @@
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
-use std::time::Instant;
 
 use crate::gp::{GpRegression, PredictiveOp};
+use crate::util::obs;
 use crate::util::stats::Histogram;
 
 /// Evaluate `f_builder()(h)` for every hyper vector, in parallel, preserving
@@ -126,8 +141,12 @@ pub struct Request {
     pub model: usize,
     pub kind: RequestKind,
     pub x: Vec<f64>,
-    /// Submission timestamp for the latency histogram.
-    submitted: Instant,
+    /// Submission timestamp for the latency histogram, in nanoseconds on
+    /// the shared [`obs::now_ns`] clock. Submit and dispatch previously
+    /// each read their own `Instant`; routing both ends through the one
+    /// process clock makes every latency a difference of readings off a
+    /// single monotonic anchor.
+    submitted_ns: u64,
 }
 
 /// One answered request, in the order requests were drained.
@@ -172,14 +191,17 @@ impl RequestQueue {
     }
 
     /// Enqueue a request; `Err(QueueFull)` applies back-pressure instead
-    /// of unbounded growth. The submission time is recorded here, so
-    /// queueing delay counts toward the request's latency.
+    /// of unbounded growth (each rejection also bumps the global
+    /// `queue_full` trace counter). The submission time is recorded here
+    /// on the shared obs clock, so queueing delay counts toward the
+    /// request's latency.
     pub fn submit(&self, model: usize, kind: RequestKind, x: Vec<f64>) -> Result<(), QueueFull> {
         let mut q = self.inner.lock().unwrap();
         if q.len() >= self.cap {
+            obs::add(obs::Counter::QueueFull, 1);
             return Err(QueueFull);
         }
-        q.push(Request { model, kind, x, submitted: Instant::now() });
+        q.push(Request { model, kind, x, submitted_ns: obs::now_ns() });
         Ok(())
     }
 
@@ -250,9 +272,30 @@ impl<O: PredictiveOp> ModelRegistry<O> {
 
 // ---------------- metrics ----------------
 
+/// Per-model serving rollup, accumulated by [`dispatch`] and keyed by
+/// model id in [`Metrics::per_model_snapshot`]. Everything here is a
+/// restriction of the global counters to one model's traffic, so the
+/// column sums across models reconcile with [`Metrics::serving_snapshot`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PerModelMetrics {
+    /// Mean requests answered (from the cached alpha).
+    pub mean_requests: usize,
+    /// Variance requests answered (columns of fused solves).
+    pub var_requests: usize,
+    /// Fused block solves dispatched for this model.
+    pub solves: usize,
+    /// Columns fused across this model's solves (== `var_requests`).
+    pub coalesced_cols: usize,
+    /// Solver MVMs spent on this model (alpha refreshes + fused solves).
+    pub mvms: usize,
+    /// Blocked operator applies spent on this model's fused solves.
+    pub block_applies: usize,
+}
+
 /// Service counters: the original evaluation/mvm counters plus the
 /// serving-layer accounting (solves dispatched, fused columns,
-/// back-pressure rejections) and a per-request latency histogram.
+/// back-pressure rejections), a per-request latency histogram, and a
+/// per-model rollup for the replay report.
 pub struct Metrics {
     pub evaluations: AtomicUsize,
     pub mvms: AtomicUsize,
@@ -267,6 +310,8 @@ pub struct Metrics {
     pub rejected: AtomicUsize,
     /// Per-request latency in nanoseconds (submit → response).
     latency_ns: Mutex<Histogram>,
+    /// Per-model rollups, keyed by model id.
+    per_model: Mutex<BTreeMap<usize, PerModelMetrics>>,
 }
 
 /// Latency histogram range: 100 ns .. 100 s, 90 log-spaced buckets
@@ -289,6 +334,7 @@ impl Default for Metrics {
                 LATENCY_HI_NS,
                 LATENCY_BUCKETS,
             )),
+            per_model: Mutex::new(BTreeMap::new()),
         }
     }
 }
@@ -319,6 +365,21 @@ impl Metrics {
     /// Latency quantile in nanoseconds (NaN when nothing recorded).
     pub fn latency_quantile_ns(&self, q: f64) -> f64 {
         self.latency_ns.lock().unwrap().quantile(q)
+    }
+    /// Exact latency summary `(count, mean, min, max)` in nanoseconds —
+    /// the histogram's exact tallies, not bucket approximations. The
+    /// floats are NaN when nothing has been recorded.
+    pub fn latency_exact_ns(&self) -> (u64, f64, f64, f64) {
+        let h = self.latency_ns.lock().unwrap();
+        (h.count(), h.mean(), h.min(), h.max())
+    }
+    /// Mutate one model's rollup under the lock.
+    fn with_model(&self, model: usize, f: impl FnOnce(&mut PerModelMetrics)) {
+        f(self.per_model.lock().unwrap().entry(model).or_default());
+    }
+    /// Per-model rollups in ascending model-id order.
+    pub fn per_model_snapshot(&self) -> Vec<(usize, PerModelMetrics)> {
+        self.per_model.lock().unwrap().iter().map(|(&k, &v)| (k, v)).collect()
     }
     /// `(evaluations, mvms)` — the original throughput snapshot.
     pub fn snapshot(&self) -> (usize, usize) {
@@ -355,6 +416,7 @@ pub fn dispatch<O: PredictiveOp>(
     queue: &RequestQueue,
     metrics: &Metrics,
 ) -> Vec<Response> {
+    let _span = crate::span!("dispatch");
     let requests = queue.drain();
     let mut out: Vec<Option<Response>> = (0..requests.len()).map(|_| None).collect();
     // Deterministic model order; within a model, submission order.
@@ -363,6 +425,7 @@ pub fn dispatch<O: PredictiveOp>(
         by_model.entry(r.model).or_default().push(i);
     }
     for (&model, idxs) in &by_model {
+        let _mspan = crate::span!("dispatch_model");
         let Some(gp) = reg.get_mut(model) else {
             // Unknown model: answer NaN, unconverged — the replay driver
             // validates ids up front, so this is a programming error
@@ -389,6 +452,10 @@ pub fn dispatch<O: PredictiveOp>(
             // cross-kernel applies.
             let (_, ainfo) = gp.alpha();
             metrics.add_mvms(ainfo.mvms);
+            metrics.with_model(model, |m| {
+                m.mean_requests += mean_idx.len();
+                m.mvms += ainfo.mvms;
+            });
             let xs: Vec<Vec<f64>> = mean_idx.iter().map(|&i| requests[i].x.clone()).collect();
             let values = gp.predict_mean(&xs);
             for (&i, v) in mean_idx.iter().zip(&values) {
@@ -415,6 +482,13 @@ pub fn dispatch<O: PredictiveOp>(
             metrics.add_coalesced(xs.len());
             metrics.add_mvms(info.mvms);
             metrics.add_block_applies(info.block_applies);
+            metrics.with_model(model, |m| {
+                m.var_requests += var_idx.len();
+                m.solves += 1;
+                m.coalesced_cols += xs.len();
+                m.mvms += info.mvms;
+                m.block_applies += info.block_applies;
+            });
             let s2 = gp.op.noise_var();
             for ((&i, v), cinfo) in var_idx.iter().zip(&vars).zip(&info.cols) {
                 // Per-request error bound (see `Response::half_width`):
@@ -435,16 +509,24 @@ pub fn dispatch<O: PredictiveOp>(
             }
         }
     }
-    // Stamp latency + evaluation count in submission order.
+    // Stamp latency + evaluation count in submission order. One clock
+    // reading covers the whole batch: each request's latency is the
+    // difference of two readings off the shared [`obs::now_ns`] anchor
+    // (submit-side and here), never a mix of independent `Instant`s.
+    let now = obs::now_ns();
+    let mut wait_total: u64 = 0;
     let responses: Vec<Response> = requests
         .iter()
         .zip(out)
         .map(|(r, resp)| {
             metrics.add_eval();
-            metrics.record_latency_ns(r.submitted.elapsed().as_nanos() as f64);
+            let ns = now.saturating_sub(r.submitted_ns);
+            wait_total += ns;
+            metrics.record_latency_ns(ns as f64);
             resp.expect("every drained request answered")
         })
         .collect();
+    obs::add(obs::Counter::QueueWaitNs, wait_total);
     responses
 }
 
@@ -493,8 +575,14 @@ mod tests {
         m.add_rejected();
         assert_eq!(m.serving_snapshot(), (1, 7, 4, 1));
         assert!(m.latency_quantile_ns(0.5).is_nan()); // nothing recorded
+        assert_eq!(m.latency_exact_ns().0, 0);
         m.record_latency_ns(1e4);
         assert!(m.latency_quantile_ns(0.5).is_finite());
+        let (cnt, mean, lo, hi) = m.latency_exact_ns();
+        assert_eq!(cnt, 1);
+        assert_eq!(mean, 1e4);
+        assert_eq!((lo, hi), (1e4, 1e4));
+        assert!(m.per_model_snapshot().is_empty());
     }
 
     /// A model with explicit (process-default-independent) solver options
@@ -642,9 +730,19 @@ mod tests {
         }
         // Two models with var traffic -> exactly two fused solves, and
         // 4 var columns coalesced in total.
-        let (solves, _, cols, _) = metrics.serving_snapshot();
+        let (solves, applies, cols, _) = metrics.serving_snapshot();
         assert_eq!(solves, 2);
         assert_eq!(cols, 4);
+        // Per-model rollups reconcile with the global counters.
+        let pm = metrics.per_model_snapshot();
+        assert_eq!(pm.len(), 2);
+        assert_eq!((pm[0].0, pm[1].0), (a, b));
+        let (ma, mb) = (pm[0].1, pm[1].1);
+        assert_eq!((ma.mean_requests, ma.var_requests), (1, 2));
+        assert_eq!((mb.mean_requests, mb.var_requests), (1, 2));
+        assert_eq!(ma.solves + mb.solves, solves);
+        assert_eq!(ma.coalesced_cols + mb.coalesced_cols, cols);
+        assert_eq!(ma.block_applies + mb.block_applies, applies);
         // p50/p99 are readable after a batch.
         assert!(metrics.latency_quantile_ns(0.5).is_finite());
         assert!(metrics.latency_quantile_ns(0.99).is_finite());

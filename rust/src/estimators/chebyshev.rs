@@ -22,6 +22,7 @@ use super::{BlockPartition, LogdetEstimate, SpectralEvidence};
 use crate::error::Result;
 use crate::linalg::dense::Mat;
 use crate::operators::{KernelOp, LinOp};
+use crate::util::obs;
 use crate::util::parallel;
 
 /// Options for the Chebyshev estimator.
@@ -261,6 +262,7 @@ impl ChebSession {
     /// current degree). Must be driven by the same operator the session
     /// was opened on; the bracket stays fixed.
     pub fn extend(&mut self, op: &dyn KernelOp, degree: usize) {
+        let _span = crate::span!("cheb_extend");
         let n = op.n();
         let nh = self.dw.len();
         let wcols = self.zblk.cols;
@@ -376,11 +378,16 @@ fn apply_b_mat(
 /// axis mechanics; the degree axis is capped at `max_steps` when set,
 /// `2 × degree` when 0, and closed entirely when `max_steps == degree`.
 pub fn chebyshev_logdet(op: &dyn KernelOp, opts: &ChebOptions) -> Result<LogdetEstimate> {
+    let _span = crate::span!("cheb");
     let n = op.n();
     let nh = op.num_hypers();
     let (a, b) = match opts.lambda_bounds {
         Some(ab) => ab,
         None => {
+            // Bracket MVMs are not charged to `LogdetEstimate::mvms`, so
+            // they must stay off the counters too (the span still times).
+            let _bspan = crate::span!("cheb_bracket");
+            let _quiet = obs::suppress_applies();
             let (lo, hi) = extremal_eigs(op, 20.min(n), opts.seed ^ 0x5eed)?;
             // The noise floor lower-bounds the spectrum.
             (lo.max(op.noise_var() * 0.5), hi)
@@ -389,7 +396,8 @@ pub fn chebyshev_logdet(op: &dyn KernelOp, opts: &ChebOptions) -> Result<LogdetE
     assert!(b > a && a > 0.0, "invalid spectrum bracket [{a}, {b}]");
     let f = |t: f64| (0.5 * ((b - a) * t + (b + a))).ln();
 
-    match opts.target_tol {
+    let audit = obs::audit_begin();
+    let est = match opts.target_tol {
         None => {
             let degree = opts.degree;
             let coeffs = cheb_coeffs(f, degree);
@@ -399,7 +407,17 @@ pub fn chebyshev_logdet(op: &dyn KernelOp, opts: &ChebOptions) -> Result<LogdetE
             Ok(assemble(&blocks, opts, nh, opts.probes, &coeffs, (a, b)))
         }
         Some(tol) => cheb_adaptive(op, opts, tol, (a, b), &f, nh),
-    }
+    }?;
+    obs::add(obs::Counter::Probes, est.probes_used as u64);
+    obs::add(obs::Counter::Steps, est.steps_used as u64);
+    audit.end_assert(
+        "cheb",
+        &[
+            (obs::Counter::Mvms, est.mvms as u64),
+            (obs::Counter::BlockApplies, est.block_applies as u64),
+        ],
+    );
+    Ok(est)
 }
 
 /// Two-axis adaptive Chebyshev driver — the same shape as
@@ -440,13 +458,17 @@ fn cheb_adaptive(
         };
         let part = BlockPartition::new(chunk, opts.block_size);
         let cur_degree = degree;
-        blocks.extend(parallel::par_map(part.nblocks, opts.threads, |bi| {
-            let (j0, wcols) = part.range(bi);
-            let zblk = z.sub_cols(done + j0, wcols);
-            let mut s = ChebSession::new(op, zblk, bracket, opts.grads, opts.precision);
-            s.extend(op, cur_degree);
-            s
-        }));
+        let new_blocks = {
+            let _chunk_span = crate::span!("cheb_probe_chunk");
+            parallel::par_map(part.nblocks, opts.threads, |bi| {
+                let (j0, wcols) = part.range(bi);
+                let zblk = z.sub_cols(done + j0, wcols);
+                let mut s = ChebSession::new(op, zblk, bracket, opts.grads, opts.precision);
+                s.extend(op, cur_degree);
+                s
+            })
+        };
+        blocks.extend(new_blocks);
         done += chunk;
         loop {
             let per_probe: Vec<f64> =
@@ -470,6 +492,7 @@ fn cheb_adaptive(
             }
             if degree_axis_open && (trunc > mc || !probe_room) {
                 let target = next_step_budget(degree, cap);
+                let _ext_span = crate::span!("cheb_degree_extend");
                 let slots: Vec<std::sync::Mutex<&mut ChebSession>> =
                     blocks.iter_mut().map(std::sync::Mutex::new).collect();
                 parallel::par_map(slots.len(), opts.threads, |i| {
@@ -559,6 +582,7 @@ fn run_blocks(
     bracket: (f64, f64),
 ) -> Vec<PerBlock> {
     let part = BlockPartition::new(count, opts.block_size);
+    let _span = crate::span!("cheb_probe_chunk");
     parallel::par_map(part.nblocks, opts.threads, |bi| {
         let (j0, wcols) = part.range(bi);
         let zblk = z.sub_cols(base + j0, wcols);

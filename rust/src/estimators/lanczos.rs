@@ -212,6 +212,7 @@ impl LanczosSession {
     /// still-active columns' MVMs into one [`LinOp::apply_mat_prec`]
     /// call, exactly like the historical block driver.
     pub fn extend<O: LinOp + ?Sized>(&mut self, op: &O, m: usize, prec: Precision) {
+        let _span = crate::span!("lanczos_extend");
         let n = self.n;
         assert_eq!(op.n(), n);
         // Phase 1: consume budget-stop residuals — the tail of a

@@ -120,6 +120,40 @@
 //! pre-evidence estimators: same probe set, same block partition, same
 //! accumulation order — the evidence is recorded on the side and
 //! `probes_used`/`steps_used` simply report the fixed budget.
+//!
+//! # Trace span sites ([`crate::util::obs`])
+//!
+//! With `--trace` the estimators contribute these spans (inert and
+//! bitwise invisible when tracing is off — proptest-pinned by
+//! `prop_tracing_enabled_bitwise_inert`):
+//!
+//! * `slq` — one per [`slq::slq_logdet`] / [`slq::slq_logdet_pc`] call;
+//!   wraps the whole estimate in an accounting **audit window** asserting
+//!   the traced `Mvms`/`BlockApplies` counters equal
+//!   `LogdetEstimate::{mvms, block_applies}` exactly.
+//! * `slq_probe_chunk` — one per probe block (fixed path) or per adaptive
+//!   chunk; `slq_step_extend` — deepening retained Lanczos sessions on
+//!   the step axis; `lanczos_extend` — the underlying per-session
+//!   tridiagonal extension.
+//! * `slq_trace` — the §3.4 trace estimator entry.
+//! * `cheb` — one per [`chebyshev::chebyshev_logdet`] call (same audit
+//!   contract as `slq`); `cheb_bracket` — the `lambda_bounds: None`
+//!   spectrum bracket, whose helper MVMs are *timed* but
+//!   counter-suppressed ([`crate::util::obs::suppress_applies`]) because
+//!   they are outside the estimate's accounting; `cheb_probe_chunk` /
+//!   `cheb_degree_extend` / `cheb_extend` — probe blocks and degree
+//!   deepening.
+//! * Beneath all of these, every operator apply opens its
+//!   [`crate::util::obs::apply_site`] span (`LinOp::obs_kind`, e.g.
+//!   `dense_kernel`, `ski`, `toeplitz`) and charges the
+//!   `Mvms`/`BlockApplies` counters — so the
+//!   span tree's per-path rollups decompose an estimate's cost by
+//!   operator structure.
+//!
+//! The [`slq::SlqOptions::probes`]/steps actually consumed are also
+//! counted globally (`Counter::Probes`, `Counter::Steps`), once per
+//! estimator call, so a run-level profile reports total probe budget
+//! spent without walking the tree.
 
 pub mod chebyshev;
 pub mod confidence;

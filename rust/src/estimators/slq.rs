@@ -25,6 +25,7 @@ use crate::linalg::dense::Mat;
 use crate::linalg::tridiag::lanczos_quadrature;
 use crate::operators::{KernelOp, LinOp};
 use crate::solvers::precond::{PreconditionedOp, Preconditioner};
+use crate::util::obs;
 use crate::util::parallel;
 
 /// Options for the SLQ estimator.
@@ -126,10 +127,22 @@ pub fn slq_logdet_pc(
     pc: Option<&dyn Preconditioner>,
     opts: &SlqOptions,
 ) -> Result<LogdetEstimate> {
-    match opts.target_tol {
+    let _span = crate::span!("slq");
+    let audit = obs::audit_begin();
+    let est = match opts.target_tol {
         None => slq_fixed(op, pc, opts),
         Some(tol) => slq_adaptive(op, pc, opts, tol),
-    }
+    }?;
+    obs::add(obs::Counter::Probes, est.probes_used as u64);
+    obs::add(obs::Counter::Steps, est.steps_used as u64);
+    audit.end_assert(
+        "slq",
+        &[
+            (obs::Counter::Mvms, est.mvms as u64),
+            (obs::Counter::BlockApplies, est.block_applies as u64),
+        ],
+    );
+    Ok(est)
 }
 
 /// Fixed-budget path: one probe set of exactly `opts.probes` columns, one
@@ -230,16 +243,20 @@ fn slq_adaptive(
         };
         let part = BlockPartition::new(chunk, opts.block_size);
         let cur_steps = steps;
-        blocks.extend(parallel::par_map(part.nblocks, opts.threads, |bi| {
-            let (j0, w) = part.range(bi);
-            let zblk = z.sub_cols(done + j0, w);
-            let mut session = LanczosSession::new(&zblk);
-            match &pop {
-                Some(pop) => session.extend(pop, cur_steps, opts.precision),
-                None => session.extend(op, cur_steps, opts.precision),
-            }
-            SessionBlock { zblk, session }
-        }));
+        let new_blocks = {
+            let _chunk_span = crate::span!("slq_probe_chunk");
+            parallel::par_map(part.nblocks, opts.threads, |bi| {
+                let (j0, w) = part.range(bi);
+                let zblk = z.sub_cols(done + j0, w);
+                let mut session = LanczosSession::new(&zblk);
+                match &pop {
+                    Some(pop) => session.extend(pop, cur_steps, opts.precision),
+                    None => session.extend(op, cur_steps, opts.precision),
+                }
+                SessionBlock { zblk, session }
+            })
+        };
+        blocks.extend(new_blocks);
         done += chunk;
         // Deepen the step axis while the truncation term dominates; fall
         // through to grow probes once the Monte-Carlo term does.
@@ -289,6 +306,7 @@ fn extend_blocks(
     target: usize,
     opts: &SlqOptions,
 ) {
+    let _span = crate::span!("slq_step_extend");
     let slots: Vec<std::sync::Mutex<&mut SessionBlock>> =
         blocks.iter_mut().map(std::sync::Mutex::new).collect();
     parallel::par_map(slots.len(), opts.threads, |i| {
@@ -428,6 +446,7 @@ fn run_blocks(
     let part = BlockPartition::new(count, opts.block_size);
     let ld_p = pc.map(|p| p.logdet());
     let pop = pc.map(|p| PreconditionedOp::new(op, p));
+    let _span = crate::span!("slq_probe_chunk");
     parallel::par_map(part.nblocks, opts.threads, |bi| {
         let (j0, w) = part.range(bi);
         let zblk = z.sub_cols(base + j0, w);
@@ -558,6 +577,8 @@ pub fn slq_trace_fn_ev<O: LinOp + ?Sized>(
     seed: u64,
     threads: usize,
 ) -> Result<LogdetEstimate> {
+    let _span = crate::span!("slq_trace");
+    let audit = obs::audit_begin();
     let n = op.n();
     let ps = ProbeSet::new(n, probes, ProbeKind::Rademacher, seed);
     let z = ps.as_mat();
@@ -599,6 +620,15 @@ pub fn slq_trace_fn_ev<O: LinOp + ?Sized>(
     let evidence = SpectralEvidence::Lanczos { probes: probe_ev, offset: 0.0, resume: None };
     let interval =
         confidence::interval_from_parts(value, &per_probe, &evidence, confidence::DEFAULT_LEVEL);
+    obs::add(obs::Counter::Probes, probes as u64);
+    obs::add(obs::Counter::Steps, steps_used as u64);
+    audit.end_assert(
+        "slq_trace",
+        &[
+            (obs::Counter::Mvms, mvms as u64),
+            (obs::Counter::BlockApplies, block_applies as u64),
+        ],
+    );
     Ok(LogdetEstimate {
         value,
         grad: Vec::new(),

@@ -70,6 +70,21 @@ impl Estimator {
     }
 }
 
+/// Hit/miss tallies for the model's cached artifacts — the serving
+/// layer's cache-effectiveness report (`gpsld serve` prints hit rates per
+/// model). A *hit* means the request was served from (or warm-started by)
+/// the retained artifact: `alpha` present before the solve, or the
+/// preconditioner cache found fresh. Mirrored into the global
+/// [`obs`](crate::util::obs) counters (`cache_hits`/`cache_misses`) when
+/// tracing is enabled.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub alpha_hits: usize,
+    pub alpha_misses: usize,
+    pub pc_hits: usize,
+    pub pc_misses: usize,
+}
+
 /// Statistics from one training run.
 #[derive(Clone, Debug)]
 pub struct TrainStats {
@@ -112,6 +127,9 @@ pub struct GpRegression<O: PredictiveOp> {
     /// evidence included — so experiment tables and the CLI can report
     /// uncertainty without re-estimating.
     pub last_logdet: Option<LogdetEstimate>,
+    /// Cache hit/miss tallies for the retained artifacts (see
+    /// [`CacheStats`]); read by the serving layer's per-model report.
+    pub cache_stats: CacheStats,
     alpha_cache: Option<Vec<f64>>,
     /// Preconditioner cache: the options it was built under, plus the
     /// factor (`None` when building was skipped or impossible).
@@ -137,6 +155,7 @@ impl<O: PredictiveOp> GpRegression<O> {
             warm_start_predict_var: true,
             reuse_precond_across_steps: false,
             last_logdet: None,
+            cache_stats: CacheStats::default(),
             alpha_cache: None,
             pc_cache: None,
             pchol_cache: None,
@@ -171,8 +190,12 @@ impl<O: PredictiveOp> GpRegression<O> {
             None => true,
         };
         if !stale {
+            self.cache_stats.pc_hits += 1;
+            crate::util::obs::add(crate::util::obs::Counter::CacheHits, 1);
             return;
         }
+        self.cache_stats.pc_misses += 1;
+        crate::util::obs::add(crate::util::obs::Counter::CacheMisses, 1);
         let s2 = self.op.noise_var();
         let pc = if !(s2 > 0.0) {
             self.pchol_cache = None;
@@ -216,6 +239,13 @@ impl<O: PredictiveOp> GpRegression<O> {
     /// α = K̃^{-1}(y - μ) by warm-started (preconditioned) CG.
     pub fn alpha(&mut self) -> (Vec<f64>, CgInfo) {
         self.refresh_precond();
+        if self.alpha_cache.is_some() {
+            self.cache_stats.alpha_hits += 1;
+            crate::util::obs::add(crate::util::obs::Counter::CacheHits, 1);
+        } else {
+            self.cache_stats.alpha_misses += 1;
+            crate::util::obs::add(crate::util::obs::Counter::CacheMisses, 1);
+        }
         let r = self.residual();
         let (a, info) = pcg_with_guess(
             &self.op,

@@ -81,6 +81,8 @@ impl PivotedCholesky {
     /// spends nothing. Growing `r1 → r2` is bitwise identical to a fresh
     /// factorization at rank `r2` with the same stopping tolerance.
     pub fn grow(&mut self, op: &dyn KernelOp, max_rank: usize, rel_tol: f64) {
+        let _span = crate::span!("pchol_grow");
+        let rank_before = self.cols.len();
         let n = op.n();
         let s2 = op.noise_var();
         let mut e = vec![0.0; n];
@@ -123,6 +125,10 @@ impl PivotedCholesky {
             self.mvms += 1;
         }
         let k = self.cols.len();
+        crate::util::obs::add(
+            crate::util::obs::Counter::PcholCols,
+            (k - rank_before) as u64,
+        );
         let mut l = Mat::zeros(n, k);
         for (j, c) in self.cols.iter().enumerate() {
             l.set_col(j, c);

@@ -4,6 +4,7 @@
 //! MVM-based estimators are unaffected).
 
 use super::{KernelOp, LinOp};
+use crate::util::obs;
 
 /// `K̃ = sum_p K_p + σ² I`, where each part is a noise-free kernel operator
 /// (parts are built with their `log σ = -inf`, i.e. σ² = 0, and their noise
@@ -70,6 +71,7 @@ impl LinOp for SumKernelOp {
     /// compose under addition — paper §1).
     fn apply_mat(&self, x: &crate::linalg::dense::Mat) -> crate::linalg::dense::Mat {
         assert_eq!(x.rows, self.n());
+        let _obs = obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         let mut out = crate::linalg::dense::Mat::zeros(x.rows, x.cols);
         for p in &self.parts {
             out.add_assign(&p.apply_mat(x));
@@ -90,6 +92,7 @@ impl LinOp for SumKernelOp {
         prec: crate::util::precision::Precision,
     ) -> crate::linalg::dense::Mat {
         use crate::util::precision::Precision;
+        let _obs = obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         match prec {
             Precision::F64 => self.apply_mat(x),
             Precision::F32F64 => {
@@ -106,11 +109,17 @@ impl LinOp for SumKernelOp {
             }
         }
     }
+    fn obs_kind(&self) -> &'static str {
+        "sum_kernel"
+    }
 }
 
 impl KernelOp for SumKernelOp {
     fn num_hypers(&self) -> usize {
         (0..self.parts.len()).map(|p| self.part_nh(p)).sum::<usize>() + 1
+    }
+    fn obs_grad_kind(&self) -> &'static str {
+        "sum_kernel_grad"
     }
     fn hypers(&self) -> Vec<f64> {
         let mut h = Vec::new();
@@ -156,6 +165,7 @@ impl KernelOp for SumKernelOp {
         }
     }
     fn apply_grad_mat(&self, i: usize, x: &crate::linalg::dense::Mat) -> crate::linalg::dense::Mat {
+        let _obs = obs::apply_site(self.obs_grad_kind(), 1, x.cols as u64);
         match self.locate(i) {
             Some((p, local)) => self.parts[p].apply_grad_mat(local, x),
             None => {
@@ -171,6 +181,9 @@ impl KernelOp for SumKernelOp {
     /// Concatenate each part's blocked derivative set (their hidden noise
     /// hypers dropped), then the shared-noise block.
     fn apply_grad_all_mat(&self, x: &crate::linalg::dense::Mat) -> Vec<crate::linalg::dense::Mat> {
+        let nhyp = self.num_hypers() as u64;
+        let _obs =
+            obs::apply_site(self.obs_grad_kind(), nhyp, nhyp * x.cols as u64);
         let mut outs = Vec::with_capacity(self.num_hypers());
         for p in &self.parts {
             let mut sub = p.apply_grad_all_mat(x);

@@ -6,6 +6,7 @@
 use super::{KernelOp, LinOp};
 use crate::kernels::Kernel;
 use crate::linalg::dense::{Mat, MatF32};
+use crate::util::obs;
 use crate::util::parallel;
 use crate::util::precision::Precision;
 
@@ -99,6 +100,7 @@ impl LinOp for DenseKernelOp {
     fn apply_mat(&self, x: &Mat) -> Mat {
         let n = self.n();
         assert_eq!(x.rows, n);
+        let _obs = obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         let b = x.cols;
         let mut out = Mat::zeros(n, b);
         if b == 0 || n == 0 {
@@ -118,6 +120,7 @@ impl LinOp for DenseKernelOp {
     /// the noise diagonal `σ² x` stays exact f64, and F64 mode is
     /// `apply_mat` itself.
     fn apply_mat_prec(&self, x: &Mat, prec: Precision) -> Mat {
+        let _obs = obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         match prec {
             Precision::F64 => self.apply_mat(x),
             Precision::F32F64 => {
@@ -144,11 +147,17 @@ impl LinOp for DenseKernelOp {
     fn to_dense(&self) -> Mat {
         self.full_matrix()
     }
+    fn obs_kind(&self) -> &'static str {
+        "dense_kernel"
+    }
 }
 
 impl KernelOp for DenseKernelOp {
     fn num_hypers(&self) -> usize {
         self.kernel.num_hypers() + 1
+    }
+    fn obs_grad_kind(&self) -> &'static str {
+        "dense_kernel_grad"
     }
     fn hypers(&self) -> Vec<f64> {
         let mut h = self.kernel.hypers();
@@ -218,6 +227,7 @@ impl KernelOp for DenseKernelOp {
     fn apply_grad_mat(&self, i: usize, x: &Mat) -> Mat {
         let n = self.n();
         assert_eq!(x.rows, n);
+        let _obs = obs::apply_site(self.obs_grad_kind(), 1, x.cols as u64);
         let b = x.cols;
         let nh = self.kernel.num_hypers();
         if i == nh {
@@ -255,6 +265,9 @@ impl KernelOp for DenseKernelOp {
     fn apply_grad_all_mat(&self, x: &Mat) -> Vec<Mat> {
         let n = self.n();
         assert_eq!(x.rows, n);
+        let nhyp = self.num_hypers() as u64;
+        let _obs =
+            obs::apply_site(self.obs_grad_kind(), nhyp, nhyp * x.cols as u64);
         let b = x.cols;
         let nh = self.kernel.num_hypers();
         let threads = parallel::default_threads();

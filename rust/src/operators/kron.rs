@@ -8,6 +8,7 @@ use super::LinOp;
 use crate::linalg::dense::Mat;
 use crate::linalg::eigh::eigh;
 use crate::linalg::fft::Cpx;
+use crate::util::obs;
 use crate::util::precision::Precision;
 
 /// One factor of the Kronecker product.
@@ -220,6 +221,7 @@ impl LinOp for KronOp {
     /// so each factor contraction sweeps all b columns at once.
     fn apply_mat(&self, x: &Mat) -> Mat {
         assert_eq!(x.rows, self.n());
+        let _obs = obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         let b = x.cols;
         let mut data = x.data.clone();
         self.block_apply_data(&mut data, b, Precision::F64);
@@ -227,10 +229,14 @@ impl LinOp for KronOp {
     }
     fn apply_mat_prec(&self, x: &Mat, prec: Precision) -> Mat {
         assert_eq!(x.rows, self.n());
+        let _obs = obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         let b = x.cols;
         let mut data = x.data.clone();
         self.block_apply_data(&mut data, b, prec);
         Mat { rows: x.rows, cols: b, data }
+    }
+    fn obs_kind(&self) -> &'static str {
+        "kron"
     }
 }
 

@@ -8,6 +8,7 @@ use super::{KernelOp, LinOp};
 use crate::kernels::Kernel;
 use crate::linalg::chol::Cholesky;
 use crate::linalg::dense::{Mat, MatF32};
+use crate::util::obs;
 use crate::util::precision::Precision;
 
 /// `K̃ = K_xu K_uu^{-1} K_ux + D` where `D = σ² I` (SoR) or
@@ -248,6 +249,7 @@ impl LinOp for FitcOp {
     fn apply_mat(&self, x: &Mat) -> Mat {
         let (n, m) = (self.points.len(), self.m());
         assert_eq!(x.rows, n);
+        let _obs = obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         let b = x.cols;
         // T = K_ux X (m x b), accumulated in the same ascending-i order as
         // `matvec_t` so columns match single-vector applies bitwise.
@@ -290,6 +292,7 @@ impl LinOp for FitcOp {
     /// m×m Cholesky solve and the diagonal `D ∘ X` stay exact f64, and
     /// F64 mode is `apply_mat` itself (bitwise).
     fn apply_mat_prec(&self, x: &Mat, prec: Precision) -> Mat {
+        let _obs = obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         match prec {
             Precision::F64 => self.apply_mat(x),
             Precision::F32F64 => {
@@ -323,11 +326,17 @@ impl LinOp for FitcOp {
             }
         }
     }
+    fn obs_kind(&self) -> &'static str {
+        "fitc"
+    }
 }
 
 impl KernelOp for FitcOp {
     fn num_hypers(&self) -> usize {
         self.kernel.num_hypers() + 1
+    }
+    fn obs_grad_kind(&self) -> &'static str {
+        "fitc_grad"
     }
     fn hypers(&self) -> Vec<f64> {
         let mut h = self.kernel.hypers();
@@ -361,6 +370,7 @@ impl KernelOp for FitcOp {
     /// block** (the per-column default would re-factor K_uu per probe) and
     /// applied with the blocked path.
     fn apply_grad_mat(&self, i: usize, x: &Mat) -> Mat {
+        let _obs = obs::apply_site(self.obs_grad_kind(), 1, x.cols as u64);
         let h0 = self.hypers();
         let eps = 1e-5;
         let mut fd_op = FitcOp::new(

@@ -31,7 +31,16 @@
 //! * **MVM accounting.** Estimators count work in probe-column MVMs
 //!   (`mvms`, comparable across block sizes) and separately in block applies
 //!   (`block_applies`, what the hardware actually executes). Operators don't
-//!   count anything themselves.
+//!   keep counts of their own — but every blocked entry point opens a
+//!   [`crate::util::obs::apply_site`] span (named [`LinOp::obs_kind`]) that
+//!   mirrors exactly that convention when `--trace` is on: one
+//!   `block_applies` / `cols` `mvms` per top-level blocked apply, with
+//!   *nested* applies (a sum charging its parts, a wrapper charging its
+//!   inner operator, `apply_mat_prec` falling through to `apply_mat`)
+//!   suppressed so the traced totals equal the estimators' accounting.
+//!   Scalar `apply`/`apply_vec` is deliberately uninstrumented (pivoted-
+//!   Cholesky pivot probes and bracket estimation are outside the
+//!   `LogdetEstimate` accounting).
 //!
 //! # The precision contract (see [`crate::util::precision`])
 //!
@@ -78,12 +87,20 @@ pub use ski::SkiOp;
 pub use toeplitz::ToeplitzOp;
 
 use crate::linalg::dense::Mat;
+use crate::util::obs;
 use crate::util::precision::Precision;
 
 /// A symmetric linear operator exposed through matrix–vector products.
 pub trait LinOp: Send + Sync {
     /// Dimension (operators here are square).
     fn n(&self) -> usize;
+
+    /// Stable short name for this operator's tracing span
+    /// ([`crate::util::obs::apply_site`]); concrete operators override it
+    /// so the `--trace` tree attributes applies per operator type.
+    fn obs_kind(&self) -> &'static str {
+        "linop"
+    }
 
     /// y = A x (no aliasing; `y` is fully overwritten).
     fn apply(&self, x: &[f64], y: &mut [f64]);
@@ -101,6 +118,7 @@ pub trait LinOp: Send + Sync {
     /// blocked implementation.
     fn apply_mat(&self, x: &Mat) -> Mat {
         assert_eq!(x.rows, self.n());
+        let _obs = obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         let mut out = Mat::zeros(x.rows, x.cols);
         let mut xin = vec![0.0; x.rows];
         let mut yout = vec![0.0; x.rows];
@@ -179,10 +197,18 @@ pub trait KernelOp: LinOp {
         }
     }
 
+    /// Span name for derivative applies — defaults to `obs_kind` + a
+    /// `_grad` suffix convention is impossible with `&'static str` concat,
+    /// so concrete operators override this when they override `obs_kind`.
+    fn obs_grad_kind(&self) -> &'static str {
+        "linop_grad"
+    }
+
     /// Y = (∂K̃/∂θ_i) X for an `n x b` probe block (blocked derivative MVM).
     /// Same column-independence contract as [`LinOp::apply_mat`].
     fn apply_grad_mat(&self, i: usize, x: &Mat) -> Mat {
         assert_eq!(x.rows, self.n());
+        let _obs = obs::apply_site(self.obs_grad_kind(), 1, x.cols as u64);
         let mut out = Mat::zeros(x.rows, x.cols);
         let mut xin = vec![0.0; x.rows];
         let mut yout = vec![0.0; x.rows];
@@ -242,14 +268,19 @@ impl LinOp for DenseMatOp {
     fn n(&self) -> usize {
         self.a.rows
     }
+    fn obs_kind(&self) -> &'static str {
+        "dense_mat"
+    }
     fn apply(&self, x: &[f64], y: &mut [f64]) {
         self.a.matvec_into(x, y);
     }
     fn apply_mat(&self, x: &Mat) -> Mat {
         assert_eq!(x.rows, self.n());
+        let _obs = obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         self.a.matmul(x)
     }
     fn apply_mat_prec(&self, x: &Mat, prec: Precision) -> Mat {
+        let _obs = obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         match prec {
             Precision::F64 => self.apply_mat(x),
             Precision::F32F64 => {
@@ -275,6 +306,9 @@ impl LinOp for DiagOp {
     fn n(&self) -> usize {
         self.d.len()
     }
+    fn obs_kind(&self) -> &'static str {
+        "diag"
+    }
     fn apply(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.n());
         assert_eq!(y.len(), self.n());
@@ -284,6 +318,7 @@ impl LinOp for DiagOp {
     }
     fn apply_mat(&self, x: &Mat) -> Mat {
         assert_eq!(x.rows, self.n());
+        let _obs = obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         let mut out = x.clone();
         for i in 0..out.rows {
             let di = self.d[i];
@@ -305,6 +340,9 @@ impl LinOp for ShiftedOp<'_> {
     fn n(&self) -> usize {
         self.inner.n()
     }
+    fn obs_kind(&self) -> &'static str {
+        "shifted"
+    }
     fn apply(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.n());
         assert_eq!(y.len(), self.n());
@@ -315,6 +353,7 @@ impl LinOp for ShiftedOp<'_> {
     }
     fn apply_mat(&self, x: &Mat) -> Mat {
         assert_eq!(x.rows, self.n());
+        let _obs = obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         let mut out = self.inner.apply_mat(x);
         for (o, xi) in out.data.iter_mut().zip(&x.data) {
             *o += self.shift * xi;
@@ -325,6 +364,7 @@ impl LinOp for ShiftedOp<'_> {
     /// is exact structural arithmetic and stays f64 in every mode.
     fn apply_mat_prec(&self, x: &Mat, prec: Precision) -> Mat {
         assert_eq!(x.rows, self.n());
+        let _obs = obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         let mut out = self.inner.apply_mat_prec(x, prec);
         for (o, xi) in out.data.iter_mut().zip(&x.data) {
             *o += self.shift * xi;
@@ -358,6 +398,9 @@ impl LinOp for LaplaceBOp<'_> {
     fn n(&self) -> usize {
         self.inner.n()
     }
+    fn obs_kind(&self) -> &'static str {
+        "laplace_b"
+    }
     fn apply(&self, x: &[f64], y: &mut [f64]) {
         let n = self.n();
         assert_eq!(x.len(), n);
@@ -374,6 +417,7 @@ impl LinOp for LaplaceBOp<'_> {
     }
     fn apply_mat(&self, x: &Mat) -> Mat {
         assert_eq!(x.rows, self.n());
+        let _obs = obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         let mut t = x.clone();
         for i in 0..t.rows {
             let s = self.sqrt_w[i];
@@ -395,6 +439,7 @@ impl LinOp for LaplaceBOp<'_> {
     /// scaling and `+ x` term are exact and stay f64 in every mode.
     fn apply_mat_prec(&self, x: &Mat, prec: Precision) -> Mat {
         assert_eq!(x.rows, self.n());
+        let _obs = obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         let mut t = x.clone();
         for i in 0..t.rows {
             let s = self.sqrt_w[i];

@@ -17,6 +17,7 @@ use super::toeplitz::ToeplitzOp;
 use super::{KernelOp, LinOp};
 use crate::grid::{Grid, InterpOrder, Stencil};
 use crate::kernels::{Kernel, SeparableKernel};
+use crate::util::obs;
 use crate::util::precision::Precision;
 
 impl Clone for ToeplitzOp {
@@ -349,6 +350,7 @@ impl LinOp for SkiOp {
     }
     fn apply_mat(&self, x: &crate::linalg::dense::Mat) -> crate::linalg::dense::Mat {
         assert_eq!(x.rows, self.n);
+        let _obs = obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         let mut out = self.apply_wkw_mat(&self.kuu, x);
         let s2 = self.noise_var();
         if self.diag_correction {
@@ -374,6 +376,7 @@ impl LinOp for SkiOp {
         x: &crate::linalg::dense::Mat,
         prec: Precision,
     ) -> crate::linalg::dense::Mat {
+        let _obs = obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         match prec {
             Precision::F64 => self.apply_mat(x),
             Precision::F32F64 => {
@@ -400,11 +403,17 @@ impl LinOp for SkiOp {
             }
         }
     }
+    fn obs_kind(&self) -> &'static str {
+        "ski"
+    }
 }
 
 impl KernelOp for SkiOp {
     fn num_hypers(&self) -> usize {
         self.kernel.num_hypers() + 1
+    }
+    fn obs_grad_kind(&self) -> &'static str {
+        "ski_grad"
     }
     fn hypers(&self) -> Vec<f64> {
         let mut h = self.kernel.hypers();
@@ -454,6 +463,7 @@ impl KernelOp for SkiOp {
     }
     fn apply_grad_mat(&self, i: usize, x: &crate::linalg::dense::Mat) -> crate::linalg::dense::Mat {
         assert_eq!(x.rows, self.n);
+        let _obs = obs::apply_site(self.obs_grad_kind(), 1, x.cols as u64);
         let nk = self.kernel.num_hypers();
         if i == nk {
             let s = 2.0 * self.noise_var();
@@ -613,6 +623,7 @@ impl LinOp for KronKernelOp {
     }
     fn apply_mat(&self, x: &crate::linalg::dense::Mat) -> crate::linalg::dense::Mat {
         assert_eq!(x.rows, self.n());
+        let _obs = obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         let mut out = self.kuu.apply_mat(x);
         let s2 = self.noise_var();
         for (o, xi) in out.data.iter_mut().zip(&x.data) {
@@ -620,11 +631,17 @@ impl LinOp for KronKernelOp {
         }
         out
     }
+    fn obs_kind(&self) -> &'static str {
+        "kron_kernel"
+    }
 }
 
 impl KernelOp for KronKernelOp {
     fn num_hypers(&self) -> usize {
         self.kernel.num_hypers() + 1
+    }
+    fn obs_grad_kind(&self) -> &'static str {
+        "kron_kernel_grad"
     }
     fn hypers(&self) -> Vec<f64> {
         let mut h = self.kernel.hypers();
@@ -664,6 +681,7 @@ impl KernelOp for KronKernelOp {
     }
     fn apply_grad_mat(&self, i: usize, x: &crate::linalg::dense::Mat) -> crate::linalg::dense::Mat {
         assert_eq!(x.rows, self.n());
+        let _obs = obs::apply_site(self.obs_grad_kind(), 1, x.cols as u64);
         let nk = self.kernel.num_hypers();
         if i == nk {
             let s = 2.0 * self.noise_var();

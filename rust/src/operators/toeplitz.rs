@@ -19,6 +19,7 @@
 use super::LinOp;
 use crate::linalg::dense::Mat;
 use crate::linalg::fft::{next_pow2, rfft, Cpx, FftPlan};
+use crate::util::obs;
 use crate::util::parallel;
 use crate::util::precision::Precision;
 
@@ -107,6 +108,7 @@ impl LinOp for ToeplitzOp {
     fn apply_mat(&self, x: &Mat) -> Mat {
         let m = self.m();
         assert_eq!(x.rows, m);
+        let _obs = obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         let b = x.cols;
         let mut out = Mat::zeros(m, b);
         // ~len log2(len) complex ops per column.
@@ -154,6 +156,7 @@ impl LinOp for ToeplitzOp {
     /// Mixed mode stages the block through f32 on both sides of the
     /// (still fully f64) circulant transform — see the module docs.
     fn apply_mat_prec(&self, x: &Mat, prec: Precision) -> Mat {
+        let _obs = obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         match prec {
             Precision::F64 => self.apply_mat(x),
             Precision::F32F64 => {
@@ -172,6 +175,9 @@ impl LinOp for ToeplitzOp {
     }
     fn to_dense(&self) -> crate::linalg::dense::Mat {
         self.to_dense_mat()
+    }
+    fn obs_kind(&self) -> &'static str {
+        "toeplitz"
     }
 }
 

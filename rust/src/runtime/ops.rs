@@ -109,7 +109,12 @@ impl LinOp for PjrtMvmOp {
             y[i] = out[(i, 0)];
         }
     }
+    fn obs_kind(&self) -> &'static str {
+        "pjrt_mvm"
+    }
     fn apply_mat(&self, x: &Mat) -> Mat {
+        let _obs =
+            crate::util::obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         // Chunk columns into artifact-width blocks.
         let mut out = Mat::zeros(x.rows, x.cols);
         let mut j0 = 0;
@@ -169,7 +174,12 @@ impl LinOp for HybridKernelOp {
     fn apply(&self, x: &[f64], y: &mut [f64]) {
         self.pjrt.apply(x, y);
     }
+    fn obs_kind(&self) -> &'static str {
+        "pjrt_hybrid"
+    }
     fn apply_mat(&self, x: &Mat) -> Mat {
+        let _obs =
+            crate::util::obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         self.pjrt.apply_mat(x)
     }
 }

@@ -47,6 +47,7 @@
 use crate::linalg::dense::Mat;
 use crate::operators::LinOp;
 use crate::util::blocks::BlockPartition;
+use crate::util::obs;
 use crate::util::parallel;
 use crate::util::stats::{axpy, dot, norm2};
 
@@ -152,6 +153,8 @@ pub fn cg_block<O: LinOp + ?Sized>(
     // changes scheduling only, never results. Stealing matters because
     // group convergence is ragged: a worker whose group deflates early
     // pulls the next unsolved group instead of idling.
+    let _span = crate::span!("cg_block");
+    let audit = obs::audit_begin();
     let part = BlockPartition::new(b.cols, opts.block_size);
     let groups = parallel::par_map_steal(part.nblocks, opts.threads, |bi| {
         let (j0, w) = part.range(bi);
@@ -159,6 +162,13 @@ pub fn cg_block<O: LinOp + ?Sized>(
     });
     let block_applies = merge_groups(groups, &mut out, &mut infos);
     let mvms = infos.iter().map(|c| c.mvms).sum();
+    audit.end_assert(
+        "cg_block",
+        &[
+            (obs::Counter::Mvms, mvms as u64),
+            (obs::Counter::BlockApplies, block_applies as u64),
+        ],
+    );
     (out, BlockCgInfo { cols: infos, mvms, block_applies, warm_saved_iters: 0 })
 }
 
@@ -195,6 +205,8 @@ pub fn pcg_block<O: LinOp + ?Sized>(
     }
     // Same work-stealing group fan-out as [`cg_block`]; the blocked `P⁻¹`
     // applies are column-independent, so groups stay data-independent.
+    let _span = crate::span!("pcg_block");
+    let audit = obs::audit_begin();
     let part = BlockPartition::new(b.cols, opts.block_size);
     let groups = parallel::par_map_steal(part.nblocks, opts.threads, |bi| {
         let (j0, w) = part.range(bi);
@@ -202,6 +214,13 @@ pub fn pcg_block<O: LinOp + ?Sized>(
     });
     let block_applies = merge_groups(groups, &mut out, &mut infos);
     let mvms = infos.iter().map(|c| c.mvms).sum();
+    audit.end_assert(
+        "pcg_block",
+        &[
+            (obs::Counter::Mvms, mvms as u64),
+            (obs::Counter::BlockApplies, block_applies as u64),
+        ],
+    );
     (out, BlockCgInfo { cols: infos, mvms, block_applies, warm_saved_iters: 0 })
 }
 

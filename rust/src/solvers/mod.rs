@@ -110,6 +110,35 @@
 //!   Mixed mode may spend extra iterations (refinement restarts); it never
 //!   weakens what convergence asserts. Scalar entry points ignore the
 //!   field entirely (always f64) and remain the bitwise reference.
+//!
+//! # Trace span sites ([`crate::util::obs`])
+//!
+//! With `--trace` the solvers contribute (inert and bitwise invisible
+//! when tracing is off — proptest-pinned by
+//! `prop_tracing_enabled_bitwise_inert`):
+//!
+//! * `cg_block` — one per [`block::cg_block`] call, wrapping the whole
+//!   blocked solve in an accounting **audit window** that asserts the
+//!   traced `Mvms`/`BlockApplies` counters equal
+//!   [`block::BlockCgInfo`]'s `mvms`/`block_applies` exactly (release
+//!   builds included).
+//! * `pcg_block` — one per *preconditioned* [`block::pcg_block`] call
+//!   (with `pc = None` the call delegates to `cg_block` before any span
+//!   opens, so the unpreconditioned path keeps its name). Same audit
+//!   contract; preconditioner applications are low-rank products, not
+//!   operator MVMs, and charge no apply counters — matching
+//!   `BlockCgInfo`'s convention.
+//! * `pchol_grow` — each [`crate::linalg::pchol::PivotedCholesky::grow`]
+//!   during [`precond::build_preconditioner`], charging
+//!   `Counter::PcholCols` with the columns added.
+//! * Beneath these, every operator apply opens its
+//!   [`crate::util::obs::apply_site`] span (`LinOp::obs_kind`), so the
+//!   per-path rollup splits solve time into iteration overhead vs.
+//!   operator structure. Worker threads of the RHS-group fan-out stitch
+//!   their spans under the calling solve's span
+//!   ([`crate::util::parallel`] forwards the parent id through
+//!   `par_map`/`par_map_steal`), so multi-threaded solves profile as one
+//!   tree, not per-thread fragments.
 pub mod block;
 pub mod cg;
 pub mod precond;

@@ -299,6 +299,8 @@ impl<O: LinOp + ?Sized> LinOp for PreconditionedOp<'_, O> {
     }
     fn apply_mat(&self, x: &Mat) -> Mat {
         assert_eq!(x.rows, self.n());
+        let _obs =
+            crate::util::obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         let s = self.pc.apply_inv_sqrt_mat(x);
         let t = self.op.apply_mat(&s);
         self.pc.apply_inv_sqrt_mat(&t)
@@ -309,9 +311,18 @@ impl<O: LinOp + ?Sized> LinOp for PreconditionedOp<'_, O> {
     /// of the inner op, keeping the F64 arm bit-identical.
     fn apply_mat_prec(&self, x: &Mat, prec: crate::util::precision::Precision) -> Mat {
         assert_eq!(x.rows, self.n());
+        let _obs =
+            crate::util::obs::apply_site(self.obs_kind(), 1, x.cols as u64);
         let s = self.pc.apply_inv_sqrt_mat(x);
         let t = self.op.apply_mat_prec(&s, prec);
         self.pc.apply_inv_sqrt_mat(&t)
+    }
+    /// One split-operator apply is charged as one `block_applies` — the
+    /// inner `K̃` apply is suppressed as nested, matching the estimators'
+    /// convention (the `P^{-1/2}` low-rank algebra is outside the MVM
+    /// accounting).
+    fn obs_kind(&self) -> &'static str {
+        "precond_split"
     }
 }
 

@@ -1,7 +1,8 @@
 //! Shared utilities: RNG, parallel helpers, statistics, bench harness,
-//! column-block partitioning, precision mode.
+//! column-block partitioning, precision mode, observability.
 pub mod bench;
 pub mod blocks;
+pub mod obs;
 pub mod parallel;
 pub mod precision;
 pub mod rng;

@@ -1,0 +1,822 @@
+//! Zero-dependency hierarchical span tracing + typed runtime counters —
+//! the attribution layer behind `--trace`, `--trace-json`, and
+//! `service::Metrics`.
+//!
+//! # The span contract
+//!
+//! A span is an RAII guard ([`Span`], usually via the [`span!`] macro)
+//! timing one region with the process-wide monotonic clock ([`now_ns`]).
+//! Spans nest through a **thread-local stack**: a span entered while
+//! another is active becomes its child, and the registry aggregates by
+//! *span path* (root → … → name), so `pcg_block` under `dispatch` and
+//! `pcg_block` under `exp perf` roll up separately. Every path node keeps
+//! call count, total time, a duration [`Histogram`] (whose exact
+//! `min`/`max` ride along the bucketed quantiles), and one cell per
+//! [`Counter`].
+//!
+//! # Worker-thread stitching
+//!
+//! `util::parallel`'s pools spawn OS threads whose stacks start empty. At
+//! every spawn point (`par_map`, `par_map_steal`, `par_chunks_mut`, the
+//! service pool) the spawning thread captures [`stitch_handle`] and the
+//! worker installs it with [`adopt`]: spans and counters from stolen RHS
+//! groups then attach under the span that spawned them, exactly as if the
+//! work had run inline. Stitching moves **no numeric data** — it only
+//! redirects attribution.
+//!
+//! # Counters and the accounting audit
+//!
+//! Counters ([`Counter`]) are monotone `u64`s added to the innermost
+//! active span's node *and* to a global total. Operator applies are
+//! counted at the `LinOp` implementations through [`apply_site`], which
+//! suppresses **nested** applies (a `SumKernelOp` charging its parts, the
+//! preconditioned split operator charging its inner `K̃`) so the count
+//! matches the estimators'/solvers' own convention: `block_applies` per
+//! top-level blocked apply, `mvms` per probe column. Because the
+//! convention is the same, every solver/estimator driver can *audit*
+//! itself: [`audit_begin`]/[`Audit::end_assert`] snapshot the global
+//! totals around a solve and assert (in release builds too) that the
+//! window's `mvms`/`block_applies` delta equals the `BlockCgInfo` /
+//! `LogdetEstimate` accounting it returns. Windows that overlap another
+//! window (concurrent drivers under `map_hyper_batch`) skip the assert —
+//! deltas are only meaningful when exclusive.
+//!
+//! # Disabled state
+//!
+//! Tracing is off by default. Every site then costs a few relaxed atomic
+//! loads — no clock reads, no locks, no allocation. Enabled or not, this
+//! module never touches numeric accumulation order (pinned bitwise by
+//! `tests/proptests.rs`): all instrumentation is observation-only.
+
+use crate::util::stats::Histogram;
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Typed counter kinds. `QueueWaitNs` accumulates nanoseconds measured on
+/// the shared [`now_ns`] clock (the queueing-delay half of satellite
+/// latency attribution); everything else is a plain event count.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(usize)]
+pub enum Counter {
+    /// Probe-column MVMs (block-size independent unit).
+    Mvms = 0,
+    /// Block-amortized operator applications (what the hardware runs).
+    BlockApplies,
+    /// Probe columns consumed by estimator drivers.
+    Probes,
+    /// Lanczos steps / Chebyshev degrees granted by budget decisions.
+    Steps,
+    /// Pivot columns appended by `PivotedCholesky::grow`.
+    PcholCols,
+    /// Requests rejected by a full `RequestQueue`.
+    QueueFull,
+    /// Serving-cache hits (alpha or factor).
+    CacheHits,
+    /// Serving-cache misses (alpha or factor).
+    CacheMisses,
+    /// Nanoseconds requests spent queued before dispatch drained them.
+    QueueWaitNs,
+}
+
+/// Number of counter kinds (array sizing).
+pub const NUM_COUNTERS: usize = 9;
+
+/// Stable counter names, in `Counter` discriminant order — the JSON
+/// schema's key set.
+pub const COUNTER_NAMES: [&str; NUM_COUNTERS] = [
+    "mvms",
+    "block_applies",
+    "probes",
+    "steps",
+    "pchol_cols",
+    "queue_full",
+    "cache_hits",
+    "cache_misses",
+    "queue_wait_ns",
+];
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Whether tracing is on. One relaxed load — the entire disabled-state
+/// cost of a counter site.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on/off process-wide. Tests flipping this must hold
+/// [`test_lock`] (the flag is global).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Serializes tests that enable tracing (same pattern as the process-
+/// default knob locks in `estimators`/`util::parallel`).
+pub fn test_lock() -> &'static Mutex<()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+}
+
+/// Run `f` with tracing forced to `on`, restoring the previous state even
+/// on panic (drop guard). Callers in tests should hold [`test_lock`].
+pub fn with_enabled<T>(on: bool, f: impl FnOnce() -> T) -> T {
+    struct Restore(bool);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            set_enabled(self.0);
+        }
+    }
+    let _r = Restore(enabled());
+    set_enabled(on);
+    f()
+}
+
+// ---------------------------------------------------------------------
+// The shared monotonic clock.
+// ---------------------------------------------------------------------
+
+fn process_start() -> Instant {
+    static START: OnceLock<Instant> = OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since process start on one monotonic source — the single
+/// clock behind span timing, `RequestQueue` submit stamps, and the
+/// dispatcher's batch clock, so queueing delay and solve time subtract
+/// cleanly. Always available (not gated on [`enabled`]).
+pub fn now_ns() -> u64 {
+    process_start().elapsed().as_nanos() as u64
+}
+
+// ---------------------------------------------------------------------
+// Registry: one node per distinct span path.
+// ---------------------------------------------------------------------
+
+/// Duration histogram bounds: 100 ns .. 100 s, 72 log buckets.
+const SPAN_HIST_LO: f64 = 1e2;
+const SPAN_HIST_HI: f64 = 1e11;
+const SPAN_HIST_BUCKETS: usize = 72;
+
+struct Node {
+    name: &'static str,
+    parent: usize,
+    depth: usize,
+    calls: AtomicU64,
+    total_ns: AtomicU64,
+    ctrs: [AtomicU64; NUM_COUNTERS],
+    /// Span durations (ns). Exact `min`/`max`/`sum` ride along the
+    /// buckets (the `util::stats::Histogram` satellite).
+    hist: Mutex<Histogram>,
+}
+
+impl Node {
+    fn new(name: &'static str, parent: usize, depth: usize) -> Node {
+        const Z: AtomicU64 = AtomicU64::new(0);
+        Node {
+            name,
+            parent,
+            depth,
+            calls: AtomicU64::new(0),
+            total_ns: AtomicU64::new(0),
+            ctrs: [Z; NUM_COUNTERS],
+            hist: Mutex::new(Histogram::log_spaced(
+                SPAN_HIST_LO,
+                SPAN_HIST_HI,
+                SPAN_HIST_BUCKETS,
+            )),
+        }
+    }
+}
+
+struct Inner {
+    nodes: Vec<Arc<Node>>,
+    index: HashMap<(usize, &'static str), usize>,
+}
+
+fn registry() -> &'static Mutex<Inner> {
+    static REG: OnceLock<Mutex<Inner>> = OnceLock::new();
+    REG.get_or_init(|| {
+        Mutex::new(Inner {
+            nodes: vec![Arc::new(Node::new("run", 0, 0))],
+            index: HashMap::new(),
+        })
+    })
+}
+
+const ZERO_CTR: AtomicU64 = AtomicU64::new(0);
+static GLOBAL: [AtomicU64; NUM_COUNTERS] = [ZERO_CTR; NUM_COUNTERS];
+
+thread_local! {
+    /// Active span stack: (node id, node). Top = innermost span.
+    static STACK: RefCell<Vec<(usize, Arc<Node>)>> = const { RefCell::new(Vec::new()) };
+    /// Adopted parent node id for worker threads (0 = root).
+    static BASE: Cell<usize> = const { Cell::new(0) };
+    /// Set while inside an instrumented operator apply — nested applies
+    /// (wrapper/sum/preconditioned-split internals) are suppressed.
+    static IN_APPLY: Cell<bool> = const { Cell::new(false) };
+}
+
+fn current_parent_id() -> usize {
+    STACK.with(|s| s.borrow().last().map(|(id, _)| *id)).unwrap_or_else(|| BASE.get())
+}
+
+fn intern(parent: usize, name: &'static str) -> (usize, Arc<Node>) {
+    let mut reg = registry().lock().expect("obs registry");
+    if let Some(&id) = reg.index.get(&(parent, name)) {
+        return (id, Arc::clone(&reg.nodes[id]));
+    }
+    let depth = reg.nodes[parent].depth + 1;
+    let id = reg.nodes.len();
+    let node = Arc::new(Node::new(name, parent, depth));
+    reg.nodes.push(Arc::clone(&node));
+    reg.index.insert((parent, name), id);
+    (id, node)
+}
+
+/// Clear every span path and counter (root survives, zeroed). Only call
+/// between runs, with no spans active anywhere — the CLI calls it before
+/// a traced run, tests under [`test_lock`].
+pub fn reset() {
+    let mut reg = registry().lock().expect("obs registry");
+    reg.nodes.truncate(1);
+    reg.index.clear();
+    let root = &reg.nodes[0];
+    root.calls.store(0, Ordering::Relaxed);
+    root.total_ns.store(0, Ordering::Relaxed);
+    for c in root.ctrs.iter() {
+        c.store(0, Ordering::Relaxed);
+    }
+    *root.hist.lock().expect("root hist") =
+        Histogram::log_spaced(SPAN_HIST_LO, SPAN_HIST_HI, SPAN_HIST_BUCKETS);
+    for g in GLOBAL.iter() {
+        g.store(0, Ordering::Relaxed);
+    }
+    STACK.with(|s| s.borrow_mut().clear());
+    BASE.set(0);
+}
+
+// ---------------------------------------------------------------------
+// Spans.
+// ---------------------------------------------------------------------
+
+/// RAII span guard: created by [`span`] / the [`span!`] macro, records
+/// elapsed time into its path node on drop. Inert (one relaxed load, no
+/// clock read) when tracing is disabled.
+pub struct Span {
+    live: Option<(Arc<Node>, Instant)>,
+}
+
+/// Enter a span named `name` under the innermost active span (or the
+/// thread's adopted parent). See the module docs for the path contract.
+pub fn span(name: &'static str) -> Span {
+    if !enabled() {
+        return Span { live: None };
+    }
+    let parent = current_parent_id();
+    let (id, node) = intern(parent, name);
+    STACK.with(|s| s.borrow_mut().push((id, Arc::clone(&node))));
+    Span { live: Some((node, Instant::now())) }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some((node, start)) = self.live.take() {
+            let ns = start.elapsed().as_nanos() as u64;
+            node.calls.fetch_add(1, Ordering::Relaxed);
+            node.total_ns.fetch_add(ns, Ordering::Relaxed);
+            if let Ok(mut h) = node.hist.lock() {
+                h.record(ns as f64);
+            }
+            STACK.with(|s| {
+                let mut st = s.borrow_mut();
+                if let Some(pos) = st.iter().rposition(|(_, n)| Arc::ptr_eq(n, &node)) {
+                    st.truncate(pos);
+                }
+            });
+        }
+    }
+}
+
+/// `let _g = span!("pcg_block");` — the span-site macro.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::util::obs::span($name)
+    };
+}
+
+/// Capture the current span node for worker-thread stitching (pass the
+/// handle into the spawned closure, then [`adopt`] it there). Returns the
+/// root handle when tracing is off.
+pub fn stitch_handle() -> usize {
+    if !enabled() {
+        return 0;
+    }
+    current_parent_id()
+}
+
+/// Install a [`stitch_handle`] as this thread's span parent: spans and
+/// counters recorded here now attach under the spawning span. Workers
+/// call this right after `set_worker_budget`.
+pub fn adopt(handle: usize) {
+    BASE.set(handle);
+}
+
+// ---------------------------------------------------------------------
+// Counters.
+// ---------------------------------------------------------------------
+
+/// Add `v` to counter `c` on the innermost active span (and the global
+/// totals). No-op (one relaxed load) when tracing is off.
+pub fn add(c: Counter, v: u64) {
+    if v == 0 || !enabled() {
+        return;
+    }
+    GLOBAL[c as usize].fetch_add(v, Ordering::Relaxed);
+    let hit = STACK.with(|s| {
+        let st = s.borrow();
+        match st.last() {
+            Some((_, node)) => {
+                node.ctrs[c as usize].fetch_add(v, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    });
+    if !hit {
+        // Rare path: no span active on this thread — charge the adopted
+        // parent (or root).
+        let id = BASE.get();
+        let reg = registry().lock().expect("obs registry");
+        let node = reg.nodes.get(id).unwrap_or(&reg.nodes[0]);
+        node.ctrs[c as usize].fetch_add(v, Ordering::Relaxed);
+    }
+}
+
+/// Snapshot of the global counter totals.
+pub fn totals() -> [u64; NUM_COUNTERS] {
+    let mut out = [0u64; NUM_COUNTERS];
+    for (o, g) in out.iter_mut().zip(GLOBAL.iter()) {
+        *o = g.load(Ordering::Relaxed);
+    }
+    out
+}
+
+/// Instrumented-operator-apply guard: opens a span named `kind` and
+/// charges `applies` block applies / `mvms` probe-column MVMs — unless
+/// this apply is nested inside another instrumented apply, in which case
+/// it is fully suppressed (the outer apply already charged the work under
+/// the estimators' accounting convention). Inert when tracing is off.
+pub struct ApplyGuard {
+    _span: Span,
+    claimed: bool,
+}
+
+impl Drop for ApplyGuard {
+    fn drop(&mut self) {
+        if self.claimed {
+            IN_APPLY.set(false);
+        }
+    }
+}
+
+/// Open an operator-apply site. `applies`/`mvms` follow the accounting
+/// convention of `estimators` (one `apply_grad_all_mat` = `nh` applies,
+/// `nh * cols` MVMs).
+pub fn apply_site(kind: &'static str, applies: u64, mvms: u64) -> ApplyGuard {
+    if !enabled() || IN_APPLY.get() {
+        return ApplyGuard { _span: Span { live: None }, claimed: false };
+    }
+    IN_APPLY.set(true);
+    let sp = span(kind);
+    add(Counter::BlockApplies, applies);
+    add(Counter::Mvms, mvms);
+    ApplyGuard { _span: sp, claimed: true }
+}
+
+/// Suppress apply-site counting on this thread for the guard's lifetime —
+/// for driver-internal helper MVMs that are deliberately **outside** the
+/// estimate accounting (e.g. the Chebyshev spectrum bracket, whose
+/// Lanczos MVMs are not charged to `LogdetEstimate::mvms`). Timing spans
+/// still record; only the apply counters go quiet.
+pub fn suppress_applies() -> ApplyGuard {
+    if !enabled() || IN_APPLY.get() {
+        return ApplyGuard { _span: Span { live: None }, claimed: false };
+    }
+    IN_APPLY.set(true);
+    ApplyGuard { _span: Span { live: None }, claimed: true }
+}
+
+// ---------------------------------------------------------------------
+// Accounting audits.
+// ---------------------------------------------------------------------
+
+static AUDIT_ACTIVE: AtomicUsize = AtomicUsize::new(0);
+static AUDIT_EPOCH: AtomicU64 = AtomicU64::new(0);
+
+/// An open audit window (see module docs). Dropping without
+/// [`end_assert`](Audit::end_assert) just closes the window.
+pub struct Audit {
+    state: Option<(Box<[u64; NUM_COUNTERS]>, u64, bool)>,
+}
+
+/// Open an audit window over the global counter totals. Returns an inert
+/// window when tracing is off.
+pub fn audit_begin() -> Audit {
+    if !enabled() {
+        return Audit { state: None };
+    }
+    let exclusive = AUDIT_ACTIVE.fetch_add(1, Ordering::SeqCst) == 0;
+    let epoch = AUDIT_EPOCH.fetch_add(1, Ordering::SeqCst) + 1;
+    Audit { state: Some((Box::new(totals()), epoch, exclusive)) }
+}
+
+impl Audit {
+    /// Close the window and, if it stayed exclusive (no concurrent driver
+    /// opened a window), assert each counter's delta equals `expect`.
+    /// This is the release-build guarantee that span-tree totals match
+    /// the `LogdetEstimate`/`BlockCgInfo` accounting.
+    pub fn end_assert(mut self, what: &str, expect: &[(Counter, u64)]) {
+        if let Some((base, epoch, exclusive)) = self.state.take() {
+            let clean = exclusive
+                && AUDIT_EPOCH.load(Ordering::SeqCst) == epoch
+                && AUDIT_ACTIVE.load(Ordering::SeqCst) == 1;
+            let t = totals();
+            AUDIT_ACTIVE.fetch_sub(1, Ordering::SeqCst);
+            if clean {
+                for &(c, want) in expect {
+                    let got = t[c as usize] - base[c as usize];
+                    assert!(
+                        got == want,
+                        "obs audit [{what}]: {} delta {got} != accounting {want}",
+                        COUNTER_NAMES[c as usize]
+                    );
+                }
+            }
+        }
+    }
+}
+
+impl Drop for Audit {
+    fn drop(&mut self) {
+        if self.state.take().is_some() {
+            AUDIT_ACTIVE.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reports.
+// ---------------------------------------------------------------------
+
+/// One span path's aggregated stats, as reported.
+pub struct SpanStat {
+    /// `run/…/name` path string.
+    pub path: String,
+    pub name: String,
+    /// Tree depth (root = 0).
+    pub depth: usize,
+    pub calls: u64,
+    pub total_ns: u64,
+    /// Total minus children's totals (saturating — concurrent children
+    /// can overlap the parent on the wall clock).
+    pub self_ns: u64,
+    /// Exact duration extrema off the per-node histogram.
+    pub min_ns: f64,
+    pub max_ns: f64,
+    /// Bucketed quantiles (upper-edge over-read, as documented on
+    /// `util::stats::Histogram`).
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub ctrs: [u64; NUM_COUNTERS],
+}
+
+/// Snapshot every span path in tree (preorder) order.
+pub fn snapshot() -> Vec<SpanStat> {
+    let reg = registry().lock().expect("obs registry");
+    let n = reg.nodes.len();
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (id, node) in reg.nodes.iter().enumerate().skip(1) {
+        children[node.parent].push(id);
+    }
+    // Child totals for self-time.
+    let totals_ns: Vec<u64> =
+        reg.nodes.iter().map(|nd| nd.total_ns.load(Ordering::Relaxed)).collect();
+    let mut paths: Vec<String> = vec![String::from("run"); n];
+    for (id, node) in reg.nodes.iter().enumerate().skip(1) {
+        paths[id] = format!("{}/{}", paths[node.parent], node.name);
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut stack = vec![0usize];
+    while let Some(id) = stack.pop() {
+        for &c in children[id].iter().rev() {
+            stack.push(c);
+        }
+        let node = &reg.nodes[id];
+        let kids_ns: u64 = children[id].iter().map(|&c| totals_ns[c]).sum();
+        let total = if id == 0 {
+            // The root never runs as a span; report it as the envelope of
+            // its children so percentages are well defined.
+            kids_ns
+        } else {
+            totals_ns[id]
+        };
+        let mut ctrs = [0u64; NUM_COUNTERS];
+        for (o, c) in ctrs.iter_mut().zip(node.ctrs.iter()) {
+            *o = c.load(Ordering::Relaxed);
+        }
+        let h = node.hist.lock().expect("span hist");
+        out.push(SpanStat {
+            path: paths[id].clone(),
+            name: node.name.to_string(),
+            depth: node.depth,
+            calls: node.calls.load(Ordering::Relaxed),
+            total_ns: total,
+            self_ns: total.saturating_sub(kids_ns),
+            min_ns: h.min(),
+            max_ns: h.max(),
+            p50_ns: h.quantile(0.5),
+            p99_ns: h.quantile(0.99),
+            ctrs,
+        });
+    }
+    out
+}
+
+fn fmt_ms(ns: u64) -> String {
+    format!("{:.2}", ns as f64 / 1e6)
+}
+
+/// Human-readable profile: tree section (indent = depth) then a flat
+/// rollup aggregated by span name, sorted by self time. Counter columns
+/// cover `mvms`/`block_applies`; other nonzero counters are listed
+/// inline.
+pub fn report_text() -> String {
+    let stats = snapshot();
+    let mut s = String::new();
+    s.push_str("== trace: span tree ==\n");
+    s.push_str(&format!(
+        "{:<44} {:>8} {:>10} {:>10} {:>10} {:>10}\n",
+        "span", "calls", "total_ms", "self_ms", "mvms", "blk_appl"
+    ));
+    for st in &stats {
+        let mut label = String::new();
+        for _ in 0..st.depth {
+            label.push_str("  ");
+        }
+        label.push_str(&st.name);
+        let extras: Vec<String> = st
+            .ctrs
+            .iter()
+            .enumerate()
+            .filter(|&(i, &v)| {
+                v > 0 && i != Counter::Mvms as usize && i != Counter::BlockApplies as usize
+            })
+            .map(|(i, &v)| format!("{}={v}", COUNTER_NAMES[i]))
+            .collect();
+        s.push_str(&format!(
+            "{:<44} {:>8} {:>10} {:>10} {:>10} {:>10}{}{}\n",
+            label,
+            st.calls,
+            fmt_ms(st.total_ns),
+            fmt_ms(st.self_ns),
+            st.ctrs[Counter::Mvms as usize],
+            st.ctrs[Counter::BlockApplies as usize],
+            if extras.is_empty() { "" } else { "  " },
+            extras.join(" ")
+        ));
+    }
+    // Flat rollup by name.
+    let mut flat: HashMap<String, (u64, u64, [u64; NUM_COUNTERS])> = HashMap::new();
+    for st in stats.iter().skip(1) {
+        let e = flat.entry(st.name.clone()).or_insert((0, 0, [0; NUM_COUNTERS]));
+        e.0 += st.calls;
+        e.1 += st.self_ns;
+        for (a, b) in e.2.iter_mut().zip(st.ctrs.iter()) {
+            *a += b;
+        }
+    }
+    let total_self: u64 = flat.values().map(|e| e.1).sum();
+    let mut rows: Vec<(String, (u64, u64, [u64; NUM_COUNTERS]))> = flat.into_iter().collect();
+    rows.sort_by(|a, b| b.1 .1.cmp(&a.1 .1).then(a.0.cmp(&b.0)));
+    s.push_str("\n== trace: flat (by self time) ==\n");
+    s.push_str(&format!(
+        "{:<28} {:>8} {:>10} {:>6} {:>10} {:>10}\n",
+        "name", "calls", "self_ms", "%", "mvms", "blk_appl"
+    ));
+    for (name, (calls, self_ns, ctrs)) in &rows {
+        let pct = if total_self > 0 {
+            100.0 * *self_ns as f64 / total_self as f64
+        } else {
+            0.0
+        };
+        s.push_str(&format!(
+            "{:<28} {:>8} {:>10} {:>6.1} {:>10} {:>10}\n",
+            name,
+            calls,
+            fmt_ms(*self_ns),
+            pct,
+            ctrs[Counter::Mvms as usize],
+            ctrs[Counter::BlockApplies as usize]
+        ));
+    }
+    let t = totals();
+    s.push_str("\n== trace: counter totals ==\n");
+    for (name, v) in COUNTER_NAMES.iter().zip(t.iter()) {
+        if *v > 0 {
+            s.push_str(&format!("{name} = {v}\n"));
+        }
+    }
+    s
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Stable machine-readable schema (`gpsld-trace-v1`): one object per span
+/// path in preorder, plus global counter totals. Counter keys follow
+/// [`COUNTER_NAMES`]; zero counters are omitted per span but the totals
+/// object always carries every key.
+pub fn report_json() -> String {
+    let stats = snapshot();
+    let mut s = String::from("{\n  \"schema\": \"gpsld-trace-v1\",\n  \"spans\": [\n");
+    for (i, st) in stats.iter().enumerate() {
+        let ctrs: Vec<String> = st
+            .ctrs
+            .iter()
+            .enumerate()
+            .filter(|&(_, &v)| v > 0)
+            .map(|(k, &v)| format!("\"{}\": {v}", COUNTER_NAMES[k]))
+            .collect();
+        let fmt_or_null = |v: f64| {
+            if v.is_finite() { format!("{v:.1}") } else { String::from("null") }
+        };
+        s.push_str(&format!(
+            "    {{\"path\": \"{}\", \"name\": \"{}\", \"depth\": {}, \"calls\": {}, \
+             \"total_ns\": {}, \"self_ns\": {}, \"min_ns\": {}, \"max_ns\": {}, \
+             \"p50_ns\": {}, \"p99_ns\": {}, \"counters\": {{{}}}}}{}\n",
+            json_escape(&st.path),
+            json_escape(&st.name),
+            st.depth,
+            st.calls,
+            st.total_ns,
+            st.self_ns,
+            fmt_or_null(st.min_ns),
+            fmt_or_null(st.max_ns),
+            fmt_or_null(st.p50_ns),
+            fmt_or_null(st.p99_ns),
+            ctrs.join(", "),
+            if i + 1 == stats.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ],\n  \"totals\": {");
+    let t = totals();
+    let items: Vec<String> = COUNTER_NAMES
+        .iter()
+        .zip(t.iter())
+        .map(|(n, v)| format!("\"{n}\": {v}"))
+        .collect();
+    s.push_str(&items.join(", "));
+    s.push_str("}\n}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sites_are_inert() {
+        let _l = test_lock().lock().unwrap();
+        with_enabled(false, || {
+            let before = totals();
+            {
+                let _s = span("obs_test_disabled");
+                add(Counter::Mvms, 7);
+                let _g = apply_site("obs_test_disabled_op", 1, 3);
+            }
+            assert_eq!(totals(), before, "disabled sites must not count");
+        });
+    }
+
+    #[test]
+    fn spans_nest_and_counters_attach() {
+        let _l = test_lock().lock().unwrap();
+        with_enabled(true, || {
+            {
+                let _a = span("obs_test_outer");
+                add(Counter::Probes, 2);
+                {
+                    let _b = span("obs_test_inner");
+                    add(Counter::Probes, 3);
+                }
+            }
+            let stats = snapshot();
+            let outer = stats
+                .iter()
+                .find(|s| s.name == "obs_test_outer")
+                .expect("outer span recorded");
+            assert_eq!(outer.ctrs[Counter::Probes as usize], 2);
+            assert!(outer.calls >= 1);
+            let inner = stats
+                .iter()
+                .find(|s| s.path.ends_with("obs_test_outer/obs_test_inner"))
+                .expect("inner span nested under outer");
+            assert_eq!(inner.ctrs[Counter::Probes as usize], 3);
+            assert!(outer.total_ns >= inner.total_ns);
+        });
+    }
+
+    #[test]
+    fn nested_apply_sites_are_suppressed() {
+        let _l = test_lock().lock().unwrap();
+        with_enabled(true, || {
+            let base = totals();
+            {
+                let _outer = apply_site("obs_test_sum_op", 1, 4);
+                // A part charging itself inside the sum: suppressed.
+                let _inner = apply_site("obs_test_part_op", 1, 4);
+            }
+            let t = totals();
+            assert_eq!(t[Counter::Mvms as usize] - base[Counter::Mvms as usize], 4);
+            assert_eq!(
+                t[Counter::BlockApplies as usize] - base[Counter::BlockApplies as usize],
+                1
+            );
+            // Sequential (non-nested) applies both count.
+            {
+                let _second = apply_site("obs_test_part_op", 1, 4);
+            }
+            let t2 = totals();
+            assert_eq!(t2[Counter::Mvms as usize] - base[Counter::Mvms as usize], 8);
+        });
+    }
+
+    #[test]
+    fn stitching_attaches_worker_spans_to_spawner() {
+        let _l = test_lock().lock().unwrap();
+        with_enabled(true, || {
+            {
+                let _parent = span("obs_test_spawner");
+                let h = stitch_handle();
+                std::thread::scope(|scope| {
+                    scope.spawn(move || {
+                        adopt(h);
+                        let _w = span("obs_test_worker");
+                        add(Counter::Steps, 5);
+                    });
+                });
+            }
+            let stats = snapshot();
+            let worker = stats
+                .iter()
+                .find(|s| s.path.ends_with("obs_test_spawner/obs_test_worker"))
+                .expect("worker span stitched under spawner");
+            assert_eq!(worker.ctrs[Counter::Steps as usize], 5);
+        });
+    }
+
+    #[test]
+    fn audit_window_asserts_exact_deltas() {
+        let _l = test_lock().lock().unwrap();
+        with_enabled(true, || {
+            let a = audit_begin();
+            add(Counter::Mvms, 11);
+            add(Counter::BlockApplies, 2);
+            a.end_assert(
+                "obs_test_audit",
+                &[(Counter::Mvms, 11), (Counter::BlockApplies, 2)],
+            );
+        });
+    }
+
+    #[test]
+    fn json_report_is_stable_shape() {
+        let _l = test_lock().lock().unwrap();
+        with_enabled(true, || {
+            {
+                let _s = span("obs_test_json");
+                add(Counter::Mvms, 1);
+            }
+            let j = report_json();
+            assert!(j.contains("\"schema\": \"gpsld-trace-v1\""));
+            assert!(j.contains("\"spans\""));
+            assert!(j.contains("\"totals\""));
+            assert!(j.contains("obs_test_json"));
+            let text = report_text();
+            assert!(text.contains("span tree"));
+            assert!(text.contains("obs_test_json"));
+        });
+    }
+
+    #[test]
+    fn now_ns_is_monotone() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+}

@@ -51,7 +51,18 @@
 //! The process-wide default worker count is settable
 //! ([`set_default_threads`], CLI `--threads`); 0 (the initial state) means
 //! "auto": `available_parallelism`, capped at 16.
+//!
+//! # Span stitching ([`util::obs`](crate::util::obs))
+//!
+//! Every spawn site here captures an [`obs::stitch_handle`] on the
+//! spawning thread and [`obs::adopt`]s it inside the worker, right next
+//! to the `WORKER_BUDGET` setup — so spans opened inside a worker (and
+//! counter increments outside any worker-local span) attach to the span
+//! that was live when the fan-out was requested, for every steal order.
+//! Stitching only routes *observations*; it never touches the data flow,
+//! so the bit-identity contract above is unaffected.
 
+use crate::util::obs;
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -174,12 +185,14 @@ where
     // remainder to the first workers so none of the budget is stranded
     // (e.g. 8 threads over 3 workers -> budgets 3, 3, 2).
     let (base_budget, extra) = (requested / workers, requested % workers);
+    let stitch = obs::stitch_handle();
     std::thread::scope(|scope| {
         for (t, slot_chunk) in out.chunks_mut(chunk).enumerate() {
             let f = &f;
             let budget = (base_budget + usize::from(t < extra)).max(1);
             scope.spawn(move || {
                 set_worker_budget(budget);
+                obs::adopt(stitch);
                 let base = t * chunk;
                 for (k, slot) in slot_chunk.iter_mut().enumerate() {
                     *slot = Some(f(base + k));
@@ -219,6 +232,7 @@ where
     }
     let next = AtomicUsize::new(0);
     let (base_budget, extra) = (requested / workers, requested % workers);
+    let stitch = obs::stitch_handle();
     let mut buffers: Vec<Vec<(usize, T)>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..workers)
             .map(|w| {
@@ -227,6 +241,7 @@ where
                 let budget = (base_budget + usize::from(w < extra)).max(1);
                 scope.spawn(move || {
                     set_worker_budget(budget);
+                    obs::adopt(stitch);
                     let mut buf: Vec<(usize, T)> = Vec::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
@@ -276,12 +291,14 @@ where
     let spawned = nchunks.div_ceil(per_worker);
     // Remainder threads go to the first workers (see par_map).
     let (base_budget, extra) = (requested / spawned, requested % spawned);
+    let stitch = obs::stitch_handle();
     std::thread::scope(|scope| {
         for (w, group) in data.chunks_mut(chunk * per_worker).enumerate() {
             let f = &f;
             let budget = (base_budget + usize::from(w < extra)).max(1);
             scope.spawn(move || {
                 set_worker_budget(budget);
+                obs::adopt(stitch);
                 for (k, c) in group.chunks_mut(chunk).enumerate() {
                     f(w * per_worker + k, c);
                 }

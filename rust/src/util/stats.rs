@@ -148,9 +148,17 @@ pub fn scal(alpha: f64, y: &mut [f64]) {
 ///
 /// NaN inputs follow the PR 4 propagation convention of [`median`]: a
 /// recorded NaN is remembered and poisons every subsequent
-/// [`Histogram::quantile`] readout (NaN out, never a silently shifted
-/// order statistic). An empty histogram reads NaN too — "no data" must
-/// not look like a zero-latency service.
+/// [`Histogram::quantile`] readout — and the exact [`sum`](Self::sum) /
+/// [`min`](Self::min) / [`max`](Self::max) readouts alike (NaN out, never
+/// a silently shifted order statistic). An empty histogram reads NaN too —
+/// "no data" must not look like a zero-latency service.
+///
+/// Alongside the bucketed quantiles (whose one-bucket over-read is
+/// inherent to the representation and documented on
+/// [`quantile`](Self::quantile)), the histogram tracks the **exact**
+/// count, sum, min, and max of the recorded samples — `util::obs` span
+/// timing rollups read extrema and means off these without paying any
+/// bucket quantization.
 #[derive(Clone, Debug)]
 pub struct Histogram {
     lo: f64,
@@ -159,6 +167,12 @@ pub struct Histogram {
     counts: Vec<u64>,
     total: u64,
     saw_nan: bool,
+    /// Exact sum of recorded samples (unbucketed).
+    sum: f64,
+    /// Exact extrema of recorded samples (unbucketed; +inf/-inf when
+    /// nothing was recorded).
+    min: f64,
+    max: f64,
 }
 
 impl Histogram {
@@ -167,17 +181,30 @@ impl Histogram {
     pub fn log_spaced(lo: f64, hi: f64, buckets: usize) -> Self {
         assert!(lo > 0.0 && lo < hi, "need 0 < lo < hi, got [{lo}, {hi})");
         assert!(buckets >= 1, "need at least one bucket");
-        Histogram { lo, hi, counts: vec![0; buckets], total: 0, saw_nan: false }
+        Histogram {
+            lo,
+            hi,
+            counts: vec![0; buckets],
+            total: 0,
+            saw_nan: false,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
     }
 
     /// Record one sample. Below-range clamps to bucket 0, at-or-above-range
-    /// saturates into the top bucket, NaN poisons future quantile readouts.
+    /// saturates into the top bucket (the exact `sum`/`min`/`max` still see
+    /// the unclamped value), NaN poisons future readouts.
     pub fn record(&mut self, v: f64) {
         if v.is_nan() {
             self.saw_nan = true;
             self.total += 1;
             return;
         }
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
         let nb = self.counts.len();
         let k = if v < self.lo {
             0
@@ -196,6 +223,38 @@ impl Histogram {
     /// Number of recorded samples (NaNs included).
     pub fn count(&self) -> u64 {
         self.total
+    }
+
+    /// Exact sum of recorded samples. NaN when empty or poisoned (same
+    /// convention as [`Histogram::quantile`]).
+    pub fn sum(&self) -> f64 {
+        if self.total == 0 || self.saw_nan {
+            return f64::NAN;
+        }
+        self.sum
+    }
+
+    /// Exact minimum of recorded samples (unbucketed). NaN when empty or
+    /// poisoned.
+    pub fn min(&self) -> f64 {
+        if self.total == 0 || self.saw_nan {
+            return f64::NAN;
+        }
+        self.min
+    }
+
+    /// Exact maximum of recorded samples (unbucketed). NaN when empty or
+    /// poisoned.
+    pub fn max(&self) -> f64 {
+        if self.total == 0 || self.saw_nan {
+            return f64::NAN;
+        }
+        self.max
+    }
+
+    /// Exact mean (`sum / count`). NaN when empty or poisoned.
+    pub fn mean(&self) -> f64 {
+        self.sum() / self.total as f64
     }
 
     /// Quantile readout, `q` in `[0, 1]`: the upper edge of the bucket
@@ -374,6 +433,30 @@ mod tests {
             assert!(est >= exact, "q={q}: est {est} < exact {exact}");
             assert!(est <= exact * r * (1.0 + 1e-12), "q={q}: est {est} > {exact}*r");
         }
+    }
+
+    /// The exact side-channel: count/sum/min/max are unbucketed (min/max
+    /// sharper than any bucket edge, sum exact), and the NaN poisoning
+    /// convention covers them exactly like the quantiles.
+    #[test]
+    fn histogram_exact_sum_min_max() {
+        let mut h = Histogram::log_spaced(1.0, 1000.0, 3);
+        assert!(h.sum().is_nan() && h.min().is_nan() && h.max().is_nan());
+        for v in [2.0, 3.0, 50.0, 200.0, 5000.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 5255.0).abs() < 1e-9);
+        assert_eq!(h.min(), 2.0);
+        // Saturation clamps the bucket, never the exact max.
+        assert_eq!(h.max(), 5000.0);
+        assert!((h.mean() - 1051.0).abs() < 1e-9);
+        h.record(f64::NAN);
+        assert!(h.sum().is_nan());
+        assert!(h.min().is_nan());
+        assert!(h.max().is_nan());
+        assert!(h.mean().is_nan());
+        assert_eq!(h.count(), 6);
     }
 
     #[test]

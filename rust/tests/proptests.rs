@@ -2233,3 +2233,209 @@ fn prop_two_axis_adaptive_pins_to_fixed_budget() {
         assert_adaptive_pins_to_fixed(&format!("pc slq bs={bs}"), &adaptive, &fixed);
     }
 }
+
+/// Bitwise equality of every observable field of two [`LogdetEstimate`]s
+/// (values, grads, per-probe evidence, interval, accounting). The
+/// evidence enum is compared via its Debug rendering — Rust float
+/// formatting round-trips uniquely, so two renders agree iff the floats
+/// do (the numerics here never produce NaN payload differences).
+fn assert_estimates_bitwise(tag: &str, a: &gpsld::estimators::LogdetEstimate, b: &gpsld::estimators::LogdetEstimate) {
+    assert_eq!(a.value.to_bits(), b.value.to_bits(), "{tag} value");
+    assert_eq!(a.std_err.to_bits(), b.std_err.to_bits(), "{tag} std_err");
+    assert_eq!(a.grad.len(), b.grad.len(), "{tag} grad len");
+    for (x, y) in a.grad.iter().zip(&b.grad) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag} grad");
+    }
+    assert_eq!(a.per_probe.len(), b.per_probe.len(), "{tag} per_probe len");
+    for (x, y) in a.per_probe.iter().zip(&b.per_probe) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag} per_probe");
+    }
+    assert_eq!(a.mvms, b.mvms, "{tag} mvms");
+    assert_eq!(a.block_applies, b.block_applies, "{tag} block_applies");
+    assert_eq!(a.probes_used, b.probes_used, "{tag} probes_used");
+    assert_eq!(a.steps_used, b.steps_used, "{tag} steps_used");
+    assert_eq!(a.interval.lo.to_bits(), b.interval.lo.to_bits(), "{tag} interval lo");
+    assert_eq!(a.interval.hi.to_bits(), b.interval.hi.to_bits(), "{tag} interval hi");
+    assert_eq!(
+        format!("{:?}", a.evidence),
+        format!("{:?}", b.evidence),
+        "{tag} evidence"
+    );
+}
+
+/// Property (tracing inert): enabling the `util::obs` span/counter
+/// registry is observation-only. Solves and estimates run with tracing on
+/// are bitwise identical to the disabled default — solutions, per-column
+/// statistics, estimator values, grads, per-probe evidence, intervals,
+/// and the mvms/block_applies accounting — for every operator type,
+/// block sizes {1, 8}, threads {1, 8}, and both precisions. This is the
+/// license for the CLI to flip `--trace` on without a bit of fear (and
+/// the audit asserts inside the traced runs double as the release-build
+/// check that counted applies equal the accounting).
+#[test]
+fn prop_tracing_enabled_bitwise_inert() {
+    use gpsld::estimators::chebyshev::{chebyshev_logdet, ChebOptions};
+    use gpsld::estimators::slq::{slq_logdet, slq_logdet_pc, SlqOptions};
+    use gpsld::solvers::{
+        build_preconditioner, cg_block, pcg_block, CgOptions, Preconditioner, PrecondOptions,
+    };
+    use gpsld::util::obs;
+
+    // Serialize against any other test toggling the global registry; the
+    // with_enabled guards below restore the prior state on every path.
+    let _guard = obs::test_lock().lock().unwrap_or_else(|e| e.into_inner());
+
+    // Solves: every operator type x blocks {1, 8} x threads {1, 8} x
+    // both precisions.
+    for_each_precision_op(&mut |name, op| {
+        let n = op.n();
+        let mut rng = Rng::new(3100);
+        let b = Mat::from_fn(n, 4, |_, _| rng.gaussian());
+        for blk in [1usize, 8] {
+            for threads in [1usize, 8] {
+                for prec in [Precision::F64, Precision::F32F64] {
+                    let opts = CgOptions {
+                        tol: 1e-9,
+                        max_iters: 300,
+                        block_size: blk,
+                        threads,
+                        precision: prec,
+                        ..Default::default()
+                    };
+                    let (x_off, i_off) =
+                        obs::with_enabled(false, || cg_block(op, &b, None, &opts));
+                    let (x_on, i_on) =
+                        obs::with_enabled(true, || cg_block(op, &b, None, &opts));
+                    let tag = format!("{name} cg blk={blk} t={threads} {prec:?}");
+                    for (p, q) in x_off.data.iter().zip(&x_on.data) {
+                        assert_eq!(p.to_bits(), q.to_bits(), "{tag} solution");
+                    }
+                    assert_eq!(i_off.mvms, i_on.mvms, "{tag} mvms");
+                    assert_eq!(i_off.block_applies, i_on.block_applies, "{tag} applies");
+                    assert_eq!(i_off.cols.len(), i_on.cols.len(), "{tag} cols");
+                    for (c, d) in i_off.cols.iter().zip(&i_on.cols) {
+                        assert_eq!(c.iters, d.iters, "{tag} iters");
+                        assert_eq!(c.mvms, d.mvms, "{tag} col mvms");
+                        assert_eq!(c.converged, d.converged, "{tag} converged");
+                        assert_eq!(c.residual.to_bits(), d.residual.to_bits(), "{tag} residual");
+                    }
+                }
+            }
+        }
+    });
+
+    // Preconditioned solves + estimators on a dense kernel (the pcg path,
+    // the preconditioned-SLQ split, and the Chebyshev auto-bracket whose
+    // helper MVMs are counter-suppressed but must stay numerically inert
+    // too).
+    let mut rng = Rng::new(3200);
+    let n = 40;
+    let pts: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform_in(0.0, 3.0)]).collect();
+    let dense = DenseKernelOp::new(
+        pts.clone(),
+        Box::new(IsoKernel::new(Shape::Matern32, 1, 0.4, 1.0)),
+        0.2,
+    );
+    let grid = Grid::covering(&pts, &[32], 0.1);
+    let ski = SkiOp::new(
+        &pts,
+        grid,
+        SeparableKernel::iso(Shape::Rbf, 1, 0.3, 1.0),
+        0.2,
+        InterpOrder::Cubic,
+        false,
+    );
+    let pc = build_preconditioner(&dense, PrecondOptions::rank(6)).unwrap();
+    let b = Mat::from_fn(n, 4, |_, _| rng.gaussian());
+    for blk in [1usize, 8] {
+        for threads in [1usize, 8] {
+            for prec in [Precision::F64, Precision::F32F64] {
+                let opts = CgOptions {
+                    tol: 1e-9,
+                    max_iters: 300,
+                    block_size: blk,
+                    threads,
+                    precision: prec,
+                    ..Default::default()
+                };
+                let run = || {
+                    pcg_block(&dense, &b, None, Some(&pc as &dyn Preconditioner), &opts)
+                };
+                let (x_off, i_off) = obs::with_enabled(false, run);
+                let (x_on, i_on) = obs::with_enabled(true, run);
+                let tag = format!("pcg blk={blk} t={threads} {prec:?}");
+                for (p, q) in x_off.data.iter().zip(&x_on.data) {
+                    assert_eq!(p.to_bits(), q.to_bits(), "{tag} solution");
+                }
+                assert_eq!(i_off.mvms, i_on.mvms, "{tag} mvms");
+                assert_eq!(i_off.block_applies, i_on.block_applies, "{tag} applies");
+            }
+        }
+    }
+    for (name, op) in [("dense", &dense as &dyn KernelOp), ("ski", &ski)] {
+        for blk in [1usize, 8] {
+            for threads in [1usize, 8] {
+                for prec in [Precision::F64, Precision::F32F64] {
+                    let slq_opts = SlqOptions {
+                        steps: 10,
+                        probes: 4,
+                        seed: 31,
+                        grads: true,
+                        block_size: blk,
+                        threads,
+                        precision: prec,
+                        ..Default::default()
+                    };
+                    let s_off =
+                        obs::with_enabled(false, || slq_logdet(op, &slq_opts).unwrap());
+                    let s_on =
+                        obs::with_enabled(true, || slq_logdet(op, &slq_opts).unwrap());
+                    assert_estimates_bitwise(
+                        &format!("{name} slq blk={blk} t={threads} {prec:?}"),
+                        &s_off,
+                        &s_on,
+                    );
+                    // lambda_bounds: None exercises the auto-bracket.
+                    let cheb_opts = ChebOptions {
+                        degree: 16,
+                        probes: 4,
+                        seed: 31,
+                        grads: true,
+                        lambda_bounds: None,
+                        block_size: blk,
+                        threads,
+                        precision: prec,
+                        ..Default::default()
+                    };
+                    let c_off =
+                        obs::with_enabled(false, || chebyshev_logdet(op, &cheb_opts).unwrap());
+                    let c_on =
+                        obs::with_enabled(true, || chebyshev_logdet(op, &cheb_opts).unwrap());
+                    assert_estimates_bitwise(
+                        &format!("{name} cheb blk={blk} t={threads} {prec:?}"),
+                        &c_off,
+                        &c_on,
+                    );
+                }
+            }
+        }
+    }
+    // Preconditioned SLQ (the split estimator) once per block width.
+    for blk in [1usize, 8] {
+        let opts = SlqOptions {
+            steps: 10,
+            probes: 4,
+            seed: 37,
+            grads: true,
+            block_size: blk,
+            ..Default::default()
+        };
+        let s_off = obs::with_enabled(false, || {
+            slq_logdet_pc(&dense, Some(&pc as &dyn Preconditioner), &opts).unwrap()
+        });
+        let s_on = obs::with_enabled(true, || {
+            slq_logdet_pc(&dense, Some(&pc as &dyn Preconditioner), &opts).unwrap()
+        });
+        assert_estimates_bitwise(&format!("pc slq blk={blk}"), &s_off, &s_on);
+    }
+}

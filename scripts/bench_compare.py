@@ -40,7 +40,17 @@ import sys
 # Lower-is-better metrics. Timing is noisy; counters are exact.
 # p50_ns/p99_ns are the serving layer's per-request latency quantiles
 # (BENCH_service): timing-class, so they honor the ns floor.
-TIMING_METRICS = ("ns_per_apply", "ns_per_solve_col", "ns_per_estimate", "p50_ns", "p99_ns")
+# self_ns_per_run is the trace sweep's per-layer self time (BENCH_trace) —
+# timing-class too, and the floor also silences its tracing_overhead row
+# when the enabled-vs-disabled difference is down in the jitter.
+TIMING_METRICS = (
+    "ns_per_apply",
+    "ns_per_solve_col",
+    "ns_per_estimate",
+    "p50_ns",
+    "p99_ns",
+    "self_ns_per_run",
+)
 COUNTER_METRICS = (
     "mvms",
     "block_applies",
@@ -51,6 +61,10 @@ COUNTER_METRICS = (
     # Block solves dispatched by the coalescing service (BENCH_service):
     # coalescing regressing into per-request solves fires here exactly.
     "solves",
+    # Span entries per layer in the trace sweep (BENCH_trace): the traced
+    # workload is deterministic, so more calls means more iterations of
+    # real work, not noise.
+    "calls",
 )
 # Higher-is-better, exact: ANY drop is a regression (a solve that stops
 # converging often also gets *faster*, so the timing gate alone would
@@ -65,11 +79,14 @@ HIGHER_BETTER = ("converged", "calibrated")
 # tol=0 row. interval_width is informational: it tracks the requested tol
 # by construction on adaptive rows, so gating it would double-count the
 # calibrated/probes_used signals.
+# self_share (BENCH_trace) is informational like interval_width: shares
+# reshuffle whenever ANY layer speeds up, so gating them would flag
+# improvements elsewhere as regressions here.
 NON_IDENTITY = (
     set(TIMING_METRICS)
     | set(COUNTER_METRICS)
     | set(HIGHER_BETTER)
-    | {"gbps", "interval_width"}
+    | {"gbps", "interval_width", "self_share"}
 )
 
 
@@ -441,6 +458,55 @@ def self_test():
         50.0,
     )
     assert len(reg) == 1 and "converged" in reg[0], reg
+    checks += 1
+
+    # BENCH_trace: `layer` is identity — the slq layer's rows never gate
+    # against pcg_block's; self_ns_per_run is timing-class (floored);
+    # calls/mvms are exact counters; self_share is informational and never
+    # gated nor identity (a share reshuffle alone must not orphan or flag
+    # the row).
+    trace = {"layer": "slq", "n": 400}
+    other_layer = {"layer": "pcg_block", "n": 400}
+    assert row_key(trace) != row_key(other_layer)
+    reg, _, matched = compare(
+        rows(dict(trace, self_ns_per_run=1e6, self_share=0.50, calls=8, mvms=120)),
+        rows(dict(trace, self_ns_per_run=2e6, self_share=0.20, calls=8, mvms=120)),
+        0.20,
+        50.0,
+    )
+    assert matched == 1 and len(reg) == 1 and "self_ns_per_run" in reg[0], reg
+    reg, _, matched = compare(
+        rows(dict(trace, self_ns_per_run=1e6, self_share=0.50, calls=8, mvms=120)),
+        rows(dict(trace, self_ns_per_run=1e6, self_share=0.10, calls=8, mvms=150)),
+        0.20,
+        50.0,
+    )
+    assert matched == 1 and len(reg) == 1 and "mvms" in reg[0], reg
+    reg, _, _ = compare(
+        rows(dict(trace, calls=8)),
+        rows(dict(trace, calls=10)),
+        0.20,
+        50.0,
+    )
+    assert len(reg) == 1 and "calls" in reg[0], reg
+    # The tracing_overhead row: a sub-floor enabled-vs-disabled difference
+    # (including one rising from the clamped 0) stays quiet; a real
+    # overhead blowup fires.
+    ovh = {"layer": "tracing_overhead", "n": 400}
+    reg, _, _ = compare(
+        rows(dict(ovh, self_ns_per_run=0.0)),
+        rows(dict(ovh, self_ns_per_run=40.0)),
+        0.20,
+        50.0,
+    )
+    assert reg == [], reg
+    reg, _, _ = compare(
+        rows(dict(ovh, self_ns_per_run=1e3)),
+        rows(dict(ovh, self_ns_per_run=1e5)),
+        0.20,
+        50.0,
+    )
+    assert len(reg) == 1 and "self_ns_per_run" in reg[0], reg
     checks += 1
 
     # Schema change (new identity field on every row) -> matched == 0,

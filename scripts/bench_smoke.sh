@@ -13,12 +13,15 @@
 # streaming-service request-replay sweep (coalesced variance requests at
 # both solve precisions: fused solves, blocked applies, convergence,
 # p50/p99 request latency — the sweep itself asserts
-# the fused answers bitwise-equal the solo baseline), emitting
-# BENCH_mvm.json, BENCH_cg.json, BENCH_precond.json, BENCH_conf.json, and
-# BENCH_service.json at the repo root so successive PRs have a throughput
-# trajectory — MVMs, solves, thread scaling, preconditioned iteration
-# counts, adaptive probe budgets, and serving amortization — to compare
-# against.
+# the fused answers bitwise-equal the solo baseline), and the trace sweep
+# (per-layer self-time shares of a fixed traced workload under the
+# util::obs span registry, plus a disabled-mode tracing-overhead row so
+# instrumentation cost creep fails the gate), emitting
+# BENCH_mvm.json, BENCH_cg.json, BENCH_precond.json, BENCH_conf.json,
+# BENCH_service.json, and BENCH_trace.json at the repo root so successive
+# PRs have a throughput trajectory — MVMs, solves, thread scaling,
+# preconditioned iteration counts, adaptive probe budgets, serving
+# amortization, and per-layer time shares — to compare against.
 #
 # When a previous BENCH_*.json exists it is rotated to BENCH_*.prev.json
 # and diffed against the fresh run with scripts/bench_compare.py, which
@@ -43,7 +46,7 @@
 # run before anything is benched: a broken gate must fail the smoke run,
 # not wave a regression through.
 #
-# Usage: scripts/bench_smoke.sh [mvm_output.json] [cg_output.json] [precond_output.json] [conf_output.json] [service_output.json]
+# Usage: scripts/bench_smoke.sh [mvm_output.json] [cg_output.json] [precond_output.json] [conf_output.json] [service_output.json] [trace_output.json]
 set -euo pipefail
 
 repo_root="$(cd "$(dirname "$0")/.." && pwd)"
@@ -52,6 +55,7 @@ out_cg="${2:-$repo_root/BENCH_cg.json}"
 out_precond="${3:-$repo_root/BENCH_precond.json}"
 out_conf="${4:-$repo_root/BENCH_conf.json}"
 out_service="${5:-$repo_root/BENCH_service.json}"
+out_trace="${6:-$repo_root/BENCH_trace.json}"
 
 # Prove the gate itself works before trusting it with real rows.
 python3 "$repo_root/scripts/bench_compare.py" --self-test
@@ -63,7 +67,8 @@ python3 "$repo_root/scripts/bench_compare.py" --self-test
 cd "$repo_root/rust"
 cargo bench --bench bench_perf_mvm -- --smoke \
     --json "$out_mvm.new" --json-cg "$out_cg.new" --json-precond "$out_precond.new" \
-    --json-conf "$out_conf.new" --json-service "$out_service.new"
+    --json-conf "$out_conf.new" --json-service "$out_service.new" \
+    --json-trace "$out_trace.new"
 
 echo "BENCH_mvm rows:"
 cat "$out_mvm.new"
@@ -75,6 +80,8 @@ echo "BENCH_conf rows:"
 cat "$out_conf.new"
 echo "BENCH_service rows:"
 cat "$out_service.new"
+echo "BENCH_trace rows:"
+cat "$out_trace.new"
 
 # True when the gate is suppressed for this output file: "1" skips all,
 # otherwise BENCH_SKIP_COMPARE is a list of file stems to skip.
@@ -111,7 +118,7 @@ if [[ "${BENCH_SKIP_COMPARE:-0}" != "1" ]] \
 fi
 
 fail=0
-for out in "$out_mvm" "$out_cg" "$out_precond" "$out_conf" "$out_service"; do
+for out in "$out_mvm" "$out_cg" "$out_precond" "$out_conf" "$out_service" "$out_trace"; do
     if [[ -f "$out" ]] && ! skip_compare "$out"; then
         python3 "$repo_root/scripts/bench_compare.py" "$out" "$out.new" || fail=1
     fi
@@ -122,7 +129,7 @@ if [[ "$fail" != "0" ]]; then
     exit 2
 fi
 
-for out in "$out_mvm" "$out_cg" "$out_precond" "$out_conf" "$out_service"; do
+for out in "$out_mvm" "$out_cg" "$out_precond" "$out_conf" "$out_service" "$out_trace"; do
     if [[ -f "$out" ]]; then
         mv "$out" "${out%.json}.prev.json"
     fi
